@@ -1,0 +1,56 @@
+//! Anchor-layer calibration walkthrough: builds the Eq.-3 similarity
+//! matrix on a development set, shows the importance weights, runs the
+//! Algorithm-1 DP at several anchor budgets, derives head maps, and writes
+//! the deployable plan JSON.
+//!
+//! Run: `cargo run --release --example calibrate_anchors`
+
+use kascade::kascade::{calibrate, select_anchors, CalibrateOptions};
+use kascade::model::SynthSpec;
+use kascade::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    let spec = SynthSpec::eval_base(42);
+    let model = spec.build();
+    println!(
+        "SynthLM: {} layers, planted match blocks at {:?}",
+        model.cfg.n_layers, spec.block_starts
+    );
+
+    let mut dev = WorkloadGen::new(&spec, 0xDE5);
+    let prompts: Vec<Vec<u32>> = (0..4).map(|_| dev.dev_prompt(1024)).collect();
+    let cal = calibrate(&model, &prompts, &CalibrateOptions::default());
+
+    println!("\ncross-layer similarity (unweighted, sim_k={}):", cal.sim.k);
+    let m = cal.sim.layer_matrix(false);
+    for a in 0..model.cfg.n_layers {
+        let row: Vec<String> = (0..model.cfg.n_layers)
+            .map(|b| if b >= a { format!("{:.2}", m.get(a, b)) } else { "    ".into() })
+            .collect();
+        println!("  L{a:>2}: {}", row.join(" "));
+    }
+
+    println!("\nimportance weights w_l = 1 - cos(x, y):");
+    for (l, w) in cal.importance.iter().enumerate() {
+        let bar = "#".repeat((w / cal.importance[1].max(1e-9) * 40.0) as usize);
+        println!("  L{l:>2} {w:.5} {bar}");
+    }
+
+    println!("\nAlgorithm 1 across anchor budgets (importance-weighted):");
+    let weighted = cal.sim.layer_matrix(true);
+    for budget in 2..=8 {
+        let (anchors, obj) = select_anchors(&weighted, budget);
+        println!("  M={budget}: anchors {anchors:?}  objective {obj:.4}");
+    }
+
+    println!("\nselected plan (M=5): anchors {:?}", cal.plan.anchors);
+    for (l, hm) in cal.plan.head_map.iter().enumerate() {
+        println!("  layer {l:>2} {:?} head_map {:?}", cal.plan.role(l), hm);
+    }
+
+    std::fs::create_dir_all("results")?;
+    let path = std::path::Path::new("results/kascade_plan.json");
+    cal.plan.save(path)?;
+    println!("\nplan written to {}", path.display());
+    Ok(())
+}

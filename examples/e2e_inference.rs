@@ -1,0 +1,90 @@
+//! END-TO-END driver over the full three-layer stack (DESIGN.md §3):
+//! Pallas kernels -> AOT HLO artifacts -> PJRT execution driven by the
+//! Rust coordinator, serving batched retrieval requests with dense vs
+//! Kascade attention and reporting accuracy, latency and throughput.
+//!
+//! Requires `make artifacts` first.
+//! Run: `cargo run --release --example e2e_inference`
+
+use kascade::config::ServeConfig;
+use kascade::coordinator::{PjrtBackend, Request};
+use kascade::kascade::{calibrate, CalibrateOptions, KascadePlan};
+use kascade::model::SynthSpec;
+use kascade::runtime::{PjrtModel, Runtime};
+use kascade::server::{Engine, LocalBackendFactory};
+use kascade::workload::{Category, WorkloadGen};
+use std::path::Path;
+use std::sync::Arc;
+
+const CTX: usize = 400; // fits the 512-token prefill bucket
+const N_REQUESTS: usize = 6;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts/manifest.json missing — run `make artifacts` first");
+    }
+
+    // L2/L1 products: load HLO artifacts, upload SynthLM weights once.
+    let spec = SynthSpec::pjrt_small(42);
+    let native = spec.build(); // weight source + calibration oracle
+    let rt = Runtime::load(artifacts)?;
+    println!(
+        "loaded {} artifacts (decode buckets {:?}, prefill buckets {:?})",
+        rt.manifest.artifacts.len(),
+        rt.manifest.decode_l,
+        rt.manifest.prefill_t
+    );
+    let pjrt = Arc::new(PjrtModel::new(rt, &native.w)?);
+
+    // offline calibration on the native oracle (python never runs at serve
+    // time; calibration is a build-time step like the paper's)
+    let mut dev = WorkloadGen::new(&spec, 0xDE5);
+    let prompts: Vec<Vec<u32>> = (0..3).map(|_| dev.dev_prompt(CTX)).collect();
+    let plan = calibrate(&native, &prompts, &CalibrateOptions::default()).plan;
+    println!("calibrated anchors: {:?}", plan.anchors);
+
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 4096,
+        max_running: 4,
+        token_budget: 2048,
+        prefill_chunk: 512,
+        queue_cap: 64,
+        workers: 1,
+    };
+
+    for (name, plan) in [("dense", None::<KascadePlan>), ("kascade", Some(plan))] {
+        let pjrt = pjrt.clone();
+        let plan = plan.map(Arc::new);
+        let factory: LocalBackendFactory = Box::new(move |_req| {
+            Box::new(PjrtBackend::new(pjrt.clone(), plan.clone()))
+        });
+        let mut engine = Engine::new(cfg.clone(), factory);
+        let mut gen = WorkloadGen::new(&spec, 0x7E57);
+        let mut expected = Vec::new();
+        for id in 0..N_REQUESTS {
+            let t = gen.longbench(Category::Sqa, CTX);
+            expected.push(t.expect[0]);
+            engine.submit(Request {
+                id: id as u64,
+                prompt: t.prompt,
+                max_new: 2,
+                stop_token: Some(t.expect[0]),
+            });
+        }
+        let t0 = std::time::Instant::now();
+        let done = engine.run_to_completion();
+        let wall = t0.elapsed().as_secs_f64();
+        let correct = done
+            .iter()
+            .filter(|c| c.tokens.first() == Some(&expected[c.id as usize]))
+            .count();
+        println!("\n== {name} (PJRT path) ==");
+        println!("  {}", engine.metrics.report());
+        println!("  wall {wall:.2}s — retrieval accuracy {correct}/{N_REQUESTS}");
+        assert_eq!(correct, N_REQUESTS, "{name}: retrieval must be exact on the PJRT path");
+    }
+    println!("\ne2e OK: all three layers compose (Pallas -> HLO -> PJRT -> coordinator)");
+    Ok(())
+}

@@ -1,0 +1,212 @@
+"""AOT-lower every model op x shape bucket to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every entry point is lowered with return_tuple=True, so the Rust runtime
+always receives a tuple literal and unpacks by element.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import asdict
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+CFG = M.ModelConfig()
+DECODE_L = [512, 1024, 2048]  # KV-cache capacity buckets (decode)
+PREFILL_T = [128, 512]  # full-prompt prefill buckets (T == L)
+TILE = 128  # prefill Q-tile / pooling tile (paper default)
+
+
+def k_rule(L: int) -> int:
+    """Paper Sec. 4.1: k = min(max(0.1 * L, 128), L)."""
+    return int(min(max(0.1 * L, 128), L))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tuple_fn(fn):
+    """Wrap so the output is always a flat tuple of arrays."""
+
+    def wrapped(*a):
+        out = fn(*a)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def entry_points(cfg: M.ModelConfig):
+    """Yield (name, fn, arg_specs, params) for every artifact."""
+    D, d, F, V = cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab
+    nq, nkv = cfg.n_q_heads, cfg.n_kv_heads
+    i32 = jnp.int32
+    layer_w = [
+        ("wo", (nq * d, D)),
+        ("ln2", (D,)),
+        ("w1", (D, F)),
+        ("w3", (D, F)),
+        ("w2", (F, D)),
+    ]
+
+    # --- embedding / projection / mlp ops -------------------------------
+    for T, tag in [(1, "decode")] + [(t, f"prefill_t{t}") for t in PREFILL_T]:
+        yield (
+            f"embed_{tag}",
+            M.embed,
+            [_spec((T,), i32), _spec((V, D))],
+            {"kind": "embed", "t": T},
+        )
+        yield (
+            f"qkv_{tag}",
+            partial(M.qkv, cfg=cfg),
+            [
+                _spec((T, D)),
+                _spec((D,)),
+                _spec((D, nq * d)),
+                _spec((D, nkv * d)),
+                _spec((D, nkv * d)),
+                _spec((T,), i32),
+            ],
+            {"kind": "qkv", "t": T},
+        )
+        yield (
+            f"post_{tag}",
+            M.post,
+            [_spec((T, D)), _spec((nq, T, d))] + [_spec(s) for _, s in layer_w],
+            {"kind": "post", "t": T},
+        )
+    yield (
+        "logits_decode",
+        M.logits,
+        [_spec((1, D)), _spec((D,)), _spec((D, V))],
+        {"kind": "logits", "t": 1},
+    )
+
+    # --- decode attention variants --------------------------------------
+    for L in DECODE_L:
+        kk = k_rule(L)
+        qs, ks, vs = _spec((nq, d)), _spec((nkv, L, d)), _spec((nkv, L, d))
+        ln = _spec((1,), i32)
+        yield (
+            f"attn_dense_decode_l{L}",
+            M.attn_dense_decode,
+            [qs, ks, vs, ln],
+            {"kind": "attn_dense_decode", "l": L},
+        )
+        yield (
+            f"attn_anchor_decode_l{L}",
+            partial(M.attn_anchor_decode, kk=kk),
+            [qs, ks, vs, ln],
+            {"kind": "attn_anchor_decode", "l": L, "k": kk},
+        )
+        yield (
+            f"attn_anchor0_decode_l{L}",
+            partial(M.attn_anchor0_decode, kk=kk),
+            [qs, ks, vs, ln],
+            {"kind": "attn_anchor0_decode", "l": L, "k": kk},
+        )
+        yield (
+            f"attn_reuse_decode_l{L}",
+            M.attn_reuse_decode,
+            [qs, ks, vs, _spec((nkv, kk), i32)],
+            {"kind": "attn_reuse_decode", "l": L, "k": kk},
+        )
+
+    # --- prefill attention variants (full prompt: L == T) ----------------
+    for T in PREFILL_T:
+        kk = k_rule(T)
+        nt = T // TILE
+        qs, ks, vs = _spec((nq, T, d)), _spec((nkv, T, d)), _spec((nkv, T, d))
+        ln = _spec((1,), i32)
+        yield (
+            f"attn_dense_prefill_t{T}",
+            M.attn_dense_prefill,
+            [qs, ks, vs, ln],
+            {"kind": "attn_dense_prefill", "t": T, "l": T},
+        )
+        yield (
+            f"attn_anchor_prefill_t{T}",
+            partial(M.attn_anchor_prefill, kk=kk, tile=TILE),
+            [qs, ks, vs, ln],
+            {"kind": "attn_anchor_prefill", "t": T, "l": T, "k": kk, "tile": TILE},
+        )
+        yield (
+            f"attn_anchor0_prefill_t{T}",
+            partial(M.attn_anchor0_prefill, kk=kk, tile=TILE),
+            [qs, ks, vs, ln],
+            {"kind": "attn_anchor0_prefill", "t": T, "l": T, "k": kk, "tile": TILE},
+        )
+        yield (
+            f"attn_reuse_prefill_t{T}",
+            partial(M.attn_reuse_prefill, tile=TILE),
+            [qs, ks, vs, _spec((nkv, nt, kk), i32)],
+            {"kind": "attn_reuse_prefill", "t": T, "l": T, "k": kk, "tile": TILE},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "config": asdict(CFG),
+        "buckets": {"decode_l": DECODE_L, "prefill_t": PREFILL_T, "tile": TILE},
+        "k_rule": {"frac": 0.1, "min": 128},
+        "artifacts": {},
+    }
+    for name, fn, specs, params in entry_points(CFG):
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(_tuple_fn(fn)).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(o.shape), "dtype": str(o.dtype)}
+            for o in lowered.out_info
+        ]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype.name if hasattr(s.dtype, 'name') else s.dtype)}
+                for s in specs
+            ],
+            "outputs": out_shapes,
+            **params,
+        }
+        print(f"  lowered {name} ({len(text) / 1024:.0f} KiB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

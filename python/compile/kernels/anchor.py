@@ -1,0 +1,278 @@
+"""Pallas multi-pass anchor-layer kernels (paper Sec. 3.6).
+
+Anchor layers must produce (a) the layer's attention output and (b) fresh
+Top-k indices for the downstream reuse layers.  Post-softmax pooling needs
+the full row sum, so this cannot be done in one pass:
+
+  pass 1  decode : raw QK^T scores written out (half the work of attention)
+          prefill: flash-style row max + row sum-exp only (no PV matmul)
+  pass 2  decode : softmax over stored scores, pooled across the GQA group
+          prefill: recompute QK^T per tile, normalize with pass-1 stats,
+                   pool across (GQA group x Q-tile)
+  pass 3  Top-k over the pooled weights (jax.lax.top_k — a small dense op
+          that XLA fuses into the same HLO module)
+  pass 4  sparse Top-k attention over the fresh indices (reuse kernels)
+
+For anchor layer 0 the paper computes full dense attention in pass 1 and
+skips pass 4 — `anchor0_*` below.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import dense as dense_k
+from . import reuse as reuse_k
+from .dense import _pick_tile_k
+
+NEG_INF = -1e30
+TILE_K = 256
+
+
+# ---------------------------------------------------------------------------
+# decode passes
+# ---------------------------------------------------------------------------
+
+
+def _decode_scores_kernel(len_ref, q_ref, k_ref, s_ref, *, scale):
+    """Pass 1 (decode): raw masked scores [1,g,L] for one KV head."""
+    q = q_ref[0]  # [g, d]
+    kk = k_ref[0]  # [L, d]
+    length = len_ref[0]
+    s = jnp.dot(q, kk.T) * scale
+    kpos = jax.lax.iota(jnp.int32, kk.shape[0])
+    s_ref[0] = jnp.where((kpos < length)[None, :], s, NEG_INF).astype(s_ref.dtype)
+
+
+def decode_scores_pass(q, k, length):
+    """Pass 1: raw scores [n_kv, g, L] (written to HBM, as in the paper)."""
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, d).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_decode_scores_kernel, scale=1.0 / d**0.5),
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1, g, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, L), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, g, L), jnp.float32),
+        interpret=True,
+    )(length.astype(jnp.int32), qg, k.astype(jnp.float32))
+
+
+def _decode_pool_kernel(s_ref, p_ref):
+    """Pass 2 (decode): stable softmax per row, mean-pool the GQA group."""
+    s = s_ref[0]  # [g, L]
+    m = s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+    p_ref[0] = p.mean(axis=0).astype(p_ref.dtype)
+
+
+def decode_pool_pass(scores):
+    """Pass 2: pooled post-softmax weights [n_kv, L]."""
+    n_kv, g, L = scores.shape
+    return pl.pallas_call(
+        _decode_pool_kernel,
+        grid=(n_kv,),
+        in_specs=[pl.BlockSpec((1, g, L), lambda h: (h, 0, 0))],
+        out_specs=pl.BlockSpec((1, L), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, L), jnp.float32),
+        interpret=True,
+    )(scores)
+
+
+def topk_pass(pooled, kk: int):
+    """Pass 3: Top-k indices from pooled weights; weight-0 slots -> -1.
+
+    Implemented with argsort rather than `jax.lax.top_k`: top_k lowers to a
+    `topk(..., largest=true)` HLO op that predates xla_extension 0.5.1's
+    text parser (the version behind the Rust `xla` crate), while argsort
+    lowers to the ancient, universally-supported `sort` op.
+    """
+    idx = jnp.argsort(-pooled, axis=-1)[..., :kk].astype(jnp.int32)
+    w = jnp.take_along_axis(pooled, idx, axis=-1)
+    return jnp.where(w > 0.0, idx, -1)
+
+
+def anchor_decode(q, k, v, length, kk: int):
+    """Full anchor decode pipeline: (out [n_q,d], idx [n_kv,kk])."""
+    scores = decode_scores_pass(q, k, length)
+    pooled = decode_pool_pass(scores)
+    idx = topk_pass(pooled, kk)
+    out = reuse_k.reuse_decode(q, k, v, idx)
+    return out, idx
+
+
+def anchor0_decode(q, k, v, length, kk: int):
+    """Anchor layer 0: dense output (no pass 4) + Top-k indices."""
+    out = dense_k.dense_decode(q, k, v, length)
+    pooled = decode_pool_pass(decode_scores_pass(q, k, length))
+    idx = topk_pass(pooled, kk)
+    return out, idx
+
+
+# ---------------------------------------------------------------------------
+# prefill passes
+# ---------------------------------------------------------------------------
+
+
+def _prefill_stats_kernel(len_ref, q_ref, k_ref, m_ref, l_ref, *, tile_q, tile_k, scale, offs):
+    """Pass 1 (prefill): row max + row sum-exp, no PV matmul."""
+    q = q_ref[0]  # [tile_q, d]
+    t = pl.program_id(1)
+    length = len_ref[0]
+    qpos = offs + t * tile_q + jax.lax.iota(jnp.int32, tile_q)
+    nblk_total = k_ref.shape[1] // tile_k
+    hi = jnp.minimum((offs + (t + 1) * tile_q + tile_k - 1) // tile_k, nblk_total)
+
+    def body(i, carry):
+        m, l = carry
+        kblk = k_ref[0, pl.ds(i * tile_k, tile_k), :]
+        s = jnp.dot(q, kblk.T) * scale
+        kpos = i * tile_k + jax.lax.iota(jnp.int32, tile_k)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos < length)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.exp(s - m_new[:, None]).sum(axis=-1)
+        return m_new, l_new
+
+    m0 = jnp.full((q.shape[0],), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q.shape[0],), jnp.float32)
+    m, l = jax.lax.fori_loop(0, hi, body, (m0, l0))
+    m_ref[0] = m.astype(m_ref.dtype)
+    l_ref[0] = l.astype(l_ref.dtype)
+
+
+def prefill_stats_pass(q, k, length, tile_q: int = dense_k.TILE_Q):
+    """Pass 1: (rowmax [n_q, T], rowsumexp [n_q, T])."""
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    nt = T // tile_q
+    tile_k = _pick_tile_k(L)
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_stats_kernel,
+            tile_q=tile_q,
+            tile_k=tile_k,
+            scale=1.0 / d**0.5,
+            offs=L - T,
+        ),
+        grid=(n_q, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, t: (0,)),
+            pl.BlockSpec((1, tile_q, d), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_q), lambda h, t: (h, t)),
+            pl.BlockSpec((1, tile_q), lambda h, t: (h, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, T), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, T), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        length.astype(jnp.int32),
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    )
+
+
+def _prefill_pool_kernel(
+    len_ref, q_ref, k_ref, m_ref, l_ref, p_ref, *, tile, tile_k, scale, offs, g
+):
+    """Pass 2 (prefill): recompute scores, normalize with pass-1 stats,
+    pool over (GQA group x Q-tile).  q block is [1,1,g*tile,d] (g-major)."""
+    t = pl.program_id(1)
+    q = q_ref[0, 0]  # [g*tile, d]
+    m = m_ref[0, 0]  # [g*tile]
+    l = l_ref[0, 0]
+    length = len_ref[0]
+    qpos1 = offs + t * tile + jax.lax.iota(jnp.int32, tile)
+    qpos = jnp.tile(qpos1, (g,))  # row r -> query position (g-major rows)
+    nblk_total = k_ref.shape[1] // tile_k
+    hi = jnp.minimum((offs + (t + 1) * tile + tile_k - 1) // tile_k, nblk_total)
+    nblk = nblk_total  # static loop over all k tiles; zero past `hi`
+
+    def body(i, _):
+        kblk = k_ref[0, pl.ds(i * tile_k, tile_k), :]
+        s = jnp.dot(q, kblk.T) * scale  # [g*tile, tile_k]
+        kpos = i * tile_k + jax.lax.iota(jnp.int32, tile_k)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos < length)[None, :]
+        p = jnp.where(mask, jnp.exp(s - m[:, None]) / l[:, None], 0.0)
+        live = (i < hi).astype(jnp.float32)
+        pl.store(
+            p_ref,
+            (0, 0, pl.ds(i * tile_k, tile_k)),
+            (p.mean(axis=0) * live).astype(p_ref.dtype),
+        )
+        return 0
+
+    jax.lax.fori_loop(0, nblk, body, 0)
+
+
+def prefill_pool_pass(q, k, m, l, length, tile: int = dense_k.TILE_Q):
+    """Pass 2: pooled post-softmax weights [n_kv, T//tile, L]."""
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    nt = T // tile
+    tile_k = _pick_tile_k(L)
+    qr = (
+        q.reshape(n_kv, g, nt, tile, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(n_kv, nt, g * tile, d)
+        .astype(jnp.float32)
+    )
+    mr = m.reshape(n_kv, g, nt, tile).transpose(0, 2, 1, 3).reshape(n_kv, nt, g * tile)
+    lr = l.reshape(n_kv, g, nt, tile).transpose(0, 2, 1, 3).reshape(n_kv, nt, g * tile)
+    return pl.pallas_call(
+        functools.partial(
+            _prefill_pool_kernel,
+            tile=tile,
+            tile_k=tile_k,
+            scale=1.0 / d**0.5,
+            offs=L - T,
+            g=g,
+        ),
+        grid=(n_kv, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, t: (0,)),
+            pl.BlockSpec((1, 1, g * tile, d), lambda h, t: (h, t, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((1, 1, g * tile), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, 1, g * tile), lambda h, t: (h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, L), lambda h, t: (h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, nt, L), jnp.float32),
+        interpret=True,
+    )(length.astype(jnp.int32), qr, k.astype(jnp.float32), mr, lr)
+
+
+def anchor_prefill(q, k, v, length, kk: int, tile: int = dense_k.TILE_Q):
+    """Full anchor prefill pipeline: (out [n_q,T,d], idx [n_kv,T//tile,kk])."""
+    m, l = prefill_stats_pass(q, k, length, tile)
+    pooled = prefill_pool_pass(q, k, m, l, length, tile)
+    idx = topk_pass(pooled, kk)
+    out = reuse_k.reuse_prefill(q, k, v, idx, tile)
+    return out, idx
+
+
+def anchor0_prefill(q, k, v, length, kk: int, tile: int = dense_k.TILE_Q):
+    """Anchor layer 0 prefill: dense output + Top-k indices (no pass 4)."""
+    out = dense_k.dense_prefill(q, k, v, length, tile)
+    m, l = prefill_stats_pass(q, k, length, tile)
+    pooled = prefill_pool_pass(q, k, m, l, length, tile)
+    idx = topk_pass(pooled, kk)
+    return out, idx

@@ -1,0 +1,162 @@
+"""Pallas flash-style dense GQA attention kernels (decode + causal prefill).
+
+TPU adaptation of the paper's TileLang/FA3 baselines (DESIGN.md
+§Hardware-Adaptation): the HBM<->SMEM threadblock schedule becomes an
+HBM<->VMEM BlockSpec schedule; Q-tiles of `TILE_Q` queries (128 by default,
+matching the paper) stream K/V tiles of `TILE_K` keys through an online
+softmax.  `interpret=True` everywhere — the CPU PJRT plugin cannot run
+Mosaic custom-calls; the lowered HLO is what the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+TILE_Q = 128  # prefill Q-tile (matches the paper's kernel + pooling tile)
+TILE_K = 256  # K/V tile streamed through VMEM
+
+
+def _pick_tile_k(L: int) -> int:
+    """Largest K-tile <= TILE_K that divides L (context lengths are padded
+    to a multiple of 128 by the coordinator; smaller L runs untiled)."""
+    for t in (TILE_K, 128, 64, 32, 16, 8, 4, 2, 1):
+        if t <= L and L % t == 0:
+            return t
+    return L
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, tile_k, scale):
+    """One KV head: q [1,g,d] x K/V [1,L,d] -> o [1,g,d] (online softmax)."""
+    q = q_ref[0]  # [g, d]
+    g, d = q.shape
+    length = len_ref[0]
+    L = k_ref.shape[1]
+    nblk = L // tile_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        kblk = k_ref[0, pl.ds(i * tile_k, tile_k), :]  # [tile_k, d]
+        vblk = v_ref[0, pl.ds(i * tile_k, tile_k), :]
+        s = jnp.dot(q, kblk.T) * scale  # [g, tile_k] (MXU-shaped)
+        kpos = i * tile_k + jax.lax.iota(jnp.int32, tile_k)
+        s = jnp.where((kpos < length)[None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, vblk)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((g,), NEG_INF, jnp.float32),
+        jnp.zeros((g,), jnp.float32),
+        jnp.zeros((g, d), jnp.float32),
+    )
+    _, l, acc = jax.lax.fori_loop(0, nblk, body, init)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def dense_decode(q, k, v, length):
+    """Dense GQA decode attention (Pallas).
+
+    q: [n_q, d], k/v: [n_kv, L, d] (L a multiple of TILE_K), length: [1]
+    int32 valid-key count.  Returns [n_q, d].
+    """
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, d).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, tile_k=_pick_tile_k(L), scale=1.0 / d**0.5),
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h: (0,)),
+            pl.BlockSpec((1, g, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, g, d), q.dtype),
+        interpret=True,
+    )(length.astype(jnp.int32), qg, k.astype(jnp.float32), v.astype(jnp.float32))
+    return out.reshape(n_q, d)
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, tile_q, tile_k, scale, offs):
+    """One (q head, Q-tile): causal flash attention over streamed K tiles."""
+    q = q_ref[0]  # [tile_q, d]
+    tq, d = q.shape
+    t = pl.program_id(1)
+    length = len_ref[0]
+    qpos = offs + t * tile_q + jax.lax.iota(jnp.int32, tile_q)  # absolute
+    # K tiles needed: up to the causal limit of the last query in the tile.
+    hi = (offs + (t + 1) * tile_q + tile_k - 1) // tile_k
+    nblk_total = k_ref.shape[1] // tile_k
+    hi = jnp.minimum(hi, nblk_total)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kblk = k_ref[0, pl.ds(i * tile_k, tile_k), :]
+        vblk = v_ref[0, pl.ds(i * tile_k, tile_k), :]
+        s = jnp.dot(q, kblk.T) * scale  # [tile_q, tile_k]
+        kpos = i * tile_k + jax.lax.iota(jnp.int32, tile_k)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos < length)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, vblk)
+        return m_new, l_new, acc_new
+
+    init = (
+        jnp.full((tq,), NEG_INF, jnp.float32),
+        jnp.zeros((tq,), jnp.float32),
+        jnp.zeros((tq, d), jnp.float32),
+    )
+    _, l, acc = jax.lax.fori_loop(0, hi, body, init)
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def dense_prefill(q, k, v, length, tile_q: int = TILE_Q):
+    """Dense causal GQA prefill attention (Pallas flash).
+
+    q: [n_q, T, d] (T a multiple of tile_q), k/v: [n_kv, L, d] with L >= T;
+    query t attends to keys [0, L - T + t].  length: [1] int32.
+    Returns [n_q, T, d].
+    """
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    nt = T // tile_q
+    tile_k = _pick_tile_k(L)
+    out = pl.pallas_call(
+        functools.partial(
+            _prefill_kernel,
+            tile_q=tile_q,
+            tile_k=tile_k,
+            scale=1.0 / d**0.5,
+            offs=L - T,
+        ),
+        grid=(n_q, nt),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, t: (0,)),
+            pl.BlockSpec((1, tile_q, d), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h // g, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q, d), lambda h, t: (h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_q, T, d), q.dtype),
+        interpret=True,
+    )(
+        length.astype(jnp.int32),
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+    )
+    return out

@@ -1,0 +1,247 @@
+"""Pure-jnp reference oracles for every Kascade kernel.
+
+These are the ground truth the Pallas kernels (dense.py, anchor.py,
+reuse.py) are tested against at build time.  Everything here mirrors the
+math in the paper:
+
+  * dense scaled-dot-product GQA attention (Eq. 1-2), decode + causal prefill
+  * oracle Top-k attention (Sec. 3.1)
+  * post-/pre-softmax tile pooling (Sec. 3.4)
+  * sparse attention over an explicit index set (reuse layers, Sec. 3.2)
+  * the anchor multi-pass pipeline outputs (Sec. 3.6)
+
+Shape conventions (single sequence; batching is the coordinator's job):
+  q  decode : [n_q, d]          prefill : [n_q, T, d]
+  K,V       : [n_kv, L, d]
+  idx decode: [n_kv, k]         prefill : [n_kv, n_tiles, k]
+Group size g = n_q // n_kv; query head h maps to kv head h // g.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _scale(d: int) -> float:
+    return 1.0 / (d**0.5)
+
+
+# ---------------------------------------------------------------------------
+# dense attention
+# ---------------------------------------------------------------------------
+
+
+def dense_decode(q, k, v, length=None):
+    """Dense GQA decode attention.
+
+    q: [n_q, d], k/v: [n_kv, L, d]. `length` masks keys >= length (padding).
+    Returns [n_q, d].
+    """
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, d)
+    s = jnp.einsum("hgd,hld->hgl", qg, k) * _scale(d)
+    if length is not None:
+        mask = jnp.arange(L)[None, None, :] < length
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgl,hld->hgd", p, v)
+    return out.reshape(n_q, d)
+
+
+def dense_prefill(q, k, v, length=None):
+    """Dense causal GQA prefill attention.
+
+    q: [n_q, T, d], k/v: [n_kv, L, d] with L >= T; query t attends to keys
+    [0, L - T + t].  Returns [n_q, T, d].
+    """
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, T, d)
+    s = jnp.einsum("hgtd,hld->hgtl", qg, k) * _scale(d)
+    offs = L - T
+    causal = jnp.arange(L)[None, :] <= (jnp.arange(T)[:, None] + offs)
+    if length is not None:
+        causal = causal & (jnp.arange(L)[None, :] < length)
+    s = jnp.where(causal[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgtl,hld->hgtd", p, v)
+    return out.reshape(n_q, T, d)
+
+
+# ---------------------------------------------------------------------------
+# scores + pooling (anchor pass 1 + 2)
+# ---------------------------------------------------------------------------
+
+
+def decode_scores(q, k, length=None):
+    """Per-query-head post-softmax distributions: [n_q, L]."""
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, d)
+    s = jnp.einsum("hgd,hld->hgl", qg, k) * _scale(d)
+    if length is not None:
+        s = jnp.where(jnp.arange(L)[None, None, :] < length, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1).reshape(n_q, L)
+
+
+def pool_post_softmax_decode(q, k, length=None):
+    """GQA pooling: mean of post-softmax distributions over the group.
+
+    Returns [n_kv, L] pooled attention weights (paper Sec. 3.4, decode).
+    """
+    n_q, _ = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    p = decode_scores(q, k, length).reshape(n_kv, g, L)
+    return p.mean(axis=1)
+
+
+def pool_pre_softmax_decode(q, k, length=None):
+    """Pre-softmax pooling: average queries in the group, then one softmax."""
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qbar = q.reshape(n_kv, g, d).mean(axis=1)
+    s = jnp.einsum("hd,hld->hl", qbar, k) * _scale(d)
+    if length is not None:
+        s = jnp.where(jnp.arange(L)[None, :] < length, s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1)
+
+
+def prefill_scores(q, k, length=None):
+    """Per-query-head causal post-softmax distributions: [n_q, T, L]."""
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    qg = q.reshape(n_kv, g, T, d)
+    s = jnp.einsum("hgtd,hld->hgtl", qg, k) * _scale(d)
+    offs = L - T
+    causal = jnp.arange(L)[None, :] <= (jnp.arange(T)[:, None] + offs)
+    if length is not None:
+        causal = causal & (jnp.arange(L)[None, :] < length)
+    s = jnp.where(causal[None, None], s, NEG_INF)
+    return jax.nn.softmax(s, axis=-1).reshape(n_q, T, L)
+
+
+def pool_post_softmax_prefill(q, k, tile: int, length=None):
+    """Tile-level post-softmax pooling for prefill (paper Sec. 3.4).
+
+    Pools the per-query post-softmax distributions over (GQA group x tile of
+    `tile` consecutive queries).  Returns [n_kv, T // tile, L].
+    """
+    n_q, T, _ = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    p = prefill_scores(q, k, length).reshape(n_kv, g, T // tile, tile, L)
+    return p.mean(axis=(1, 3))
+
+
+# ---------------------------------------------------------------------------
+# Top-k selection + sparse attention (anchor pass 3 + 4, reuse layers)
+# ---------------------------------------------------------------------------
+
+
+def topk_indices(pooled, k: int):
+    """Top-k key indices from pooled weights along the last axis (int32)."""
+    _, idx = jax.lax.top_k(pooled, k)
+    return idx.astype(jnp.int32)
+
+
+def sparse_decode(q, k, v, idx):
+    """Sparse decode attention over an explicit per-kv-head index set.
+
+    q: [n_q, d], k/v: [n_kv, L, d], idx: [n_kv, kk] int32 (entries < 0 are
+    masked out — used for padding).  Returns [n_q, d].
+    """
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    safe = jnp.maximum(idx, 0)
+    kg = jnp.take_along_axis(k, safe[:, :, None], axis=1)  # [n_kv, kk, d]
+    vg = jnp.take_along_axis(v, safe[:, :, None], axis=1)
+    qg = q.reshape(n_kv, g, d)
+    s = jnp.einsum("hgd,hkd->hgk", qg, kg) * _scale(d)
+    s = jnp.where(idx[:, None, :] >= 0, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgk,hkd->hgd", p, vg)
+    return out.reshape(n_q, d)
+
+
+def sparse_prefill(q, k, v, idx, tile: int):
+    """Sparse causal prefill attention with tile-shared indices.
+
+    q: [n_q, T, d], k/v: [n_kv, L, d], idx: [n_kv, T // tile, kk] int32.
+    Queries in tile t use idx[:, t]; entries < 0 or beyond the causal limit
+    of the individual query are masked.  Returns [n_q, T, d].
+    """
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    nt = T // tile
+    offs = L - T
+    safe = jnp.maximum(idx, 0)  # [n_kv, nt, kk]
+    kg = jnp.take_along_axis(k[:, None], safe[..., None], axis=2)  # [n_kv,nt,kk,d]
+    vg = jnp.take_along_axis(v[:, None], safe[..., None], axis=2)
+    qg = q.reshape(n_kv, g, nt, tile, d)
+    s = jnp.einsum("hgnud,hnkd->hgnuk", qg, kg) * _scale(d)
+    qpos = offs + jnp.arange(T).reshape(nt, tile)  # absolute query positions
+    valid = (idx[:, None, :, None, :] >= 0) & (
+        safe[:, None, :, None, :] <= qpos[None, None, :, :, None]
+    )
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # A fully-masked row would produce NaNs; guard (can happen only for
+    # padded tiles, which the caller discards).
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("hgnuk,hnkd->hgnud", p, vg)
+    return out.reshape(n_q, T, d)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end anchor pipeline (what the multi-pass kernels must reproduce)
+# ---------------------------------------------------------------------------
+
+
+def anchor_decode(q, k, v, kk: int, length=None):
+    """Anchor-layer decode: output + fresh Top-k indices.
+
+    Returns (out [n_q, d], idx [n_kv, kk]).  Output is computed via sparse
+    attention over the freshly selected indices (paper pass 4); indices are
+    selected from post-softmax GQA-pooled weights (passes 1-3).
+    """
+    pooled = pool_post_softmax_decode(q, k, length)  # [n_kv, L]
+    idx = topk_indices(pooled, kk)
+    if length is not None:
+        valid = jnp.take_along_axis(pooled, idx, axis=-1) > 0.0
+        idx = jnp.where(valid, idx, -1)
+    out = sparse_decode(q, k, v, idx)
+    return out, idx
+
+
+def anchor_prefill(q, k, v, kk: int, tile: int, length=None):
+    """Anchor-layer prefill: output + per-tile Top-k indices.
+
+    Returns (out [n_q, T, d], idx [n_kv, T // tile, kk]).
+    """
+    pooled = pool_post_softmax_prefill(q, k, tile, length)  # [n_kv, nt, L]
+    idx = topk_indices(pooled, kk)
+    valid = jnp.take_along_axis(pooled, idx, axis=-1) > 0.0
+    idx = jnp.where(valid, idx, -1)
+    out = sparse_prefill(q, k, v, idx, tile)
+    return out, idx
+
+
+def remap_indices(idx, head_map):
+    """Head remapping (Sec. 3.5): reuse-head h reads anchor head head_map[h].
+
+    idx: [n_kv, ...] anchor index sets; head_map: [n_kv] int32.  Many-to-one
+    allowed.  Returns idx rearranged for the reuse layer's heads.
+    """
+    return idx[head_map]

@@ -1,0 +1,127 @@
+"""Pallas sparse Top-k (reuse-layer) attention kernels.
+
+Reuse layers consume the Top-k indices produced by the previous anchor
+layer (after head remapping, which the Rust coordinator applies as a
+row-gather on the index tensor before invoking these kernels).  The key
+loads are non-contiguous gathers — the paper (Sec. 3.6) notes each key row
+is large enough (~256 B) that this costs little; on TPU this maps to a
+dynamic-slice stream from HBM into VMEM.
+
+idx entries < 0 are padding and masked out of the softmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _reuse_decode_kernel(q_ref, k_ref, v_ref, idx_ref, o_ref, *, scale):
+    """One KV head: gather k rows by idx, attend.  Blocks: q [1,g,d],
+    k/v [1,L,d], idx [1,kk], o [1,g,d]."""
+    q = q_ref[0]  # [g, d]
+    idx = idx_ref[0]  # [kk]
+    safe = jnp.maximum(idx, 0)
+    kg = k_ref[0, safe, :]  # gather: [kk, d]
+    vg = v_ref[0, safe, :]
+    s = jnp.dot(q, kg.T) * scale  # [g, kk]
+    s = jnp.where((idx >= 0)[None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o_ref[0] = (jnp.dot(p, vg) / p.sum(axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+def reuse_decode(q, k, v, idx):
+    """Sparse decode attention over per-KV-head Top-k indices (Pallas).
+
+    q: [n_q, d], k/v: [n_kv, L, d], idx: [n_kv, kk] int32 (-1 = padding).
+    Returns [n_q, d].
+    """
+    n_q, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    kk = idx.shape[1]
+    qg = q.reshape(n_kv, g, d).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_reuse_decode_kernel, scale=1.0 / d**0.5),
+        grid=(n_kv,),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, kk), lambda h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, g, d), q.dtype),
+        interpret=True,
+    )(qg, k.astype(jnp.float32), v.astype(jnp.float32), idx.astype(jnp.int32))
+    return out.reshape(n_q, d)
+
+
+def _reuse_prefill_kernel(q_ref, k_ref, v_ref, idx_ref, o_ref, *, scale, tile, offs):
+    """One (kv head, Q-tile): gather + causally-masked sparse attention.
+    Blocks: q [1,1,g*tile,d] (tile-major: [g, tile] flattened), k/v [1,L,d],
+    idx [1,1,kk]."""
+    t = pl.program_id(1)
+    q = q_ref[0, 0]  # [g*tile, d]
+    gt, d = q.shape
+    g = gt // tile
+    idx = idx_ref[0, 0]  # [kk]
+    safe = jnp.maximum(idx, 0)
+    kg = k_ref[0, safe, :]  # [kk, d]
+    vg = v_ref[0, safe, :]
+    s = jnp.dot(q, kg.T) * scale  # [g*tile, kk]
+    qpos = offs + t * tile + jax.lax.iota(jnp.int32, tile)  # [tile]
+    qpos = jnp.tile(qpos, (g,))  # row r of q is (head r//tile? no: g-major)
+    valid = (idx >= 0)[None, :] & (safe[None, :] <= qpos[:, None])
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    o_ref[0, 0] = (jnp.dot(p, vg) / jnp.maximum(denom, 1e-30)).astype(o_ref.dtype)
+
+
+def reuse_prefill(q, k, v, idx, tile: int):
+    """Sparse causal prefill attention with tile-shared Top-k indices.
+
+    q: [n_q, T, d], k/v: [n_kv, L, d], idx: [n_kv, T//tile, kk] int32.
+    All g query heads of a KV group and all `tile` consecutive queries in a
+    tile share one index set (paper Sec. 3.4).  Returns [n_q, T, d].
+    """
+    n_q, T, d = q.shape
+    n_kv, L, _ = k.shape
+    g = n_q // n_kv
+    nt = T // tile
+    kk = idx.shape[-1]
+    # Rearrange to [n_kv, nt, g*tile, d], g-major rows to match the kernel.
+    qr = (
+        q.reshape(n_kv, g, nt, tile, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(n_kv, nt, g * tile, d)
+        .astype(jnp.float32)
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _reuse_prefill_kernel, scale=1.0 / d**0.5, tile=tile, offs=L - T
+        ),
+        grid=(n_kv, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * tile, d), lambda h, t: (h, t, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((1, L, d), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((1, 1, kk), lambda h, t: (h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * tile, d), lambda h, t: (h, t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_kv, nt, g * tile, d), q.dtype),
+        interpret=True,
+    )(qr, k.astype(jnp.float32), v.astype(jnp.float32), idx.astype(jnp.int32))
+    return (
+        out.reshape(n_kv, nt, g, tile, d)
+        .transpose(0, 2, 1, 3, 4)
+        .reshape(n_q, T, d)
+    )

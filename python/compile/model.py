@@ -1,0 +1,217 @@
+"""L2: GQA transformer ops in JAX, calling the Pallas kernels.
+
+The model is decomposed into *layer-granular ops* so the Rust coordinator
+owns the per-layer anchor/reuse schedule (DESIGN.md §6): each op below is
+AOT-lowered to its own HLO artifact by aot.py, and the Rust runtime invokes
+them in sequence, threading KV-cache buffers and Top-k index tensors
+through host memory.  Weights are runtime arguments (never baked into the
+HLO), so one artifact serves every layer and every model instance.
+
+Architecture (Llama-style, scaled): RMSNorm -> GQA attention (RoPE) ->
+residual -> RMSNorm -> SwiGLU MLP -> residual; final RMSNorm + unembed.
+
+Ops (decode, T=1):            Ops (prefill, T tokens):
+  embed_decode                  embed_prefill
+  qkv_decode                    qkv_prefill
+  attn_dense_decode             attn_dense_prefill
+  attn_anchor_decode            attn_anchor_prefill
+  attn_anchor0_decode           attn_anchor0_prefill
+  attn_reuse_decode             attn_reuse_prefill
+  post_decode                   post_prefill
+  logits
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import anchor as anchor_k
+from .kernels import dense as dense_k
+from .kernels import ref as ref_k
+from .kernels import reuse as reuse_k
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """SynthLM architecture hyperparameters (mirrors rust/src/model/config.rs)."""
+
+    n_layers: int = 16
+    d_model: int = 256
+    n_q_heads: int = 8
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 1024
+    vocab: int = 4096
+    rope_theta: float = 10000.0
+
+    @property
+    def group(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    """RMSNorm over the last axis."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta: float):
+    """Rotary position embedding.  x: [..., T, d] (d even), pos: [T] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# ops (each is an AOT entry point; prefill T and cache L are static shapes)
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens, w_e):
+    """tokens [T] int32, w_e [V, D] -> x [T, D]."""
+    return w_e[tokens]
+
+
+def qkv(x, ln_w, wq, wk, wv, pos, cfg: ModelConfig):
+    """Pre-attention projection + RoPE.
+
+    x [T, D], pos [T] int32 absolute positions.
+    Returns q [n_q, T, d], k [n_kv, T, d], v [n_kv, T, d].
+    """
+    T = x.shape[0]
+    h = rmsnorm(x, ln_w)
+    q = (h @ wq).reshape(T, cfg.n_q_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ wk).reshape(T, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ wv).reshape(T, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def post(x, attn_out, wo, ln2_w, w1, w3, w2):
+    """Residual + SwiGLU MLP.  x [T, D], attn_out [n_q, T, d] -> x' [T, D]."""
+    n_q, T, d = attn_out.shape
+    a = attn_out.transpose(1, 0, 2).reshape(T, n_q * d)
+    x = x + a @ wo
+    h = rmsnorm(x, ln2_w)
+    return x + (jax.nn.silu(h @ w1) * (h @ w3)) @ w2
+
+
+def logits(x, lnf_w, w_u):
+    """x [T, D] -> [T, V]."""
+    return rmsnorm(x, lnf_w) @ w_u
+
+
+# attention variants — thin wrappers so aot.py can enumerate them uniformly.
+
+
+def attn_dense_decode(q, k, v, length):
+    return dense_k.dense_decode(q, k, v, length)
+
+
+def attn_dense_prefill(q, k, v, length):
+    return dense_k.dense_prefill(q, k, v, length)
+
+
+def attn_anchor_decode(q, k, v, length, kk: int):
+    return anchor_k.anchor_decode(q, k, v, length, kk)
+
+
+def attn_anchor0_decode(q, k, v, length, kk: int):
+    return anchor_k.anchor0_decode(q, k, v, length, kk)
+
+
+def attn_reuse_decode(q, k, v, idx):
+    return reuse_k.reuse_decode(q, k, v, idx)
+
+
+def attn_anchor_prefill(q, k, v, length, kk: int, tile: int):
+    return anchor_k.anchor_prefill(q, k, v, length, kk, tile)
+
+
+def attn_anchor0_prefill(q, k, v, length, kk: int, tile: int):
+    return anchor_k.anchor0_prefill(q, k, v, length, kk, tile)
+
+
+def attn_reuse_prefill(q, k, v, idx, tile: int):
+    return reuse_k.reuse_prefill(q, k, v, idx, tile)
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp reference model (tests only — never lowered)
+# ---------------------------------------------------------------------------
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0):
+    """Random (but well-conditioned) weights as a dict of arrays."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, cfg.n_layers * 8 + 3)
+    D, d, F = cfg.d_model, cfg.d_head, cfg.d_ff
+
+    def mat(k, m, n):
+        return jax.random.normal(k, (m, n), jnp.float32) / (m**0.5)
+
+    layers = []
+    for i in range(cfg.n_layers):
+        b = ks[i * 8 : (i + 1) * 8]
+        layers.append(
+            dict(
+                ln1=jnp.ones((D,)),
+                wq=mat(b[0], D, cfg.n_q_heads * d),
+                wk=mat(b[1], D, cfg.n_kv_heads * d),
+                wv=mat(b[2], D, cfg.n_kv_heads * d),
+                wo=mat(b[3], cfg.n_q_heads * d, D),
+                ln2=jnp.ones((D,)),
+                w1=mat(b[4], D, F),
+                w3=mat(b[5], D, F),
+                w2=mat(b[6], F, D),
+            )
+        )
+    w_e = jax.random.normal(ks[-2], (cfg.vocab, cfg.d_model)) * 0.02
+    w_u = jax.random.normal(ks[-1], (cfg.d_model, cfg.vocab)) / cfg.d_model**0.5
+    return dict(layers=layers, w_e=w_e, lnf=jnp.ones((cfg.d_model,)), w_u=w_u)
+
+
+def forward_dense(tokens, weights, cfg: ModelConfig):
+    """Full dense prefill forward over `tokens` [T]; returns logits [T, V]."""
+    T = tokens.shape[0]
+    pos = jnp.arange(T, dtype=jnp.int32)
+    x = embed(tokens, weights["w_e"])
+    for lw in weights["layers"]:
+        q, k, v = qkv(x, lw["ln1"], lw["wq"], lw["wk"], lw["wv"], pos, cfg)
+        a = ref_k.dense_prefill(q, k, v)
+        x = post(x, a, lw["wo"], lw["ln2"], lw["w1"], lw["w3"], lw["w2"])
+    return logits(x, weights["lnf"], weights["w_u"])
+
+
+def decode_step_dense(token, pos, kv_cache, weights, cfg: ModelConfig):
+    """One dense decode step with a python-side KV cache (tests only).
+
+    kv_cache: list of (K [n_kv, L, d], V [n_kv, L, d]) mutable buffers;
+    pos: int current position.  Returns (logits [V], updated cache).
+    """
+    x = embed(jnp.array([token]), weights["w_e"])
+    new_cache = []
+    for lw, (K, V) in zip(weights["layers"], kv_cache):
+        q, k1, v1 = qkv(
+            x, lw["ln1"], lw["wq"], lw["wk"], lw["wv"],
+            jnp.array([pos], jnp.int32), cfg,
+        )
+        K = K.at[:, pos, :].set(k1[:, 0, :])
+        V = V.at[:, pos, :].set(v1[:, 0, :])
+        new_cache.append((K, V))
+        a = ref_k.dense_decode(q[:, 0, :], K, V, pos + 1)
+        x = post(x, a[:, None, :], lw["wo"], lw["ln2"], lw["w1"], lw["w3"], lw["w2"])
+    return logits(x, weights["lnf"], weights["w_u"])[0], new_cache

@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_qkv(rng, n_q, n_kv, d, L, T=None, dtype=np.float32, kscale=0.3):
+    """Random attention inputs; kscale keeps score magnitudes realistic."""
+    if T is None:
+        q = rng.standard_normal((n_q, d)).astype(dtype)
+    else:
+        q = rng.standard_normal((n_q, T, d)).astype(dtype)
+    k = (rng.standard_normal((n_kv, L, d)) * kscale).astype(dtype)
+    v = rng.standard_normal((n_kv, L, d)).astype(dtype)
+    return q, k, v

@@ -1,0 +1,143 @@
+"""Anchor multi-pass pipeline (Sec. 3.6) — pass-by-pass and end-to-end."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import anchor, dense, ref
+from .conftest import make_qkv
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+class TestDecodePasses:
+    def test_pass1_scores(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        s = np.array(anchor.decode_scores_pass(q, k, jnp.array([512], jnp.int32)))
+        qg = np.array(q).reshape(2, 4, 64)
+        want = np.einsum("hgd,hld->hgl", qg, np.array(k)) / 8.0
+        np.testing.assert_allclose(s, want, **TOL)
+
+    def test_pass1_masks_beyond_length(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        s = np.array(anchor.decode_scores_pass(q, k, jnp.array([100], jnp.int32)))
+        assert (s[:, :, 100:] <= -1e29).all()
+        assert (s[:, :, :100] > -1e29).all()
+
+    def test_pass2_pooled_softmax(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        s = anchor.decode_scores_pass(q, k, jnp.array([512], jnp.int32))
+        pooled = np.array(anchor.decode_pool_pass(s))
+        want = np.array(ref.pool_post_softmax_decode(q, k))
+        np.testing.assert_allclose(pooled, want, **TOL)
+        # pooled rows are probability distributions
+        np.testing.assert_allclose(pooled.sum(-1), 1.0, rtol=1e-5)
+
+    def test_pass3_topk_matches_lax(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        pooled = ref.pool_post_softmax_decode(q, k)
+        idx = np.array(anchor.topk_pass(pooled, 64))
+        want = np.array(ref.topk_indices(pooled, 64))
+        np.testing.assert_array_equal(idx, want)
+
+    def test_pass3_pads_zero_weight_slots(self, rng):
+        """When length < k, the surplus slots must be -1 (masked)."""
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        pooled = ref.pool_post_softmax_decode(q, k, 40)
+        idx = np.array(anchor.topk_pass(pooled, 64))
+        assert ((idx >= 0).sum(axis=1) == 40).all()
+        assert (np.sort(idx[idx >= 0]) < 40).all()
+
+
+class TestAnchorDecodeEndToEnd:
+    @pytest.mark.parametrize("L,kk", [(512, 64), (512, 128), (1024, 128)])
+    def test_matches_ref_pipeline(self, rng, L, kk):
+        q, k, v = make_qkv(rng, 8, 2, 64, L)
+        got_o, got_i = anchor.anchor_decode(q, k, v, jnp.array([L], jnp.int32), kk)
+        want_o, want_i = ref.anchor_decode(q, k, v, kk)
+        np.testing.assert_allclose(np.array(got_o), np.array(want_o), **TOL)
+        np.testing.assert_array_equal(
+            np.sort(np.array(got_i)), np.sort(np.array(want_i))
+        )
+
+    def test_anchor0_output_is_dense(self, rng):
+        """Layer-0 anchors return the *dense* output (Sec. 3.1)."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 512)
+        out, idx = anchor.anchor0_decode(q, k, v, jnp.array([512], jnp.int32), 64)
+        want = ref.dense_decode(q, k, v)
+        np.testing.assert_allclose(np.array(out), np.array(want), **TOL)
+        assert np.array(idx).shape == (2, 64)
+
+    def test_indices_capture_dominant_mass(self, rng):
+        """With peaked scores, the selected 25% of keys must dominate the
+        pooled mass (the intrinsic-sparsity premise of Sec. 3.1)."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 512, kscale=3.0)
+        _, idx = anchor.anchor_decode(q, k, v, jnp.array([512], jnp.int32), 128)
+        pooled = np.array(ref.pool_post_softmax_decode(q, k))
+        mass = np.take_along_axis(pooled, np.array(idx), axis=1).sum(axis=1)
+        assert (mass > 0.9).all()
+
+    @settings(deadline=None, max_examples=8)
+    @given(
+        n_kv=st.sampled_from([1, 2]),
+        g=st.sampled_from([2, 4]),
+        L=st.sampled_from([256, 512]),
+        kk=st.sampled_from([32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_kv, g, L, kk, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = make_qkv(rng, n_kv * g, n_kv, 32, L)
+        got_o, got_i = anchor.anchor_decode(q, k, v, jnp.array([L], jnp.int32), kk)
+        want_o, want_i = ref.anchor_decode(q, k, v, kk)
+        np.testing.assert_allclose(
+            np.array(got_o), np.array(want_o), rtol=5e-5, atol=5e-5
+        )
+        np.testing.assert_array_equal(
+            np.sort(np.array(got_i)), np.sort(np.array(want_i))
+        )
+
+
+class TestAnchorPrefill:
+    def test_pass1_stats_match_dense_softmax(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 256, T=256)
+        m, l = anchor.prefill_stats_pass(q, k, jnp.array([256], jnp.int32), 128)
+        # recompute row max / sum-exp directly and compare
+        s = np.einsum(
+            "hgtd,hld->hgtl",
+            np.array(q).reshape(2, 4, 256, 64),
+            np.array(k),
+        ).reshape(8, 256, 256) / 8.0
+        causal = np.tril(np.ones((256, 256), bool))
+        s = np.where(causal[None], s, -1e30)
+        np.testing.assert_allclose(np.array(m), s.max(-1), **TOL)
+        np.testing.assert_allclose(
+            np.array(l), np.exp(s - s.max(-1, keepdims=True)).sum(-1), rtol=1e-4, atol=1e-4
+        )
+
+    def test_pass2_pooled_matches_ref(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 256, T=256)
+        ln = jnp.array([256], jnp.int32)
+        m, l = anchor.prefill_stats_pass(q, k, ln, 128)
+        pooled = np.array(anchor.prefill_pool_pass(q, k, m, l, ln, 128))
+        want = np.array(ref.pool_post_softmax_prefill(q, k, 128))
+        np.testing.assert_allclose(pooled, want, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("T,L", [(128, 128), (256, 256), (128, 512)])
+    def test_end_to_end_matches_ref(self, rng, T, L):
+        q, k, v = make_qkv(rng, 8, 2, 64, L, T=T)
+        got_o, got_i = anchor.anchor_prefill(q, k, v, jnp.array([L], jnp.int32), 64, 128)
+        want_o, want_i = ref.anchor_prefill(q, k, v, 64, 128)
+        np.testing.assert_allclose(np.array(got_o), np.array(want_o), rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(
+            np.sort(np.array(got_i), -1), np.sort(np.array(want_i), -1)
+        )
+
+    def test_anchor0_prefill_output_is_dense(self, rng):
+        q, k, v = make_qkv(rng, 8, 2, 64, 256, T=256)
+        out, idx = anchor.anchor0_prefill(q, k, v, jnp.array([256], jnp.int32), 64, 128)
+        want = ref.dense_prefill(q, k, v)
+        np.testing.assert_allclose(np.array(out), np.array(want), **TOL)
+        assert np.array(idx).shape == (2, 2, 64)

@@ -1,0 +1,85 @@
+"""AOT artifact generation: manifest integrity + HLO text well-formedness."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestKRule:
+    def test_paper_k_rule(self):
+        # k = min(max(0.1 L, 128), L)
+        assert aot.k_rule(512) == 128
+        assert aot.k_rule(1280) == 128
+        assert aot.k_rule(2048) == 204
+        assert aot.k_rule(100) == 100  # capped at L
+        assert aot.k_rule(4096) == 409
+
+
+class TestEntryPoints:
+    def test_enumeration_is_complete(self):
+        names = [n for n, *_ in aot.entry_points(aot.CFG)]
+        assert len(names) == len(set(names))
+        for L in aot.DECODE_L:
+            for kind in ("dense", "anchor", "anchor0", "reuse"):
+                assert f"attn_{kind}_decode_l{L}" in names
+        for T in aot.PREFILL_T:
+            for kind in ("dense", "anchor", "anchor0", "reuse"):
+                assert f"attn_{kind}_prefill_t{T}" in names
+        assert "logits_decode" in names and "embed_decode" in names
+
+    def test_every_entry_point_lowers(self):
+        """Each entry point must trace + lower to stablehlo without error."""
+        for name, fn, specs, _ in aot.entry_points(aot.CFG):
+            lowered = jax.jit(aot._tuple_fn(fn)).lower(*specs)
+            assert lowered.compiler_ir("stablehlo") is not None, name
+
+    def test_hlo_text_roundtrip_format(self):
+        """The emitted text must be XLA HLO text (parseable header, ENTRY)."""
+        name, fn, specs, _ = next(iter(aot.entry_points(aot.CFG)))
+        text = aot.to_hlo_text(jax.jit(aot._tuple_fn(fn)).lower(*specs))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_artifact_files_exist(self, manifest):
+        for name, meta in manifest["artifacts"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), name
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), name
+
+    def test_config_matches_current(self, manifest):
+        from dataclasses import asdict
+
+        assert manifest["config"] == asdict(aot.CFG)
+
+    def test_attention_shapes_consistent(self, manifest):
+        cfg = aot.CFG
+        for L in manifest["buckets"]["decode_l"]:
+            a = manifest["artifacts"][f"attn_reuse_decode_l{L}"]
+            assert a["inputs"][0]["shape"] == [cfg.n_q_heads, cfg.d_head]
+            assert a["inputs"][3]["shape"] == [cfg.n_kv_heads, aot.k_rule(L)]
+            assert a["outputs"][0]["shape"] == [cfg.n_q_heads, cfg.d_head]
+        for T in manifest["buckets"]["prefill_t"]:
+            a = manifest["artifacts"][f"attn_anchor_prefill_t{T}"]
+            nt = T // manifest["buckets"]["tile"]
+            assert a["outputs"][1]["shape"] == [cfg.n_kv_heads, nt, aot.k_rule(T)]

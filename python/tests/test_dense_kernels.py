@@ -1,0 +1,122 @@
+"""Pallas dense attention kernels vs the pure-jnp oracle (ref.py)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, ref
+from .conftest import make_qkv
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+class TestDenseDecode:
+    @pytest.mark.parametrize("n_q,n_kv", [(8, 2), (8, 8), (4, 1), (16, 4)])
+    def test_matches_ref_across_gqa_ratios(self, rng, n_q, n_kv):
+        q, k, v = make_qkv(rng, n_q, n_kv, 64, 512)
+        got = dense.dense_decode(q, k, v, jnp.array([512], jnp.int32))
+        want = ref.dense_decode(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_length_masking_ignores_padded_keys(self, rng):
+        q, k, v = make_qkv(rng, 8, 2, 64, 512)
+        got = dense.dense_decode(q, k, v, jnp.array([300], jnp.int32))
+        want = ref.dense_decode(q, k[:, :300], v[:, :300])
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_padding_values_are_irrelevant(self, rng):
+        q, k, v = make_qkv(rng, 8, 2, 64, 512)
+        k2 = np.array(k).copy()
+        v2 = np.array(v).copy()
+        k2[:, 300:] = 1e9  # garbage in the padded region
+        v2[:, 300:] = -1e9
+        a = dense.dense_decode(q, k, v, jnp.array([300], jnp.int32))
+        b = dense.dense_decode(q, jnp.array(k2), jnp.array(v2), jnp.array([300], jnp.int32))
+        np.testing.assert_allclose(np.array(a), np.array(b), **TOL)
+
+    def test_output_is_convex_combination_of_values(self, rng):
+        """Softmax weights are a convex combination: out within V's row hull."""
+        q, k, v = make_qkv(rng, 4, 1, 32, 256)
+        out = np.array(dense.dense_decode(q, k, v, jnp.array([256], jnp.int32)))
+        vmin, vmax = np.array(v).min(axis=1)[0], np.array(v).max(axis=1)[0]
+        assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+    @settings(deadline=None, max_examples=12)
+    @given(
+        n_kv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([16, 32, 64, 128]),
+        L=st.sampled_from([256, 512, 1024]),
+        length_frac=st.floats(0.2, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n_kv, g, d, L, length_frac, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = make_qkv(rng, n_kv * g, n_kv, d, L)
+        length = max(1, int(L * length_frac))
+        got = dense.dense_decode(q, k, v, jnp.array([length], jnp.int32))
+        want = ref.dense_decode(q, k, v, length)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=5e-5, atol=5e-5)
+
+    @pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), (np.float16, 2e-2)])
+    def test_dtype_sweep(self, rng, dtype, tol):
+        q, k, v = make_qkv(rng, 8, 2, 64, 256, dtype=dtype)
+        got = dense.dense_decode(jnp.array(q), jnp.array(k), jnp.array(v), jnp.array([256], jnp.int32))
+        want = ref.dense_decode(
+            jnp.array(q, jnp.float32), jnp.array(k, jnp.float32), jnp.array(v, jnp.float32)
+        )
+        np.testing.assert_allclose(
+            np.array(got, np.float32), np.array(want), rtol=tol, atol=tol
+        )
+
+
+class TestDensePrefill:
+    @pytest.mark.parametrize("T,L", [(128, 128), (128, 512), (256, 512), (512, 512)])
+    def test_matches_ref(self, rng, T, L):
+        q, k, v = make_qkv(rng, 8, 2, 64, L, T=T)
+        got = dense.dense_prefill(q, k, v, jnp.array([L], jnp.int32), tile_q=128)
+        want = ref.dense_prefill(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_causality_first_token_attends_only_to_prefix(self, rng):
+        """With T == L, query 0 may only see key 0: out[:,0] == v[:,0] broadcast."""
+        q, k, v = make_qkv(rng, 4, 2, 32, 256, T=256)
+        out = np.array(dense.dense_prefill(q, k, v, jnp.array([256], jnp.int32), tile_q=128))
+        v0 = np.array(v)[:, 0, :]  # [n_kv, d]
+        want = np.repeat(v0, 2, axis=0)  # g=2 query heads per kv head
+        np.testing.assert_allclose(out[:, 0, :], want, **TOL)
+
+    def test_future_keys_are_invisible(self, rng):
+        """Perturbing keys/values after position t must not change output t."""
+        q, k, v = make_qkv(rng, 4, 2, 32, 256, T=256)
+        base = np.array(dense.dense_prefill(q, k, v, jnp.array([256], jnp.int32), tile_q=128))
+        k2, v2 = np.array(k).copy(), np.array(v).copy()
+        k2[:, 200:], v2[:, 200:] = 7.0, -7.0
+        pert = np.array(
+            dense.dense_prefill(q, jnp.array(k2), jnp.array(v2), jnp.array([256], jnp.int32), tile_q=128)
+        )
+        np.testing.assert_allclose(base[:, :200], pert[:, :200], **TOL)
+
+    def test_chunked_prefill_offset(self, rng):
+        """T < L: queries are the last T positions (chunked prefill)."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 512, T=128)
+        got = dense.dense_prefill(q, k, v, jnp.array([512], jnp.int32), tile_q=128)
+        want = ref.dense_prefill(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    @settings(deadline=None, max_examples=8)
+    @given(
+        n_kv=st.sampled_from([1, 2]),
+        g=st.sampled_from([2, 4]),
+        d=st.sampled_from([32, 64]),
+        nt=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_tile_sweep(self, n_kv, g, d, nt, seed):
+        rng = np.random.default_rng(seed)
+        T = 128 * nt
+        q, k, v = make_qkv(rng, n_kv * g, n_kv, d, T, T=T)
+        got = dense.dense_prefill(q, k, v, jnp.array([T], jnp.int32), tile_q=128)
+        want = ref.dense_prefill(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=5e-5, atol=5e-5)

@@ -1,0 +1,97 @@
+"""L2 model ops: RoPE/RMSNorm properties, prefill/decode consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.ModelConfig(n_layers=3, d_model=64, n_q_heads=4, n_kv_heads=2, d_head=16, d_ff=128, vocab=256)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(CFG, seed=7)
+
+
+class TestBlocks:
+    def test_rmsnorm_unit_scale(self):
+        x = jnp.array(np.random.default_rng(0).standard_normal((5, 64)), jnp.float32)
+        y = np.array(M.rmsnorm(x, jnp.ones((64,))))
+        rms = np.sqrt((y**2).mean(-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        x = jnp.array(np.random.default_rng(1).standard_normal((2, 8, 32)), jnp.float32)
+        y = M.rope(x, jnp.arange(8, dtype=jnp.int32), 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.array(y), axis=-1),
+            np.linalg.norm(np.array(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_relative_position_invariance(self):
+        """<rope(q,p1), rope(k,p2)> depends only on p1 - p2."""
+        rng = np.random.default_rng(2)
+        qv = jnp.array(rng.standard_normal((1, 1, 32)), jnp.float32)
+        kv = jnp.array(rng.standard_normal((1, 1, 32)), jnp.float32)
+
+        def dot(p1, p2):
+            a = M.rope(qv, jnp.array([p1], jnp.int32), 10000.0)
+            b = M.rope(kv, jnp.array([p2], jnp.int32), 10000.0)
+            return float((a * b).sum())
+
+        assert abs(dot(5, 3) - dot(105, 103)) < 1e-3
+        assert abs(dot(17, 0) - dot(100, 83)) < 1e-3
+
+    def test_rope_position_zero_is_identity(self):
+        x = jnp.array(np.random.default_rng(3).standard_normal((1, 1, 32)), jnp.float32)
+        y = M.rope(x, jnp.zeros((1,), jnp.int32), 10000.0)
+        np.testing.assert_allclose(np.array(y), np.array(x), atol=1e-6)
+
+
+class TestModelConsistency:
+    def test_qkv_shapes(self, weights):
+        lw = weights["layers"][0]
+        x = jnp.array(np.random.default_rng(0).standard_normal((10, 64)), jnp.float32)
+        q, k, v = M.qkv(x, lw["ln1"], lw["wq"], lw["wk"], lw["wv"],
+                        jnp.arange(10, dtype=jnp.int32), CFG)
+        assert q.shape == (4, 10, 16) and k.shape == (2, 10, 16) == v.shape
+
+    def test_prefill_then_decode_matches_full_prefill(self, weights):
+        """Prefill T tokens, then decode the next one step-by-step; logits
+        must match a single prefill over T+2 tokens."""
+        rng = np.random.default_rng(5)
+        toks = rng.integers(0, 256, size=18).astype(np.int32)
+        full = np.array(M.forward_dense(jnp.array(toks), weights, CFG))
+
+        # incremental: prefill first 16, decode tokens 16, 17
+        pre = np.array(M.forward_dense(jnp.array(toks[:16]), weights, CFG))
+        np.testing.assert_allclose(pre[-1], full[15], rtol=2e-4, atol=2e-4)
+
+        Lmax = 32
+        cache = []
+        x = M.embed(jnp.array(toks[:16]), weights["w_e"])
+        pos = jnp.arange(16, dtype=jnp.int32)
+        for lw in weights["layers"]:
+            q, k, v = M.qkv(x, lw["ln1"], lw["wq"], lw["wk"], lw["wv"], pos, CFG)
+            K = jnp.zeros((2, Lmax, 16)).at[:, :16].set(k)
+            V = jnp.zeros((2, Lmax, 16)).at[:, :16].set(v)
+            cache.append((K, V))
+            a = ref.dense_prefill(q, k, v)
+            x = M.post(x, a, lw["wo"], lw["ln2"], lw["w1"], lw["w3"], lw["w2"])
+
+        lg16, cache = M.decode_step_dense(int(toks[16]), 16, cache, weights, CFG)
+        np.testing.assert_allclose(np.array(lg16), full[16], rtol=2e-4, atol=2e-4)
+        lg17, _ = M.decode_step_dense(int(toks[17]), 17, cache, weights, CFG)
+        np.testing.assert_allclose(np.array(lg17), full[17], rtol=2e-4, atol=2e-4)
+
+    def test_post_residual_passthrough(self, weights):
+        """Zero attention output + zero mlp leaves x unchanged."""
+        lw = {k: jnp.zeros_like(v) for k, v in weights["layers"][0].items()}
+        x = jnp.array(np.random.default_rng(6).standard_normal((4, 64)), jnp.float32)
+        a = jnp.zeros((4, 4, 16))
+        y = M.post(x, a, lw["wo"], lw["ln2"], lw["w1"], lw["w3"], lw["w2"])
+        np.testing.assert_allclose(np.array(y), np.array(x), atol=1e-6)

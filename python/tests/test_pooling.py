@@ -1,0 +1,71 @@
+"""Pooling strategies (Sec. 3.4): post-softmax must beat pre-softmax
+recovery as tiles grow — the property behind Fig. 5."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+from .conftest import make_qkv
+
+
+def _recovery(pooled, per_query, kk):
+    """Fraction of each query's oracle top-k mass captured by the pooled
+    top-k index set (Eq. 3 with a == pooled selection)."""
+    idx = np.array(ref.topk_indices(jnp.array(pooled), kk))
+    p = np.array(per_query)
+    got = np.take_along_axis(p, np.broadcast_to(idx[:, None, :], p.shape[:-1] + (kk,)), -1).sum(-1)
+    oracle = -np.sort(-p, axis=-1)[..., :kk].sum(-1)
+    return (got / np.maximum(oracle, 1e-12)).mean()
+
+
+class TestPooling:
+    def test_post_softmax_rows_are_distributions(self, rng):
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512)
+        pooled = np.array(ref.pool_post_softmax_decode(q, k))
+        assert pooled.shape == (2, 512)
+        np.testing.assert_allclose(pooled.sum(-1), 1.0, rtol=1e-5)
+        assert (pooled >= 0).all()
+
+    def test_gqa_group_of_one_pooling_is_identity(self, rng):
+        q, k, _ = make_qkv(rng, 2, 2, 64, 256)  # g == 1
+        pooled = np.array(ref.pool_post_softmax_decode(q, k))
+        per_q = np.array(ref.decode_scores(q, k))
+        np.testing.assert_allclose(pooled, per_q, rtol=1e-6)
+
+    def test_post_beats_pre_softmax_at_decode(self, rng):
+        """GQA pooling: post-softmax recovers more per-query top-k mass."""
+        post_r, pre_r = [], []
+        for seed in range(8):
+            r = np.random.default_rng(seed)
+            q, k, _ = make_qkv(r, 8, 1, 64, 512, kscale=0.7)  # tile of 8 queries
+            per_q = np.array(ref.decode_scores(q, k)).reshape(1, 8, 512)
+            post = np.array(ref.pool_post_softmax_decode(q, k))
+            pre = np.array(ref.pool_pre_softmax_decode(q, k))
+            post_r.append(_recovery(post, per_q, 64))
+            pre_r.append(_recovery(pre, per_q, 64))
+        assert np.mean(post_r) >= np.mean(pre_r)
+
+    @pytest.mark.parametrize("tile", [4, 8, 16, 32])
+    def test_prefill_tile_pooling_shapes(self, rng, tile):
+        q, k, _ = make_qkv(rng, 8, 2, 32, 128, T=128)
+        pooled = np.array(ref.pool_post_softmax_prefill(q, k, tile))
+        assert pooled.shape == (2, 128 // tile, 128)
+        # rows sum to 1 (each pooled row is a mean of distributions)
+        np.testing.assert_allclose(pooled.sum(-1), 1.0, rtol=1e-5)
+
+    def test_prefill_pooling_degrades_gracefully_with_tile(self, rng):
+        """Recovery decreases (weakly) as tiles grow — but post-softmax at
+        tile 128 still captures the bulk of per-query mass (Fig. 5 shape)."""
+        q, k, _ = make_qkv(rng, 8, 2, 64, 512, T=512, kscale=0.5)
+        per_q = np.array(ref.prefill_scores(q, k))  # [8, 512, 512]
+        recs = {}
+        for tile in (4, 32, 128):
+            pooled = np.array(ref.pool_post_softmax_prefill(q, k, tile))
+            nt = 512 // tile
+            pq = per_q.reshape(2, 4, nt, tile, 512).transpose(0, 2, 1, 3, 4).reshape(
+                2 * nt, 4 * tile, 512
+            )
+            recs[tile] = _recovery(pooled.reshape(2 * nt, 512), pq, 64)
+        assert recs[4] >= recs[128] - 0.05  # small tiles no worse
+        assert recs[128] > 0.55  # big tiles still useful

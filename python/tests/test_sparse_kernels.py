@@ -1,0 +1,134 @@
+"""Reuse (sparse Top-k) kernels + head remapping vs the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, reuse
+from .conftest import make_qkv
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _oracle_idx(q, k, kk, length=None):
+    pooled = ref.pool_post_softmax_decode(q, k, length)
+    return ref.topk_indices(pooled, kk)
+
+
+class TestReuseDecode:
+    def test_matches_ref_on_oracle_indices(self, rng):
+        q, k, v = make_qkv(rng, 8, 2, 64, 512)
+        idx = _oracle_idx(q, k, 64)
+        got = reuse.reuse_decode(q, k, v, idx)
+        want = ref.sparse_decode(q, k, v, idx)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_full_index_set_equals_dense(self, rng):
+        """k == L: sparse attention over all keys must equal dense."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 256)
+        idx = jnp.tile(jnp.arange(256, dtype=jnp.int32)[None], (2, 1))
+        got = reuse.reuse_decode(q, k, v, idx)
+        want = ref.dense_decode(q, k, v)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_negative_indices_are_masked(self, rng):
+        """Padded (-1) slots must not contribute, whatever row 0 contains."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 256)
+        idx = np.array(_oracle_idx(q, k, 64))
+        idx[:, 32:] = -1
+        a = reuse.reuse_decode(q, k, v, jnp.array(idx))
+        b = ref.sparse_decode(q, k, v, jnp.array(idx[:, :32]))
+        np.testing.assert_allclose(np.array(a), np.array(b), **TOL)
+
+    def test_index_order_is_irrelevant(self, rng):
+        q, k, v = make_qkv(rng, 8, 2, 64, 256)
+        idx = np.array(_oracle_idx(q, k, 64))
+        perm = np.random.default_rng(0).permutation(64)
+        a = reuse.reuse_decode(q, k, v, jnp.array(idx))
+        b = reuse.reuse_decode(q, k, v, jnp.array(idx[:, perm]))
+        np.testing.assert_allclose(np.array(a), np.array(b), **TOL)
+
+    def test_high_topk_approximates_dense(self, rng):
+        """With concentrated scores, top-25% attention ~= dense (Sec. 3.1)."""
+        q, k, v = make_qkv(rng, 8, 2, 64, 512, kscale=3.0)
+        idx = _oracle_idx(q, k, 128)
+        sparse = np.array(reuse.reuse_decode(q, k, v, idx))
+        den = np.array(ref.dense_decode(q, k, v))
+        cos = (sparse * den).sum() / (np.linalg.norm(sparse) * np.linalg.norm(den))
+        assert cos > 0.98
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        n_kv=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 4]),
+        d=st.sampled_from([32, 64]),
+        L=st.sampled_from([256, 512]),
+        kk=st.sampled_from([16, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_kv, g, d, L, kk, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = make_qkv(rng, n_kv * g, n_kv, d, L)
+        idx = _oracle_idx(q, k, kk)
+        got = reuse.reuse_decode(q, k, v, idx)
+        want = ref.sparse_decode(q, k, v, idx)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=5e-5, atol=5e-5)
+
+
+class TestReusePrefill:
+    @pytest.mark.parametrize("T,L,tile", [(128, 128, 128), (256, 256, 128), (128, 512, 128)])
+    def test_matches_ref(self, rng, T, L, tile):
+        q, k, v = make_qkv(rng, 8, 2, 64, L, T=T)
+        pooled = ref.pool_post_softmax_prefill(q, k, tile)
+        idx = ref.topk_indices(pooled, 64)
+        got = reuse.reuse_prefill(q, k, v, idx, tile)
+        want = ref.sparse_prefill(q, k, v, idx, tile)
+        np.testing.assert_allclose(np.array(got), np.array(want), **TOL)
+
+    def test_causal_masking_within_tile(self, rng):
+        """Indices past a query's position are masked even when shared
+        tile-wide (the rolling Top-k of Sec. 4.1)."""
+        q, k, v = make_qkv(rng, 4, 2, 32, 128, T=128)
+        # index set deliberately includes future positions for early queries
+        idx = jnp.tile(jnp.arange(0, 128, 2, dtype=jnp.int32)[None, None], (2, 1, 1))
+        got = np.array(reuse.reuse_prefill(q, k, v, idx, 128))
+        want = np.array(ref.sparse_prefill(q, k, v, idx, 128))
+        np.testing.assert_allclose(got, want, **TOL)
+        # query at position 0: only key 0 is visible -> output == v[:, 0]
+        v0 = np.repeat(np.array(v)[:, 0, :], 2, axis=0)
+        np.testing.assert_allclose(got[:, 0, :], v0, **TOL)
+
+    @settings(deadline=None, max_examples=6)
+    @given(
+        g=st.sampled_from([2, 4]),
+        nt=st.integers(1, 3),
+        kk=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, g, nt, kk, seed):
+        rng = np.random.default_rng(seed)
+        T = 128 * nt
+        q, k, v = make_qkv(rng, 2 * g, 2, 32, T, T=T)
+        pooled = ref.pool_post_softmax_prefill(q, k, 128)
+        idx = ref.topk_indices(pooled, kk)
+        got = reuse.reuse_prefill(q, k, v, idx, 128)
+        want = ref.sparse_prefill(q, k, v, idx, 128)
+        np.testing.assert_allclose(np.array(got), np.array(want), rtol=5e-5, atol=5e-5)
+
+
+class TestHeadRemapping:
+    def test_identity_map_is_noop(self, rng):
+        q, k, _ = make_qkv(rng, 8, 4, 32, 256)
+        idx = _oracle_idx(q, k, 32)
+        got = ref.remap_indices(idx, jnp.arange(4, dtype=jnp.int32))
+        np.testing.assert_array_equal(np.array(got), np.array(idx))
+
+    def test_many_to_one_mapping(self, rng):
+        q, k, _ = make_qkv(rng, 8, 4, 32, 256)
+        idx = np.array(_oracle_idx(q, k, 32))
+        got = np.array(ref.remap_indices(jnp.array(idx), jnp.array([2, 2, 0, 1])))
+        np.testing.assert_array_equal(got[0], idx[2])
+        np.testing.assert_array_equal(got[1], idx[2])
+        np.testing.assert_array_equal(got[2], idx[0])
+        np.testing.assert_array_equal(got[3], idx[1])

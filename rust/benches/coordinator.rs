@@ -1,0 +1,82 @@
+//! Coordinator hot-path benches: scheduler tick formation, block manager
+//! churn, router throughput — the L3 overheads that must stay negligible
+//! next to attention work.
+//!
+//! Run: `cargo bench --bench coordinator`
+
+use kascade::benchutil::{bench, header};
+use kascade::config::ServeConfig;
+use kascade::coordinator::{BlockManager, Request, Router, SeqBackend, Sequence};
+use kascade::server::Engine;
+
+struct NullBackend;
+
+impl SeqBackend for NullBackend {
+    fn prefill_chunk(&mut self, _tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+        Some(vec![0.0, 1.0])
+    }
+
+    fn decode(&mut self, _token: u32) -> Vec<f32> {
+        vec![0.0, 1.0]
+    }
+}
+
+fn main() {
+    header();
+
+    // block manager: alloc/extend/free churn
+    let mut bm = BlockManager::new(16, 65536);
+    let mut next = 0u64;
+    bench("block_manager extend+release x1000", 3, 30, || {
+        for _ in 0..1000 {
+            next += 1;
+            bm.extend(next % 512, ((next * 37) % 2000) as usize + 1);
+            if next % 3 == 0 {
+                bm.release((next + 100) % 512);
+            }
+        }
+    });
+
+    // router
+    let mut router = Router::new(8);
+    bench("router route x10k (mixed affinity)", 3, 30, || {
+        for i in 0..10_000u64 {
+            let w = router.route(if i % 2 == 0 { Some(i % 64) } else { None });
+            router.release(w);
+        }
+    });
+
+    // scheduler tick with a large running set (null compute)
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 1 << 16,
+        max_running: 256,
+        token_budget: 4096,
+        prefill_chunk: 512,
+        queue_cap: 4096,
+        workers: 1,
+    };
+    let mut engine = Engine::new(cfg, Box::new(|_req: &Request| Box::new(NullBackend) as Box<dyn SeqBackend>));
+    for id in 0..256u64 {
+        engine.submit(Request {
+            id,
+            prompt: vec![0; 512],
+            max_new: 1_000_000, // keep decoding forever
+            stop_token: None,
+        });
+    }
+    // warm into decode phase
+    for _ in 0..8 {
+        engine.tick();
+    }
+    bench("scheduler tick (256 running decodes)", 3, 100, || {
+        engine.tick();
+    });
+    println!(
+        "\nper-sequence scheduling overhead: see mean/256 — target: <1us/seq (paper's L3 must not bottleneck)"
+    );
+    let _ = Sequence::new(
+        Request { id: 0, prompt: vec![], max_new: 0, stop_token: None },
+        Box::new(NullBackend),
+    );
+}

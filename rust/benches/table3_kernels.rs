@@ -1,0 +1,75 @@
+//! Table 3 bench: decode + prefill attention time, dense vs the Kascade
+//! layer mix, across context lengths and Top-k fractions.  Also reports
+//! the paper-config weighting (32 layers / 5 anchors) alongside this
+//! model's 16/5.
+//!
+//! Run: `cargo bench --bench table3_kernels` (KASCADE_BENCH_FULL=1 for the
+//! full context sweep)
+
+use kascade::attention::{self, CostTracker, KvCache};
+use kascade::benchutil::bench;
+use kascade::config::TopKRule;
+use kascade::tensor::Rng;
+
+fn fill_cache(n_kv: usize, d: usize, len: usize, rng: &mut Rng) -> KvCache {
+    let mut cache = KvCache::new(n_kv, d, len);
+    let mut k = vec![0.0f32; n_kv * d];
+    let mut v = vec![0.0f32; n_kv * d];
+    for _ in 0..len {
+        rng.fill_normal(&mut k, 0.5);
+        rng.fill_normal(&mut v, 1.0);
+        cache.push(&k, &v);
+    }
+    cache
+}
+
+fn main() {
+    let full = std::env::var("KASCADE_BENCH_FULL").is_ok();
+    let (n_kv, g, d) = (4usize, 2usize, 32usize);
+    let mut rng = Rng::new(9);
+    let ctxs: &[usize] = if full { &[8192, 16384, 32768, 65536, 131072] } else { &[8192, 32768] };
+    let fracs: &[f32] = if full { &[0.05, 0.10, 0.20, 0.30] } else { &[0.10, 0.20] };
+
+    println!("# Table 3 kernel bench (decode attention, per step)\n");
+    println!("| ctx | k% | dense us | anchor us | reuse us | speedup L16/A5 | speedup L32/A5 |");
+    println!("|---|---|---|---|---|---|---|");
+    for &len in ctxs {
+        let cache = fill_cache(n_kv, d, len, &mut rng);
+        let mut q = vec![0.0f32; n_kv * g * d];
+        rng.fill_normal(&mut q, 1.0);
+        let mut out = vec![0.0f32; n_kv * g * d];
+        let samples = (4_000_000 / len).clamp(3, 40);
+
+        let mut cost = CostTracker::default();
+        let dense = bench(&format!("dense ctx={len}"), 1, samples, || {
+            attention::decode_dense(&q, &cache, g, &mut out, &mut cost);
+        });
+        for &f in fracs {
+            let k = TopKRule::new(f, 128).k(len);
+            let anchor = bench(&format!("anchor ctx={len} k={k}"), 1, samples, || {
+                let pooled = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
+                let idx = attention::select_topk(&pooled, k, &mut cost);
+                attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+            });
+            let idx: Vec<Vec<u32>> = (0..n_kv)
+                .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % len as u32).collect())
+                .collect();
+            let reuse = bench(&format!("reuse ctx={len} k={k}"), 1, samples, || {
+                attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+            });
+            let mix = |l: f64, a: f64| -> f64 {
+                let anchor0 = dense.mean_us + (anchor.mean_us - reuse.mean_us);
+                (anchor0 + (a - 1.0) * anchor.mean_us + (l - a) * reuse.mean_us) / l
+            };
+            println!(
+                "| {len} | {:.0}% | {:.0} | {:.0} | {:.0} | {:.2} | {:.2} |",
+                f * 100.0,
+                dense.mean_us,
+                anchor.mean_us,
+                reuse.mean_us,
+                dense.mean_us / mix(16.0, 5.0),
+                dense.mean_us / mix(32.0, 5.0),
+            );
+        }
+    }
+}

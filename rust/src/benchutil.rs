@@ -1,0 +1,62 @@
+//! Tiny benchmark harness (criterion is unavailable offline): warmup +
+//! fixed-sample measurement with mean/std/min, markdown reporting.
+
+use crate::stats::{Timer, Welford};
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_us: f64,
+    pub std_us: f64,
+    pub min_us: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {:.1} | {:.1} | {:.1} | {} |",
+            self.name, self.mean_us, self.std_us, self.min_us, self.samples
+        )
+    }
+}
+
+/// Measure `f` (one logical operation per call).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..samples {
+        let t = Timer::start();
+        f();
+        w.add(t.us());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        mean_us: w.mean(),
+        std_us: w.std(),
+        min_us: w.min(),
+        samples,
+    };
+    println!("{}", r.row());
+    r
+}
+
+pub fn header() {
+    println!("| bench | mean (us) | std | min | n |");
+    println!("|---|---|---|---|---|");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.mean_us >= 0.0);
+        assert_eq!(r.samples, 5);
+    }
+}

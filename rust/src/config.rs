@@ -1,0 +1,165 @@
+//! Model / serving / Kascade configuration.
+//!
+//! `ModelConfig` mirrors `python/compile/model.py::ModelConfig`; the AOT
+//! manifest embeds the python-side values and [`ModelConfig::matches_manifest`]
+//! guards against drift between the two layers.
+
+/// Architecture hyperparameters of a SynthLM / PJRT model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f32,
+    /// Whether rotary embeddings are applied to q/k.  The PJRT path always
+    /// uses RoPE (it is baked into the HLO); the native eval preset may
+    /// disable it to support very long contexts (DESIGN.md §2).
+    pub rope: bool,
+}
+
+impl ModelConfig {
+    /// GQA group size: query heads per KV head.
+    pub fn group(&self) -> usize {
+        self.n_q_heads / self.n_kv_heads
+    }
+
+    /// The configuration the AOT artifacts were lowered for
+    /// (python/compile/model.py defaults).
+    pub fn pjrt_small() -> Self {
+        Self {
+            n_layers: 16,
+            d_model: 256,
+            n_q_heads: 8,
+            n_kv_heads: 4,
+            d_head: 32,
+            d_ff: 1024,
+            vocab: 4096,
+            rope_theta: 10000.0,
+            rope: true,
+        }
+    }
+
+    /// Native-engine preset for long-context accuracy experiments.
+    /// Same shape as `pjrt_small` but NoPE, so retrieval circuits stay
+    /// exact out to 128k-token contexts.
+    pub fn eval_base() -> Self {
+        Self {
+            rope: false,
+            ..Self::pjrt_small()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_q_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_q_heads ({}) must be a multiple of n_kv_heads ({})",
+                self.n_q_heads, self.n_kv_heads
+            ));
+        }
+        if self.d_head % 2 != 0 && self.rope {
+            return Err("RoPE requires an even d_head".into());
+        }
+        if self.n_q_heads * self.d_head != self.d_model {
+            // Not fatal (wo projects back), but our wiring assumes it.
+            return Err(format!(
+                "wiring assumes n_q_heads * d_head == d_model ({} * {} != {})",
+                self.n_q_heads, self.d_head, self.d_model
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The paper's Top-k rule (Sec. 4.1): `k = min(max(frac * L, min_k), L)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TopKRule {
+    pub frac: f32,
+    pub min_k: usize,
+}
+
+impl Default for TopKRule {
+    fn default() -> Self {
+        Self { frac: 0.10, min_k: 128 }
+    }
+}
+
+impl TopKRule {
+    pub fn new(frac: f32, min_k: usize) -> Self {
+        Self { frac, min_k }
+    }
+
+    /// k for a context of `len` tokens.
+    pub fn k(&self, len: usize) -> usize {
+        ((self.frac * len as f32) as usize).max(self.min_k).min(len)
+    }
+}
+
+/// Serving-side knobs for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// KV-cache page size in tokens.
+    pub block_size: usize,
+    /// Total KV-cache blocks across the pool.
+    pub num_blocks: usize,
+    /// Max sequences admitted into the running batch.
+    pub max_running: usize,
+    /// Token budget per scheduler tick (prefill chunk + decodes).
+    pub token_budget: usize,
+    /// Prefill chunk size (tokens) for chunked prefill.
+    pub prefill_chunk: usize,
+    /// Waiting-queue capacity before admission control rejects.
+    pub queue_cap: usize,
+    /// Number of worker executors the router spreads sequences over.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 16,
+            num_blocks: 4096,
+            max_running: 64,
+            token_budget: 2048,
+            prefill_chunk: 512,
+            queue_cap: 1024,
+            workers: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_rule_matches_paper() {
+        let r = TopKRule::default();
+        assert_eq!(r.k(512), 128); // floor dominates
+        assert_eq!(r.k(1280), 128);
+        assert_eq!(r.k(2048), 204); // 10%
+        assert_eq!(r.k(100), 100); // capped at L
+        assert_eq!(r.k(4096), 409);
+    }
+
+    #[test]
+    fn presets_validate() {
+        ModelConfig::pjrt_small().validate().unwrap();
+        ModelConfig::eval_base().validate().unwrap();
+    }
+
+    #[test]
+    fn group_size() {
+        assert_eq!(ModelConfig::pjrt_small().group(), 2);
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        let mut c = ModelConfig::pjrt_small();
+        c.n_kv_heads = 3;
+        assert!(c.validate().is_err());
+    }
+}

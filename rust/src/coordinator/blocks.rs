@@ -1,0 +1,191 @@
+//! Paged KV-cache block manager (vLLM-style).
+//!
+//! Tracks block ownership per sequence; allocation is in whole blocks of
+//! `block_size` tokens.  The manager is the admission-control authority:
+//! a sequence may only be scheduled if its next chunk's blocks can be
+//! allocated, and the scheduler preempts (frees + requeues) the youngest
+//! running sequence when decode would otherwise OOM.
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct BlockManager {
+    pub block_size: usize,
+    pub num_blocks: usize,
+    free: Vec<u32>,
+    owned: HashMap<u64, Vec<u32>>,
+    /// tokens currently stored per sequence (for block arithmetic)
+    tokens: HashMap<u64, usize>,
+    /// high-water mark of allocated blocks
+    pub peak_used: usize,
+}
+
+impl BlockManager {
+    pub fn new(block_size: usize, num_blocks: usize) -> Self {
+        Self {
+            block_size,
+            num_blocks,
+            free: (0..num_blocks as u32).rev().collect(),
+            owned: HashMap::new(),
+            tokens: HashMap::new(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn used(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used() as f64 / self.num_blocks as f64
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Blocks that would be needed to extend `seq` to `new_tokens` total.
+    pub fn extra_blocks_needed(&self, seq: u64, new_tokens: usize) -> usize {
+        let have = self.owned.get(&seq).map_or(0, |v| v.len());
+        self.blocks_for(new_tokens).saturating_sub(have)
+    }
+
+    pub fn can_extend(&self, seq: u64, new_tokens: usize) -> bool {
+        self.extra_blocks_needed(seq, new_tokens) <= self.free.len()
+    }
+
+    /// Extend `seq` to `new_tokens` total tokens.  Returns false (no
+    /// change) if blocks are unavailable.
+    pub fn extend(&mut self, seq: u64, new_tokens: usize) -> bool {
+        let need = self.extra_blocks_needed(seq, new_tokens);
+        if need > self.free.len() {
+            return false;
+        }
+        let entry = self.owned.entry(seq).or_default();
+        for _ in 0..need {
+            entry.push(self.free.pop().unwrap());
+        }
+        self.tokens.insert(seq, new_tokens);
+        self.peak_used = self.peak_used.max(self.num_blocks - self.free.len());
+        true
+    }
+
+    /// Release every block of `seq` (finish or preemption).
+    pub fn release(&mut self, seq: u64) {
+        if let Some(blocks) = self.owned.remove(&seq) {
+            self.free.extend(blocks);
+        }
+        self.tokens.remove(&seq);
+    }
+
+    pub fn tokens_of(&self, seq: u64) -> usize {
+        self.tokens.get(&seq).copied().unwrap_or(0)
+    }
+
+    /// Invariant check (used by property tests): no block is double-owned
+    /// and owned + free == total.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.num_blocks];
+        for &b in &self.free {
+            if seen[b as usize] {
+                return Err(format!("block {b} duplicated in free list"));
+            }
+            seen[b as usize] = true;
+        }
+        for (seq, blocks) in &self.owned {
+            for &b in blocks {
+                if seen[b as usize] {
+                    return Err(format!("block {b} double-owned (seq {seq})"));
+                }
+                seen[b as usize] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked blocks".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::proptest_lite::check;
+
+    #[test]
+    fn extend_and_release() {
+        let mut bm = BlockManager::new(16, 8);
+        assert!(bm.extend(1, 20)); // 2 blocks
+        assert_eq!(bm.used(), 2);
+        assert!(bm.extend(1, 33)); // 3 blocks total
+        assert_eq!(bm.used(), 3);
+        assert!(bm.extend(2, 80)); // 5 more
+        assert_eq!(bm.used(), 8);
+        assert!(!bm.extend(3, 1)); // exhausted
+        bm.release(1);
+        assert_eq!(bm.used(), 5);
+        assert!(bm.extend(3, 40));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn extend_is_idempotent_within_block() {
+        let mut bm = BlockManager::new(16, 4);
+        assert!(bm.extend(1, 15));
+        assert_eq!(bm.used(), 1);
+        assert!(bm.extend(1, 16));
+        assert_eq!(bm.used(), 1); // same block
+        assert!(bm.extend(1, 17));
+        assert_eq!(bm.used(), 2);
+    }
+
+    #[test]
+    fn failed_extend_changes_nothing() {
+        let mut bm = BlockManager::new(16, 2);
+        assert!(bm.extend(1, 32));
+        let used = bm.used();
+        assert!(!bm.extend(2, 16));
+        assert_eq!(bm.used(), used);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_random_alloc_free_preserves_invariants() {
+        check("block manager invariants", 30, |rng| {
+            let mut bm = BlockManager::new(1 + rng.below(32), 1 + rng.below(64));
+            let mut live: Vec<u64> = Vec::new();
+            for step in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        let seq = rng.below(16) as u64;
+                        let new_tokens = bm.tokens_of(seq) + 1 + rng.below(40);
+                        if bm.extend(seq, new_tokens) && !live.contains(&seq) {
+                            live.push(seq);
+                        }
+                    }
+                    1 => {
+                        if let Some(&seq) = live.get(rng.below(live.len().max(1))) {
+                            bm.release(seq);
+                            live.retain(|&s| s != seq);
+                        }
+                    }
+                    _ => {
+                        let seq = rng.below(16) as u64;
+                        let t = bm.tokens_of(seq) + rng.below(100);
+                        let can = bm.can_extend(seq, t);
+                        let did = bm.extend(seq, t);
+                        prop_assert!(can == did, "step {step}: can {can} != did {did}");
+                        if did && !live.contains(&seq) {
+                            live.push(seq);
+                        }
+                    }
+                }
+                if let Err(e) = bm.check_invariants() {
+                    return Err(format!("step {step}: {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,77 @@
+//! Serving metrics: TTFT / TPOT / throughput / KV utilization.
+
+use crate::stats::{LatencyHist, Welford};
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct ServeMetrics {
+    pub started: Instant,
+    pub ttft_us: LatencyHist,
+    pub tpot_us: Welford,
+    pub tokens_out: u64,
+    pub prompts_in: u64,
+    pub requests_done: u64,
+    pub preemptions: u64,
+    pub kv_util: Welford,
+    pub batch_size: Welford,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            ttft_us: LatencyHist::new(),
+            tpot_us: Welford::new(),
+            tokens_out: 0,
+            prompts_in: 0,
+            requests_done: 0,
+            preemptions: 0,
+            kv_util: Welford::new(),
+            batch_size: Welford::new(),
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        self.tokens_out as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens_out={} throughput={:.1} tok/s  \
+             ttft p50={:.1}ms p99={:.1}ms  tpot mean={:.2}ms  \
+             batch mean={:.1}  kv_util mean={:.0}%  preemptions={}",
+            self.requests_done,
+            self.tokens_out,
+            self.throughput_tok_s(),
+            self.ttft_us.percentile(50.0) / 1e3,
+            self.ttft_us.percentile(99.0) / 1e3,
+            self.tpot_us.mean() / 1e3,
+            self.batch_size.mean(),
+            self.kv_util.mean() * 100.0,
+            self.preemptions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_formats() {
+        let mut m = ServeMetrics::new();
+        m.ttft_us.add_us(1500.0);
+        m.tpot_us.add(800.0);
+        m.tokens_out = 10;
+        m.requests_done = 1;
+        let r = m.report();
+        assert!(r.contains("requests=1"));
+        assert!(r.contains("tokens_out=10"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Serving coordinator: the L3 system the paper's kernels plug into.
+//!
+//! vLLM-style composition: requests enter a bounded waiting queue
+//! ([`scheduler`]), a continuous batcher forms per-tick work under a token
+//! budget (chunked prefill + all running decodes), a paged KV block
+//! manager ([`blocks`]) gates admission and triggers preemption, and a
+//! router ([`router`]) spreads sequences across worker executors.  The
+//! Kascade plan lives in the per-sequence backend: anchor layers refresh
+//! the sequence's Top-k index state, reuse layers consume it (after head
+//! remapping) — see [`crate::sparse::KascadePolicy`] (native path) and
+//! [`crate::runtime::PjrtModel`] (PJRT path).
+
+pub mod backends;
+pub mod blocks;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+
+pub use backends::{NativeBackend, PjrtBackend};
+pub use blocks::BlockManager;
+pub use metrics::ServeMetrics;
+pub use router::Router;
+pub use scheduler::{Batch, Scheduler, WorkItem};
+pub use sequence::{Request, SeqBackend, SeqPhase, Sequence};

@@ -1,0 +1,100 @@
+//! Request router: spreads sequences across worker executors with session
+//! affinity (same session lands on the same worker, preserving any warm
+//! prefix state) and least-loaded fallback — the vllm-project/router
+//! pattern scaled to this repo.
+
+#[derive(Debug)]
+pub struct Router {
+    loads: Vec<usize>,
+}
+
+impl Router {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        Self { loads: vec![0; workers] }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.loads.len()
+    }
+
+    fn hash(session: u64) -> u64 {
+        // splitmix-style finalizer
+        let mut z = session.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Route a request.  `session` pins affinity when `Some`; otherwise the
+    /// least-loaded worker wins.
+    pub fn route(&mut self, session: Option<u64>) -> usize {
+        let w = match session {
+            Some(s) => (Self::hash(s) % self.loads.len() as u64) as usize,
+            None => {
+                let mut best = 0;
+                for i in 1..self.loads.len() {
+                    if self.loads[i] < self.loads[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.loads[w] += 1;
+        w
+    }
+
+    pub fn release(&mut self, worker: usize) {
+        self.loads[worker] = self.loads[worker].saturating_sub(1);
+    }
+
+    pub fn load(&self, worker: usize) -> usize {
+        self.loads[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_affinity_is_stable() {
+        let mut r = Router::new(4);
+        let w1 = r.route(Some(42));
+        for _ in 0..10 {
+            assert_eq!(r.route(Some(42)), w1);
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let mut r = Router::new(3);
+        for _ in 0..30 {
+            r.route(None);
+        }
+        for w in 0..3 {
+            assert_eq!(r.load(w), 10);
+        }
+    }
+
+    #[test]
+    fn release_rebalances() {
+        let mut r = Router::new(2);
+        let a = r.route(None);
+        let _b = r.route(None);
+        r.release(a);
+        // worker `a` is now less loaded and must win
+        assert_eq!(r.route(None), a);
+    }
+
+    #[test]
+    fn sessions_spread_over_workers() {
+        let mut r = Router::new(8);
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..256u64 {
+            seen.insert(r.route(Some(s)));
+        }
+        assert!(seen.len() >= 6, "sessions landed on only {} workers", seen.len());
+    }
+}

@@ -1,0 +1,349 @@
+//! Continuous batcher: per-tick work formation under a token budget, with
+//! block-manager-gated admission and recompute-style preemption.
+//!
+//! Policy (vLLM-like):
+//! 1. every running decode gets one token (decodes are latency-critical);
+//!    if a decode cannot get its block, preempt the *youngest* running
+//!    sequence until it can;
+//! 2. remaining budget admits prefill chunks (chunked prefill), oldest
+//!    waiting first, gated on block availability and `max_running`.
+
+use super::blocks::BlockManager;
+use super::sequence::{SeqPhase, Sequence};
+use crate::config::ServeConfig;
+use std::collections::VecDeque;
+
+/// One unit of scheduled work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkItem {
+    Prefill { seq: u64, tokens: usize },
+    Decode { seq: u64 },
+}
+
+/// The work selected for one tick.
+#[derive(Debug, Default)]
+pub struct Batch {
+    pub items: Vec<WorkItem>,
+    pub preempted: Vec<u64>,
+    pub budget_used: usize,
+}
+
+pub struct Scheduler {
+    pub cfg: ServeConfig,
+    pub blocks: BlockManager,
+    pub waiting: VecDeque<u64>,
+    pub running: Vec<u64>,
+    /// sequences rejected at admission (queue full)
+    pub rejected: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServeConfig) -> Self {
+        let blocks = BlockManager::new(cfg.block_size, cfg.num_blocks);
+        Self { cfg, blocks, waiting: VecDeque::new(), running: Vec::new(), rejected: 0 }
+    }
+
+    /// Admission control.  Returns false when the waiting queue is full.
+    pub fn submit(&mut self, seq: u64) -> bool {
+        if self.waiting.len() >= self.cfg.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        self.waiting.push_back(seq);
+        true
+    }
+
+    pub fn on_finished(&mut self, seq: u64) {
+        self.running.retain(|&s| s != seq);
+        self.blocks.release(seq);
+    }
+
+    /// Form one tick's batch.  `seqs` gives phase/size info per id.
+    pub fn tick<F>(&mut self, lookup: F) -> Batch
+    where
+        F: Fn(u64) -> Option<(SeqPhase, usize, usize)>, // (phase, prompt_len, total_tokens)
+    {
+        let mut batch = Batch::default();
+        let mut budget = self.cfg.token_budget;
+
+        // 1. decodes: one token each, preempting youngest on OOM
+        let decode_ids: Vec<u64> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| matches!(lookup(id), Some((SeqPhase::Decoding, _, _))))
+            .collect();
+        for id in decode_ids {
+            if budget == 0 {
+                break;
+            }
+            if batch.preempted.contains(&id) {
+                continue;
+            }
+            let total = self.blocks.tokens_of(id) + 1;
+            while !self.blocks.can_extend(id, total) {
+                // preempt the youngest running sequence that isn't `id`
+                let victim = match self.running.iter().rev().copied().find(|&v| v != id) {
+                    Some(v) => v,
+                    None => break,
+                };
+                self.preempt(victim, &mut batch);
+            }
+            if self.blocks.extend(id, total) {
+                batch.items.push(WorkItem::Decode { seq: id });
+                budget -= 1;
+            }
+        }
+
+        // 2. running prefills continue (chunked), oldest first
+        let prefill_ids: Vec<u64> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|&id| matches!(lookup(id), Some((SeqPhase::Prefilling { .. }, _, _))))
+            .collect();
+        for id in prefill_ids {
+            if budget == 0 {
+                break;
+            }
+            if batch.preempted.contains(&id) {
+                continue;
+            }
+            if let Some((SeqPhase::Prefilling { done }, prompt_len, _)) = lookup(id) {
+                let take = self.cfg.prefill_chunk.min(prompt_len - done).min(budget);
+                if take == 0 {
+                    continue;
+                }
+                if self.blocks.extend(id, done + take) {
+                    batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
+                    budget -= take;
+                }
+            }
+        }
+
+        // 3. admit new sequences from the waiting queue
+        while budget > 0 && self.running.len() < self.cfg.max_running {
+            let id = match self.waiting.front().copied() {
+                Some(id) => id,
+                None => break,
+            };
+            let (phase, prompt_len, _) = match lookup(id) {
+                Some(x) => x,
+                None => {
+                    self.waiting.pop_front();
+                    continue;
+                }
+            };
+            debug_assert!(matches!(phase, SeqPhase::Waiting));
+            let take = self.cfg.prefill_chunk.min(prompt_len).min(budget);
+            if !self.blocks.extend(id, take) {
+                break; // no memory: stop admitting (FCFS, no head-of-line skip)
+            }
+            self.waiting.pop_front();
+            self.running.push(id);
+            batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
+            budget -= take;
+        }
+
+        batch.budget_used = self.cfg.token_budget - budget;
+        batch
+    }
+
+    fn preempt(&mut self, victim: u64, batch: &mut Batch) {
+        self.blocks.release(victim);
+        self.running.retain(|&s| s != victim);
+        self.waiting.push_front(victim);
+        batch.preempted.push(victim);
+        // drop any work already scheduled for the victim this tick
+        batch.items.retain(|w| match w {
+            WorkItem::Prefill { seq, .. } | WorkItem::Decode { seq } => *seq != victim,
+        });
+    }
+
+    /// Apply a finished tick: mark sequences that completed.
+    pub fn retire_finished(&mut self, seqs: &mut std::collections::HashMap<u64, Sequence>) {
+        let finished: Vec<u64> = self
+            .running
+            .iter()
+            .copied()
+            .filter(|id| seqs.get(id).map(|s| s.is_finished()).unwrap_or(true))
+            .collect();
+        for id in finished {
+            self.on_finished(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::proptest_lite::check;
+    use std::collections::HashMap;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            block_size: 16,
+            num_blocks: 64, // 1024 tokens
+            max_running: 8,
+            token_budget: 256,
+            prefill_chunk: 128,
+            queue_cap: 16,
+            workers: 1,
+        }
+    }
+
+    /// simple simulated world: phase table driven by applied work
+    struct World {
+        phases: HashMap<u64, (SeqPhase, usize, usize)>,
+    }
+
+    impl World {
+        fn lookup(&self) -> impl Fn(u64) -> Option<(SeqPhase, usize, usize)> + '_ {
+            move |id| self.phases.get(&id).copied()
+        }
+    }
+
+    #[test]
+    fn admits_and_chunks_prefill() {
+        let mut s = Scheduler::new(cfg());
+        let mut w = World { phases: HashMap::new() };
+        w.phases.insert(1, (SeqPhase::Waiting, 300, 0));
+        s.submit(1);
+        let b = s.tick(w.lookup());
+        assert_eq!(b.items, vec![WorkItem::Prefill { seq: 1, tokens: 128 }]);
+        // apply
+        w.phases.insert(1, (SeqPhase::Prefilling { done: 128 }, 300, 128));
+        let b = s.tick(w.lookup());
+        assert_eq!(b.items, vec![WorkItem::Prefill { seq: 1, tokens: 128 }]);
+        w.phases.insert(1, (SeqPhase::Prefilling { done: 256 }, 300, 256));
+        let b = s.tick(w.lookup());
+        assert_eq!(b.items, vec![WorkItem::Prefill { seq: 1, tokens: 44 }]);
+    }
+
+    #[test]
+    fn decodes_have_priority_over_admission() {
+        let mut s = Scheduler::new(ServeConfig { token_budget: 4, ..cfg() });
+        let mut w = World { phases: HashMap::new() };
+        for id in 1..=3u64 {
+            w.phases.insert(id, (SeqPhase::Decoding, 10, 10));
+            s.running.push(id);
+            s.blocks.extend(id, 10);
+        }
+        w.phases.insert(9, (SeqPhase::Waiting, 100, 0));
+        s.submit(9);
+        let b = s.tick(w.lookup());
+        let decodes = b.items.iter().filter(|i| matches!(i, WorkItem::Decode { .. })).count();
+        assert_eq!(decodes, 3);
+        // remaining budget (1 token) goes to the new prefill
+        assert!(b.items.contains(&WorkItem::Prefill { seq: 9, tokens: 1 }));
+    }
+
+    #[test]
+    fn preempts_youngest_on_oom() {
+        let mut s = Scheduler::new(ServeConfig { num_blocks: 4, ..cfg() }); // 64 tokens
+        let mut w = World { phases: HashMap::new() };
+        // old sequence decoding at a block boundary, young one hoarding
+        w.phases.insert(1, (SeqPhase::Decoding, 16, 16));
+        w.phases.insert(2, (SeqPhase::Decoding, 48, 48));
+        s.running.push(1);
+        s.running.push(2);
+        s.blocks.extend(1, 16); // 1 block, full
+        s.blocks.extend(2, 48); // 3 blocks
+        let b = s.tick(w.lookup());
+        // seq 1 needs a new block; none free -> preempt youngest (2)
+        assert_eq!(b.preempted, vec![2]);
+        assert!(b.items.contains(&WorkItem::Decode { seq: 1 }));
+        assert!(!b.items.contains(&WorkItem::Decode { seq: 2 }));
+        assert!(s.waiting.contains(&2));
+        s.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn queue_cap_rejects() {
+        let mut s = Scheduler::new(ServeConfig { queue_cap: 2, ..cfg() });
+        assert!(s.submit(1));
+        assert!(s.submit(2));
+        assert!(!s.submit(3));
+        assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn prop_budget_and_block_invariants_hold() {
+        check("scheduler invariants", 20, |rng| {
+            let c = ServeConfig {
+                block_size: 1 + rng.below(16),
+                num_blocks: 8 + rng.below(64),
+                max_running: 1 + rng.below(8),
+                token_budget: 16 + rng.below(256),
+                prefill_chunk: 1 + rng.below(128),
+                queue_cap: 64,
+                workers: 1,
+            };
+            let budget = c.token_budget;
+            let mut s = Scheduler::new(c);
+            let mut phases: HashMap<u64, (SeqPhase, usize, usize)> = HashMap::new();
+            let mut next_id = 0u64;
+            for step in 0..60 {
+                // random arrivals
+                for _ in 0..rng.below(3) {
+                    next_id += 1;
+                    phases.insert(next_id, (SeqPhase::Waiting, 1 + rng.below(400), 0));
+                    s.submit(next_id);
+                }
+                let batch = {
+                    let ph = phases.clone();
+                    s.tick(move |id| ph.get(&id).copied())
+                };
+                prop_assert!(
+                    batch.budget_used <= budget,
+                    "step {step}: budget {} > {budget}",
+                    batch.budget_used
+                );
+                // at most one work item per sequence per tick
+                let mut seen = std::collections::HashSet::new();
+                for it in &batch.items {
+                    let id = match it {
+                        WorkItem::Prefill { seq, .. } | WorkItem::Decode { seq } => *seq,
+                    };
+                    prop_assert!(seen.insert(id), "step {step}: duplicate work for {id}");
+                }
+                if let Err(e) = s.blocks.check_invariants() {
+                    return Err(format!("step {step}: {e}"));
+                }
+                // apply work
+                for it in &batch.items {
+                    match *it {
+                        WorkItem::Prefill { seq, tokens } => {
+                            let (ph, plen, tot) = phases[&seq];
+                            let done = match ph {
+                                SeqPhase::Waiting => 0,
+                                SeqPhase::Prefilling { done } => done,
+                                _ => continue,
+                            };
+                            let nd = done + tokens;
+                            let nph = if nd >= plen { SeqPhase::Decoding } else { SeqPhase::Prefilling { done: nd } };
+                            phases.insert(seq, (nph, plen, tot + tokens));
+                        }
+                        WorkItem::Decode { seq } => {
+                            let (_, plen, tot) = phases[&seq];
+                            // finish with probability ~1/8
+                            if rng.below(8) == 0 {
+                                phases.remove(&seq);
+                                s.on_finished(seq);
+                            } else {
+                                phases.insert(seq, (SeqPhase::Decoding, plen, tot + 1));
+                            }
+                        }
+                    }
+                }
+                for p in batch.preempted {
+                    if let Some(e) = phases.get_mut(&p) {
+                        *e = (SeqPhase::Waiting, e.1 + (e.2), 0);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

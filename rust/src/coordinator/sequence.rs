@@ -1,0 +1,241 @@
+//! Request / sequence lifecycle and the inference-backend abstraction.
+
+use std::time::Instant;
+
+/// Client request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    /// Stop decoding when this token is emitted (in addition to max_new).
+    pub stop_token: Option<u32>,
+}
+
+/// Sequence phase in the continuous batcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqPhase {
+    Waiting,
+    /// `done` prompt tokens already prefilled.
+    Prefilling { done: usize },
+    Decoding,
+    Finished,
+}
+
+/// What actually runs a sequence's forward passes.  Implemented by the
+/// native engine (SynthLM + SparsePolicy) and the PJRT artifact path.
+///
+/// Deliberately NOT `Send`: backends are created inside their worker
+/// thread by the (Send) [`crate::server::BackendFactory`] and never cross
+/// threads — which lets the Rc-based PJRT client implement it.
+pub trait SeqBackend {
+    /// Prefill a chunk of prompt tokens; `last` marks the final chunk, for
+    /// which last-token logits must be returned.
+    fn prefill_chunk(&mut self, tokens: &[u32], last: bool) -> Option<Vec<f32>>;
+    /// One decode step; returns next-token logits.
+    fn decode(&mut self, token: u32) -> Vec<f32>;
+}
+
+/// A live sequence owned by a worker.
+pub struct Sequence {
+    pub req: Request,
+    pub phase: SeqPhase,
+    pub backend: Box<dyn SeqBackend>,
+    pub emitted: Vec<u32>,
+    /// logits pending argmax (set after prefill completes)
+    pub pending_logits: Option<Vec<f32>>,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    /// number of times this sequence was preempted (blocks reclaimed)
+    pub preemptions: usize,
+}
+
+impl Sequence {
+    pub fn new(req: Request, backend: Box<dyn SeqBackend>) -> Self {
+        Self {
+            req,
+            phase: SeqPhase::Waiting,
+            backend,
+            emitted: Vec::new(),
+            pending_logits: None,
+            arrived: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Total tokens this sequence will hold after `extra` more are added.
+    pub fn tokens_with(&self, extra: usize) -> usize {
+        let done = match self.phase {
+            SeqPhase::Waiting => 0,
+            SeqPhase::Prefilling { done } => done,
+            _ => self.req.prompt.len() + self.emitted.len(),
+        };
+        done + extra
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == SeqPhase::Finished
+    }
+
+    fn should_stop(&self, tok: u32) -> bool {
+        self.emitted.len() >= self.req.max_new || self.req.stop_token == Some(tok)
+    }
+
+    /// Run one unit of prefill work (`chunk` tokens).  Returns tokens consumed.
+    pub fn step_prefill(&mut self, chunk: usize) -> usize {
+        let done = match self.phase {
+            SeqPhase::Waiting => 0,
+            SeqPhase::Prefilling { done } => done,
+            _ => return 0,
+        };
+        let remaining = self.req.prompt.len() - done;
+        let take = chunk.min(remaining);
+        let last = done + take >= self.req.prompt.len();
+        let logits = self.backend.prefill_chunk(&self.req.prompt[done..done + take], last);
+        if last {
+            self.pending_logits = Some(logits.expect("backend must return logits on final chunk"));
+            self.phase = SeqPhase::Decoding;
+        } else {
+            self.phase = SeqPhase::Prefilling { done: done + take };
+        }
+        take
+    }
+
+    /// Run one decode step (greedy).  Returns the emitted token.
+    pub fn step_decode(&mut self) -> u32 {
+        debug_assert_eq!(self.phase, SeqPhase::Decoding);
+        let logits = match self.pending_logits.take() {
+            Some(l) => l,
+            None => {
+                let last = *self.emitted.last().expect("decode without pending logits");
+                self.backend.decode(last)
+            }
+        };
+        let tok = crate::tensor::argmax(&logits) as u32;
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.emitted.push(tok);
+        if self.should_stop(tok) {
+            self.phase = SeqPhase::Finished;
+            self.finished_at = Some(Instant::now());
+        }
+        tok
+    }
+
+    /// Preempt: forget backend state; prompt + emitted tokens will be
+    /// recomputed when rescheduled (recompute-style preemption).
+    pub fn preempt(&mut self, fresh_backend: Box<dyn SeqBackend>) {
+        // fold emitted tokens into the prompt so recompute replays them
+        self.req.prompt.extend(self.emitted.drain(..));
+        self.backend = fresh_backend;
+        self.pending_logits = None;
+        self.phase = SeqPhase::Waiting;
+        self.preemptions += 1;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_backend {
+    use super::*;
+
+    /// Deterministic toy backend: logits always argmax to `next`, bumping
+    /// each call; used for scheduler tests.
+    pub struct ToyBackend {
+        pub vocab: usize,
+        pub next: u32,
+        pub prefilled: usize,
+        pub decoded: usize,
+    }
+
+    impl ToyBackend {
+        pub fn new(vocab: usize) -> Self {
+            Self { vocab, next: 1, prefilled: 0, decoded: 0 }
+        }
+
+        fn logits_for(&self, tok: u32) -> Vec<f32> {
+            let mut l = vec![0.0; self.vocab];
+            l[tok as usize % self.vocab] = 1.0;
+            l
+        }
+    }
+
+    impl SeqBackend for ToyBackend {
+        fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+            self.prefilled += tokens.len();
+            Some(self.logits_for(self.next))
+        }
+
+        fn decode(&mut self, _token: u32) -> Vec<f32> {
+            self.decoded += 1;
+            self.next += 1;
+            self.logits_for(self.next)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_backend::ToyBackend;
+    use super::*;
+
+    fn seq(prompt_len: usize, max_new: usize) -> Sequence {
+        Sequence::new(
+            Request {
+                id: 1,
+                prompt: (0..prompt_len as u32).collect(),
+                max_new,
+                stop_token: None,
+            },
+            Box::new(ToyBackend::new(64)),
+        )
+    }
+
+    #[test]
+    fn chunked_prefill_then_decode() {
+        let mut s = seq(100, 3);
+        assert_eq!(s.step_prefill(64), 64);
+        assert_eq!(s.phase, SeqPhase::Prefilling { done: 64 });
+        assert_eq!(s.step_prefill(64), 36);
+        assert_eq!(s.phase, SeqPhase::Decoding);
+        s.step_decode();
+        s.step_decode();
+        s.step_decode();
+        assert!(s.is_finished());
+        assert_eq!(s.emitted.len(), 3);
+    }
+
+    #[test]
+    fn stop_token_ends_early() {
+        let mut s = seq(10, 100);
+        s.req.stop_token = Some(1); // toy backend emits 1 first
+        s.step_prefill(64);
+        s.step_decode();
+        assert!(s.is_finished());
+        assert_eq!(s.emitted, vec![1]);
+    }
+
+    #[test]
+    fn preemption_folds_emitted_into_prompt() {
+        let mut s = seq(10, 5);
+        s.step_prefill(64);
+        s.step_decode();
+        assert_eq!(s.emitted.len(), 1);
+        s.preempt(Box::new(ToyBackend::new(64)));
+        assert_eq!(s.phase, SeqPhase::Waiting);
+        assert_eq!(s.req.prompt.len(), 11);
+        assert!(s.emitted.is_empty());
+        assert_eq!(s.preemptions, 1);
+    }
+
+    #[test]
+    fn tokens_with_accounting() {
+        let mut s = seq(100, 5);
+        assert_eq!(s.tokens_with(64), 64);
+        s.step_prefill(64);
+        assert_eq!(s.tokens_with(36), 100);
+    }
+}

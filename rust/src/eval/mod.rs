@@ -1,0 +1,39 @@
+//! Experiment drivers: one regenerator per figure and table in the paper's
+//! evaluation section (DESIGN.md §5 maps each to its modules).  Every
+//! driver prints a markdown table and writes a CSV under `results/`.
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+pub use common::{EvalCtx, EvalOptions, StrategyKind};
+
+/// Run one named experiment (or "all").
+pub fn run(name: &str, opts: &EvalOptions) -> anyhow::Result<()> {
+    let names: Vec<&str> = if name == "all" {
+        vec![
+            "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "table1", "table2", "table3",
+        ]
+    } else {
+        vec![name]
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let ctx = EvalCtx::new(opts);
+    for n in names {
+        println!("\n================ {n} ================");
+        match n {
+            "fig1" => figures::fig1_topk_mass(&ctx)?,
+            "fig2" => figures::fig2_oracle_sweep(&ctx)?,
+            "fig3" => figures::fig3_similarity(&ctx)?,
+            "fig4" => figures::fig4_importance(&ctx)?,
+            "fig5" => figures::fig5_pooling(&ctx)?,
+            "fig6" => figures::fig6_head_remap(&ctx)?,
+            "fig7" => figures::fig7_topk_20(&ctx)?,
+            "table1" => tables::table1_longbench(&ctx)?,
+            "table2" => tables::table2_aime(&ctx)?,
+            "table3" => tables::table3_kernels(&ctx)?,
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Table regenerators (Tables 1-3).
+
+use super::common::{category_tasks, dense_prefill, run_task, EvalCtx, StrategyKind};
+use crate::attention::{self, CostTracker, KvCache};
+use crate::config::TopKRule;
+use crate::kascade::LayerRole;
+use crate::stats::Timer;
+use crate::tensor::Rng;
+use crate::workload::{Category, WorkloadGen};
+
+/// Table 1: LongBench-S — 6 categories x strategies, Top-k 10%.
+pub fn table1_longbench(ctx: &EvalCtx) -> anyhow::Result<()> {
+    let rule = TopKRule::new(0.10, 128);
+    println!("Table 1 — LongBench-S accuracy (Top-k 10%, min 128; ctx {})", ctx.ctx_len());
+    let mut rows = Vec::new();
+    for v in &ctx.variants {
+        println!("\n**{}**", v.name);
+        println!("| Strategy | SQA | MQA | Summ. | Fewshot | Synthetic | Code | Avg. |");
+        println!("|---|---|---|---|---|---|---|---|");
+        // tasks per category (shared across strategies)
+        let cats: Vec<(Category, Vec<crate::workload::Task>)> = Category::ALL
+            .iter()
+            .map(|&c| (c, category_tasks(&v.spec, c, ctx.n_prompts(), ctx.ctx_len(), 0x7AB1)))
+            .collect();
+        // shared dense prefills per task
+        let mut shared: Vec<Vec<(crate::model::SeqState, Vec<f32>)>> = Vec::new();
+        for (_, tasks) in &cats {
+            shared.push(tasks.iter().map(|t| dense_prefill(&v.model, t)).collect());
+        }
+        for strat in StrategyKind::TABLE {
+            let mut accs = Vec::new();
+            for (ci, (_, tasks)) in cats.iter().enumerate() {
+                let mut correct = 0.0;
+                for (ti, t) in tasks.iter().enumerate() {
+                    let (st, lg) = &shared[ci][ti];
+                    let use_shared = !strat.sparse_prefill();
+                    let o = run_task(
+                        &v.model,
+                        t,
+                        strat,
+                        &v.cal.plan,
+                        rule,
+                        use_shared.then_some(st),
+                        use_shared.then_some(lg),
+                    );
+                    correct += o.correct as u8 as f64;
+                }
+                accs.push(100.0 * correct / tasks.len() as f64);
+            }
+            let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+            println!(
+                "| {} | {} | {avg:.1} |",
+                strat.name(),
+                accs.iter().map(|a| format!("{a:.1}")).collect::<Vec<_>>().join(" | ")
+            );
+            rows.push(format!(
+                "{},{},{},{avg:.2}",
+                v.name,
+                strat.name(),
+                accs.iter().map(|a| format!("{a:.2}")).collect::<Vec<_>>().join(",")
+            ));
+        }
+    }
+    ctx.write_csv(
+        "table1_longbench",
+        "model,strategy,sqa,mqa,summ,fewshot,synthetic,code,avg",
+        &rows,
+    )
+}
+
+/// Table 2: AIME-S — pass@1 + decode length, Top-k 10%.
+pub fn table2_aime(ctx: &EvalCtx) -> anyhow::Result<()> {
+    let rule = TopKRule::new(0.10, 128);
+    let hops = if ctx.opts.fast { 4 } else { 8 };
+    println!("Table 2 — AIME-S pass@1 (decode length), Top-k 10%, {hops}-hop chains");
+    println!("| Strategy | {} |", ctx.variants.iter().map(|v| v.name).collect::<Vec<_>>().join(" | "));
+    println!("|---|{}|", "---|".repeat(ctx.variants.len()));
+    let mut cells: Vec<Vec<String>> = vec![Vec::new(); StrategyKind::TABLE.len()];
+    let mut rows = Vec::new();
+    for v in &ctx.variants {
+        let mut gen = WorkloadGen::new(&v.spec, 0x7AB2);
+        let tasks: Vec<_> = (0..ctx.n_prompts()).map(|_| gen.aime(ctx.ctx_len(), hops)).collect();
+        let shared: Vec<_> = tasks.iter().map(|t| dense_prefill(&v.model, t)).collect();
+        for (si, strat) in StrategyKind::TABLE.iter().enumerate() {
+            let mut correct = 0.0;
+            let mut dl = 0.0;
+            for (ti, t) in tasks.iter().enumerate() {
+                let (st, lg) = &shared[ti];
+                let use_shared = !strat.sparse_prefill();
+                let o = run_task(
+                    &v.model,
+                    t,
+                    *strat,
+                    &v.cal.plan,
+                    rule,
+                    use_shared.then_some(st),
+                    use_shared.then_some(lg),
+                );
+                correct += o.correct as u8 as f64;
+                dl += o.decode_len as f64;
+            }
+            let n = tasks.len() as f64;
+            cells[si].push(format!("{:.1} ({:.1})", 100.0 * correct / n, dl / n));
+            rows.push(format!(
+                "{},{},{:.2},{:.2}",
+                v.name,
+                strat.name(),
+                100.0 * correct / n,
+                dl / n
+            ));
+        }
+    }
+    for (si, strat) in StrategyKind::TABLE.iter().enumerate() {
+        println!("| {} | {} |", strat.name(), cells[si].join(" | "));
+    }
+    ctx.write_csv("table2_aime", "model,strategy,pass1,decode_len", &rows)
+}
+
+/// One attention-op timing sample on random KV state.
+fn time_decode_op(
+    cache: &KvCache,
+    q: &[f32],
+    g: usize,
+    role: Option<LayerRole>,
+    k: usize,
+    reps: usize,
+) -> f64 {
+    let n_q = cache.n_kv * g;
+    let d = cache.d;
+    let mut out = vec![0.0f32; n_q * d];
+    let mut cost = CostTracker::default();
+    // fixed index set for reuse timing (cost is shape-, not value-dependent)
+    let idx: Vec<Vec<u32>> = (0..cache.n_kv)
+        .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % cache.len as u32).collect())
+        .collect();
+    let t = Timer::start();
+    for _ in 0..reps {
+        match role {
+            None => attention::decode_dense(q, cache, g, &mut out, &mut cost),
+            Some(LayerRole::Anchor0) => {
+                // dense output + pooled scores + top-k
+                attention::decode_dense(q, cache, g, &mut out, &mut cost);
+                let pooled = attention::decode_pooled_scores(q, cache, g, &mut cost);
+                let _ = attention::select_topk(&pooled, k, &mut cost);
+            }
+            Some(LayerRole::Anchor) => {
+                let pooled = attention::decode_pooled_scores(q, cache, g, &mut cost);
+                let idx = attention::select_topk(&pooled, k, &mut cost);
+                attention::decode_sparse(q, cache, g, &idx, &mut out, &mut cost);
+            }
+            Some(LayerRole::Reuse { .. }) => {
+                attention::decode_sparse(q, cache, g, &idx, &mut out, &mut cost);
+            }
+        }
+    }
+    t.us() / reps as f64
+}
+
+fn time_prefill_tile(
+    cache: &KvCache,
+    qs: &[f32],
+    start: usize,
+    g: usize,
+    role: Option<LayerRole>,
+    k: usize,
+) -> f64 {
+    let n_q = cache.n_kv * g;
+    let d = cache.d;
+    let tile = qs.len() / (n_q * d);
+    let mut out = vec![0.0f32; tile * n_q * d];
+    let mut cost = CostTracker::default();
+    let idx: Vec<Vec<u32>> = (0..cache.n_kv)
+        .map(|h| (0..k as u32).map(|i| (i * 13 + h as u32) % (start + 1) as u32).collect())
+        .collect();
+    let t = Timer::start();
+    match role {
+        None => attention::prefill_dense_tile(qs, start, cache, g, &mut out, &mut cost),
+        Some(LayerRole::Anchor0) => {
+            attention::prefill_dense_tile(qs, start, cache, g, &mut out, &mut cost);
+            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, &mut cost);
+            let _ = attention::select_topk(&pooled, k, &mut cost);
+        }
+        Some(LayerRole::Anchor) => {
+            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, &mut cost);
+            let idx = attention::select_topk(&pooled, k, &mut cost);
+            attention::prefill_sparse_tile(qs, start, cache, g, &idx, &mut out, &mut cost);
+        }
+        Some(LayerRole::Reuse { .. }) => {
+            attention::prefill_sparse_tile(qs, start, cache, g, &idx, &mut out, &mut cost);
+        }
+    }
+    t.us()
+}
+
+/// Table 3: decode + prefill attention speedups vs dense across context
+/// lengths and Top-k %.  Kascade time = weighted mix of anchor0 / anchor /
+/// reuse layer costs (paper Table 3 caption: weights 1/L, (A-1)/L,
+/// (L-A)/L).
+pub fn table3_kernels(ctx: &EvalCtx) -> anyhow::Result<()> {
+    let v = &ctx.variants[0];
+    let cfg = &v.spec.cfg;
+    let (n_kv, g, d) = (cfg.n_kv_heads, cfg.group(), cfg.d_head);
+    let n_layers = cfg.n_layers as f64;
+    let n_anchors = v.cal.plan.anchors.len() as f64;
+    let mut rng = Rng::new(3);
+
+    let decode_ctx: Vec<usize> = if ctx.opts.fast {
+        vec![8192, 16384, 32768]
+    } else {
+        vec![8192, 16384, 32768, 65536, 131072]
+    };
+    let fracs = [0.05f32, 0.10, 0.15, 0.20, 0.25, 0.30];
+
+    println!("Table 3 — attention speedup vs dense (native engine, 1 CPU core)");
+    println!("Kascade time = (1/L)*anchor0 + ((A-1)/L)*anchor + ((L-A)/L)*reuse, L={n_layers}, A={n_anchors}");
+    println!("\n**decode**");
+    println!("| ctx | {} |", fracs.iter().map(|f| format!("k={:.0}%", f * 100.0)).collect::<Vec<_>>().join(" | "));
+    println!("|---|{}|", "---|".repeat(fracs.len()));
+    let mut rows = Vec::new();
+    for &len in &decode_ctx {
+        let mut cache = KvCache::new(n_kv, d, len);
+        let mut kbuf = vec![0.0f32; n_kv * d];
+        let mut vbuf = vec![0.0f32; n_kv * d];
+        for _ in 0..len {
+            rng.fill_normal(&mut kbuf, 0.5);
+            rng.fill_normal(&mut vbuf, 1.0);
+            cache.push(&kbuf, &vbuf);
+        }
+        let mut q = vec![0.0f32; n_kv * g * d];
+        rng.fill_normal(&mut q, 1.0);
+        let reps = (2_000_000 / len).clamp(1, 50);
+        let dense = time_decode_op(&cache, &q, g, None, 128, reps);
+        let mut cells = Vec::new();
+        for &f in &fracs {
+            let k = TopKRule::new(f, 128).k(len);
+            let a0 = time_decode_op(&cache, &q, g, Some(LayerRole::Anchor0), k, reps);
+            let an = time_decode_op(&cache, &q, g, Some(LayerRole::Anchor), k, reps);
+            let ru = time_decode_op(&cache, &q, g, Some(LayerRole::Reuse { anchor: 0 }), k, reps);
+            let kas = (a0 + (n_anchors - 1.0) * an + (n_layers - n_anchors) * ru) / n_layers;
+            let speedup = dense / kas;
+            cells.push(format!("{speedup:.2}"));
+            rows.push(format!("decode,{len},{f},{dense:.1},{kas:.1},{speedup:.3}"));
+        }
+        println!("| {len} | {} |", cells.join(" | "));
+    }
+
+    println!("\n**prefill** (per 128-query tile at the context frontier)");
+    let prefill_ctx: Vec<usize> = if ctx.opts.fast { vec![4096, 8192] } else { vec![4096, 8192, 16384, 32768] };
+    println!("| ctx | {} |", fracs.iter().map(|f| format!("k={:.0}%", f * 100.0)).collect::<Vec<_>>().join(" | "));
+    println!("|---|{}|", "---|".repeat(fracs.len()));
+    for &len in &prefill_ctx {
+        let mut cache = KvCache::new(n_kv, d, len);
+        let mut kbuf = vec![0.0f32; n_kv * d];
+        let mut vbuf = vec![0.0f32; n_kv * d];
+        for _ in 0..len {
+            rng.fill_normal(&mut kbuf, 0.5);
+            rng.fill_normal(&mut vbuf, 1.0);
+            cache.push(&kbuf, &vbuf);
+        }
+        let tile = 128;
+        let start = len - tile;
+        let mut qs = vec![0.0f32; tile * n_kv * g * d];
+        rng.fill_normal(&mut qs, 1.0);
+        let dense = time_prefill_tile(&cache, &qs, start, g, None, 128);
+        let mut cells = Vec::new();
+        for &f in &fracs {
+            let k = TopKRule::new(f, 128).k(len);
+            let a0 = time_prefill_tile(&cache, &qs, start, g, Some(LayerRole::Anchor0), k);
+            let an = time_prefill_tile(&cache, &qs, start, g, Some(LayerRole::Anchor), k);
+            let ru = time_prefill_tile(&cache, &qs, start, g, Some(LayerRole::Reuse { anchor: 0 }), k);
+            let kas = (a0 + (n_anchors - 1.0) * an + (n_layers - n_anchors) * ru) / n_layers;
+            let speedup = dense / kas;
+            cells.push(format!("{speedup:.2}"));
+            rows.push(format!("prefill,{len},{f},{dense:.1},{kas:.1},{speedup:.3}"));
+        }
+        println!("| {len} | {} |", cells.join(" | "));
+    }
+    ctx.write_csv(
+        "table3_kernels",
+        "phase,ctx,frac,dense_us,kascade_us,speedup",
+        &rows,
+    )
+}

@@ -1,0 +1,191 @@
+//! Algorithm 1: dynamic-programming anchor-layer selection.
+//!
+//! Given the (importance-weighted) cross-layer similarity matrix `S`
+//! (`S[i][j]` = how much of layer `j`'s oracle Top-k mass the Top-k of
+//! layer `i` recovers, `i <= j`), choose `M` anchors that partition the
+//! layer range into contiguous segments, each led by its anchor, maximizing
+//!
+//! ```text
+//! sum over segments [a_m, a_{m+1})  of  sum_{l in segment} S[a_m][l]
+//! ```
+
+/// Row-major square matrix helper.
+#[derive(Debug, Clone)]
+pub struct SimMatrix {
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl SimMatrix {
+    pub fn new(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.n + j] = v;
+    }
+
+    /// Apply importance weights: `S[i][j] *= w[j]` (Sec. 3.3).
+    pub fn weight_columns(&mut self, w: &[f32]) {
+        assert_eq!(w.len(), self.n);
+        for i in 0..self.n {
+            for j in 0..self.n {
+                self.data[i * self.n + j] *= w[j];
+            }
+        }
+    }
+}
+
+/// Returns (anchors sorted ascending, objective value).
+///
+/// `m` is the anchor budget.  Layer 0 is always the first anchor (the DP's
+/// first segment necessarily starts at layer 0, matching the paper where
+/// layer 0 runs dense and anchors the first segment).
+pub fn select_anchors(s: &SimMatrix, m: usize) -> (Vec<usize>, f32) {
+    let n = s.n;
+    let m = m.clamp(1, n);
+    // prefix[i][j] = sum_{l=i}^{j} S[i][l]
+    // dp[seg][j] = best objective covering layers 0..=j-1 with `seg` segments
+    let neg = f32::NEG_INFINITY;
+    let mut dp = vec![vec![neg; n + 1]; m + 1];
+    let mut path = vec![vec![0usize; n + 1]; m + 1];
+    // segment cost: anchor at i covering layers i..j-1 (inclusive)
+    let seg_cost = |i: usize, j: usize| -> f32 {
+        (i..j).map(|l| s.get(i, l)).sum()
+    };
+    dp[0][0] = 0.0;
+    for seg in 1..=m {
+        for j in seg..=n {
+            // last segment starts at i (its anchor), i ranges over
+            // [seg-1, j-1]; previous segments cover 0..i-1.
+            let mut best = neg;
+            let mut arg = 0;
+            for i in (seg - 1)..j {
+                let prev = dp[seg - 1][i];
+                if prev == neg {
+                    continue;
+                }
+                let v = prev + seg_cost(i, j);
+                if v > best {
+                    best = v;
+                    arg = i;
+                }
+            }
+            dp[seg][j] = best;
+            path[seg][j] = arg;
+        }
+    }
+    // Fewer segments can never beat more segments here (S entries >= 0 and
+    // S[i][i] is maximal), but pick the best m' <= m defensively.
+    let mut best_m = m;
+    for cand in 1..=m {
+        if dp[cand][n] > dp[best_m][n] {
+            best_m = cand;
+        }
+    }
+    let mut anchors = Vec::with_capacity(best_m);
+    let mut j = n;
+    for seg in (1..=best_m).rev() {
+        let i = path[seg][j];
+        anchors.push(i);
+        j = i;
+    }
+    anchors.reverse();
+    (anchors, dp[best_m][n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Similarity with planted blocks: S[i][j] = 1 - 0.2 * (j - i) within a
+    /// block, near zero across blocks.
+    fn planted(n: usize, starts: &[usize]) -> SimMatrix {
+        let block_of = |l: usize| starts.iter().rposition(|&s| s <= l).unwrap();
+        let mut s = SimMatrix::new(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = if block_of(i) == block_of(j) {
+                    (1.0 - 0.1 * (j - i) as f32).max(0.0)
+                } else {
+                    0.05
+                };
+                s.set(i, j, v);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn recovers_planted_block_starts() {
+        let starts = vec![0, 3, 7, 12];
+        let s = planted(16, &starts);
+        let (anchors, obj) = select_anchors(&s, 4);
+        assert_eq!(anchors, starts);
+        assert!(obj > 0.0);
+    }
+
+    #[test]
+    fn first_anchor_is_layer_zero() {
+        let s = planted(8, &[0, 4]);
+        for m in 1..=4 {
+            let (anchors, _) = select_anchors(&s, m);
+            assert_eq!(anchors[0], 0, "m={m}");
+        }
+    }
+
+    #[test]
+    fn budget_one_selects_only_layer_zero() {
+        let s = planted(8, &[0, 4]);
+        let (anchors, _) = select_anchors(&s, 1);
+        assert_eq!(anchors, vec![0]);
+    }
+
+    #[test]
+    fn objective_nondecreasing_in_budget() {
+        let s = planted(16, &[0, 5, 9]);
+        let mut prev = f32::NEG_INFINITY;
+        for m in 1..=8 {
+            let (_, obj) = select_anchors(&s, m);
+            assert!(obj >= prev - 1e-5, "m={m}: {obj} < {prev}");
+            prev = obj;
+        }
+    }
+
+    #[test]
+    fn anchors_sorted_unique_and_within_range() {
+        let s = planted(12, &[0, 2, 6]);
+        let (anchors, _) = select_anchors(&s, 5);
+        let mut sorted = anchors.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(anchors, sorted);
+        assert!(anchors.iter().all(|&a| a < 12));
+    }
+
+    #[test]
+    fn importance_weighting_shifts_anchors_toward_heavy_layers() {
+        // uniform similarity; importance concentrated on early layers
+        let n = 8;
+        let mut s = SimMatrix::new(n);
+        for i in 0..n {
+            for j in i..n {
+                s.set(i, j, 1.0 - 0.05 * (j - i) as f32);
+            }
+        }
+        let mut weighted = s.clone();
+        let w: Vec<f32> = (0..n).map(|l| if l < 4 { 1.0 } else { 0.01 }).collect();
+        weighted.weight_columns(&w);
+        let (a_unw, _) = select_anchors(&s, 3);
+        let (a_wtd, _) = select_anchors(&weighted, 3);
+        // weighted run should spend its anchors on the first half
+        assert!(a_wtd.iter().filter(|&&a| a < 4).count() >= a_unw.iter().filter(|&&a| a < 4).count());
+        assert!(a_wtd[2] <= 4);
+    }
+}

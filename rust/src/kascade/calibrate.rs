@@ -1,0 +1,204 @@
+//! Offline calibration pipeline (the paper's deployment recipe, Sec. 3.3):
+//! run a development set through the model with dense attention, capture
+//! pooled distributions + importance samples, build the similarity matrix
+//! (Eq. 3), select anchors with Algorithm 1, and derive head maps.
+
+use super::anchor_select::select_anchors;
+use super::headmap::build_head_maps;
+use super::plan::{segment_map, KascadePlan};
+use super::similarity::SimilarityBuilder;
+use crate::config::TopKRule;
+use crate::model::{CaptureRequest, Model};
+use crate::sparse::DensePolicy;
+
+pub struct CalibrateOptions {
+    /// Anchor budget M (paper: 5).
+    pub anchors: usize,
+    /// Top-k used inside the similarity statistic (paper: 64).
+    pub sim_k: usize,
+    /// Probe positions per prompt (late positions; min over them drives the
+    /// conservative layer similarity).
+    pub probes_per_prompt: usize,
+    /// Serve-time Top-k rule recorded in the plan.
+    pub topk: TopKRule,
+    /// Apply the importance weighting `S[i][j] *= w_j` (Sec. 3.3).
+    pub weight_by_importance: bool,
+}
+
+impl Default for CalibrateOptions {
+    fn default() -> Self {
+        Self {
+            anchors: 5,
+            sim_k: 64,
+            probes_per_prompt: 6,
+            topk: TopKRule::default(),
+            weight_by_importance: true,
+        }
+    }
+}
+
+/// Calibration result: the deployable plan plus the raw statistics (used
+/// by the eval drivers to regenerate Figs. 3 and 4).
+pub struct Calibration {
+    pub plan: KascadePlan,
+    pub sim: SimilarityBuilder,
+    pub importance: Vec<f32>,
+}
+
+/// Run the full pipeline over `dev_prompts`.
+pub fn calibrate(model: &Model, dev_prompts: &[Vec<u32>], opts: &CalibrateOptions) -> Calibration {
+    let cfg = &model.cfg;
+    let mut sim = SimilarityBuilder::new(cfg.n_layers, cfg.n_kv_heads, opts.sim_k);
+    for prompt in dev_prompts {
+        let n = prompt.len();
+        // probe the final positions (incl. the query token) plus a few
+        // interior ones for coverage
+        let mut probes: Vec<usize> = (0..opts.probes_per_prompt / 2)
+            .map(|i| n - 1 - i)
+            .filter(|&p| p > 0)
+            .collect();
+        let stride = n / (opts.probes_per_prompt / 2 + 1).max(1);
+        for i in 1..=(opts.probes_per_prompt - probes.len()) {
+            let p = (i * stride).min(n - 1);
+            if !probes.contains(&p) {
+                probes.push(p);
+            }
+        }
+        let mut st = model.new_state(n + 8);
+        let req = CaptureRequest { probe_positions: probes };
+        let (_, cap) = model.prefill(prompt, &mut st, &mut DensePolicy, Some(&req));
+        sim.add_prompt(&cap.unwrap());
+    }
+    let importance = sim.importance();
+    let matrix = sim.layer_matrix(opts.weight_by_importance);
+    let (anchors, objective) = select_anchors(&matrix, opts.anchors);
+    let head_map = build_head_maps(&sim, cfg.n_layers, &anchors);
+    let mut plan = KascadePlan {
+        n_layers: cfg.n_layers,
+        n_kv_heads: cfg.n_kv_heads,
+        segment_of: segment_map(cfg.n_layers, &anchors),
+        anchors,
+        head_map,
+        topk: opts.topk,
+        objective,
+    };
+    if plan.anchors.first() != Some(&0) {
+        // defensive: Algorithm 1 always starts its first segment at 0
+        plan.anchors.insert(0, 0);
+        plan.segment_of = segment_map(cfg.n_layers, &plan.anchors);
+    }
+    plan.validate().expect("calibration produced invalid plan");
+    Calibration { plan, sim, importance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SynthSpec;
+    use crate::workload::WorkloadGen;
+
+    fn spec() -> SynthSpec {
+        let mut s = SynthSpec::eval_base(5);
+        s.cfg.n_layers = 8;
+        s.block_starts = vec![1, 4];
+        s
+    }
+
+    fn dev_prompts(spec: &SynthSpec, n: usize, ctx: usize) -> Vec<Vec<u32>> {
+        let mut gen = WorkloadGen::new(spec, 77);
+        (0..n).map(|_| gen.dev_prompt(ctx)).collect()
+    }
+
+    /// End-to-end: calibration on the planted-block SynthLM must place
+    /// anchors at (or adjacent to) the planted block starts, find the
+    /// permuted match-head mapping, and produce decaying importance.
+    #[test]
+    fn calibration_recovers_planted_structure() {
+        let spec = spec();
+        let model = spec.build();
+        let prompts = dev_prompts(&spec, 3, 256);
+        // unweighted: pure cross-layer similarity should recover the
+        // planted blocks {0}, {1..3}, {4..7}
+        let opts = CalibrateOptions {
+            anchors: 3,
+            sim_k: 16,
+            weight_by_importance: false,
+            ..Default::default()
+        };
+        let cal = calibrate(&model, &prompts, &opts);
+        assert_eq!(cal.plan.anchors.len(), 3);
+        assert_eq!(cal.plan.anchors[0], 0);
+        assert!(
+            cal.plan.anchors[1] <= 2,
+            "second anchor {} should sit at planted block 1",
+            cal.plan.anchors[1]
+        );
+        assert!(
+            (3..=5).contains(&cal.plan.anchors[2]),
+            "third anchor {} should sit near planted block 4",
+            cal.plan.anchors[2]
+        );
+
+        // importance decays from the first match block to the last layer
+        assert!(
+            cal.importance[1] > cal.importance[7],
+            "importance should decay: {:?}",
+            cal.importance
+        );
+        cal.plan.validate().unwrap();
+
+        // importance weighting (the paper default) can only pull anchors
+        // toward the high-importance early layers
+        let wopts = CalibrateOptions { anchors: 3, sim_k: 16, ..Default::default() };
+        let wcal = calibrate(&model, &prompts, &wopts);
+        assert_eq!(wcal.plan.anchors[0], 0);
+        assert!(
+            wcal.plan.anchors[2] <= cal.plan.anchors[2],
+            "weighted anchors {:?} should not sit deeper than unweighted {:?}",
+            wcal.plan.anchors,
+            cal.plan.anchors
+        );
+    }
+
+    /// With head remapping, a reuse layer's match head must map to the
+    /// anchor's match head even though slots are permuted.
+    #[test]
+    fn head_maps_track_the_match_head() {
+        let spec = spec();
+        let model = spec.build();
+        let prompts = dev_prompts(&spec, 2, 256);
+        let opts = CalibrateOptions { anchors: 2, sim_k: 16, ..Default::default() };
+        let cal = calibrate(&model, &prompts, &opts);
+
+        // locate the match slot per layer from the generator's wiring
+        let dh = spec.cfg.d_head;
+        let match_slot = |l: usize| -> usize {
+            let lw = &model.w.layers[l];
+            (0..spec.cfg.n_kv_heads)
+                .max_by(|&a, &b| {
+                    let diag = |s: usize| -> f32 {
+                        (0..dh)
+                            .map(|j| lw.wk[(dh + j) * spec.cfg.n_kv_heads * dh + s * dh + j].abs())
+                            .sum()
+                    };
+                    diag(a).partial_cmp(&diag(b)).unwrap()
+                })
+                .unwrap()
+        };
+        let mut checked = 0;
+        for l in 0..spec.cfg.n_layers {
+            let a = cal.plan.segment_of[l];
+            if a == l || a == 0 {
+                continue; // anchor itself, or layer-0 anchor (no match head)
+            }
+            let (ms_l, ms_a) = (match_slot(l), match_slot(a));
+            assert_eq!(
+                cal.plan.head_map[l][ms_l],
+                ms_a,
+                "layer {l} match slot {ms_l} should map to anchor {a} slot {ms_a}"
+            );
+            checked += 1;
+        }
+        assert!(checked > 0, "no reuse layers exercised");
+    }
+}

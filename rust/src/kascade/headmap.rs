@@ -1,0 +1,83 @@
+//! Head remapping (Sec. 3.5): map each reuse-layer KV head to the most
+//! similar KV head of its anchor layer (many-to-one allowed).
+
+use super::plan::segment_map;
+use super::similarity::SimilarityBuilder;
+
+/// `head_map[l][hb]` = anchor head whose Top-k indices reuse layer `l`'s
+/// head `hb` should consume.  Anchor layers get identity rows.
+pub fn build_head_maps(
+    sim: &SimilarityBuilder,
+    n_layers: usize,
+    anchors: &[usize],
+) -> Vec<Vec<usize>> {
+    let seg = segment_map(n_layers, anchors);
+    (0..n_layers)
+        .map(|l| {
+            let a = seg[l];
+            if a == l {
+                (0..sim.n_kv).collect()
+            } else {
+                (0..sim.n_kv)
+                    .map(|hb| {
+                        let mut best = 0;
+                        let mut best_v = f32::NEG_INFINITY;
+                        for ha in 0..sim.n_kv {
+                            let v = sim.head_similarity(a, l, ha, hb);
+                            if v > best_v {
+                                best_v = v;
+                                best = ha;
+                            }
+                        }
+                        best
+                    })
+                    .collect()
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kascade::similarity::{CalibrationCapture, ProbeCapture};
+
+    /// Heads of layer 1 are a swap of layer 0's heads.
+    fn swapped_capture() -> CalibrationCapture {
+        let len = 64;
+        let mk = |peak: usize| {
+            let mut d = vec![1e-4f32; len];
+            d[peak] = 1.0;
+            let s: f32 = d.iter().sum();
+            d.iter_mut().for_each(|x| *x /= s);
+            d
+        };
+        let a = mk(5);
+        let b = mk(40);
+        CalibrationCapture {
+            n_layers: 2,
+            n_kv: 2,
+            probes: vec![ProbeCapture {
+                dists: vec![vec![a.clone(), b.clone()], vec![b, a]],
+                importance: vec![1.0, 1.0],
+            }],
+        }
+    }
+
+    #[test]
+    fn detects_swapped_heads() {
+        let mut sim = SimilarityBuilder::new(2, 2, 8);
+        sim.add_prompt(&swapped_capture());
+        let maps = build_head_maps(&sim, 2, &[0]);
+        assert_eq!(maps[0], vec![0, 1]); // anchor: identity
+        assert_eq!(maps[1], vec![1, 0]); // reuse layer reads swapped heads
+    }
+
+    #[test]
+    fn anchor_layers_are_identity() {
+        let mut sim = SimilarityBuilder::new(2, 2, 8);
+        sim.add_prompt(&swapped_capture());
+        let maps = build_head_maps(&sim, 2, &[0, 1]);
+        assert_eq!(maps[1], vec![0, 1]);
+    }
+}

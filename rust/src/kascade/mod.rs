@@ -1,0 +1,23 @@
+//! The paper's contribution: cross-layer Top-k reuse.
+//!
+//! * [`similarity`] — Eq. 3 cross-layer (and cross-head) similarity from
+//!   captured attention distributions, min-over-tokens / mean-over-prompts,
+//!   plus the importance weights `w_l = 1 - cos(x_l, y_l)` (Sec. 3.3).
+//! * [`anchor_select`] — Algorithm 1: dynamic-programming anchor-layer
+//!   selection over the weighted similarity matrix.
+//! * [`headmap`] — head remapping (Sec. 3.5): reuse-layer head -> most
+//!   similar anchor-layer head (many-to-one).
+//! * [`plan`] — the deployable `KascadePlan` artifact (JSON) consumed by
+//!   the serving coordinator and the native engine policy.
+
+pub mod anchor_select;
+pub mod calibrate;
+pub mod headmap;
+pub mod plan;
+pub mod similarity;
+
+pub use anchor_select::select_anchors;
+pub use calibrate::{calibrate, CalibrateOptions, Calibration};
+pub use headmap::build_head_maps;
+pub use plan::{KascadePlan, LayerRole};
+pub use similarity::{CalibrationCapture, SimilarityBuilder};

@@ -1,0 +1,215 @@
+//! The deployable Kascade plan: which layers are anchors, which anchor each
+//! reuse layer reads from, and the per-layer head remapping.
+
+use crate::config::TopKRule;
+use crate::jsonutil::Json;
+use std::path::Path;
+
+/// Role of a layer in the serve-time schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerRole {
+    /// Layer 0 when it is an anchor: dense attention + Top-k extraction
+    /// (paper Sec. 3.1 — layer 0's distribution is too flat to sparsify).
+    Anchor0,
+    /// Anchor layer: multi-pass Top-k extraction + sparse attention.
+    Anchor,
+    /// Reuse layer: sparse attention over the given anchor's indices.
+    Reuse { anchor: usize },
+}
+
+/// Calibrated, model-specific Kascade deployment artifact.
+#[derive(Debug, Clone)]
+pub struct KascadePlan {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    /// Sorted anchor layers; always contains 0.
+    pub anchors: Vec<usize>,
+    /// `segment_of[l]` = the anchor layer whose indices layer `l` uses.
+    pub segment_of: Vec<usize>,
+    /// `head_map[l][h]` = KV head of the anchor layer that reuse layer `l`'s
+    /// KV head `h` reads (identity rows for anchor layers).
+    pub head_map: Vec<Vec<usize>>,
+    pub topk: TopKRule,
+    /// Provenance: similarity objective value of the selected anchor set.
+    pub objective: f32,
+}
+
+impl KascadePlan {
+    /// Build a plan from an anchor set with identity head maps (used by
+    /// tests and by the all-heads-pooled variant where maps are moot).
+    pub fn from_anchors(n_layers: usize, n_kv_heads: usize, mut anchors: Vec<usize>, topk: TopKRule) -> Self {
+        anchors.sort_unstable();
+        anchors.dedup();
+        if anchors.first() != Some(&0) {
+            anchors.insert(0, 0);
+        }
+        let segment_of = segment_map(n_layers, &anchors);
+        let head_map = vec![(0..n_kv_heads).collect(); n_layers];
+        Self { n_layers, n_kv_heads, anchors, segment_of, head_map, topk, objective: 0.0 }
+    }
+
+    pub fn role(&self, layer: usize) -> LayerRole {
+        if self.anchors.binary_search(&layer).is_ok() {
+            if layer == 0 {
+                LayerRole::Anchor0
+            } else {
+                LayerRole::Anchor
+            }
+        } else {
+            LayerRole::Reuse { anchor: self.segment_of[layer] }
+        }
+    }
+
+    /// Fraction of layers that run (near-)full-cost attention — the quantity
+    /// behind the paper's speedup-weighting (Table 3 caption).
+    pub fn anchor_fraction(&self) -> f32 {
+        self.anchors.len() as f32 / self.n_layers as f32
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("n_kv_heads", Json::num(self.n_kv_heads as f64)),
+            ("anchors", Json::usize_arr(&self.anchors)),
+            ("segment_of", Json::usize_arr(&self.segment_of)),
+            (
+                "head_map",
+                Json::arr(self.head_map.iter().map(|r| Json::usize_arr(r))),
+            ),
+            (
+                "topk",
+                Json::obj(vec![
+                    ("frac", Json::num(self.topk.frac as f64)),
+                    ("min_k", Json::num(self.topk.min_k as f64)),
+                ]),
+            ),
+            ("objective", Json::num(self.objective as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let topk = j.req("topk")?;
+        let plan = Self {
+            n_layers: j.req("n_layers")?.as_usize().unwrap_or(0),
+            n_kv_heads: j.req("n_kv_heads")?.as_usize().unwrap_or(0),
+            anchors: j.req("anchors")?.usize_vec()?,
+            segment_of: j.req("segment_of")?.usize_vec()?,
+            head_map: j
+                .req("head_map")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("head_map must be an array"))?
+                .iter()
+                .map(|r| r.usize_vec())
+                .collect::<anyhow::Result<_>>()?,
+            topk: TopKRule::new(
+                topk.req("frac")?.as_f64().unwrap_or(0.1) as f32,
+                topk.req("min_k")?.as_usize().unwrap_or(128),
+            ),
+            objective: j.get("objective").and_then(|v| v.as_f64()).unwrap_or(0.0) as f32,
+        };
+        plan.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(plan)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.anchors.is_empty() || self.anchors[0] != 0 {
+            return Err("anchor set must contain layer 0".into());
+        }
+        if self.segment_of.len() != self.n_layers || self.head_map.len() != self.n_layers {
+            return Err("segment_of/head_map length mismatch".into());
+        }
+        for (l, &a) in self.segment_of.iter().enumerate() {
+            if a > l || self.anchors.binary_search(&a).is_err() {
+                return Err(format!("layer {l}: invalid segment anchor {a}"));
+            }
+        }
+        for (l, hm) in self.head_map.iter().enumerate() {
+            if hm.len() != self.n_kv_heads {
+                return Err(format!("layer {l}: head map has {} entries", hm.len()));
+            }
+            if hm.iter().any(|&h| h >= self.n_kv_heads) {
+                return Err(format!("layer {l}: head map index out of range"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// For each layer, the anchor whose segment contains it.
+pub fn segment_map(n_layers: usize, anchors: &[usize]) -> Vec<usize> {
+    let mut seg = vec![0; n_layers];
+    let mut cur = anchors[0];
+    let mut next_i = 1;
+    for (l, s) in seg.iter_mut().enumerate() {
+        if next_i < anchors.len() && anchors[next_i] == l {
+            cur = l;
+            next_i += 1;
+        }
+        *s = cur;
+    }
+    seg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> KascadePlan {
+        KascadePlan::from_anchors(16, 4, vec![0, 2, 8, 13, 14], TopKRule::default())
+    }
+
+    #[test]
+    fn roles_match_paper_semantics() {
+        let p = plan();
+        assert_eq!(p.role(0), LayerRole::Anchor0);
+        assert_eq!(p.role(2), LayerRole::Anchor);
+        assert_eq!(p.role(1), LayerRole::Reuse { anchor: 0 });
+        assert_eq!(p.role(7), LayerRole::Reuse { anchor: 2 });
+        assert_eq!(p.role(15), LayerRole::Reuse { anchor: 14 });
+    }
+
+    #[test]
+    fn layer_zero_forced_into_anchor_set() {
+        let p = KascadePlan::from_anchors(8, 2, vec![3, 5], TopKRule::default());
+        assert_eq!(p.anchors, vec![0, 3, 5]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn segment_map_is_previous_anchor() {
+        let seg = segment_map(10, &[0, 4, 7]);
+        assert_eq!(seg, vec![0, 0, 0, 0, 4, 4, 4, 7, 7, 7]);
+    }
+
+    #[test]
+    fn anchor_fraction() {
+        assert!((plan().anchor_fraction() - 5.0 / 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = plan();
+        let s = p.to_json().to_string();
+        let q = KascadePlan::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(q.anchors, p.anchors);
+        assert_eq!(q.segment_of, p.segment_of);
+        assert_eq!(q.head_map, p.head_map);
+        assert_eq!(q.topk.min_k, p.topk.min_k);
+    }
+
+    #[test]
+    fn validate_rejects_forward_reference() {
+        let mut p = plan();
+        p.segment_of[1] = 8; // layer 1 cannot reuse a *later* anchor
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! Cross-layer similarity (Eq. 3) and layer importance (Sec. 3.3) from
+//! captured attention distributions on a development set.
+//!
+//! For each probed query token the capture stores, at every layer, the
+//! post-softmax **pooled** distribution of every KV head (i.e. exactly what
+//! the anchor kernels pool at serve time — the "incorporates the
+//! modifications of Sec. 3.4/3.5" requirement), plus the attention-block
+//! importance sample `1 - cos(x_l, y_l)`.
+//!
+//! The builder aggregates:
+//! * head-level similarity `sim(a, ha -> b, hb)` — mean over tokens and
+//!   prompts (drives head remapping),
+//! * layer-level similarity `S[a][b]` — per-prompt **minimum over tokens**
+//!   of the head-remapped layer similarity (the paper's conservative
+//!   choice), then mean over prompts,
+//! * importance weights `w_l` — mean of `1 - cos(x_l, y_l)`.
+
+use super::anchor_select::SimMatrix;
+use crate::tensor::topk_indices;
+
+/// Distributions and importance samples for one probed query token.
+pub struct ProbeCapture {
+    /// `dists[layer][kv_head]` = pooled post-softmax distribution over the
+    /// context visible at this token.
+    pub dists: Vec<Vec<Vec<f32>>>,
+    /// `importance[layer]` = `1 - cos(x_l, y_l)` at this token.
+    pub importance: Vec<f32>,
+}
+
+/// All probes captured from one development prompt.
+pub struct CalibrationCapture {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub probes: Vec<ProbeCapture>,
+}
+
+/// Accumulates Eq.-3 statistics across development prompts.
+pub struct SimilarityBuilder {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    /// Top-k size used for the similarity statistic (paper: 64).
+    pub k: usize,
+    head_sum: Vec<f64>, // [a][b][ha][hb], a <= b
+    head_cnt: u64,
+    layer_sum: Vec<f64>, // [a][b] sum over prompts of min-over-tokens
+    n_prompts: u64,
+    imp_sum: Vec<f64>,
+    imp_cnt: u64,
+}
+
+impl SimilarityBuilder {
+    pub fn new(n_layers: usize, n_kv: usize, k: usize) -> Self {
+        Self {
+            n_layers,
+            n_kv,
+            k,
+            head_sum: vec![0.0; n_layers * n_layers * n_kv * n_kv],
+            head_cnt: 0,
+            layer_sum: vec![0.0; n_layers * n_layers],
+            n_prompts: 0,
+            imp_sum: vec![0.0; n_layers],
+            imp_cnt: 0,
+        }
+    }
+
+    #[inline]
+    fn hidx(&self, a: usize, b: usize, ha: usize, hb: usize) -> usize {
+        ((a * self.n_layers + b) * self.n_kv + ha) * self.n_kv + hb
+    }
+
+    /// Recovered-mass ratio: how much of `target`'s own top-k mass the
+    /// index set `idx` captures (Eq. 3 numerator / denominator).
+    fn recovery(&self, idx: &[u32], target: &[f32]) -> f32 {
+        let own: f32 = topk_indices(target, self.k.min(target.len()))
+            .iter()
+            .map(|&i| target[i as usize])
+            .sum();
+        if own <= 0.0 {
+            return 1.0;
+        }
+        let got: f32 = idx
+            .iter()
+            .filter(|&&i| (i as usize) < target.len())
+            .map(|&i| target[i as usize])
+            .sum();
+        (got / own).min(1.0)
+    }
+
+    pub fn add_prompt(&mut self, cap: &CalibrationCapture) {
+        assert_eq!(cap.n_layers, self.n_layers);
+        assert_eq!(cap.n_kv, self.n_kv);
+        let nl = self.n_layers;
+        let nk = self.n_kv;
+        // per-prompt min over tokens of the layer-level similarity
+        let mut layer_min = vec![f32::INFINITY; nl * nl];
+        for probe in &cap.probes {
+            // top-k index sets per (layer, head)
+            let idx: Vec<Vec<Vec<u32>>> = probe
+                .dists
+                .iter()
+                .map(|heads| {
+                    heads
+                        .iter()
+                        .map(|d| topk_indices(d, self.k.min(d.len())))
+                        .collect()
+                })
+                .collect();
+            for a in 0..nl {
+                for b in a..nl {
+                    // head-level recoveries
+                    let mut layer_acc = 0.0f32;
+                    for hb in 0..nk {
+                        let target = &probe.dists[b][hb];
+                        let mut best = 0.0f32;
+                        for ha in 0..nk {
+                            let r = self.recovery(&idx[a][ha], target);
+                            let hi = self.hidx(a, b, ha, hb);
+                            self.head_sum[hi] += r as f64;
+                            if r > best {
+                                best = r;
+                            }
+                        }
+                        layer_acc += best;
+                    }
+                    let sim = layer_acc / nk as f32;
+                    let cell = &mut layer_min[a * nl + b];
+                    if sim < *cell {
+                        *cell = sim;
+                    }
+                }
+            }
+            for (l, &w) in probe.importance.iter().enumerate() {
+                self.imp_sum[l] += w as f64;
+            }
+            self.imp_cnt += 1;
+            self.head_cnt += 1;
+        }
+        if !cap.probes.is_empty() {
+            for (sum, &mn) in self.layer_sum.iter_mut().zip(layer_min.iter()) {
+                if mn.is_finite() {
+                    *sum += mn as f64;
+                }
+            }
+            self.n_prompts += 1;
+        }
+    }
+
+    /// Mean head-level similarity `a.ha -> b.hb`.
+    pub fn head_similarity(&self, a: usize, b: usize, ha: usize, hb: usize) -> f32 {
+        if self.head_cnt == 0 {
+            return 0.0;
+        }
+        (self.head_sum[self.hidx(a, b, ha, hb)] / self.head_cnt as f64) as f32
+    }
+
+    /// Mean importance weights `w_l`.
+    pub fn importance(&self) -> Vec<f32> {
+        self.imp_sum
+            .iter()
+            .map(|&s| if self.imp_cnt == 0 { 1.0 } else { (s / self.imp_cnt as f64) as f32 })
+            .collect()
+    }
+
+    /// Layer-level similarity matrix; `weighted` applies `S[i][j] *= w_j`.
+    pub fn layer_matrix(&self, weighted: bool) -> SimMatrix {
+        let nl = self.n_layers;
+        let mut s = SimMatrix::new(nl);
+        if self.n_prompts > 0 {
+            for a in 0..nl {
+                for b in a..nl {
+                    s.set(a, b, (self.layer_sum[a * nl + b] / self.n_prompts as f64) as f32);
+                }
+            }
+        }
+        if weighted {
+            s.weight_columns(&self.importance());
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// Synthetic capture: all layers share one peaked distribution except
+    /// layer `odd_layer`, which is independent; head 1 of every layer is a
+    /// permuted copy of head 0 of layer 0.
+    fn synth_capture(n_layers: usize, odd_layer: usize) -> CalibrationCapture {
+        let n_kv = 2;
+        let len = 256;
+        let mut rng = Rng::new(9);
+        let mut base = vec![0.0f32; len];
+        for i in 0..len {
+            base[i] = if i % 11 == 0 { 1.0 } else { 0.001 * rng.uniform() };
+        }
+        let norm: f32 = base.iter().sum();
+        base.iter_mut().for_each(|x| *x /= norm);
+        let mut shifted = base.clone();
+        shifted.rotate_right(3); // "permuted head": peaks at different keys
+        let mut odd = vec![0.0f32; len];
+        for i in 0..len {
+            odd[i] = if i % 7 == 3 { 1.0 } else { 0.0005 };
+        }
+        let n: f32 = odd.iter().sum();
+        odd.iter_mut().for_each(|x| *x /= n);
+
+        let probes = (0..4)
+            .map(|_| ProbeCapture {
+                dists: (0..n_layers)
+                    .map(|l| {
+                        if l == odd_layer {
+                            vec![odd.clone(), odd.clone()]
+                        } else {
+                            // head 0 = base, head 1 = shifted (same for all
+                            // layers -> cross-layer head identity holds
+                            // under the map 0->0, 1->1)
+                            vec![base.clone(), shifted.clone()]
+                        }
+                    })
+                    .collect(),
+                importance: (0..n_layers).map(|l| 1.0 / (1.0 + l as f32)).collect(),
+            })
+            .collect();
+        CalibrationCapture { n_layers, n_kv, probes }
+    }
+
+    #[test]
+    fn identical_layers_have_similarity_one() {
+        let mut b = SimilarityBuilder::new(4, 2, 16);
+        b.add_prompt(&synth_capture(4, 99));
+        let s = b.layer_matrix(false);
+        for a in 0..4 {
+            for j in a..4 {
+                assert!(s.get(a, j) > 0.99, "S[{a}][{j}] = {}", s.get(a, j));
+            }
+        }
+    }
+
+    #[test]
+    fn odd_layer_has_low_similarity() {
+        let mut b = SimilarityBuilder::new(4, 2, 16);
+        b.add_prompt(&synth_capture(4, 2));
+        let s = b.layer_matrix(false);
+        assert!(s.get(0, 1) > 0.95);
+        assert!(s.get(0, 2) < 0.5, "S[0][2] = {}", s.get(0, 2));
+        assert!(s.get(2, 3) < 0.5);
+        // diagonal stays 1 even for the odd layer
+        assert!(s.get(2, 2) > 0.99);
+    }
+
+    #[test]
+    fn head_similarity_identifies_matching_head() {
+        let mut b = SimilarityBuilder::new(3, 2, 16);
+        b.add_prompt(&synth_capture(3, 99));
+        // head 0 <-> head 0 strong; head 0 -> head 1 weak
+        assert!(b.head_similarity(0, 1, 0, 0) > 0.95);
+        assert!(b.head_similarity(0, 1, 1, 1) > 0.95);
+        assert!(b.head_similarity(0, 1, 0, 1) < 0.6);
+    }
+
+    #[test]
+    fn importance_is_mean_of_samples() {
+        let mut b = SimilarityBuilder::new(4, 2, 16);
+        b.add_prompt(&synth_capture(4, 99));
+        let w = b.importance();
+        for (l, &wl) in w.iter().enumerate() {
+            assert!((wl - 1.0 / (1.0 + l as f32)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn weighted_matrix_scales_columns() {
+        let mut b = SimilarityBuilder::new(4, 2, 16);
+        b.add_prompt(&synth_capture(4, 99));
+        let unw = b.layer_matrix(false);
+        let wtd = b.layer_matrix(true);
+        let w = b.importance();
+        for a in 0..4 {
+            for j in a..4 {
+                assert!((wtd.get(a, j) - unw.get(a, j) * w[j]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_builder_yields_zero_matrix() {
+        let b = SimilarityBuilder::new(4, 2, 16);
+        let s = b.layer_matrix(true);
+        assert!(s.data.iter().all(|&x| x == 0.0));
+    }
+}

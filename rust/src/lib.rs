@@ -1,0 +1,39 @@
+//! # Kascade — practical sparse attention for long-context LLM inference
+//!
+//! A Rust + JAX + Pallas reproduction of *"Kascade: A Practical Sparse
+//! Attention Method for Long-Context LLM Inference"* (Deshmukh et al.,
+//! 2025), built as a three-layer stack:
+//!
+//! * **L3 (this crate)** — a serving coordinator (router, continuous
+//!   batcher, paged KV cache, prefill/decode scheduler) plus the paper's
+//!   offline algorithms: cross-layer similarity (Eq. 3), dynamic-programming
+//!   anchor-layer selection (Algorithm 1), head remapping (Sec. 3.5) and
+//!   the serve-time Top-k index state.
+//! * **L2 (python/compile/model.py)** — a GQA transformer in JAX, lowered
+//!   once to HLO-text artifacts executed here via PJRT ([`runtime`]).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: dense flash
+//!   attention, the multi-pass anchor pipeline, and gather-based reuse
+//!   attention.
+//!
+//! The crate additionally contains a **native CPU attention engine**
+//! ([`attention`], [`model`]) — the simulator substrate used to run the
+//! paper's accuracy experiments (Figs. 1-7, Tables 1-2) at long contexts,
+//! and **SynthLM** ([`model`]), a synthetic GQA transformer with wired
+//! retrieval circuits that makes task accuracy *really* depend on
+//! attention fidelity (DESIGN.md §2).
+
+pub mod attention;
+pub mod benchutil;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod jsonutil;
+pub mod kascade;
+pub mod model;
+pub mod runtime;
+pub mod proptest_lite;
+pub mod server;
+pub mod sparse;
+pub mod stats;
+pub mod tensor;
+pub mod workload;

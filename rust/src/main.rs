@@ -1,0 +1,244 @@
+//! `kascade` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   eval <fig1..fig7|table1..table3|all> [--fast]   regenerate experiments
+//!   calibrate [--anchors M] [--out plan.json]       offline anchor selection
+//!   serve [--requests N] [--policy P]               run the serving demo
+//!   export-weights [--out artifacts/synth_weights]  SynthLM -> PJRT weights
+//!   pjrt-smoke                                      artifact load + parity check
+//!
+//! (clap is unavailable offline; this is a small hand-rolled parser.)
+
+use kascade::config::ServeConfig;
+use kascade::coordinator::{NativeBackend, Request};
+use kascade::eval::{self, EvalOptions};
+use kascade::kascade::{calibrate, CalibrateOptions};
+use kascade::model::SynthSpec;
+use kascade::server::{BackendFactory, Engine};
+use kascade::sparse::{DensePolicy, KascadePolicy};
+use kascade::workload::WorkloadGen;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let has_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if has_value {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: kascade <command>\n\
+         commands:\n\
+           eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
+           calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
+           serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N]\n\
+           export-weights [--out PATH] [--seed S]\n\
+           pjrt-smoke [--artifacts DIR]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("eval") => {
+            let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let opts = EvalOptions {
+                fast: args.has("fast"),
+                out_dir: PathBuf::from(args.flag("out").unwrap_or("results")),
+                seed: args.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42),
+            };
+            eval::run(name, &opts)
+        }
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("export-weights") => cmd_export_weights(&args),
+        Some("pjrt-smoke") => cmd_pjrt_smoke(&args),
+        _ => usage(),
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let anchors: usize = args.flag("anchors").and_then(|s| s.parse().ok()).unwrap_or(5);
+    let ctx: usize = args.flag("ctx").and_then(|s| s.parse().ok()).unwrap_or(1536);
+    let n_prompts: usize = args.flag("prompts").and_then(|s| s.parse().ok()).unwrap_or(4);
+    let out = PathBuf::from(args.flag("out").unwrap_or("results/plan.json"));
+    let spec = SynthSpec::eval_base(args.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42));
+    let model = spec.build();
+    let mut gen = WorkloadGen::new(&spec, 0xDE5);
+    let prompts: Vec<Vec<u32>> = (0..n_prompts).map(|_| gen.dev_prompt(ctx)).collect();
+    let cal = calibrate(
+        &model,
+        &prompts,
+        &CalibrateOptions { anchors, ..Default::default() },
+    );
+    println!("anchors: {:?}", cal.plan.anchors);
+    println!("objective: {:.4}", cal.plan.objective);
+    println!("importance: {:?}", cal.importance);
+    for (l, hm) in cal.plan.head_map.iter().enumerate() {
+        println!("  layer {l:>2} ({:?}) head_map {:?}", cal.plan.role(l), hm);
+    }
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    cal.plan.save(&out)?;
+    println!("plan written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n_requests: usize = args.flag("requests").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let ctx: usize = args.flag("ctx").and_then(|s| s.parse().ok()).unwrap_or(1024);
+    let policy = args.flag("policy").unwrap_or("kascade").to_string();
+    let spec = SynthSpec::eval_base(42);
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0x5E12E);
+    let mut dev = WorkloadGen::new(&spec, 0xDE5);
+    let plan = if policy == "kascade" {
+        let prompts: Vec<Vec<u32>> = (0..3).map(|_| dev.dev_prompt(ctx.min(1024))).collect();
+        Some(calibrate(&model, &prompts, &CalibrateOptions::default()).plan)
+    } else {
+        None
+    };
+    let cap = ctx + 64;
+    let factory: BackendFactory = {
+        let model = model.clone();
+        Box::new(move |_req| {
+            let policy: Box<dyn kascade::sparse::SparsePolicy> = match &plan {
+                Some(p) => Box::new(KascadePolicy::new(p.clone())),
+                None => Box::new(DensePolicy),
+            };
+            Box::new(NativeBackend::new(model.clone(), cap, policy))
+        })
+    };
+    let mut engine = Engine::new(
+        ServeConfig {
+            num_blocks: (cap / 16 + 2) * 32,
+            ..ServeConfig::default()
+        },
+        factory,
+    );
+    let mut expected = Vec::new();
+    for id in 0..n_requests {
+        let t = gen.longbench(kascade::workload::Category::Sqa, ctx);
+        expected.push(t.expect.clone());
+        engine.submit(Request {
+            id: id as u64,
+            prompt: t.prompt,
+            max_new: t.max_new,
+            stop_token: Some(*t.expect.last().unwrap()),
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let done = engine.run_to_completion();
+    let secs = t0.elapsed().as_secs_f64();
+    let mut correct = 0;
+    for c in &done {
+        if c.tokens.first() == expected[c.id as usize].first() {
+            correct += 1;
+        }
+    }
+    println!("policy={policy} requests={n_requests} ctx={ctx}");
+    println!("{}", engine.metrics.report());
+    println!(
+        "wall={secs:.1}s accuracy={:.0}% ({} of {})",
+        100.0 * correct as f64 / n_requests as f64,
+        correct,
+        n_requests
+    );
+    Ok(())
+}
+
+fn cmd_export_weights(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.flag("out").unwrap_or("artifacts/synth_weights"));
+    let seed = args.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let spec = SynthSpec::pjrt_small(seed);
+    let model = spec.build();
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    model.w.export_bin(&model.cfg, &out)?;
+    println!("wrote {}.bin / .json", out.display());
+    Ok(())
+}
+
+fn cmd_pjrt_smoke(args: &Args) -> anyhow::Result<()> {
+    use kascade::runtime::{PjrtModel, Runtime};
+    let dir = PathBuf::from(args.flag("artifacts").unwrap_or("artifacts"));
+    let rt = Runtime::load(&dir)?;
+    println!(
+        "manifest: {} artifacts, decode buckets {:?}, prefill buckets {:?}",
+        rt.manifest.artifacts.len(),
+        rt.manifest.decode_l,
+        rt.manifest.prefill_t
+    );
+    let spec = SynthSpec::pjrt_small(42);
+    let native = spec.build();
+    let pjrt = PjrtModel::new(rt, &native.w)?;
+    // parity: one small dense prefill through both paths
+    let lay = spec.vocab_layout();
+    let mut toks = vec![kascade::model::VocabLayout::BOS];
+    for f in 0..100 {
+        toks.push(lay.filler_tok(f));
+    }
+    toks[40] = lay.pair_tok(3, 7);
+    toks.push(kascade::model::VocabLayout::QUERY);
+    toks.push(lay.key_tok(3));
+    let mut pst = pjrt.new_state();
+    let pjrt_logits = pjrt.prefill(&toks, &mut pst, None)?;
+    let mut nst = native.new_state(toks.len() + 8);
+    let (native_logits, _) = native.prefill(&toks, &mut nst, &mut DensePolicy, None);
+    let pa = kascade::tensor::argmax(&pjrt_logits);
+    let na = kascade::tensor::argmax(&native_logits);
+    let mut max_diff = 0.0f32;
+    for (a, b) in pjrt_logits.iter().zip(&native_logits) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    println!("argmax pjrt={pa} native={na} expected={} max|Δlogit|={max_diff:.4}", lay.value_tok(7));
+    anyhow::ensure!(pa == na, "parity failure");
+    anyhow::ensure!(pa as u32 == lay.value_tok(7), "retrieval failure on PJRT path");
+    // decode parity for a few steps
+    let tok = pa as u32;
+    let p2 = pjrt.decode_step(tok, &mut pst, None)?;
+    let n2 = native.decode_step(tok, &mut nst, &mut DensePolicy);
+    anyhow::ensure!(
+        kascade::tensor::argmax(&p2) == kascade::tensor::argmax(&n2),
+        "decode parity failure"
+    );
+    println!("pjrt-smoke OK ({} executables compiled)", pjrt.rt.compiled_count());
+    Ok(())
+}

@@ -1,0 +1,443 @@
+//! Native forward pass: policy-driven prefill (tile-based, layer by layer)
+//! and decode steps, with optional calibration capture (pooled
+//! distributions + importance samples) for the Kascade offline pipeline.
+
+use super::weights::Weights;
+use crate::attention::{self, CostTracker, KvCache};
+use crate::config::ModelConfig;
+use crate::kascade::similarity::{CalibrationCapture, ProbeCapture};
+use crate::sparse::{Selection, SparsePolicy};
+use crate::tensor::{self, matvec_t, rmsnorm, rope};
+
+/// Prefill Q-tile (matches the paper's 128-query kernel tile).
+pub const PREFILL_TILE: usize = 128;
+
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub w: Weights,
+}
+
+/// Per-sequence inference state.
+#[derive(Clone)]
+pub struct SeqState {
+    pub caches: Vec<KvCache>,
+    pub pos: usize,
+    pub cost: CostTracker,
+}
+
+/// Requests calibration capture during a prefill: pooled per-KV-head
+/// distributions and importance samples at the given probe positions.
+pub struct CaptureRequest {
+    /// Absolute token positions to probe (typically late positions).
+    pub probe_positions: Vec<usize>,
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, w: Weights) -> Self {
+        Self { cfg, w }
+    }
+
+    pub fn new_state(&self, cap: usize) -> SeqState {
+        let caches = (0..self.cfg.n_layers)
+            .map(|_| KvCache::new(self.cfg.n_kv_heads, self.cfg.d_head, cap))
+            .collect();
+        SeqState { caches, pos: 0, cost: CostTracker::default() }
+    }
+
+    /// Project one hidden row into (q, k, v) head vectors with RoPE.
+    fn qkv_row(
+        &self,
+        layer: usize,
+        x: &[f32],
+        pos: usize,
+        q: &mut [f32],
+        k: &mut [f32],
+        v: &mut [f32],
+    ) {
+        let cfg = &self.cfg;
+        let lw = &self.w.layers[layer];
+        let mut h = vec![0.0; cfg.d_model];
+        rmsnorm(x, &lw.ln1, &mut h);
+        matvec_t(&h, &lw.wq, cfg.d_model, cfg.n_q_heads * cfg.d_head, q);
+        matvec_t(&h, &lw.wk, cfg.d_model, cfg.n_kv_heads * cfg.d_head, k);
+        matvec_t(&h, &lw.wv, cfg.d_model, cfg.n_kv_heads * cfg.d_head, v);
+        if cfg.rope {
+            for hq in 0..cfg.n_q_heads {
+                rope(&mut q[hq * cfg.d_head..(hq + 1) * cfg.d_head], pos, cfg.rope_theta);
+            }
+            for hk in 0..cfg.n_kv_heads {
+                rope(&mut k[hk * cfg.d_head..(hk + 1) * cfg.d_head], pos, cfg.rope_theta);
+            }
+        }
+    }
+
+    /// Residual attention-write + SwiGLU MLP for one row.
+    fn post_row(&self, layer: usize, x: &mut [f32], attn: &[f32]) {
+        let cfg = &self.cfg;
+        let lw = &self.w.layers[layer];
+        let mut delta = vec![0.0; cfg.d_model];
+        matvec_t(attn, &lw.wo, cfg.n_q_heads * cfg.d_head, cfg.d_model, &mut delta);
+        for (xi, di) in x.iter_mut().zip(delta.iter()) {
+            *xi += di;
+        }
+        let mut h = vec![0.0; cfg.d_model];
+        rmsnorm(x, &lw.ln2, &mut h);
+        let mut a = vec![0.0; cfg.d_ff];
+        let mut b = vec![0.0; cfg.d_ff];
+        matvec_t(&h, &lw.w1, cfg.d_model, cfg.d_ff, &mut a);
+        matvec_t(&h, &lw.w3, cfg.d_model, cfg.d_ff, &mut b);
+        for i in 0..cfg.d_ff {
+            let s = a[i] / (1.0 + (-a[i]).exp()); // silu
+            a[i] = s * b[i];
+        }
+        matvec_t(&a, &lw.w2, cfg.d_ff, cfg.d_model, &mut delta);
+        for (xi, di) in x.iter_mut().zip(delta.iter()) {
+            *xi += di;
+        }
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let mut h = vec![0.0; cfg.d_model];
+        rmsnorm(x, &self.w.lnf, &mut h);
+        let mut out = vec![0.0; cfg.vocab];
+        matvec_t(&h, &self.w.w_u, cfg.d_model, cfg.vocab, &mut out);
+        out
+    }
+
+    /// Policy-driven prefill over `tokens`, processed layer-by-layer in
+    /// Q-tiles of [`PREFILL_TILE`].  Returns logits of the last token.
+    ///
+    /// With `capture`, also returns pooled-score / importance probes for
+    /// the Kascade calibration pipeline (computed from the *dense* score
+    /// oracle regardless of the policy — calibration always runs dense).
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        st: &mut SeqState,
+        policy: &mut dyn SparsePolicy,
+        capture: Option<&CaptureRequest>,
+    ) -> (Vec<f32>, Option<CalibrationCapture>) {
+        let cfg = &self.cfg;
+        let t_total = tokens.len();
+        let base = st.pos;
+        let nqd = cfg.n_q_heads * cfg.d_head;
+        // hidden states for the whole chunk
+        let mut xs: Vec<f32> = Vec::with_capacity(t_total * cfg.d_model);
+        for &t in tokens {
+            xs.extend_from_slice(self.w.embedding(t as usize, cfg.d_model));
+        }
+        let mut probes: Vec<ProbeCapture> = capture
+            .map(|c| {
+                c.probe_positions
+                    .iter()
+                    .map(|_| ProbeCapture {
+                        dists: vec![Vec::new(); cfg.n_layers],
+                        importance: vec![0.0; cfg.n_layers],
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        let mut qbuf = vec![0.0f32; t_total * nqd];
+        let mut attn = vec![0.0f32; t_total * nqd];
+        for layer in 0..cfg.n_layers {
+            // project + append kv for every token of the chunk
+            let mut k = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+            let mut v = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+            for t in 0..t_total {
+                let x = &xs[t * cfg.d_model..(t + 1) * cfg.d_model];
+                let q = &mut qbuf[t * nqd..(t + 1) * nqd];
+                self.qkv_row(layer, x, base + t, q, &mut k, &mut v);
+                st.caches[layer].push(&k, &v);
+            }
+            // attention per Q-tile
+            let cache = &st.caches[layer];
+            let mut tile_idx = 0;
+            let mut t0 = 0;
+            while t0 < t_total {
+                let tlen = PREFILL_TILE.min(t_total - t0);
+                let qs = &qbuf[t0 * nqd..(t0 + tlen) * nqd];
+                let out = &mut attn[t0 * nqd..(t0 + tlen) * nqd];
+                let sel = policy.prefill_tile(
+                    layer,
+                    tile_idx,
+                    base + t0,
+                    qs,
+                    cache,
+                    cfg.group(),
+                    &mut st.cost,
+                );
+                match sel {
+                    Selection::Dense => attention::prefill_dense_tile(
+                        qs,
+                        base + t0,
+                        cache,
+                        cfg.group(),
+                        out,
+                        &mut st.cost,
+                    ),
+                    Selection::Sparse(idx) => attention::prefill_sparse_tile(
+                        qs,
+                        base + t0,
+                        cache,
+                        cfg.group(),
+                        &idx,
+                        out,
+                        &mut st.cost,
+                    ),
+                }
+                t0 += tlen;
+                tile_idx += 1;
+            }
+            // calibration probes (dense oracle, before residual update)
+            if let Some(cap) = capture {
+                for (pi, &pp) in cap.probe_positions.iter().enumerate() {
+                    if pp < base || pp >= base + t_total {
+                        continue;
+                    }
+                    let t = pp - base;
+                    let q = &qbuf[t * nqd..(t + 1) * nqd];
+                    let pooled = attention::decode_pooled_scores_upto(
+                        q,
+                        pp + 1,
+                        cache,
+                        cfg.group(),
+                        &mut st.cost,
+                    );
+                    probes[pi].dists[layer] = pooled;
+                    // importance: 1 - cos(x, x + wo * attn_out)
+                    let x = &xs[t * cfg.d_model..(t + 1) * cfg.d_model];
+                    let lw = &self.w.layers[layer];
+                    let mut delta = vec![0.0; cfg.d_model];
+                    matvec_t(&attn[t * nqd..(t + 1) * nqd], &lw.wo, nqd, cfg.d_model, &mut delta);
+                    let y: Vec<f32> = x.iter().zip(&delta).map(|(a, b)| a + b).collect();
+                    probes[pi].importance[layer] = 1.0 - tensor::cosine_sim(x, &y);
+                }
+            }
+            // residual + MLP
+            for t in 0..t_total {
+                let x = unsafe {
+                    // disjoint ranges of xs; avoids an extra copy per row
+                    std::slice::from_raw_parts_mut(
+                        xs.as_mut_ptr().add(t * cfg.d_model),
+                        cfg.d_model,
+                    )
+                };
+                self.post_row(layer, x, &attn[t * nqd..(t + 1) * nqd]);
+            }
+        }
+        st.pos += t_total;
+        let last = &xs[(t_total - 1) * cfg.d_model..t_total * cfg.d_model];
+        let cap_out = capture.map(|_| CalibrationCapture {
+            n_layers: cfg.n_layers,
+            n_kv: cfg.n_kv_heads,
+            probes,
+        });
+        (self.logits(last), cap_out)
+    }
+
+    /// Run a dense forward and return `layer`'s query vectors
+    /// (`[T, n_q * d]`) plus its populated KV cache — the raw material for
+    /// pooling-strategy experiments (Fig. 5).
+    pub fn capture_layer_qk(&self, tokens: &[u32], layer: usize) -> (Vec<f32>, KvCache) {
+        let cfg = &self.cfg;
+        let nqd = cfg.n_q_heads * cfg.d_head;
+        let t_total = tokens.len();
+        let mut xs: Vec<f32> = Vec::with_capacity(t_total * cfg.d_model);
+        for &t in tokens {
+            xs.extend_from_slice(self.w.embedding(t as usize, cfg.d_model));
+        }
+        let mut cost = CostTracker::default();
+        let mut qbuf = vec![0.0f32; t_total * nqd];
+        let mut attn = vec![0.0f32; t_total * nqd];
+        let mut k = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+        let mut v = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+        for l in 0..=layer {
+            let mut cache = KvCache::new(cfg.n_kv_heads, cfg.d_head, t_total);
+            for t in 0..t_total {
+                let x = &xs[t * cfg.d_model..(t + 1) * cfg.d_model];
+                let q = &mut qbuf[t * nqd..(t + 1) * nqd];
+                self.qkv_row(l, x, t, q, &mut k, &mut v);
+                cache.push(&k, &v);
+            }
+            if l == layer {
+                return (qbuf, cache);
+            }
+            attention::prefill_dense_tile(&qbuf, 0, &cache, cfg.group(), &mut attn, &mut cost);
+            for t in 0..t_total {
+                let x = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        xs.as_mut_ptr().add(t * cfg.d_model),
+                        cfg.d_model,
+                    )
+                };
+                self.post_row(l, x, &attn[t * nqd..(t + 1) * nqd]);
+            }
+        }
+        unreachable!("layer within range");
+    }
+
+    /// One policy-driven decode step.  Returns the next-token logits.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        st: &mut SeqState,
+        policy: &mut dyn SparsePolicy,
+    ) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let nqd = cfg.n_q_heads * cfg.d_head;
+        let mut x = self.w.embedding(token as usize, cfg.d_model).to_vec();
+        let mut q = vec![0.0; nqd];
+        let mut k = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+        let mut v = vec![0.0; cfg.n_kv_heads * cfg.d_head];
+        let mut attn = vec![0.0; nqd];
+        for layer in 0..cfg.n_layers {
+            self.qkv_row(layer, &x, st.pos, &mut q, &mut k, &mut v);
+            st.caches[layer].push(&k, &v);
+            let cache = &st.caches[layer];
+            let sel = policy.decode(layer, &q, cache, cfg.group(), &mut st.cost);
+            match sel {
+                Selection::Dense => {
+                    attention::decode_dense(&q, cache, cfg.group(), &mut attn, &mut st.cost)
+                }
+                Selection::Sparse(idx) => {
+                    attention::decode_sparse(&q, cache, cfg.group(), &idx, &mut attn, &mut st.cost)
+                }
+            }
+            self.post_row(layer, &mut x, &attn);
+        }
+        st.pos += 1;
+        self.logits(&x)
+    }
+
+    /// Greedy decode until `stop(token)` or `max_new` tokens.
+    /// Returns the emitted tokens.
+    pub fn greedy_decode(
+        &self,
+        first_logits: &[f32],
+        st: &mut SeqState,
+        policy: &mut dyn SparsePolicy,
+        max_new: usize,
+        stop: impl Fn(u32) -> bool,
+    ) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut tok = tensor::argmax(first_logits) as u32;
+        out.push(tok);
+        while out.len() < max_new && !stop(tok) {
+            let logits = self.decode_step(tok, st, policy);
+            tok = tensor::argmax(&logits) as u32;
+            out.push(tok);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::DensePolicy;
+    use crate::tensor::Rng;
+
+    fn random_model(seed: u64) -> Model {
+        let cfg = ModelConfig {
+            n_layers: 2,
+            d_model: 32,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            vocab: 64,
+            rope_theta: 10000.0,
+            rope: true,
+        };
+        let mut w = Weights::zeros(&cfg);
+        let mut r = Rng::new(seed);
+        r.fill_normal(&mut w.w_e, 0.3);
+        for lw in &mut w.layers {
+            r.fill_normal(&mut lw.wq, 0.18);
+            r.fill_normal(&mut lw.wk, 0.18);
+            r.fill_normal(&mut lw.wv, 0.18);
+            r.fill_normal(&mut lw.wo, 0.18);
+            r.fill_normal(&mut lw.w1, 0.18);
+            r.fill_normal(&mut lw.w3, 0.18);
+            r.fill_normal(&mut lw.w2, 0.12);
+        }
+        r.fill_normal(&mut w.w_u, 0.18);
+        Model::new(cfg, w)
+    }
+
+    /// The core consistency invariant: prefilling N tokens must produce the
+    /// same logits as prefilling N-1 then decoding token N-1.
+    #[test]
+    fn prefill_decode_consistency() {
+        let m = random_model(1);
+        let mut r = Rng::new(2);
+        let toks: Vec<u32> = (0..20).map(|_| r.below(64) as u32).collect();
+
+        let mut st_full = m.new_state(64);
+        let (logits_full, _) = m.prefill(&toks, &mut st_full, &mut DensePolicy, None);
+
+        let mut st_inc = m.new_state(64);
+        let (_, _) = m.prefill(&toks[..19], &mut st_inc, &mut DensePolicy, None);
+        let logits_inc = m.decode_step(toks[19], &mut st_inc, &mut DensePolicy);
+
+        for (a, b) in logits_full.iter().zip(&logits_inc) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(st_full.pos, 20);
+        assert_eq!(st_inc.pos, 20);
+    }
+
+    /// Chunked prefill (two chunks) must equal single-shot prefill.
+    #[test]
+    fn chunked_prefill_consistency() {
+        let m = random_model(3);
+        let mut r = Rng::new(4);
+        let toks: Vec<u32> = (0..160).map(|_| r.below(64) as u32).collect();
+
+        let mut st_a = m.new_state(256);
+        let (la, _) = m.prefill(&toks, &mut st_a, &mut DensePolicy, None);
+        let mut st_b = m.new_state(256);
+        m.prefill(&toks[..100], &mut st_b, &mut DensePolicy, None);
+        let (lb, _) = m.prefill(&toks[100..], &mut st_b, &mut DensePolicy, None);
+        for (a, b) in la.iter().zip(&lb) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn capture_produces_probe_distributions() {
+        let m = random_model(5);
+        let mut r = Rng::new(6);
+        let toks: Vec<u32> = (0..32).map(|_| r.below(64) as u32).collect();
+        let mut st = m.new_state(64);
+        let req = CaptureRequest { probe_positions: vec![10, 31] };
+        let (_, cap) = m.prefill(&toks, &mut st, &mut DensePolicy, Some(&req));
+        let cap = cap.unwrap();
+        assert_eq!(cap.probes.len(), 2);
+        for (pi, pp) in [(0usize, 10usize), (1, 31)] {
+            for l in 0..2 {
+                let dists = &cap.probes[pi].dists[l];
+                assert_eq!(dists.len(), 2); // n_kv
+                for d in dists {
+                    assert_eq!(d.len(), pp + 1);
+                    let s: f32 = d.iter().sum();
+                    assert!((s - 1.0).abs() < 1e-3);
+                }
+                let imp = cap.probes[pi].importance[l];
+                assert!((0.0..=2.0).contains(&imp));
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_decode_stops_on_stop_token() {
+        let m = random_model(7);
+        let mut st = m.new_state(64);
+        let (logits, _) = m.prefill(&[1, 2, 3], &mut st, &mut DensePolicy, None);
+        let first = crate::tensor::argmax(&logits) as u32;
+        let out = m.greedy_decode(&logits, &mut st, &mut DensePolicy, 10, |t| t == first);
+        assert_eq!(out, vec![first]); // stop() true on the very first token
+    }
+}

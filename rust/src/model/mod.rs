@@ -1,0 +1,13 @@
+//! Native GQA transformer: weights, forward pass (prefill + decode) driven
+//! by a [`crate::sparse::SparsePolicy`], calibration capture hooks, and the
+//! **SynthLM** generator — a synthetic model whose weights are *wired* so
+//! that task accuracy genuinely depends on long-range attention fidelity
+//! (DESIGN.md §2: the substitution for Llama-3.1-8B etc.).
+
+pub mod forward;
+pub mod synth;
+pub mod weights;
+
+pub use forward::{CaptureRequest, Model, SeqState, PREFILL_TILE};
+pub use synth::{SynthSpec, VocabLayout};
+pub use weights::{LayerWeights, Weights};

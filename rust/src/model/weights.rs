@@ -1,0 +1,175 @@
+//! Weight containers + binary export for the PJRT path.
+//!
+//! Layout matches python/compile/model.py: all projections are row-major
+//! `[in, out]` so `x @ W` on the JAX side equals `matvec_t(x, W)` here.
+//! `export_bin` writes a little-endian f32 blob + JSON manifest the Rust
+//! runtime feeds to the HLO artifacts (weights are runtime arguments, never
+//! baked into HLO).
+
+use crate::config::ModelConfig;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>, // [D]
+    pub wq: Vec<f32>,  // [D, n_q*d]
+    pub wk: Vec<f32>,  // [D, n_kv*d]
+    pub wv: Vec<f32>,  // [D, n_kv*d]
+    pub wo: Vec<f32>,  // [n_q*d, D]
+    pub ln2: Vec<f32>, // [D]
+    pub w1: Vec<f32>,  // [D, F]
+    pub w3: Vec<f32>,  // [D, F]
+    pub w2: Vec<f32>,  // [F, D]
+}
+
+#[derive(Clone)]
+pub struct Weights {
+    pub layers: Vec<LayerWeights>,
+    pub w_e: Vec<f32>, // [V, D]
+    pub lnf: Vec<f32>, // [D]
+    pub w_u: Vec<f32>, // [D, V]
+}
+
+impl Weights {
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        let (dm, dh, f, v) = (cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1: vec![1.0; dm],
+                wq: vec![0.0; dm * cfg.n_q_heads * dh],
+                wk: vec![0.0; dm * cfg.n_kv_heads * dh],
+                wv: vec![0.0; dm * cfg.n_kv_heads * dh],
+                wo: vec![0.0; cfg.n_q_heads * dh * dm],
+                ln2: vec![1.0; dm],
+                w1: vec![0.0; dm * f],
+                w3: vec![0.0; dm * f],
+                w2: vec![0.0; f * dm],
+            })
+            .collect();
+        Self {
+            layers,
+            w_e: vec![0.0; v * dm],
+            lnf: vec![1.0; dm],
+            w_u: vec![0.0; dm * v],
+        }
+    }
+
+    pub fn embedding(&self, tok: usize, d_model: usize) -> &[f32] {
+        &self.w_e[tok * d_model..(tok + 1) * d_model]
+    }
+
+    /// Ordered flat views: (name, shape, data) — the export/import schema
+    /// shared with the PJRT runtime.
+    pub fn tensors(&self, cfg: &ModelConfig) -> Vec<(String, Vec<usize>, &[f32])> {
+        let (dm, dh, f, v) = (cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab);
+        let mut out: Vec<(String, Vec<usize>, &[f32])> = vec![(
+            "w_e".into(),
+            vec![v, dm],
+            &self.w_e[..],
+        )];
+        for (i, lw) in self.layers.iter().enumerate() {
+            let p = |n: &str| format!("layer{i}.{n}");
+            out.push((p("ln1"), vec![dm], &lw.ln1));
+            out.push((p("wq"), vec![dm, cfg.n_q_heads * dh], &lw.wq));
+            out.push((p("wk"), vec![dm, cfg.n_kv_heads * dh], &lw.wk));
+            out.push((p("wv"), vec![dm, cfg.n_kv_heads * dh], &lw.wv));
+            out.push((p("wo"), vec![cfg.n_q_heads * dh, dm], &lw.wo));
+            out.push((p("ln2"), vec![dm], &lw.ln2));
+            out.push((p("w1"), vec![dm, f], &lw.w1));
+            out.push((p("w3"), vec![dm, f], &lw.w3));
+            out.push((p("w2"), vec![f, dm], &lw.w2));
+        }
+        out.push(("lnf".into(), vec![dm], &self.lnf));
+        out.push(("w_u".into(), vec![dm, v], &self.w_u));
+        out
+    }
+
+    /// Write `<path>.bin` (LE f32) and `<path>.json` (tensor index).
+    pub fn export_bin(&self, cfg: &ModelConfig, path: &Path) -> anyhow::Result<()> {
+        use crate::jsonutil::Json;
+        let mut bin = std::io::BufWriter::new(std::fs::File::create(path.with_extension("bin"))?);
+        let mut index = Vec::new();
+        let mut offset = 0usize;
+        for (name, shape, data) in self.tensors(cfg) {
+            for &x in data {
+                bin.write_all(&x.to_le_bytes())?;
+            }
+            index.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("shape", Json::usize_arr(&shape)),
+                ("offset", Json::num(offset as f64)),
+                ("len", Json::num(data.len() as f64)),
+            ]));
+            offset += data.len();
+        }
+        let meta = Json::obj(vec![
+            (
+                "config",
+                Json::obj(vec![
+                    ("n_layers", Json::num(cfg.n_layers as f64)),
+                    ("d_model", Json::num(cfg.d_model as f64)),
+                    ("n_q_heads", Json::num(cfg.n_q_heads as f64)),
+                    ("n_kv_heads", Json::num(cfg.n_kv_heads as f64)),
+                    ("d_head", Json::num(cfg.d_head as f64)),
+                    ("d_ff", Json::num(cfg.d_ff as f64)),
+                    ("vocab", Json::num(cfg.vocab as f64)),
+                    ("rope_theta", Json::num(cfg.rope_theta as f64)),
+                ]),
+            ),
+            ("tensors", Json::Arr(index)),
+        ]);
+        std::fs::write(path.with_extension("json"), meta.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_enumeration_covers_all_weights() {
+        let cfg = ModelConfig::pjrt_small();
+        let w = Weights::zeros(&cfg);
+        let ts = w.tensors(&cfg);
+        assert_eq!(ts.len(), 3 + 9 * cfg.n_layers);
+        let total: usize = ts.iter().map(|(_, _, d)| d.len()).sum();
+        let expect_layer = cfg.d_model * 2
+            + cfg.d_model * cfg.n_q_heads * cfg.d_head * 2
+            + cfg.d_model * cfg.n_kv_heads * cfg.d_head * 2
+            + cfg.d_model * cfg.d_ff * 3;
+        assert_eq!(
+            total,
+            cfg.vocab * cfg.d_model * 2 + cfg.d_model + cfg.n_layers * expect_layer
+        );
+    }
+
+    #[test]
+    fn export_bin_roundtrip_header() {
+        let cfg = ModelConfig { n_layers: 1, ..ModelConfig::pjrt_small() };
+        let w = Weights::zeros(&cfg);
+        let dir = std::env::temp_dir().join("kascade_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("weights");
+        w.export_bin(&cfg, &path).unwrap();
+        let meta = crate::jsonutil::Json::parse(
+            &std::fs::read_to_string(path.with_extension("json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            meta.get("config").unwrap().get("n_layers").unwrap().as_usize(),
+            Some(1)
+        );
+        let bin_len = std::fs::metadata(path.with_extension("bin")).unwrap().len();
+        let total: usize = meta
+            .get("tensors")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.get("len").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(bin_len, 4 * total as u64);
+    }
+}

@@ -1,0 +1,48 @@
+//! Lightweight property-based testing harness (proptest is unavailable in
+//! this offline environment).  Drives a property over many generated cases
+//! from the deterministic [`crate::tensor::Rng`]; on failure, reports the
+//! seed so the case can be replayed.
+
+use crate::tensor::Rng;
+
+/// Run `prop` over `cases` randomized cases.  Panics with the offending
+/// case seed on the first failure.
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xBEEF_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("uniform in range", 50, |rng| {
+            let u = rng.uniform();
+            prop_assert!((0.0..1.0).contains(&u), "u = {u}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,184 @@
+//! AOT manifest parsing (artifacts/manifest.json) and shape-bucket logic.
+
+use crate::config::ModelConfig;
+use crate::jsonutil::Json;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Context bucket (decode) / prompt bucket (prefill), if applicable.
+    pub l: Option<usize>,
+    pub t: Option<usize>,
+    /// Top-k size baked into the artifact.
+    pub k: Option<usize>,
+    pub tile: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub decode_l: Vec<usize>,
+    pub prefill_t: Vec<usize>,
+    pub tile: usize,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+fn specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|s| {
+            Ok(TensorSpec {
+                shape: s.req("shape")?.usize_vec()?,
+                dtype: s.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let c = j.req("config")?;
+        let config = ModelConfig {
+            n_layers: c.req("n_layers")?.as_usize().unwrap(),
+            d_model: c.req("d_model")?.as_usize().unwrap(),
+            n_q_heads: c.req("n_q_heads")?.as_usize().unwrap(),
+            n_kv_heads: c.req("n_kv_heads")?.as_usize().unwrap(),
+            d_head: c.req("d_head")?.as_usize().unwrap(),
+            d_ff: c.req("d_ff")?.as_usize().unwrap(),
+            vocab: c.req("vocab")?.as_usize().unwrap(),
+            rope_theta: c.req("rope_theta")?.as_f64().unwrap() as f32,
+            rope: true,
+        };
+        let b = j.req("buckets")?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().unwrap() {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: a.req("file")?.as_str().unwrap().to_string(),
+                    kind: a.req("kind")?.as_str().unwrap().to_string(),
+                    inputs: specs(a.req("inputs")?)?,
+                    outputs: specs(a.req("outputs")?)?,
+                    l: a.get("l").and_then(|v| v.as_usize()),
+                    t: a.get("t").and_then(|v| v.as_usize()),
+                    k: a.get("k").and_then(|v| v.as_usize()),
+                    tile: a.get("tile").and_then(|v| v.as_usize()),
+                },
+            );
+        }
+        Ok(Self {
+            config,
+            decode_l: b.req("decode_l")?.usize_vec()?,
+            prefill_t: b.req("prefill_t")?.usize_vec()?,
+            tile: b.req("tile")?.as_usize().unwrap_or(128),
+            artifacts,
+        })
+    }
+
+    /// Smallest decode KV bucket that can hold `len` tokens.
+    pub fn decode_bucket(&self, len: usize) -> Option<usize> {
+        self.decode_l.iter().copied().find(|&b| b >= len)
+    }
+
+    /// Smallest prefill bucket that can hold a `t`-token prompt.
+    pub fn prefill_bucket(&self, t: usize) -> Option<usize> {
+        self.prefill_t.iter().copied().find(|&b| b >= t)
+    }
+
+    /// Baked Top-k size of a decode bucket.
+    pub fn decode_k(&self, bucket: usize) -> Option<usize> {
+        self.artifacts
+            .get(&format!("attn_reuse_decode_l{bucket}"))
+            .and_then(|a| a.k)
+    }
+
+    pub fn prefill_k(&self, bucket: usize) -> Option<usize> {
+        self.artifacts
+            .get(&format!("attn_reuse_prefill_t{bucket}"))
+            .and_then(|a| a.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"n_layers": 16, "d_model": 256, "n_q_heads": 8,
+                 "n_kv_heads": 4, "d_head": 32, "d_ff": 1024,
+                 "vocab": 4096, "rope_theta": 10000.0},
+      "buckets": {"decode_l": [512, 1024, 2048], "prefill_t": [128, 512], "tile": 128},
+      "k_rule": {"frac": 0.1, "min": 128},
+      "artifacts": {
+        "attn_reuse_decode_l512": {
+          "file": "attn_reuse_decode_l512.hlo.txt",
+          "kind": "attn_reuse_decode", "l": 512, "k": 128,
+          "inputs": [{"shape": [8, 32], "dtype": "float32"},
+                     {"shape": [4, 512, 32], "dtype": "float32"},
+                     {"shape": [4, 512, 32], "dtype": "float32"},
+                     {"shape": [4, 128], "dtype": "int32"}],
+          "outputs": [{"shape": [8, 32], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config.n_layers, 16);
+        assert_eq!(m.config.n_kv_heads, 4);
+        assert_eq!(m.decode_l, vec![512, 1024, 2048]);
+        let a = &m.artifacts["attn_reuse_decode_l512"];
+        assert_eq!(a.k, Some(128));
+        assert_eq!(a.inputs[3].dtype, "int32");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.decode_bucket(1), Some(512));
+        assert_eq!(m.decode_bucket(512), Some(512));
+        assert_eq!(m.decode_bucket(513), Some(1024));
+        assert_eq!(m.decode_bucket(2049), None);
+        assert_eq!(m.prefill_bucket(100), Some(128));
+        assert_eq!(m.prefill_bucket(400), Some(512));
+        assert_eq!(m.decode_k(512), Some(128));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !p.exists() {
+            return; // `make artifacts` not run yet
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.config, ModelConfig::pjrt_small());
+        for (name, a) in &m.artifacts {
+            assert!(!a.inputs.is_empty() || a.kind == "const", "{name}");
+        }
+        // every bucket has all four decode attention variants
+        for l in &m.decode_l {
+            for kind in ["dense", "anchor", "anchor0", "reuse"] {
+                assert!(m.artifacts.contains_key(&format!("attn_{kind}_decode_l{l}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! PJRT-backed model execution: drives the layer-granular HLO artifacts
+//! with the Rust coordinator owning the per-layer Kascade schedule.
+//!
+//! Weights are uploaded to the PJRT device **once** at construction
+//! (`buffer_from_host_buffer`) and every op executes via `execute_b`, so
+//! the per-step host->device traffic is only the activations, KV slices
+//! and Top-k indices (see EXPERIMENTS.md §Perf for the literal-vs-buffer
+//! comparison that motivated this).
+
+use super::{lit_to_f32, lit_to_i32, Runtime};
+use crate::config::ModelConfig;
+use crate::kascade::{KascadePlan, LayerRole};
+use crate::model::Weights;
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+struct LayerBufs {
+    ln1: PjRtBuffer,
+    wq: PjRtBuffer,
+    wk: PjRtBuffer,
+    wv: PjRtBuffer,
+    wo: PjRtBuffer,
+    ln2: PjRtBuffer,
+    w1: PjRtBuffer,
+    w3: PjRtBuffer,
+    w2: PjRtBuffer,
+}
+
+pub struct PjrtModel {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    w_e: PjRtBuffer,
+    lnf: PjRtBuffer,
+    w_u: PjRtBuffer,
+    layers: Vec<LayerBufs>,
+}
+
+/// Host-side per-sequence state for the PJRT path.
+pub struct PjrtSeqState {
+    pub len: usize,
+    pub cap: usize,
+    /// per layer, `[n_kv * cap * d]` row-major (head-major, then position)
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    /// freshest Top-k indices per anchor layer, flattened `[n_kv * kk]`
+    pub idx: Vec<Option<(Vec<i32>, usize)>>,
+}
+
+impl PjrtModel {
+    pub fn new(rt: Runtime, weights: &Weights) -> Result<Self> {
+        let cfg = rt.manifest.config;
+        let up = |data: &[f32], dims: &[usize]| -> Result<PjRtBuffer> {
+            rt.client()
+                .buffer_from_host_buffer::<f32>(data, dims, None)
+                .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+        };
+        let (dm, dh, f, v) = (cfg.d_model, cfg.d_head, cfg.d_ff, cfg.vocab);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for lw in &weights.layers {
+            layers.push(LayerBufs {
+                ln1: up(&lw.ln1, &[dm])?,
+                wq: up(&lw.wq, &[dm, cfg.n_q_heads * dh])?,
+                wk: up(&lw.wk, &[dm, cfg.n_kv_heads * dh])?,
+                wv: up(&lw.wv, &[dm, cfg.n_kv_heads * dh])?,
+                wo: up(&lw.wo, &[cfg.n_q_heads * dh, dm])?,
+                ln2: up(&lw.ln2, &[dm])?,
+                w1: up(&lw.w1, &[dm, f])?,
+                w3: up(&lw.w3, &[dm, f])?,
+                w2: up(&lw.w2, &[f, dm])?,
+            });
+        }
+        Ok(Self {
+            w_e: up(&weights.w_e, &[v, dm])?,
+            lnf: up(&weights.lnf, &[dm])?,
+            w_u: up(&weights.w_u, &[dm, v])?,
+            layers,
+            cfg,
+            rt,
+        })
+    }
+
+    pub fn new_state(&self) -> PjrtSeqState {
+        let cap = *self.rt.manifest.decode_l.last().unwrap();
+        let per = self.cfg.n_kv_heads * cap * self.cfg.d_head;
+        PjrtSeqState {
+            len: 0,
+            cap,
+            k: (0..self.cfg.n_layers).map(|_| vec![0.0; per]).collect(),
+            v: (0..self.cfg.n_layers).map(|_| vec![0.0; per]).collect(),
+            idx: vec![None; self.cfg.n_layers],
+        }
+    }
+
+    fn upf(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.rt
+            .client()
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+
+    fn upi(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.rt
+            .client()
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e:?}"))
+    }
+
+    fn run(&self, name: &str, inputs: &[&PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self.rt.executable(name)?;
+        let out = exe
+            .execute_b(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// KV-cache slices for `bucket`, per kv head, from the host cache.
+    fn kv_bucket(&self, st: &PjrtSeqState, layer: usize, bucket: usize) -> (Vec<f32>, Vec<f32>) {
+        let (n_kv, d) = (self.cfg.n_kv_heads, self.cfg.d_head);
+        let mut k = vec![0.0f32; n_kv * bucket * d];
+        let mut v = vec![0.0f32; n_kv * bucket * d];
+        for h in 0..n_kv {
+            let src = h * st.cap * d;
+            let dst = h * bucket * d;
+            let n = st.len.min(bucket) * d;
+            k[dst..dst + n].copy_from_slice(&st.k[layer][src..src + n]);
+            v[dst..dst + n].copy_from_slice(&st.v[layer][src..src + n]);
+        }
+        (k, v)
+    }
+
+    /// Append `count` positions from `[n_kv, src_t, d]`-shaped projections.
+    fn push_kv(
+        &self,
+        st: &mut PjrtSeqState,
+        layer: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+        src_t: usize,
+        count: usize,
+    ) {
+        let (n_kv, d) = (self.cfg.n_kv_heads, self.cfg.d_head);
+        for h in 0..n_kv {
+            for i in 0..count {
+                let pos = st.len + i;
+                let dst = (h * st.cap + pos) * d;
+                let src = (h * src_t + i) * d;
+                st.k[layer][dst..dst + d].copy_from_slice(&k_new[src..src + d]);
+                st.v[layer][dst..dst + d].copy_from_slice(&v_new[src..src + d]);
+            }
+        }
+    }
+
+    /// Remap + pad anchor indices for a reuse layer at Top-k size `kk`.
+    fn remap_idx(&self, idx: &(Vec<i32>, usize), head_map: &[usize], kk: usize) -> Vec<i32> {
+        let (flat, src_kk) = idx;
+        let n_kv = self.cfg.n_kv_heads;
+        let mut out = vec![-1i32; n_kv * kk];
+        for (hb, &ha) in head_map.iter().enumerate() {
+            let n = (*src_kk).min(kk);
+            out[hb * kk..hb * kk + n].copy_from_slice(&flat[ha * src_kk..ha * src_kk + n]);
+        }
+        out
+    }
+
+    /// One decode step.  `plan = None` runs dense attention in every layer.
+    /// Returns the next-token logits.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        st: &mut PjrtSeqState,
+        plan: Option<&KascadePlan>,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let pos = st.len;
+        let bucket = self
+            .rt
+            .manifest
+            .decode_bucket(pos + 1)
+            .with_context(|| format!("context {} exceeds largest decode bucket", pos + 1))?;
+        let kk = self.rt.manifest.decode_k(bucket).unwrap();
+        let len_buf = self.upi(&[(pos + 1) as i32], &[1])?;
+
+        // embed
+        let tok_buf = self.upi(&[token as i32], &[1])?;
+        let x_lit = &self.run("embed_decode", &[&tok_buf, &self.w_e])?[0];
+        let mut x = lit_to_f32(x_lit)?; // [1, D]
+
+        let pos_buf = self.upi(&[pos as i32], &[1])?;
+        for layer in 0..cfg.n_layers {
+            let lb = &self.layers[layer];
+            let x_buf = self.upf(&x, &[1, cfg.d_model])?;
+            let qkv = self.run(
+                "qkv_decode",
+                &[&x_buf, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &pos_buf],
+            )?;
+            let q = lit_to_f32(&qkv[0])?; // [n_q, 1, d] == [n_q, d]
+            let k_new = lit_to_f32(&qkv[1])?;
+            let v_new = lit_to_f32(&qkv[2])?;
+            self.push_kv(st, layer, &k_new, &v_new, 1, 1);
+            st.len += 1; // visible to this layer's attention
+            let (kc, vc) = self.kv_bucket(st, layer, bucket);
+            st.len -= 1;
+
+            let q_buf = self.upf(&q, &[cfg.n_q_heads, cfg.d_head])?;
+            let k_buf = self.upf(&kc, &[cfg.n_kv_heads, bucket, cfg.d_head])?;
+            let v_buf = self.upf(&vc, &[cfg.n_kv_heads, bucket, cfg.d_head])?;
+
+            let role = plan.map(|p| p.role(layer));
+            let attn: Vec<f32> = match role {
+                None => {
+                    let out = self.run(
+                        &format!("attn_dense_decode_l{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?;
+                    lit_to_f32(&out[0])?
+                }
+                Some(LayerRole::Anchor0) => {
+                    let out = self.run(
+                        &format!("attn_anchor0_decode_l{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?;
+                    st.idx[layer] = Some((lit_to_i32(&out[1])?, kk));
+                    lit_to_f32(&out[0])?
+                }
+                Some(LayerRole::Anchor) => {
+                    let out = self.run(
+                        &format!("attn_anchor_decode_l{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?;
+                    st.idx[layer] = Some((lit_to_i32(&out[1])?, kk));
+                    lit_to_f32(&out[0])?
+                }
+                Some(LayerRole::Reuse { anchor }) => match &st.idx[anchor] {
+                    Some(aidx) => {
+                        let plan = plan.unwrap();
+                        let idx = self.remap_idx(aidx, &plan.head_map[layer], kk);
+                        let idx_buf = self.upi(&idx, &[cfg.n_kv_heads, kk])?;
+                        let out = self.run(
+                            &format!("attn_reuse_decode_l{bucket}"),
+                            &[&q_buf, &k_buf, &v_buf, &idx_buf],
+                        )?;
+                        lit_to_f32(&out[0])?
+                    }
+                    None => {
+                        let out = self.run(
+                            &format!("attn_dense_decode_l{bucket}"),
+                            &[&q_buf, &k_buf, &v_buf, &len_buf],
+                        )?;
+                        lit_to_f32(&out[0])?
+                    }
+                },
+            };
+
+            // post: residual + MLP
+            let attn_buf = self.upf(&attn, &[cfg.n_q_heads, 1, cfg.d_head])?;
+            let x_buf = self.upf(&x, &[1, cfg.d_model])?;
+            let out = self.run(
+                "post_decode",
+                &[&x_buf, &attn_buf, &lb.wo, &lb.ln2, &lb.w1, &lb.w3, &lb.w2],
+            )?;
+            x = lit_to_f32(&out[0])?;
+        }
+        st.len += 1;
+
+        let x_buf = self.upf(&x, &[1, cfg.d_model])?;
+        let out = self.run("logits_decode", &[&x_buf, &self.lnf, &self.w_u])?;
+        lit_to_f32(&out[0])
+    }
+
+    /// Full-prompt prefill (prompt must fit the largest prefill bucket).
+    /// Returns the last token's logits.
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        st: &mut PjrtSeqState,
+        plan: Option<&KascadePlan>,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(st.len == 0, "PJRT prefill must start an empty sequence");
+        let cfg = &self.cfg;
+        let t_real = tokens.len();
+        let bucket = self
+            .rt
+            .manifest
+            .prefill_bucket(t_real)
+            .with_context(|| format!("prompt of {t_real} exceeds largest prefill bucket"))?;
+        let kk = self.rt.manifest.prefill_k(bucket).unwrap();
+        let nt = bucket / self.rt.manifest.tile;
+
+        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        toks.resize(bucket, 0); // PAD
+        let pos: Vec<i32> = (0..bucket as i32).collect();
+        let len_buf = self.upi(&[t_real as i32], &[1])?;
+        let tok_buf = self.upi(&toks, &[bucket])?;
+        let pos_buf = self.upi(&pos, &[bucket])?;
+
+        let x_lit = &self.run(&format!("embed_prefill_t{bucket}"), &[&tok_buf, &self.w_e])?[0];
+        let mut x = lit_to_f32(x_lit)?; // [T, D]
+
+        // per-anchor prefill indices for reuse within this prefill
+        let mut pidx: Vec<Option<Vec<i32>>> = vec![None; cfg.n_layers];
+        for layer in 0..cfg.n_layers {
+            let lb = &self.layers[layer];
+            let x_buf = self.upf(&x, &[bucket, cfg.d_model])?;
+            let qkv = self.run(
+                &format!("qkv_prefill_t{bucket}"),
+                &[&x_buf, &lb.ln1, &lb.wq, &lb.wk, &lb.wv, &pos_buf],
+            )?;
+            let q = lit_to_f32(&qkv[0])?; // [n_q, T, d]
+            let k_new = lit_to_f32(&qkv[1])?; // [n_kv, T, d]
+            let v_new = lit_to_f32(&qkv[2])?;
+            self.push_kv(st, layer, &k_new, &v_new, bucket, t_real.min(st.cap - st.len));
+
+            let q_buf = self.upf(&q, &[cfg.n_q_heads, bucket, cfg.d_head])?;
+            let k_buf = self.upf(&k_new, &[cfg.n_kv_heads, bucket, cfg.d_head])?;
+            let v_buf = self.upf(&v_new, &[cfg.n_kv_heads, bucket, cfg.d_head])?;
+
+            let role = plan.map(|p| p.role(layer));
+            let attn: Vec<f32> = match role {
+                None => lit_to_f32(
+                    &self.run(
+                        &format!("attn_dense_prefill_t{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?[0],
+                )?,
+                Some(LayerRole::Anchor0) => {
+                    let out = self.run(
+                        &format!("attn_anchor0_prefill_t{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?;
+                    pidx[layer] = Some(lit_to_i32(&out[1])?);
+                    lit_to_f32(&out[0])?
+                }
+                Some(LayerRole::Anchor) => {
+                    let out = self.run(
+                        &format!("attn_anchor_prefill_t{bucket}"),
+                        &[&q_buf, &k_buf, &v_buf, &len_buf],
+                    )?;
+                    pidx[layer] = Some(lit_to_i32(&out[1])?);
+                    lit_to_f32(&out[0])?
+                }
+                Some(LayerRole::Reuse { anchor }) => match &pidx[anchor] {
+                    Some(aidx) => {
+                        let plan = plan.unwrap();
+                        // remap per tile: aidx is [n_kv, nt, kk]
+                        let mut idx = vec![-1i32; cfg.n_kv_heads * nt * kk];
+                        for (hb, &ha) in plan.head_map[layer].iter().enumerate() {
+                            let n = nt * kk;
+                            idx[hb * n..(hb + 1) * n]
+                                .copy_from_slice(&aidx[ha * n..(ha + 1) * n]);
+                        }
+                        let idx_buf = self.upi(&idx, &[cfg.n_kv_heads, nt, kk])?;
+                        lit_to_f32(
+                            &self.run(
+                                &format!("attn_reuse_prefill_t{bucket}"),
+                                &[&q_buf, &k_buf, &v_buf, &idx_buf],
+                            )?[0],
+                        )?
+                    }
+                    None => lit_to_f32(
+                        &self.run(
+                            &format!("attn_dense_prefill_t{bucket}"),
+                            &[&q_buf, &k_buf, &v_buf, &len_buf],
+                        )?[0],
+                    )?,
+                },
+            };
+
+            let attn_buf = self.upf(&attn, &[cfg.n_q_heads, bucket, cfg.d_head])?;
+            let x_buf = self.upf(&x, &[bucket, cfg.d_model])?;
+            let out = self.run(
+                &format!("post_prefill_t{bucket}"),
+                &[&x_buf, &attn_buf, &lb.wo, &lb.ln2, &lb.w1, &lb.w3, &lb.w2],
+            )?;
+            x = lit_to_f32(&out[0])?;
+        }
+        st.len += t_real;
+
+        let last = &x[(t_real - 1) * cfg.d_model..t_real * cfg.d_model];
+        let x_buf = self.upf(last, &[1, cfg.d_model])?;
+        let out = self.run("logits_decode", &[&x_buf, &self.lnf, &self.w_u])?;
+        lit_to_f32(&out[0])
+    }
+}

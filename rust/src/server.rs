@@ -1,0 +1,312 @@
+//! Serving front-end: a synchronous [`Engine`] (scheduler + sequences +
+//! metrics, fully testable single-threaded) and a thread-based [`Server`]
+//! that runs one engine per worker with a session-affinity router in
+//! front.  (tokio is unavailable in this offline environment; the event
+//! loop is std::thread + mpsc, which on a 1-core host is the same thing.)
+
+use crate::config::ServeConfig;
+use crate::coordinator::{Request, Router, Scheduler, SeqBackend, Sequence, ServeMetrics, WorkItem};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+/// Factory creating a fresh backend for a request (also used on
+/// preemption-recompute).  The `Send` variant crosses into worker threads
+/// ([`Server`]); the local variant serves the single-threaded [`Engine`]
+/// (e.g. the Rc-based PJRT backend).
+pub type BackendFactory = Box<dyn Fn(&Request) -> Box<dyn SeqBackend> + Send>;
+pub type LocalBackendFactory = Box<dyn Fn(&Request) -> Box<dyn SeqBackend>>;
+
+/// Finished-request report.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+    pub preemptions: usize,
+}
+
+/// Single-threaded serving engine: owns the scheduler and live sequences.
+pub struct Engine {
+    pub sched: Scheduler,
+    pub seqs: HashMap<u64, Sequence>,
+    pub metrics: ServeMetrics,
+    factory: LocalBackendFactory,
+    finished: Vec<Completion>,
+}
+
+impl Engine {
+    pub fn new(cfg: ServeConfig, factory: LocalBackendFactory) -> Self {
+        Self {
+            sched: Scheduler::new(cfg),
+            seqs: HashMap::new(),
+            metrics: ServeMetrics::new(),
+            factory,
+            finished: Vec::new(),
+        }
+    }
+
+    /// Returns false if admission control rejected the request.
+    pub fn submit(&mut self, req: Request) -> bool {
+        let id = req.id;
+        if !self.sched.submit(id) {
+            return false;
+        }
+        let backend = (self.factory)(&req);
+        self.metrics.prompts_in += 1;
+        self.seqs.insert(id, Sequence::new(req, backend));
+        true
+    }
+
+    pub fn idle(&self) -> bool {
+        self.sched.running.is_empty() && self.sched.waiting.is_empty()
+    }
+
+    /// One scheduler tick: form a batch, execute it, retire finished.
+    /// Returns the number of work items executed.
+    pub fn tick(&mut self) -> usize {
+        let batch = {
+            let seqs = &self.seqs;
+            self.sched.tick(|id| {
+                seqs.get(&id)
+                    .map(|s| (s.phase, s.req.prompt.len(), s.req.prompt.len() + s.emitted.len()))
+            })
+        };
+        for &victim in &batch.preempted {
+            if let Some(s) = self.seqs.get_mut(&victim) {
+                let fresh = (self.factory)(&s.req);
+                s.preempt(fresh);
+                self.metrics.preemptions += 1;
+            }
+        }
+        let n = batch.items.len();
+        self.metrics.batch_size.add(n as f64);
+        for item in batch.items {
+            match item {
+                WorkItem::Prefill { seq, tokens } => {
+                    if let Some(s) = self.seqs.get_mut(&seq) {
+                        s.step_prefill(tokens);
+                    }
+                }
+                WorkItem::Decode { seq } => {
+                    if let Some(s) = self.seqs.get_mut(&seq) {
+                        let t0 = Instant::now();
+                        s.step_decode();
+                        self.metrics.tpot_us.add(t0.elapsed().as_secs_f64() * 1e6);
+                        self.metrics.tokens_out += 1;
+                    }
+                }
+            }
+        }
+        self.metrics.kv_util.add(self.sched.blocks.utilization());
+        self.retire();
+        n
+    }
+
+    fn retire(&mut self) {
+        let done_ids: Vec<u64> = self
+            .seqs
+            .iter()
+            .filter(|(_, s)| s.is_finished())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in done_ids {
+            self.sched.on_finished(id);
+            let s = self.seqs.remove(&id).unwrap();
+            if let Some(t) = s.first_token_at {
+                self.metrics
+                    .ttft_us
+                    .add_us(t.duration_since(s.arrived).as_secs_f64() * 1e6);
+            }
+            self.metrics.requests_done += 1;
+            self.finished.push(Completion {
+                id,
+                tokens: s.emitted.clone(),
+                ttft_ms: s
+                    .first_token_at
+                    .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
+                    .unwrap_or(0.0),
+                total_ms: s
+                    .finished_at
+                    .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
+                    .unwrap_or(0.0),
+                preemptions: s.preemptions,
+            });
+        }
+    }
+
+    pub fn drain_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Run until every submitted request completes.
+    pub fn run_to_completion(&mut self) -> Vec<Completion> {
+        let mut guard = 0usize;
+        while !self.idle() {
+            let did = self.tick();
+            guard = if did == 0 { guard + 1 } else { 0 };
+            assert!(guard < 1000, "scheduler livelock: no work for 1000 ticks");
+        }
+        self.drain_finished()
+    }
+}
+
+enum Msg {
+    Submit(Request, Sender<Completion>),
+    Shutdown,
+}
+
+/// Multi-worker server: router + one engine thread per worker.
+pub struct Server {
+    router: Router,
+    txs: Vec<Sender<Msg>>,
+    handles: Vec<std::thread::JoinHandle<ServeMetrics>>,
+}
+
+impl Server {
+    /// `factories` — one backend factory per worker.
+    pub fn start(cfg: ServeConfig, factories: Vec<BackendFactory>) -> Self {
+        let mut txs = Vec::new();
+        let mut handles = Vec::new();
+        for factory in factories {
+            let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut engine = Engine::new(cfg, factory);
+                let mut replies: HashMap<u64, Sender<Completion>> = HashMap::new();
+                let mut open = true;
+                loop {
+                    // drain incoming without blocking while work remains
+                    loop {
+                        let msg = if engine.idle() && open {
+                            rx.recv().ok()
+                        } else {
+                            match rx.try_recv() {
+                                Ok(m) => Some(m),
+                                Err(_) => None,
+                            }
+                        };
+                        match msg {
+                            Some(Msg::Submit(req, reply)) => {
+                                replies.insert(req.id, reply);
+                                engine.submit(req);
+                            }
+                            Some(Msg::Shutdown) => open = false,
+                            None => break,
+                        }
+                    }
+                    if engine.idle() {
+                        if !open {
+                            break;
+                        }
+                        continue;
+                    }
+                    engine.tick();
+                    for c in engine.drain_finished() {
+                        if let Some(reply) = replies.remove(&c.id) {
+                            let _ = reply.send(c);
+                        }
+                    }
+                }
+                engine.metrics
+            }));
+            txs.push(tx);
+        }
+        Self { router: Router::new(txs.len()), txs, handles }
+    }
+
+    /// Submit a request; the completion arrives on the returned receiver.
+    pub fn submit(&mut self, req: Request, session: Option<u64>) -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        let w = self.router.route(session);
+        self.txs[w].send(Msg::Submit(req, tx)).expect("worker alive");
+        rx
+    }
+
+    /// Shut down and collect per-worker metrics.
+    pub fn shutdown(self) -> Vec<ServeMetrics> {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        self.handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sequence::test_backend::ToyBackend;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            block_size: 16,
+            num_blocks: 128,
+            max_running: 4,
+            token_budget: 128,
+            prefill_chunk: 64,
+            queue_cap: 64,
+            workers: 1,
+        }
+    }
+
+    fn toy_factory() -> BackendFactory {
+        Box::new(|_req| Box::new(ToyBackend::new(64)))
+    }
+
+    #[test]
+    fn engine_completes_all_requests() {
+        let mut e = Engine::new(cfg(), toy_factory());
+        for id in 0..10 {
+            assert!(e.submit(Request {
+                id,
+                prompt: vec![0; 100 + 13 * id as usize],
+                max_new: 5,
+                stop_token: None,
+            }));
+        }
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 10);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 5);
+        }
+        assert_eq!(e.metrics.requests_done, 10);
+        assert_eq!(e.metrics.tokens_out, 50);
+        e.sched.blocks.check_invariants().unwrap();
+        assert_eq!(e.sched.blocks.used(), 0, "all blocks released");
+    }
+
+    #[test]
+    fn engine_survives_memory_pressure_with_preemption() {
+        let tight = ServeConfig { num_blocks: 12, max_running: 8, ..cfg() }; // 192 tokens
+        let mut e = Engine::new(tight, toy_factory());
+        for id in 0..6 {
+            e.submit(Request { id, prompt: vec![0; 40], max_new: 30, stop_token: None });
+        }
+        let done = e.run_to_completion();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 30, "req {} emitted {}", c.id, c.tokens.len());
+        }
+        e.sched.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn server_round_trips_across_workers() {
+        let mut srv = Server::start(cfg(), vec![toy_factory(), toy_factory()]);
+        let mut rxs = Vec::new();
+        for id in 0..8 {
+            rxs.push(srv.submit(
+                Request { id, prompt: vec![0; 64], max_new: 3, stop_token: None },
+                Some(id % 3),
+            ));
+        }
+        for rx in rxs {
+            let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(c.tokens.len(), 3);
+        }
+        let metrics = srv.shutdown();
+        let total: u64 = metrics.iter().map(|m| m.requests_done).sum();
+        assert_eq!(total, 8);
+    }
+}

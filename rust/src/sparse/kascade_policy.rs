@@ -1,0 +1,415 @@
+//! Serve-time Kascade policy: anchor layers extract Top-k, reuse layers
+//! consume the indices after head remapping (Secs. 3.2-3.5).
+
+use super::{Selection, SparsePolicy};
+use crate::attention::{self, CostTracker, KvCache};
+use crate::kascade::{KascadePlan, LayerRole};
+
+/// Head-aware Kascade (the paper's default).
+pub struct KascadePolicy {
+    pub plan: KascadePlan,
+    /// Last Top-k index sets per anchor layer (decode path).
+    decode_idx: Vec<Option<Vec<Vec<u32>>>>,
+    /// Per anchor layer, per Q-tile index sets (prefill path).
+    prefill_idx: Vec<Vec<Vec<Vec<u32>>>>,
+}
+
+impl KascadePolicy {
+    pub fn new(plan: KascadePlan) -> Self {
+        let n = plan.n_layers;
+        Self { plan, decode_idx: vec![None; n], prefill_idx: vec![Vec::new(); n] }
+    }
+
+    fn remap(&self, layer: usize, anchor_idx: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        self.plan.head_map[layer]
+            .iter()
+            .map(|&ha| anchor_idx[ha].clone())
+            .collect()
+    }
+}
+
+impl SparsePolicy for KascadePolicy {
+    fn name(&self) -> String {
+        "kascade".into()
+    }
+
+    fn reset(&mut self) {
+        self.decode_idx.iter_mut().for_each(|s| *s = None);
+        self.prefill_idx.iter_mut().for_each(|s| s.clear());
+    }
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        let k = self.plan.topk.k(cache.len);
+        match self.plan.role(layer) {
+            LayerRole::Anchor0 => {
+                // dense output; still extract fresh indices for the segment
+                if k < cache.len {
+                    let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+                    self.decode_idx[layer] = Some(attention::select_topk(&pooled, k, cost));
+                } else {
+                    self.decode_idx[layer] = None;
+                }
+                Selection::Dense
+            }
+            LayerRole::Anchor => {
+                if k >= cache.len {
+                    self.decode_idx[layer] = None;
+                    return Selection::Dense;
+                }
+                let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+                let idx = attention::select_topk(&pooled, k, cost);
+                self.decode_idx[layer] = Some(idx.clone());
+                Selection::Sparse(idx)
+            }
+            LayerRole::Reuse { anchor } => match &self.decode_idx[anchor] {
+                Some(idx) => Selection::Sparse(self.remap(layer, idx)),
+                None => Selection::Dense, // anchor ran dense (short context)
+            },
+        }
+    }
+
+    fn prefill_tile(
+        &mut self,
+        layer: usize,
+        tile: usize,
+        start: usize,
+        qs: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        let n_q = cache.n_kv * g;
+        let tile_len = qs.len() / (n_q * cache.d);
+        let kv_len = start + tile_len;
+        let k = self.plan.topk.k(kv_len);
+        let store = |slot: &mut Vec<Vec<Vec<u32>>>, tile: usize, idx: Option<Vec<Vec<u32>>>| {
+            while slot.len() <= tile {
+                slot.push(Vec::new());
+            }
+            if let Some(i) = idx {
+                slot[tile] = i;
+            }
+        };
+        match self.plan.role(layer) {
+            LayerRole::Anchor0 => {
+                if k < kv_len {
+                    let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
+                    let idx = attention::select_topk(&pooled, k, cost);
+                    store(&mut self.prefill_idx[layer], tile, Some(idx));
+                } else {
+                    store(&mut self.prefill_idx[layer], tile, None);
+                }
+                Selection::Dense
+            }
+            LayerRole::Anchor => {
+                if k >= kv_len {
+                    store(&mut self.prefill_idx[layer], tile, None);
+                    return Selection::Dense;
+                }
+                let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
+                let idx = attention::select_topk(&pooled, k, cost);
+                store(&mut self.prefill_idx[layer], tile, Some(idx.clone()));
+                Selection::Sparse(idx)
+            }
+            LayerRole::Reuse { anchor } => {
+                let slot = &self.prefill_idx[anchor];
+                if tile < slot.len() && !slot[tile].is_empty() {
+                    let idx = self.remap(layer, &slot[tile]);
+                    Selection::Sparse(idx)
+                } else {
+                    Selection::Dense
+                }
+            }
+        }
+    }
+
+    fn sparse_prefill(&self) -> bool {
+        true
+    }
+}
+
+/// Ablation variant (Sec. 3.5 / Tables 1-2 "All Heads Pooled"): one shared
+/// Top-k set per anchor layer, pooled across *all* heads; no remapping.
+pub struct KascadeAllPooledPolicy {
+    pub plan: KascadePlan,
+    decode_idx: Vec<Option<Vec<u32>>>,
+    prefill_idx: Vec<Vec<Vec<u32>>>,
+}
+
+impl KascadeAllPooledPolicy {
+    pub fn new(plan: KascadePlan) -> Self {
+        let n = plan.n_layers;
+        Self { plan, decode_idx: vec![None; n], prefill_idx: vec![Vec::new(); n] }
+    }
+
+    fn pool_all(pooled: &[Vec<f32>]) -> Vec<f32> {
+        let len = pooled[0].len();
+        let inv = 1.0 / pooled.len() as f32;
+        let mut out = vec![0.0f32; len];
+        for head in pooled {
+            for (o, &x) in out.iter_mut().zip(head.iter()) {
+                *o += x * inv;
+            }
+        }
+        out
+    }
+
+    fn broadcast(&self, idx: &[u32]) -> Vec<Vec<u32>> {
+        vec![idx.to_vec(); self.plan.n_kv_heads]
+    }
+}
+
+impl SparsePolicy for KascadeAllPooledPolicy {
+    fn name(&self) -> String {
+        "kascade-all-pooled".into()
+    }
+
+    fn reset(&mut self) {
+        self.decode_idx.iter_mut().for_each(|s| *s = None);
+        self.prefill_idx.iter_mut().for_each(|s| s.clear());
+    }
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        let k = self.plan.topk.k(cache.len);
+        let extract = |cost: &mut CostTracker| {
+            let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+            let all = Self::pool_all(&pooled);
+            cost.topk_items += all.len() as u64;
+            crate::tensor::topk_indices(&all, k)
+        };
+        match self.plan.role(layer) {
+            LayerRole::Anchor0 => {
+                self.decode_idx[layer] = (k < cache.len).then(|| extract(cost));
+                Selection::Dense
+            }
+            LayerRole::Anchor => {
+                if k >= cache.len {
+                    self.decode_idx[layer] = None;
+                    return Selection::Dense;
+                }
+                let idx = extract(cost);
+                self.decode_idx[layer] = Some(idx.clone());
+                Selection::Sparse(self.broadcast(&idx))
+            }
+            LayerRole::Reuse { anchor } => match &self.decode_idx[anchor] {
+                Some(idx) => Selection::Sparse(self.broadcast(idx)),
+                None => Selection::Dense,
+            },
+        }
+    }
+
+    fn prefill_tile(
+        &mut self,
+        layer: usize,
+        tile: usize,
+        start: usize,
+        qs: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        let n_q = cache.n_kv * g;
+        let tile_len = qs.len() / (n_q * cache.d);
+        let kv_len = start + tile_len;
+        let k = self.plan.topk.k(kv_len);
+        let extract = |cost: &mut CostTracker| {
+            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
+            let all = Self::pool_all(&pooled);
+            cost.topk_items += all.len() as u64;
+            crate::tensor::topk_indices(&all, k)
+        };
+        let store = |slot: &mut Vec<Vec<u32>>, tile: usize, idx: Vec<u32>| {
+            while slot.len() <= tile {
+                slot.push(Vec::new());
+            }
+            slot[tile] = idx;
+        };
+        match self.plan.role(layer) {
+            LayerRole::Anchor0 => {
+                if k < kv_len {
+                    let idx = extract(cost);
+                    store(&mut self.prefill_idx[layer], tile, idx);
+                }
+                Selection::Dense
+            }
+            LayerRole::Anchor => {
+                if k >= kv_len {
+                    return Selection::Dense;
+                }
+                let idx = extract(cost);
+                store(&mut self.prefill_idx[layer], tile, idx.clone());
+                Selection::Sparse(self.broadcast(&idx))
+            }
+            LayerRole::Reuse { anchor } => {
+                let slot = &self.prefill_idx[anchor];
+                if tile < slot.len() && !slot[tile].is_empty() {
+                    Selection::Sparse(self.broadcast(&slot[tile]))
+                } else {
+                    Selection::Dense
+                }
+            }
+        }
+    }
+
+    fn sparse_prefill(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopKRule;
+    use crate::tensor::Rng;
+
+    fn setup() -> (Vec<f32>, KvCache) {
+        let mut r = Rng::new(3);
+        let (n_kv, g, d, len) = (2, 2, 16, 512);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut c = KvCache::new(n_kv, d, len);
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            c.push(&k, &v);
+        }
+        (q, c)
+    }
+
+    fn plan() -> KascadePlan {
+        let mut p = KascadePlan::from_anchors(8, 2, vec![0, 2, 5], TopKRule::new(0.1, 16));
+        // layer 3 reads anchor 2 with swapped heads
+        p.head_map[3] = vec![1, 0];
+        p
+    }
+
+    #[test]
+    fn anchor_then_reuse_shares_indices_with_remap() {
+        let (q, c) = setup();
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        // layer 0: dense + extraction
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
+        // layer 1 reuses anchor 0
+        let s1 = pol.decode(1, &q, &c, 2, &mut cost);
+        let idx0 = pol.decode_idx[0].clone().unwrap();
+        assert_eq!(s1, Selection::Sparse(idx0.clone()));
+        // layer 2 is an anchor: fresh indices
+        let s2 = pol.decode(2, &q, &c, 2, &mut cost);
+        let idx2 = pol.decode_idx[2].clone().unwrap();
+        assert_eq!(s2, Selection::Sparse(idx2.clone()));
+        // layer 3 reuses anchor 2 with swapped head map
+        match pol.decode(3, &q, &c, 2, &mut cost) {
+            Selection::Sparse(idx) => {
+                assert_eq!(idx[0], idx2[1]);
+                assert_eq!(idx[1], idx2[0]);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn reuse_layers_pay_no_score_cost() {
+        let (q, c) = setup();
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        pol.decode(2, &q, &c, 2, &mut cost);
+        let after_anchor = cost.score_key_reads;
+        pol.decode(3, &q, &c, 2, &mut cost);
+        pol.decode(4, &q, &c, 2, &mut cost);
+        assert_eq!(cost.score_key_reads, after_anchor);
+    }
+
+    #[test]
+    fn short_context_falls_back_to_dense() {
+        let mut r = Rng::new(4);
+        let mut q = vec![0.0; 2 * 2 * 16];
+        r.fill_normal(&mut q, 1.0);
+        let mut c = KvCache::new(2, 16, 64);
+        let k = vec![0.0; 32];
+        for _ in 0..8 {
+            c.push(&k, &k);
+        }
+        let mut pol = KascadePolicy::new(KascadePlan::from_anchors(
+            8,
+            2,
+            vec![0, 2],
+            TopKRule::default(), // min_k 128 > 8
+        ));
+        let mut cost = CostTracker::default();
+        assert_eq!(pol.decode(2, &q, &c, 2, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(3, &q, &c, 2, &mut cost), Selection::Dense);
+    }
+
+    #[test]
+    fn all_pooled_shares_one_set_across_heads() {
+        let (q, c) = setup();
+        let mut pol = KascadeAllPooledPolicy::new(plan());
+        let mut cost = CostTracker::default();
+        pol.decode(0, &q, &c, 2, &mut cost);
+        match pol.decode(2, &q, &c, 2, &mut cost) {
+            Selection::Sparse(idx) => assert_eq!(idx[0], idx[1]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let (q, c) = setup();
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        pol.decode(0, &q, &c, 2, &mut cost);
+        assert!(pol.decode_idx[0].is_some());
+        pol.reset();
+        assert!(pol.decode_idx.iter().all(|s| s.is_none()));
+    }
+
+    #[test]
+    fn prefill_anchor_then_reuse_per_tile() {
+        let mut r = Rng::new(5);
+        let (n_kv, g, d) = (2, 2, 16);
+        let n_q = n_kv * g;
+        let mut c = KvCache::new(n_kv, d, 512);
+        for _ in 0..256 {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            c.push(&k, &v);
+        }
+        let tile_len = 128;
+        let mut qs = vec![0.0; tile_len * n_q * d];
+        r.fill_normal(&mut qs, 1.0);
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        // anchor layer 2, tile 1 (positions 128..256)
+        let s = pol.prefill_tile(2, 1, 128, &qs, &c, g, &mut cost);
+        let idx = match s {
+            Selection::Sparse(i) => i,
+            _ => panic!("anchor tile should be sparse at 256 ctx / k=25"),
+        };
+        // reuse layer 4, same tile: identical sets (identity map on 4)
+        match pol.prefill_tile(4, 1, 128, &qs, &c, g, &mut cost) {
+            Selection::Sparse(i) => assert_eq!(i, idx),
+            _ => panic!(),
+        }
+        // tile that the anchor never saw -> dense fallback
+        assert_eq!(pol.prefill_tile(4, 3, 384, &qs, &c, g, &mut cost), Selection::Dense);
+    }
+}

@@ -1,0 +1,106 @@
+//! LessIsMore / TidalDecode-like baseline (Yang et al., 2024/2025):
+//! Top-k indices recomputed every decode step at a few *manually chosen*
+//! layers, shared across all heads, reused by the layers in between.
+//! Decode-only (full prefill), no head remapping — the two properties the
+//! paper's head-aware design improves on.
+
+use super::{Selection, SparsePolicy};
+use crate::attention::{self, CostTracker, KvCache};
+use crate::config::TopKRule;
+
+pub struct LessIsMorePolicy {
+    pub recompute_layers: Vec<usize>,
+    pub rule: TopKRule,
+    selected: Vec<Option<Vec<u32>>>,
+    n_layers: usize,
+}
+
+impl LessIsMorePolicy {
+    pub fn new(n_layers: usize, recompute_layers: Vec<usize>, rule: TopKRule) -> Self {
+        Self { recompute_layers, rule, selected: vec![None; n_layers], n_layers }
+    }
+
+    fn source_of(&self, layer: usize) -> Option<usize> {
+        self.recompute_layers.iter().rev().find(|&&f| f <= layer).copied()
+    }
+}
+
+impl SparsePolicy for LessIsMorePolicy {
+    fn name(&self) -> String {
+        "lessismore".into()
+    }
+
+    fn reset(&mut self) {
+        self.selected = vec![None; self.n_layers];
+    }
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        let k = self.rule.k(cache.len);
+        if k >= cache.len {
+            return Selection::Dense;
+        }
+        if layer == 0 {
+            return Selection::Dense; // first layer always dense
+        }
+        if self.recompute_layers.contains(&layer) {
+            let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+            let len = pooled[0].len();
+            let mut all = vec![0.0f32; len];
+            let inv = 1.0 / pooled.len() as f32;
+            for h in &pooled {
+                for (a, &x) in all.iter_mut().zip(h.iter()) {
+                    *a += x * inv;
+                }
+            }
+            cost.topk_items += len as u64;
+            let idx = crate::tensor::topk_indices(&all, k);
+            self.selected[layer] = Some(idx.clone());
+            return Selection::Sparse(vec![idx; cache.n_kv]);
+        }
+        match self.source_of(layer).and_then(|f| self.selected[f].clone()) {
+            Some(idx) => Selection::Sparse(vec![idx; cache.n_kv]),
+            None => Selection::Dense,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn recompute_layers_refresh_every_step() {
+        let mut r = Rng::new(10);
+        let (n_kv, g, d, len) = (2, 2, 16, 512);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut c = KvCache::new(n_kv, d, len);
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            c.push(&k, &v);
+        }
+        let mut pol = LessIsMorePolicy::new(8, vec![2, 5], TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(1, &q, &c, 2, &mut cost), Selection::Dense); // before first recompute
+        let s2 = pol.decode(2, &q, &c, 2, &mut cost);
+        let reads_after_2 = cost.score_key_reads;
+        let s3 = pol.decode(3, &q, &c, 2, &mut cost);
+        assert_eq!(s2, s3);
+        assert_eq!(cost.score_key_reads, reads_after_2, "reuse is free");
+        // recompute layer always rescoring (unlike OmniKV)
+        pol.decode(5, &q, &c, 2, &mut cost);
+        assert!(cost.score_key_reads > reads_after_2);
+    }
+}

@@ -1,0 +1,231 @@
+//! Sparse-attention policies: Kascade and every baseline the paper
+//! compares against (Tables 1-2), behind one trait the native engine and
+//! the coordinator both drive.
+//!
+//! A policy decides, per layer (and per prefill Q-tile), whether attention
+//! runs dense or over an explicit per-KV-head index set.  Policies that
+//! need attention scores (anchor layers, oracles) compute them through the
+//! engine's pooled-score helpers so their cost is accounted like any other
+//! attention work.
+
+pub mod kascade_policy;
+pub mod lessismore;
+pub mod omnikv;
+pub mod quest;
+pub mod streaming;
+
+pub use kascade_policy::{KascadeAllPooledPolicy, KascadePolicy};
+pub use lessismore::LessIsMorePolicy;
+pub use omnikv::OmniKvPolicy;
+pub use quest::QuestPolicy;
+pub use streaming::StreamingLlmPolicy;
+
+use crate::attention::{self, CostTracker, KvCache};
+use crate::config::TopKRule;
+
+/// Per-layer attention decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Selection {
+    /// Full attention over the whole context.
+    Dense,
+    /// Sparse attention over per-KV-head index sets.
+    Sparse(Vec<Vec<u32>>),
+}
+
+impl Selection {
+    /// Keys touched per KV head (dense -> `len`).
+    pub fn cost_keys(&self, len: usize, n_kv: usize) -> usize {
+        match self {
+            Selection::Dense => len * n_kv,
+            Selection::Sparse(idx) => idx.iter().map(|v| v.len()).sum(),
+        }
+    }
+}
+
+/// A training-free sparse attention strategy.
+pub trait SparsePolicy: Send {
+    fn name(&self) -> String;
+
+    /// Clear per-sequence state (index caches etc.).
+    fn reset(&mut self);
+
+    /// Decode-time decision for `layer`.  `q` is `[n_q * d]` head-major.
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection;
+
+    /// Prefill-time decision for Q-tile `tile` of `layer` whose first query
+    /// sits at absolute position `start`.  `qs` is `[tile_len, n_q * d]`.
+    /// Default: dense prefill (what Quest / OmniKV / LessIsMore do — the
+    /// paper notes they only optimize decode).
+    fn prefill_tile(
+        &mut self,
+        _layer: usize,
+        _tile: usize,
+        _start: usize,
+        _qs: &[f32],
+        _cache: &KvCache,
+        _g: usize,
+        _cost: &mut CostTracker,
+    ) -> Selection {
+        Selection::Dense
+    }
+
+    /// Whether the policy sparsifies prefill at all (used by experiment
+    /// drivers to share a single dense prefill across baselines).
+    fn sparse_prefill(&self) -> bool {
+        false
+    }
+}
+
+/// Always-dense baseline.
+pub struct DensePolicy;
+
+impl SparsePolicy for DensePolicy {
+    fn name(&self) -> String {
+        "dense".into()
+    }
+
+    fn reset(&mut self) {}
+
+    fn decode(&mut self, _: usize, _: &[f32], _: &KvCache, _: usize, _: &mut CostTracker) -> Selection {
+        Selection::Dense
+    }
+}
+
+/// Oracle Top-k (Sec. 3.1): exact per-layer Top-k from this layer's own
+/// pooled post-softmax scores.  An accuracy upper bound, not a deployable
+/// policy (it pays full score cost every layer).
+pub struct OraclePolicy {
+    pub rule: TopKRule,
+    /// Layer 0 stays dense (paper always keeps layer 0 dense).
+    pub layer0_dense: bool,
+}
+
+impl OraclePolicy {
+    pub fn new(rule: TopKRule) -> Self {
+        Self { rule, layer0_dense: true }
+    }
+}
+
+impl SparsePolicy for OraclePolicy {
+    fn name(&self) -> String {
+        format!("oracle-top{:.3}", self.rule.frac)
+    }
+
+    fn reset(&mut self) {}
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        if layer == 0 && self.layer0_dense {
+            return Selection::Dense;
+        }
+        let k = self.rule.k(cache.len);
+        if k >= cache.len {
+            return Selection::Dense;
+        }
+        let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+        Selection::Sparse(attention::select_topk(&pooled, k, cost))
+    }
+
+    fn prefill_tile(
+        &mut self,
+        layer: usize,
+        _tile: usize,
+        start: usize,
+        qs: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        if layer == 0 && self.layer0_dense {
+            return Selection::Dense;
+        }
+        let n_q = cache.n_kv * g;
+        let tile_len = qs.len() / (n_q * cache.d);
+        let kv_len = start + tile_len;
+        let k = self.rule.k(kv_len);
+        if k >= kv_len {
+            return Selection::Dense;
+        }
+        let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
+        Selection::Sparse(attention::select_topk(&pooled, k, cost))
+    }
+
+    fn sparse_prefill(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn cache_with(len: usize) -> (Vec<f32>, KvCache) {
+        let mut r = Rng::new(2);
+        let (n_kv, g, d) = (2, 2, 16);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut c = KvCache::new(n_kv, d, len);
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            c.push(&k, &v);
+        }
+        (q, c)
+    }
+
+    #[test]
+    fn dense_policy_always_dense() {
+        let (q, c) = cache_with(64);
+        let mut p = DensePolicy;
+        let mut cost = CostTracker::default();
+        for l in 0..8 {
+            assert_eq!(p.decode(l, &q, &c, 2, &mut cost), Selection::Dense);
+        }
+    }
+
+    #[test]
+    fn oracle_respects_layer0_and_k_rule() {
+        let (q, c) = cache_with(512);
+        let mut p = OraclePolicy::new(TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        assert_eq!(p.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
+        match p.decode(1, &q, &c, 2, &mut cost) {
+            Selection::Sparse(idx) => {
+                assert_eq!(idx.len(), 2);
+                assert!(idx.iter().all(|h| h.len() == 51)); // 10% of 512
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn oracle_falls_back_to_dense_when_k_covers_context() {
+        let (q, c) = cache_with(64); // min_k = 128 > 64
+        let mut p = OraclePolicy::new(TopKRule::default());
+        let mut cost = CostTracker::default();
+        assert_eq!(p.decode(3, &q, &c, 2, &mut cost), Selection::Dense);
+    }
+
+    #[test]
+    fn selection_cost_keys() {
+        assert_eq!(Selection::Dense.cost_keys(100, 4), 400);
+        let s = Selection::Sparse(vec![vec![1, 2], vec![3]]);
+        assert_eq!(s.cost_keys(100, 2), 3);
+    }
+}

@@ -1,0 +1,150 @@
+//! OmniKV-like baseline (Hao et al., 2025): a few manually chosen *filter*
+//! layers pick a context-token subset (shared across all heads) which the
+//! following layers attend to.  The subset is refreshed only every
+//! `refresh_every` decode steps (OmniKV's chunked reselection — it targets
+//! KV offload, so reselection is deliberately infrequent).  Decode-only.
+
+use super::{Selection, SparsePolicy};
+use crate::attention::{self, CostTracker, KvCache};
+use crate::config::TopKRule;
+
+pub struct OmniKvPolicy {
+    pub filter_layers: Vec<usize>,
+    pub rule: TopKRule,
+    pub refresh_every: usize,
+    /// shared index set selected at each filter layer
+    selected: Vec<Option<Vec<u32>>>,
+    step: usize,
+    n_layers: usize,
+}
+
+impl OmniKvPolicy {
+    pub fn new(n_layers: usize, filter_layers: Vec<usize>, rule: TopKRule) -> Self {
+        Self {
+            filter_layers,
+            rule,
+            refresh_every: 16,
+            selected: vec![None; n_layers],
+            step: 0,
+            n_layers,
+        }
+    }
+
+    fn filter_of(&self, layer: usize) -> Option<usize> {
+        self.filter_layers.iter().rev().find(|&&f| f <= layer).copied()
+    }
+}
+
+impl SparsePolicy for OmniKvPolicy {
+    fn name(&self) -> String {
+        "omnikv".into()
+    }
+
+    fn reset(&mut self) {
+        self.selected = vec![None; self.n_layers];
+        self.step = 0;
+    }
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        if layer == 0 {
+            self.step += 1; // count decode steps at layer 0
+        }
+        let k = self.rule.k(cache.len);
+        if k >= cache.len {
+            return Selection::Dense;
+        }
+        if self.filter_layers.contains(&layer) {
+            let stale = self.selected[layer].is_none()
+                || (self.step - 1) % self.refresh_every == 0;
+            if stale {
+                let pooled = attention::decode_pooled_scores(q, cache, g, cost);
+                // pool across all heads -> one shared set
+                let len = pooled[0].len();
+                let mut all = vec![0.0f32; len];
+                let inv = 1.0 / pooled.len() as f32;
+                for h in &pooled {
+                    for (a, &x) in all.iter_mut().zip(h.iter()) {
+                        *a += x * inv;
+                    }
+                }
+                cost.topk_items += len as u64;
+                self.selected[layer] = Some(crate::tensor::topk_indices(&all, k));
+            }
+            // filter layers themselves attend densely (they must see the
+            // full context to filter it)
+            return Selection::Dense;
+        }
+        match self.filter_of(layer).and_then(|f| self.selected[f].clone()) {
+            Some(idx) => Selection::Sparse(vec![idx; cache.n_kv]),
+            None => Selection::Dense,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Selection;
+    use crate::tensor::Rng;
+
+    fn setup() -> (Vec<f32>, KvCache) {
+        let mut r = Rng::new(9);
+        let (n_kv, g, d, len) = (2, 2, 16, 512);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut c = KvCache::new(n_kv, d, len);
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            c.push(&k, &v);
+        }
+        (q, c)
+    }
+
+    #[test]
+    fn filter_layer_selects_then_following_layers_reuse() {
+        let (q, c) = setup();
+        let mut pol = OmniKvPolicy::new(8, vec![0, 4], TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
+        let s1 = pol.decode(1, &q, &c, 2, &mut cost);
+        match &s1 {
+            Selection::Sparse(idx) => {
+                assert_eq!(idx[0], idx[1], "shared across heads");
+                assert_eq!(idx[0].len(), 51);
+            }
+            _ => panic!(),
+        }
+        // layers 1..3 share filter 0's set; layer 5 uses filter 4's
+        let s3 = pol.decode(3, &q, &c, 2, &mut cost);
+        assert_eq!(s1, s3);
+    }
+
+    #[test]
+    fn refresh_cadence() {
+        let (q, c) = setup();
+        let mut pol = OmniKvPolicy::new(4, vec![0], TopKRule::new(0.1, 16));
+        pol.refresh_every = 4;
+        let mut cost = CostTracker::default();
+        pol.decode(0, &q, &c, 2, &mut cost);
+        let reads1 = cost.score_key_reads;
+        assert!(reads1 > 0);
+        // steps 2..4: no rescoring
+        for _ in 0..3 {
+            pol.decode(0, &q, &c, 2, &mut cost);
+        }
+        assert_eq!(cost.score_key_reads, reads1);
+        // step 5: refresh
+        pol.decode(0, &q, &c, 2, &mut cost);
+        assert!(cost.score_key_reads > reads1);
+    }
+}

@@ -1,0 +1,173 @@
+//! Quest baseline (Tang et al., 2024): query-aware page-level sparsity.
+//!
+//! Keys are summarized per page by elementwise min/max; for a query q the
+//! upper bound of any score in the page is sum_d max(q_d * min_d,
+//! q_d * max_d).  The pages with the highest bounds are attended densely.
+//! Decode-only (prefill stays dense), and the first two layers run dense,
+//! as in the original system.
+
+use super::{Selection, SparsePolicy};
+use crate::attention::{CostTracker, KvCache};
+use crate::config::TopKRule;
+
+pub struct QuestPolicy {
+    pub rule: TopKRule,
+    pub dense_layers: usize,
+}
+
+impl QuestPolicy {
+    pub fn new(rule: TopKRule) -> Self {
+        Self { rule, dense_layers: 2 }
+    }
+
+    /// Upper-bound score of page `page` for kv head `h` under the group's
+    /// query rows (max over the group, as all of them will read the page).
+    fn page_bound(q: &[f32], cache: &KvCache, h: usize, g: usize, page: usize) -> f32 {
+        let d = cache.d;
+        let (mins, maxs) = cache.page_summary(h, page);
+        let mut best = f32::NEG_INFINITY;
+        for qi in 0..g {
+            let qrow = &q[(h * g + qi) * d..(h * g + qi + 1) * d];
+            let mut ub = 0.0;
+            for i in 0..d {
+                ub += (qrow[i] * mins[i]).max(qrow[i] * maxs[i]);
+            }
+            best = best.max(ub);
+        }
+        best
+    }
+}
+
+impl SparsePolicy for QuestPolicy {
+    fn name(&self) -> String {
+        "quest".into()
+    }
+
+    fn reset(&mut self) {}
+
+    fn decode(
+        &mut self,
+        layer: usize,
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Selection {
+        if layer < self.dense_layers {
+            return Selection::Dense;
+        }
+        let len = cache.len;
+        let k = self.rule.k(len);
+        if k >= len {
+            return Selection::Dense;
+        }
+        let ps = cache.page_size();
+        let n_pages = cache.n_pages();
+        let budget_pages = k.div_ceil(ps);
+        if budget_pages >= n_pages {
+            return Selection::Dense;
+        }
+        let mut idx = Vec::with_capacity(cache.n_kv);
+        for h in 0..cache.n_kv {
+            let bounds: Vec<f32> = (0..n_pages)
+                .map(|p| Self::page_bound(q, cache, h, g, p))
+                .collect();
+            cost.score_key_reads += (2 * n_pages * g) as u64; // min+max rows
+            cost.topk_items += n_pages as u64;
+            let pages = crate::tensor::topk_indices(&bounds, budget_pages);
+            let mut hidx: Vec<u32> = Vec::with_capacity(budget_pages * ps);
+            for &p in &pages {
+                let lo = p as usize * ps;
+                let hi = ((p as usize + 1) * ps).min(len);
+                hidx.extend(lo as u32..hi as u32);
+            }
+            idx.push(hidx);
+        }
+        Selection::Sparse(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn selects_the_page_containing_an_aligned_key() {
+        let mut r = Rng::new(6);
+        let (n_kv, g, d, len) = (2, 2, 16, 256);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut cache = KvCache::new(n_kv, d, len);
+        for p in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.2);
+            r.fill_normal(&mut v, 1.0);
+            if p == 133 {
+                for h in 0..n_kv {
+                    for i in 0..d {
+                        k[h * d + i] = q[h * g * d + i] * 3.0;
+                    }
+                }
+            }
+            cache.push(&k, &v);
+        }
+        let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        match pol.decode(2, &q, &cache, g, &mut cost) {
+            Selection::Sparse(idx) => {
+                for h in &idx {
+                    assert!(h.contains(&133), "page of key 133 not selected");
+                }
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn early_layers_dense_and_prefill_dense() {
+        let mut r = Rng::new(7);
+        let mut q = vec![0.0; 2 * 2 * 16];
+        r.fill_normal(&mut q, 1.0);
+        let mut cache = KvCache::new(2, 16, 256);
+        let k = vec![0.1; 32];
+        for _ in 0..256 {
+            cache.push(&k, &k);
+        }
+        let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        assert_eq!(pol.decode(0, &q, &cache, 2, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(1, &q, &cache, 2, &mut cost), Selection::Dense);
+        assert!(!pol.sparse_prefill());
+    }
+
+    #[test]
+    fn page_granularity_indices_are_contiguous_runs() {
+        let mut r = Rng::new(8);
+        let mut q = vec![0.0; 2 * 2 * 16];
+        r.fill_normal(&mut q, 1.0);
+        let mut cache = KvCache::new(2, 16, 512);
+        for _ in 0..512 {
+            let mut k = vec![0.0; 32];
+            r.fill_normal(&mut k, 0.5);
+            cache.push(&k, &k);
+        }
+        let mut pol = QuestPolicy::new(TopKRule::new(0.1, 32));
+        let mut cost = CostTracker::default();
+        if let Selection::Sparse(idx) = pol.decode(3, &q, &cache, 2, &mut cost) {
+            let ps = cache.page_size();
+            for h in &idx {
+                assert_eq!(h.len() % ps, 0);
+                for chunk in h.chunks(ps) {
+                    for w in chunk.windows(2) {
+                        assert_eq!(w[1], w[0] + 1);
+                    }
+                    assert_eq!(chunk[0] as usize % ps, 0);
+                }
+            }
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! StreamingLLM baseline (Xiao et al., 2023): attention sinks + sliding
+//! window.  Paper setting (Sec. 4.1): window = 30% of context, 4 sinks.
+//! Applies to both prefill and decode (it is a fixed pattern).
+
+use super::{Selection, SparsePolicy};
+use crate::attention::{CostTracker, KvCache};
+
+pub struct StreamingLlmPolicy {
+    pub window_frac: f32,
+    pub sinks: usize,
+}
+
+impl StreamingLlmPolicy {
+    pub fn paper_default() -> Self {
+        Self { window_frac: 0.30, sinks: 4 }
+    }
+
+    /// Sinks + trailing window over a context of `len`, as seen from a
+    /// query at position `qpos` (inclusive).
+    fn indices(&self, qpos: usize, n_kv: usize) -> Selection {
+        let visible = qpos + 1;
+        let window = ((visible as f32 * self.window_frac) as usize).max(1);
+        if self.sinks + window >= visible {
+            return Selection::Dense;
+        }
+        let mut idx: Vec<u32> = (0..self.sinks as u32).collect();
+        idx.extend(((visible - window) as u32)..visible as u32);
+        Selection::Sparse(vec![idx; n_kv])
+    }
+}
+
+impl SparsePolicy for StreamingLlmPolicy {
+    fn name(&self) -> String {
+        format!("streaming-llm-w{:.0}%", self.window_frac * 100.0)
+    }
+
+    fn reset(&mut self) {}
+
+    fn decode(
+        &mut self,
+        _layer: usize,
+        _q: &[f32],
+        cache: &KvCache,
+        _g: usize,
+        _cost: &mut CostTracker,
+    ) -> Selection {
+        self.indices(cache.len.saturating_sub(1), cache.n_kv)
+    }
+
+    fn prefill_tile(
+        &mut self,
+        _layer: usize,
+        _tile: usize,
+        start: usize,
+        qs: &[f32],
+        cache: &KvCache,
+        g: usize,
+        _cost: &mut CostTracker,
+    ) -> Selection {
+        // one shared set per tile (computed at the tile's last query; the
+        // engine clamps per-query causality)
+        let n_q = cache.n_kv * g;
+        let tile_len = qs.len() / (n_q * cache.d);
+        self.indices(start + tile_len - 1, cache.n_kv)
+    }
+
+    fn sparse_prefill(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_plus_sinks() {
+        let p = StreamingLlmPolicy::paper_default();
+        match p.indices(999, 2) {
+            Selection::Sparse(idx) => {
+                assert_eq!(idx.len(), 2);
+                let h = &idx[0];
+                assert_eq!(&h[..4], &[0, 1, 2, 3]);
+                assert_eq!(*h.last().unwrap(), 999);
+                assert_eq!(h.len(), 4 + 300);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn short_context_is_dense() {
+        let p = StreamingLlmPolicy::paper_default();
+        // visible(4) <= sinks + window(1): everything is covered anyway
+        assert_eq!(p.indices(3, 2), Selection::Dense);
+    }
+
+    #[test]
+    fn middle_tokens_are_invisible() {
+        let p = StreamingLlmPolicy::paper_default();
+        if let Selection::Sparse(idx) = p.indices(9999, 1) {
+            let h = &idx[0];
+            assert!(!h.contains(&5000));
+            assert!(h.contains(&(10000 - 1)));
+            assert!(h.contains(&0));
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Small statistics helpers: Welford accumulator, latency histogram, timer.
+
+use std::time::Instant;
+
+/// Online mean/variance (Welford).
+#[derive(Debug, Default, Clone)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (microseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    buckets: Vec<u64>, // powers of 2 from 1us
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 32], samples: Vec::new() }
+    }
+
+    pub fn add_us(&mut self, us: f64) {
+        let b = (us.max(1.0).log2() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.samples.push(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Exact percentile from retained samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let i = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[i.min(s.len() - 1)]
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(Instant::now())
+    }
+
+    pub fn us(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_moments() {
+        let mut w = Welford::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            w.add(x);
+        }
+        assert_eq!(w.count(), 8);
+        assert!((w.mean() - 5.0).abs() < 1e-9);
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-9);
+        assert_eq!(w.min(), 2.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100 {
+            h.add_us(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(99.0) - 99.0).abs() <= 1.0);
+    }
+}

@@ -1,0 +1,466 @@
+//! Minimal numeric substrate for the native attention engine.
+//!
+//! Deliberately small: flat `f32` buffers with explicit dimensions, plus
+//! the handful of kernels the engine needs (dot products, blocked
+//! mat-vec, softmax, RMSNorm, RoPE, partial top-k).  Hot loops are written
+//! so rustc can auto-vectorize them (contiguous slices, no bounds checks
+//! in the inner loop via `chunks_exact`).
+
+/// Deterministic SplitMix64 PRNG — reproducible weight/workload generation
+/// without external crates.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self(seed.wrapping_add(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-9);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Fill with i.i.d. N(0, scale^2).
+    pub fn fill_normal(&mut self, buf: &mut [f32], scale: f32) {
+        for x in buf.iter_mut() {
+            *x = self.normal() * scale;
+        }
+    }
+
+    /// Random unit vector of dimension `d` (appended to `out`).
+    pub fn unit_vector(&mut self, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0; d];
+        self.fill_normal(&mut v, 1.0);
+        let n = norm(&v).max(1e-12);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled so LLVM emits vector FMAs.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (x, y) = (&a[i * 4..i * 4 + 4], &b[i * 4..i * 4 + 4]);
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+pub fn cosine_sim(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na < 1e-12 || nb < 1e-12 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// y[n] = x[m] * w[m][n]  (w row-major [m, n]).
+pub fn matvec_t(x: &[f32], w: &[f32], m: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi != 0.0 {
+            axpy(y, xi, &w[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+/// In-place numerically-stable softmax.  Returns the max score (useful for
+/// diagnostics).  All-(-inf) rows become all-zero rather than NaN.
+pub fn softmax(s: &mut [f32]) -> f32 {
+    let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        s.fill(0.0);
+        return m;
+    }
+    let mut z = 0.0;
+    for x in s.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    let inv = 1.0 / z;
+    for x in s.iter_mut() {
+        *x *= inv;
+    }
+    m
+}
+
+/// RMSNorm: x / rms(x) * w.
+pub fn rmsnorm(x: &[f32], w: &[f32], out: &mut [f32]) {
+    let ms = dot(x, x) / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// Rotary embedding applied in place to one head vector `x` (`d` even) at
+/// absolute position `pos`.  Matches python/compile/model.py::rope
+/// (half-split layout).
+pub fn rope(x: &mut [f32], pos: usize, theta: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = theta.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[half + i]);
+        x[i] = a * cos - b * sin;
+        x[half + i] = a * sin + b * cos;
+    }
+}
+
+/// Indices of the `k` largest values (ties broken by lower index), in
+/// descending value order.  O(n log k) via a bounded min-heap.
+pub fn topk_indices(vals: &[f32], k: usize) -> Vec<u32> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Entry(f32, u32); // min-heap on value (then max index out first)
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, o: &Self) -> Ordering {
+            // reversed: smallest value at the top of the heap
+            o.0.partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then(self.1.cmp(&o.1))
+        }
+    }
+
+    let k = k.min(vals.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &v) in vals.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(v, i as u32));
+        } else if let Some(top) = heap.peek() {
+            if v > top.0 || (v == top.0 && (i as u32) < top.1) {
+                heap.pop();
+                heap.push(Entry(v, i as u32));
+            }
+        }
+    }
+    let mut out: Vec<(f32, u32)> = heap.into_iter().map(|e| (e.0, e.1)).collect();
+    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Indices of the `k` largest values in **unspecified order** — O(n)
+/// expected via quickselect.  The attention engine's Top-k selection does
+/// not need sorted output (softmax is order-invariant), which makes this
+/// ~5-8x faster than the ordered heap variant at long contexts
+/// (EXPERIMENTS.md §Perf).
+pub fn topk_indices_unordered(vals: &[f32], k: usize) -> Vec<u32> {
+    let n = vals.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == n {
+        return (0..n as u32).collect();
+    }
+    // Partition (value, index) pairs in place: sequential memory access in
+    // the partition loop beats indirecting through an index array by ~2x
+    // at long contexts (EXPERIMENTS.md §Perf iteration 2).
+    let mut pairs: Vec<(f32, u32)> = vals.iter().copied().zip(0..n as u32).collect();
+    let (mut lo, mut hi) = (0usize, n);
+    let mut rng_state = 0x9E3779B97F4A7C15u64 ^ (n as u64);
+    while hi - lo > 1 {
+        rng_state ^= rng_state << 13;
+        rng_state ^= rng_state >> 7;
+        rng_state ^= rng_state << 17;
+        let p = lo + (rng_state as usize) % (hi - lo);
+        let pivot = pairs[p].0;
+        // partition: [lo, i) > pivot, [i, j) == pivot, [j, hi) < pivot
+        let (mut i, mut j, mut m) = (lo, lo, hi);
+        while j < m {
+            let v = pairs[j].0;
+            if v > pivot {
+                pairs.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if v < pivot {
+                m -= 1;
+                pairs.swap(j, m);
+            } else {
+                j += 1;
+            }
+        }
+        if k <= i {
+            hi = i;
+        } else if k >= j {
+            lo = j;
+        } else {
+            break; // k falls inside the equal-to-pivot run
+        }
+    }
+    pairs.truncate(k);
+    pairs.into_iter().map(|(_, i)| i).collect()
+}
+
+/// argmax of a slice (first max wins).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..xs.len() {
+        if xs[i] > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut s = vec![1.0, 2.0, 3.0, -1.0];
+        softmax(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[2] > s[1] && s[1] > s[0] && s[0] > s[3]);
+    }
+
+    #[test]
+    fn softmax_handles_neg_inf_rows() {
+        let mut s = vec![f32::NEG_INFINITY; 4];
+        softmax(&mut s);
+        assert!(s.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn softmax_extreme_scores_stable() {
+        let mut s = vec![120.0, 0.0, -120.0];
+        softmax(&mut s);
+        assert!((s[0] - 1.0).abs() < 1e-6);
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rmsnorm_unit_rms() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let w = vec![1.0; 64];
+        let mut y = vec![0.0; 64];
+        rmsnorm(&x, &w, &mut y);
+        let rms = (dot(&y, &y) / 64.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let orig: Vec<f32> = (0..32).map(|i| (i as f32).cos()).collect();
+        let mut x = orig.clone();
+        rope(&mut x, 0, 10000.0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        rope(&mut x, 1234, 10000.0);
+        assert!((norm(&x) - norm(&orig)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_relative_invariance() {
+        // <rope(q,p1), rope(k,p2)> depends only on p1 - p2
+        let q: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let k: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).cos()).collect();
+        let score = |p1: usize, p2: usize| {
+            let mut a = q.clone();
+            let mut b = k.clone();
+            rope(&mut a, p1, 10000.0);
+            rope(&mut b, p2, 10000.0);
+            dot(&a, &b)
+        };
+        assert!((score(10, 3) - score(110, 103)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn topk_basic() {
+        let v = vec![0.1, 0.9, 0.3, 0.7, 0.5];
+        assert_eq!(topk_indices(&v, 2), vec![1, 3]);
+        assert_eq!(topk_indices(&v, 5), vec![1, 3, 4, 2, 0]);
+        assert_eq!(topk_indices(&v, 9).len(), 5);
+        assert!(topk_indices(&v, 0).is_empty());
+    }
+
+    #[test]
+    fn topk_matches_sort_on_random_input() {
+        let mut r = Rng::new(11);
+        for _ in 0..20 {
+            let n = 50 + r.below(200);
+            let k = 1 + r.below(n);
+            let vals: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let got = topk_indices(&vals, k);
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx.sort_by(|&a, &b| {
+                vals[b as usize]
+                    .partial_cmp(&vals[a as usize])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            assert_eq!(got, idx[..k].to_vec());
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_naive() {
+        let mut r = Rng::new(5);
+        let (m, n) = (13, 9);
+        let mut x = vec![0.0; m];
+        let mut w = vec![0.0; m * n];
+        r.fill_normal(&mut x, 1.0);
+        r.fill_normal(&mut w, 1.0);
+        let mut y = vec![0.0; n];
+        matvec_t(&x, &w, m, n, &mut y);
+        for j in 0..n {
+            let want: f32 = (0..m).map(|i| x[i] * w[i * n + j]).sum();
+            assert!((y[j] - want).abs() < 1e-4);
+        }
+    }
+}
+#[cfg(test)]
+mod quickselect_tests {
+    use super::*;
+
+    #[test]
+    fn unordered_matches_ordered_as_sets() {
+        let mut r = Rng::new(21);
+        for _ in 0..50 {
+            let n = 10 + r.below(3000);
+            let k = 1 + r.below(n);
+            let vals: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let mut a = topk_indices(&vals, k);
+            let mut b = topk_indices_unordered(&vals, k);
+            a.sort_unstable();
+            b.sort_unstable();
+            // ties can legitimately differ in which duplicate index is
+            // kept; compare the selected VALUES instead
+            let va: Vec<f32> = a.iter().map(|&i| vals[i as usize]).collect();
+            let mut vb: Vec<f32> = b.iter().map(|&i| vals[i as usize]).collect();
+            let mut va2 = va.clone();
+            va2.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            vb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(va2, vb, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn unordered_edge_cases() {
+        assert!(topk_indices_unordered(&[], 3).is_empty());
+        assert_eq!(topk_indices_unordered(&[1.0, 2.0], 5).len(), 2);
+        let ties = vec![1.0f32; 100];
+        assert_eq!(topk_indices_unordered(&ties, 40).len(), 40);
+    }
+
+    #[test]
+    fn unordered_with_many_duplicates() {
+        let mut r = Rng::new(5);
+        let vals: Vec<f32> = (0..2000).map(|_| (r.below(8) as f32) * 0.125).collect();
+        for k in [1, 7, 100, 1999] {
+            let got = topk_indices_unordered(&vals, k);
+            assert_eq!(got.len(), k);
+            let mut sorted = vals.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let thresh = sorted[k - 1];
+            assert!(got.iter().all(|&i| vals[i as usize] >= thresh));
+        }
+    }
+}

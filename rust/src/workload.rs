@@ -1,0 +1,317 @@
+//! Synthetic benchmark suites over SynthLM (DESIGN.md §2 substitutions):
+//!
+//! * **LongBench-S** — six prefill-heavy categories mirroring LongBench's
+//!   structure (SQA, MQA, Summ, Fewshot, Synthetic, Code), each a
+//!   retrieval/aggregation task with a known answer.
+//! * **AIME-S** — decode-heavy multi-hop chain-following tasks (the AIME-24
+//!   substitute): the model must iteratively retrieve the next hop during a
+//!   long decode; errors break or lengthen the chain.
+//! * **DevSet** — MuSiQue-substitute prompts for Kascade calibration.
+
+use crate::model::{SynthSpec, VocabLayout};
+use crate::tensor::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Sqa,
+    Mqa,
+    Summ,
+    Fewshot,
+    Synthetic,
+    Code,
+}
+
+impl Category {
+    pub const ALL: [Category; 6] = [
+        Category::Sqa,
+        Category::Mqa,
+        Category::Summ,
+        Category::Fewshot,
+        Category::Synthetic,
+        Category::Code,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Sqa => "SQA",
+            Category::Mqa => "MQA",
+            Category::Summ => "Summ.",
+            Category::Fewshot => "Fewshot",
+            Category::Synthetic => "Synthetic",
+            Category::Code => "Code",
+        }
+    }
+}
+
+/// A task instance: prompt + expected greedy continuation.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub prompt: Vec<u32>,
+    /// Expected emitted tokens, in order (graded prefix-exact).
+    pub expect: Vec<u32>,
+    /// Decode budget (cap).
+    pub max_new: usize,
+    /// Ground-truth chain length (AIME-S; 0 otherwise).
+    pub hops: usize,
+}
+
+pub struct WorkloadGen {
+    pub lay: VocabLayout,
+    rng: Rng,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: &SynthSpec, seed: u64) -> Self {
+        Self { lay: spec.vocab_layout(), rng: Rng::new(seed) }
+    }
+
+    fn filler_run(&mut self, out: &mut Vec<u32>, n: usize, low_entropy: bool) {
+        if low_entropy {
+            // "code"-like: short repeating motifs
+            let motif: Vec<usize> = (0..4).map(|_| self.rng.below(self.lay.n_filler())).collect();
+            for i in 0..n {
+                out.push(self.lay.filler_tok(motif[i % motif.len()] + (i / 16) % 3));
+            }
+        } else {
+            for _ in 0..n {
+                out.push(self.lay.filler_tok(self.rng.below(self.lay.n_filler())));
+            }
+        }
+    }
+
+    /// Non-terminal entity (terminal is reserved for chains).
+    fn entity(&mut self) -> usize {
+        self.rng.below(self.lay.n_entities - 1)
+    }
+
+    fn distinct_entities(&mut self, n: usize) -> Vec<usize> {
+        let mut pool: Vec<usize> = (0..self.lay.n_entities - 1).collect();
+        self.rng.shuffle(&mut pool);
+        pool.truncate(n);
+        pool
+    }
+
+    /// Place `tok` at a random interior position of `toks` (never in the
+    /// final `tail_guard` tokens).
+    fn plant(&mut self, toks: &mut [u32], tok: u32, tail_guard: usize) -> usize {
+        let hi = toks.len().saturating_sub(tail_guard).max(2);
+        let pos = 1 + self.rng.below(hi - 1);
+        toks[pos] = tok;
+        pos
+    }
+
+    /// One LongBench-S task of `cat` with ~`ctx` prompt tokens.
+    pub fn longbench(&mut self, cat: Category, ctx: usize) -> Task {
+        let lay = self.lay;
+        let mut toks = vec![VocabLayout::BOS];
+        let body = ctx.saturating_sub(4);
+        match cat {
+            Category::Sqa => {
+                // single needle, uniform position, random filler
+                self.filler_run(&mut toks, body, false);
+                let es = self.distinct_entities(2);
+                let (i, j) = (es[0], es[1]);
+                self.plant(&mut toks, lay.pair_tok(i, j), 16);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(i));
+                Task { prompt: toks, expect: vec![lay.value_tok(j)], max_new: 2, hops: 1 }
+            }
+            Category::Mqa => {
+                // 2-hop: answer requires composing two facts
+                self.filler_run(&mut toks, body, false);
+                let es = self.distinct_entities(3);
+                let (a, b, c) = (es[0], es[1], es[2]);
+                self.plant(&mut toks, lay.pair_tok(a, b), 16);
+                self.plant(&mut toks, lay.pair_tok(b, c), 16);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(a));
+                Task {
+                    prompt: toks,
+                    expect: vec![lay.value_tok(b), lay.value_tok(c)],
+                    max_new: 3,
+                    hops: 2,
+                }
+            }
+            Category::Summ => {
+                // majority aggregation: repeated binding wins
+                self.filler_run(&mut toks, body, false);
+                let es = self.distinct_entities(3);
+                let (i, maj, min_) = (es[0], es[1], es[2]);
+                for _ in 0..4 {
+                    self.plant(&mut toks, lay.pair_tok(i, maj), 16);
+                }
+                self.plant(&mut toks, lay.pair_tok(i, min_), 16);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(i));
+                Task { prompt: toks, expect: vec![lay.value_tok(maj)], max_new: 2, hops: 1 }
+            }
+            Category::Fewshot => {
+                // dense example list; query one mapping among many
+                self.filler_run(&mut toks, body, false);
+                let n_pairs = 12.min((self.lay.n_entities - 1) / 2);
+                let es = self.distinct_entities(2 * n_pairs);
+                let mut target = (es[0], es[1]);
+                for p in 0..n_pairs {
+                    let (i, j) = (es[2 * p], es[2 * p + 1]);
+                    let pos = self.plant(&mut toks, lay.pair_tok(i, j), 16);
+                    if p == n_pairs / 2 {
+                        target = (i, j);
+                        let _ = pos;
+                    }
+                }
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(target.0));
+                Task { prompt: toks, expect: vec![lay.value_tok(target.1)], max_new: 2, hops: 1 }
+            }
+            Category::Synthetic => {
+                // passkey: needle in near-uniform PAD-ish noise
+                let motif = self.rng.below(self.lay.n_filler());
+                for i in 0..body {
+                    toks.push(self.lay.filler_tok(motif + (i % 2)));
+                }
+                let es = self.distinct_entities(2);
+                let (i, j) = (es[0], es[1]);
+                self.plant(&mut toks, lay.pair_tok(i, j), 16);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(i));
+                Task { prompt: toks, expect: vec![lay.value_tok(j)], max_new: 2, hops: 1 }
+            }
+            Category::Code => {
+                // definition lookup in low-entropy (code-like) filler;
+                // needle biased toward the beginning of the file
+                self.filler_run(&mut toks, body, true);
+                let es = self.distinct_entities(2);
+                let (i, j) = (es[0], es[1]);
+                let pos = 1 + self.rng.below((toks.len() / 4).max(2));
+                toks[pos] = lay.pair_tok(i, j);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(i));
+                Task { prompt: toks, expect: vec![lay.value_tok(j)], max_new: 2, hops: 1 }
+            }
+        }
+    }
+
+    /// One AIME-S chain task: `hops` facts scattered in context; the decode
+    /// must walk key -> value -> ... -> TERM.
+    pub fn aime(&mut self, ctx: usize, hops: usize) -> Task {
+        let lay = self.lay;
+        let term = lay.term_entity();
+        // chain entities: e0 -> e1 -> ... -> e_{hops-1} -> term
+        let mut ents = self.distinct_entities(hops);
+        ents.push(term);
+        let mut toks = vec![VocabLayout::BOS];
+        self.filler_run(&mut toks, ctx.saturating_sub(4), false);
+        for w in ents.windows(2) {
+            self.plant(&mut toks, lay.pair_tok(w[0], w[1]), 16);
+        }
+        toks.push(VocabLayout::QUERY);
+        toks.push(lay.key_tok(ents[0]));
+        let expect: Vec<u32> = ents[1..].iter().map(|&e| lay.value_tok(e)).collect();
+        Task { prompt: toks, expect, max_new: hops * 3 + 8, hops }
+    }
+
+    /// Calibration prompt (MuSiQue substitute): mixed retrieval content.
+    pub fn dev_prompt(&mut self, ctx: usize) -> Vec<u32> {
+        let lay = self.lay;
+        let mut toks = vec![VocabLayout::BOS];
+        self.filler_run(&mut toks, ctx.saturating_sub(4), false);
+        for _ in 0..4 {
+            let es = self.distinct_entities(2);
+            self.plant(&mut toks, lay.pair_tok(es[0], es[1]), 8);
+        }
+        let e = self.entity();
+        toks.push(VocabLayout::QUERY);
+        toks.push(lay.key_tok(e));
+        toks
+    }
+}
+
+/// Grade a decode against a task: full credit iff the expected sequence is
+/// a prefix of the emission; AIME-S additionally requires termination.
+pub fn grade(task: &Task, emitted: &[u32]) -> bool {
+    if emitted.len() < task.expect.len() {
+        return false;
+    }
+    emitted[..task.expect.len()] == task.expect[..]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SynthSpec;
+
+    fn spec() -> SynthSpec {
+        let mut s = SynthSpec::eval_base(1);
+        s.cfg.n_layers = 4;
+        s.block_starts = vec![1];
+        s
+    }
+
+    #[test]
+    fn prompts_have_requested_shape() {
+        let s = spec();
+        let mut g = WorkloadGen::new(&s, 3);
+        for cat in Category::ALL {
+            let t = g.longbench(cat, 512);
+            assert!(t.prompt.len() >= 500 && t.prompt.len() <= 520, "{cat:?}");
+            assert_eq!(t.prompt[0], VocabLayout::BOS);
+            assert_eq!(t.prompt[t.prompt.len() - 2], VocabLayout::QUERY);
+            assert!(!t.expect.is_empty());
+        }
+    }
+
+    #[test]
+    fn needle_is_present_and_interior() {
+        let s = spec();
+        let mut g = WorkloadGen::new(&s, 4);
+        let t = g.longbench(Category::Sqa, 512);
+        let lay = g.lay;
+        // exactly one pair token, and it maps query key -> expected value
+        let key = t.prompt[t.prompt.len() - 1];
+        let i = (key - 16) as usize;
+        let j = lay.value_entity(t.expect[0]).unwrap();
+        let pair = lay.pair_tok(i, j);
+        let count = t.prompt.iter().filter(|&&x| x == pair).count();
+        assert_eq!(count, 1);
+        let pos = t.prompt.iter().position(|&x| x == pair).unwrap();
+        assert!(pos > 0 && pos < t.prompt.len() - 16);
+    }
+
+    #[test]
+    fn aime_chain_is_consistent() {
+        let s = spec();
+        let mut g = WorkloadGen::new(&s, 5);
+        let t = g.aime(1024, 6);
+        assert_eq!(t.expect.len(), 6);
+        assert_eq!(
+            g.lay.value_entity(*t.expect.last().unwrap()),
+            Some(g.lay.term_entity())
+        );
+        // each hop's pair token is present
+        let key = t.prompt[t.prompt.len() - 1];
+        let mut cur = (key - 16) as usize;
+        for &v in &t.expect {
+            let nxt = g.lay.value_entity(v).unwrap();
+            assert!(t.prompt.contains(&g.lay.pair_tok(cur, nxt)), "missing hop {cur}->{nxt}");
+            cur = nxt;
+        }
+    }
+
+    #[test]
+    fn grading() {
+        let t = Task { prompt: vec![], expect: vec![5, 6], max_new: 4, hops: 2 };
+        assert!(grade(&t, &[5, 6]));
+        assert!(grade(&t, &[5, 6, 9]));
+        assert!(!grade(&t, &[5]));
+        assert!(!grade(&t, &[6, 5]));
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let s = spec();
+        let a = WorkloadGen::new(&s, 9).longbench(Category::Mqa, 256);
+        let b = WorkloadGen::new(&s, 9).longbench(Category::Mqa, 256);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.expect, b.expect);
+    }
+}

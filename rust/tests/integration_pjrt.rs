@@ -1,0 +1,146 @@
+//! PJRT-path integration: AOT artifacts load + execute, with numeric
+//! parity against the native engine (the cross-layer contract of the
+//! three-layer architecture).  Skipped when `make artifacts` has not run.
+
+use kascade::kascade::{calibrate, CalibrateOptions};
+use kascade::model::{SynthSpec, VocabLayout};
+use kascade::runtime::{PjrtModel, Runtime};
+use kascade::sparse::{DensePolicy, KascadePolicy};
+use kascade::tensor::argmax;
+use kascade::workload::WorkloadGen;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn retrieval_prompt(spec: &SynthSpec, ctx: usize, i: usize, j: usize) -> Vec<u32> {
+    let lay = spec.vocab_layout();
+    let mut toks = vec![VocabLayout::BOS];
+    for f in 0..ctx - 3 {
+        toks.push(lay.filler_tok(f * 3 + 1));
+    }
+    toks[ctx / 3] = lay.pair_tok(i, j);
+    toks.push(VocabLayout::QUERY);
+    toks.push(lay.key_tok(i));
+    toks
+}
+
+#[test]
+fn manifest_covers_every_op_the_runtime_needs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::load(dir).unwrap();
+    let m = &rt.manifest;
+    assert!(!m.decode_l.is_empty() && !m.prefill_t.is_empty());
+    for l in &m.decode_l {
+        for kind in ["dense", "anchor", "anchor0", "reuse"] {
+            assert!(m.artifacts.contains_key(&format!("attn_{kind}_decode_l{l}")));
+        }
+    }
+    for t in &m.prefill_t {
+        for op in ["embed_prefill", "qkv_prefill", "post_prefill"] {
+            assert!(m.artifacts.contains_key(&format!("{op}_t{t}")));
+        }
+    }
+    for op in ["embed_decode", "qkv_decode", "post_decode", "logits_decode"] {
+        assert!(m.artifacts.contains_key(op));
+    }
+}
+
+#[test]
+fn pjrt_dense_parity_with_native_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let spec = SynthSpec::pjrt_small(42);
+    let native = spec.build();
+    let rt = Runtime::load(dir).unwrap();
+    let pjrt = PjrtModel::new(rt, &native.w).unwrap();
+    let lay = spec.vocab_layout();
+
+    let toks = retrieval_prompt(&spec, 120, 5, 9);
+    let mut pst = pjrt.new_state();
+    let pl = pjrt.prefill(&toks, &mut pst, None).unwrap();
+    let mut nst = native.new_state(toks.len() + 16);
+    let (nl, _) = native.prefill(&toks, &mut nst, &mut DensePolicy, None);
+    assert_eq!(argmax(&pl), argmax(&nl));
+    assert_eq!(argmax(&pl) as u32, lay.value_tok(9));
+    let max_diff = pl.iter().zip(&nl).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-2, "logit divergence {max_diff}");
+
+    // several decode steps stay in lockstep
+    let mut tok = argmax(&pl) as u32;
+    for step in 0..3 {
+        let p = pjrt.decode_step(tok, &mut pst, None).unwrap();
+        let n = native.decode_step(tok, &mut nst, &mut DensePolicy);
+        assert_eq!(argmax(&p), argmax(&n), "step {step}");
+        tok = argmax(&p) as u32;
+    }
+}
+
+#[test]
+fn pjrt_kascade_plan_path_retrieves_and_reuses() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let spec = SynthSpec::pjrt_small(42);
+    let native = spec.build();
+    let rt = Runtime::load(dir).unwrap();
+    let pjrt = PjrtModel::new(rt, &native.w).unwrap();
+    let lay = spec.vocab_layout();
+
+    let mut dev = WorkloadGen::new(&spec, 0xDE5);
+    let prompts: Vec<Vec<u32>> = (0..2).map(|_| dev.dev_prompt(400)).collect();
+    let plan = calibrate(&native, &prompts, &CalibrateOptions::default()).plan;
+
+    let toks = retrieval_prompt(&spec, 400, 11, 30);
+    let mut pst = pjrt.new_state();
+    let pl = pjrt.prefill(&toks, &mut pst, Some(&plan)).unwrap();
+    assert_eq!(argmax(&pl) as u32, lay.value_tok(30), "kascade prefill retrieval");
+    // anchor state must be populated for each anchor layer after decode
+    let _ = pjrt.decode_step(argmax(&pl) as u32, &mut pst, Some(&plan)).unwrap();
+    for &a in &plan.anchors {
+        assert!(pst.idx[a].is_some(), "anchor layer {a} never refreshed its indices");
+    }
+    // parity against the native kascade policy (same plan)
+    let mut nst = native.new_state(toks.len() + 16);
+    let mut pol = KascadePolicy::new(plan.clone());
+    let (nl, _) = native.prefill(&toks, &mut nst, &mut pol, None);
+    assert_eq!(argmax(&pl), argmax(&nl), "pjrt vs native kascade answer");
+}
+
+#[test]
+fn pjrt_bucket_crossing_pads_indices() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let spec = SynthSpec::pjrt_small(42);
+    let native = spec.build();
+    let rt = Runtime::load(dir).unwrap();
+    let first_bucket = rt.manifest.decode_l[0];
+    let pjrt = PjrtModel::new(rt, &native.w).unwrap();
+    let lay = spec.vocab_layout();
+
+    // prefill just below the first decode bucket, then decode across it
+    let toks = retrieval_prompt(&spec, first_bucket - 2, 3, 7);
+    let mut dev = WorkloadGen::new(&spec, 0xDE5);
+    let prompts: Vec<Vec<u32>> = (0..2).map(|_| dev.dev_prompt(400)).collect();
+    let plan = calibrate(&native, &prompts, &CalibrateOptions::default()).plan;
+    let mut pst = pjrt.new_state();
+    let pl = pjrt.prefill(&toks, &mut pst, Some(&plan)).unwrap();
+    assert_eq!(argmax(&pl) as u32, lay.value_tok(7));
+    let mut tok = argmax(&pl) as u32;
+    for _ in 0..4 {
+        // crosses from bucket 512 into 1024 without panicking
+        let l = pjrt.decode_step(tok, &mut pst, Some(&plan)).unwrap();
+        tok = argmax(&l) as u32;
+    }
+    assert!(pst.len > first_bucket - 2);
+}
