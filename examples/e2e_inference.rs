@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         prefill_chunk: 512,
         queue_cap: 64,
         workers: 1,
+        ..ServeConfig::default()
     };
 
     for (name, plan) in [("dense", None::<KascadePlan>), ("kascade", Some(plan))] {

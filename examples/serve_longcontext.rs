@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         prefill_chunk: 256,
         queue_cap: 64,
         workers: 1,
+        ..ServeConfig::default()
     };
 
     for (name, plan) in [("dense", None), ("kascade", Some(plan))] {

@@ -103,6 +103,35 @@ impl KvCache {
     pub fn clear(&mut self) {
         self.len = 0;
     }
+
+    /// Truncate to the first `n` positions (prefix-cache snapshot forks).
+    /// The (now partial) last page's min/max summary is rebuilt from the
+    /// raw keys so Quest-style page bounds stay exact after truncation.
+    pub fn truncate(&mut self, n: usize) {
+        assert!(n <= self.len, "truncate {n} beyond len {}", self.len);
+        self.len = n;
+        if n == 0 {
+            return;
+        }
+        let page = (n - 1) / self.page_size;
+        let p0 = page * self.page_size;
+        let d = self.d;
+        for h in 0..self.n_kv {
+            let mut mins = vec![f32::INFINITY; d];
+            let mut maxs = vec![f32::NEG_INFINITY; d];
+            for pos in p0..n {
+                let o = (h * self.cap + pos) * d;
+                for i in 0..d {
+                    let x = self.k[o + i];
+                    mins[i] = mins[i].min(x);
+                    maxs[i] = maxs[i].max(x);
+                }
+            }
+            let pb = ((h * self.cap.div_ceil(self.page_size)) + page) * 2 * d;
+            self.pages[pb..pb + d].copy_from_slice(&mins);
+            self.pages[pb + d..pb + 2 * d].copy_from_slice(&maxs);
+        }
+    }
 }
 
 /// Work accounting for the cost-model side of Table 3 / Fig 8.
@@ -655,6 +684,45 @@ mod tests {
         let k = vec![0.0; 4];
         for _ in 0..3 {
             cache.push(&k, &k);
+        }
+    }
+
+    #[test]
+    fn truncate_matches_fresh_fill() {
+        // truncating to n must leave the same state (incl. page summaries)
+        // as pushing only the first n entries into a fresh cache
+        let mut r = Rng::new(9);
+        let (n_kv, d, len, n) = (2, 8, 40, 23); // 23 = mid-page for page_size 16
+        let mut rows = Vec::new();
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            rows.push((k, v));
+        }
+        let mut full = KvCache::new(n_kv, d, len);
+        let mut short = KvCache::new(n_kv, d, len);
+        for (k, v) in &rows {
+            full.push(k, v);
+        }
+        for (k, v) in rows.iter().take(n) {
+            short.push(k, v);
+        }
+        full.truncate(n);
+        assert_eq!(full.len, n);
+        assert_eq!(full.n_pages(), short.n_pages());
+        for h in 0..n_kv {
+            for p in 0..n {
+                assert_eq!(full.key(h, p), short.key(h, p));
+                assert_eq!(full.val(h, p), short.val(h, p));
+            }
+            for page in 0..full.n_pages() {
+                let (amin, amax) = full.page_summary(h, page);
+                let (bmin, bmax) = short.page_summary(h, page);
+                assert_eq!(amin, bmin, "page {page} min");
+                assert_eq!(amax, bmax, "page {page} max");
+            }
         }
     }
 }

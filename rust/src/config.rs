@@ -115,6 +115,14 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Number of worker executors the router spreads sequences over.
     pub workers: usize,
+    /// Automatic prefix caching: retain + share full KV blocks across
+    /// sequences with equal prompt prefixes, skipping both the KV
+    /// storage and the prefill compute for the shared blocks.  Off by
+    /// default (opt-in; RAG / agentic workloads benefit most).
+    pub enable_prefix_cache: bool,
+    /// Max refcount-0 blocks retained in the prefix-cache pool before
+    /// LRU eviction (only meaningful with `enable_prefix_cache`).
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for ServeConfig {
@@ -127,6 +135,8 @@ impl Default for ServeConfig {
             prefill_chunk: 512,
             queue_cap: 1024,
             workers: 1,
+            enable_prefix_cache: false,
+            prefix_cache_blocks: 1024,
         }
     }
 }

@@ -32,6 +32,24 @@ impl SeqBackend for NativeBackend {
     fn decode(&mut self, token: u32) -> Vec<f32> {
         self.model.decode_step(token, &mut self.st, self.policy.as_mut())
     }
+
+    /// Prefix-cache snapshot: clone the KV state truncated to the first
+    /// `tokens` positions.  The policy is forked *fresh* — Top-k index
+    /// state is per-sequence and must not leak through shared snapshots
+    /// (the resumed sequence's anchor layers rebuild their own).
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        if tokens > self.st.pos {
+            return None;
+        }
+        let policy = self.policy.fork_fresh()?;
+        let mut st = self.st.clone();
+        for c in &mut st.caches {
+            c.truncate(tokens);
+        }
+        st.pos = tokens;
+        st.cost = Default::default();
+        Some(Box::new(NativeBackend { model: self.model.clone(), st, policy }))
+    }
 }
 
 /// PJRT backend: executes the AOT HLO artifacts.  The prompt is buffered

@@ -1,22 +1,58 @@
-//! Paged KV-cache block manager (vLLM-style).
+//! Paged KV-cache block manager (vLLM-style) with refcounted,
+//! copy-on-write block sharing and a prefix-cache retention pool.
 //!
 //! Tracks block ownership per sequence; allocation is in whole blocks of
 //! `block_size` tokens.  The manager is the admission-control authority:
 //! a sequence may only be scheduled if its next chunk's blocks can be
-//! allocated, and the scheduler preempts (frees + requeues) the youngest
-//! running sequence when decode would otherwise OOM.
+//! allocated, and the scheduler preempts (drops refs on + requeues) the
+//! youngest running sequence when decode would otherwise OOM.
+//!
+//! Every physical block is in exactly one of three states:
+//!
+//! * **free** — on the free list, contents meaningless;
+//! * **in_use** — referenced by >= 1 sequence (refcount > 0).  Full
+//!   blocks registered in the prefix index may be referenced by several
+//!   sequences at once (shared prompt prefixes, forks);
+//! * **cached** — refcount 0 but still registered in the prefix index:
+//!   retained on an LRU queue so a later sequence with the same prefix
+//!   can re-adopt it without re-prefilling.  Evicted (oldest first) when
+//!   allocation needs blocks or the pool exceeds its capacity.
+//!
+//! `free + in_use + cached == num_blocks` always holds (checked by
+//! [`BlockManager::check_invariants`] and the property tests below).
+//!
+//! Appends only ever write into the single partially-filled tail block of
+//! a sequence.  If that tail is shared (refcount > 1 — e.g. after
+//! [`BlockManager::fork`]), the append triggers copy-on-write: the writer
+//! gets a fresh block and drops its ref on the shared one.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 #[derive(Debug)]
 pub struct BlockManager {
     pub block_size: usize,
     pub num_blocks: usize,
     free: Vec<u32>,
+    /// per-block owner count (number of sequences whose table lists it)
+    refc: Vec<u32>,
+    /// per-block: registered in the prefix index (content addressable)
+    indexed: Vec<bool>,
+    /// per-sequence block tables; tables of different sequences may share
+    /// physical blocks (never twice within one table)
     owned: HashMap<u64, Vec<u32>>,
     /// tokens currently stored per sequence (for block arithmetic)
     tokens: HashMap<u64, usize>,
-    /// high-water mark of allocated blocks
+    /// refcount-0 indexed blocks retained for prefix reuse, oldest first
+    lru: VecDeque<u32>,
+    /// blocks evicted from the cached pool since the last
+    /// [`BlockManager::take_evicted`] (the scheduler uses this to drop
+    /// the corresponding prefix-index entries)
+    evicted: Vec<u32>,
+    /// max blocks retained in the cached pool (0 disables retention)
+    cache_cap: usize,
+    /// copy-on-write block copies performed
+    pub cow_copies: u64,
+    /// high-water mark of in-use blocks
     pub peak_used: usize,
 }
 
@@ -26,14 +62,37 @@ impl BlockManager {
             block_size,
             num_blocks,
             free: (0..num_blocks as u32).rev().collect(),
+            refc: vec![0; num_blocks],
+            indexed: vec![false; num_blocks],
             owned: HashMap::new(),
             tokens: HashMap::new(),
+            lru: VecDeque::new(),
+            evicted: Vec::new(),
+            cache_cap: 0,
+            cow_copies: 0,
             peak_used: 0,
         }
     }
 
+    /// Enable prefix-cache retention: up to `cap` refcount-0 indexed
+    /// blocks are kept adoptable instead of being freed.
+    pub fn set_cache_capacity(&mut self, cap: usize) {
+        self.cache_cap = cap;
+    }
+
+    /// Blocks actively referenced by sequences.
     pub fn used(&self) -> usize {
-        self.num_blocks - self.free.len()
+        self.num_blocks - self.free.len() - self.lru.len()
+    }
+
+    /// Refcount-0 blocks retained in the prefix-cache pool.
+    pub fn cached(&self) -> usize {
+        self.lru.len()
+    }
+
+    /// Blocks an allocation could obtain (free + evictable cached).
+    pub fn available(&self) -> usize {
+        self.free.len() + self.lru.len()
     }
 
     pub fn utilization(&self) -> f64 {
@@ -50,58 +109,250 @@ impl BlockManager {
         self.blocks_for(new_tokens).saturating_sub(have)
     }
 
-    pub fn can_extend(&self, seq: u64, new_tokens: usize) -> bool {
-        self.extra_blocks_needed(seq, new_tokens) <= self.free.len()
-    }
-
-    /// Extend `seq` to `new_tokens` total tokens.  Returns false (no
-    /// change) if blocks are unavailable.
-    pub fn extend(&mut self, seq: u64, new_tokens: usize) -> bool {
-        let need = self.extra_blocks_needed(seq, new_tokens);
-        if need > self.free.len() {
+    /// Whether appending to `new_tokens` writes into a shared partial
+    /// tail block (which costs one extra block for the private copy).
+    fn cow_needed(&self, seq: u64, new_tokens: usize) -> bool {
+        let t = self.tokens_of(seq);
+        if new_tokens <= t || t % self.block_size == 0 {
             return false;
         }
-        let entry = self.owned.entry(seq).or_default();
-        for _ in 0..need {
-            entry.push(self.free.pop().unwrap());
+        let tail_idx = t / self.block_size;
+        match self.owned.get(&seq) {
+            Some(bs) if tail_idx < bs.len() => self.refc[bs[tail_idx] as usize] > 1,
+            _ => false,
+        }
+    }
+
+    pub fn can_extend(&self, seq: u64, new_tokens: usize) -> bool {
+        let cow = if self.cow_needed(seq, new_tokens) { 1 } else { 0 };
+        self.extra_blocks_needed(seq, new_tokens) + cow <= self.available()
+    }
+
+    /// Pop a block for allocation, evicting the oldest cached block when
+    /// the free list is empty.
+    fn alloc_one(&mut self) -> Option<u32> {
+        if let Some(b) = self.free.pop() {
+            return Some(b);
+        }
+        let b = self.lru.pop_front()?;
+        self.indexed[b as usize] = false;
+        self.evicted.push(b);
+        Some(b)
+    }
+
+    /// Drop one reference; a block reaching refcount 0 either parks in
+    /// the cached pool (if indexed and retention is on) or frees.
+    fn drop_ref(&mut self, b: u32) {
+        let i = b as usize;
+        debug_assert!(self.refc[i] > 0, "refcount underflow on block {b}");
+        self.refc[i] -= 1;
+        if self.refc[i] > 0 {
+            return;
+        }
+        if self.indexed[i] && self.cache_cap > 0 {
+            self.lru.push_back(b);
+            while self.lru.len() > self.cache_cap {
+                let ev = self.lru.pop_front().unwrap();
+                self.indexed[ev as usize] = false;
+                self.evicted.push(ev);
+                self.free.push(ev);
+            }
+        } else {
+            if self.indexed[i] {
+                self.indexed[i] = false;
+                self.evicted.push(b);
+            }
+            self.free.push(b);
+        }
+    }
+
+    /// Extend `seq` to `new_tokens` total tokens, copy-on-writing a
+    /// shared partial tail block if needed.  Returns false (no change)
+    /// if blocks are unavailable.
+    pub fn extend(&mut self, seq: u64, new_tokens: usize) -> bool {
+        let cow = self.cow_needed(seq, new_tokens);
+        let need = self.extra_blocks_needed(seq, new_tokens) + if cow { 1 } else { 0 };
+        if need > self.available() {
+            return false;
+        }
+        if cow {
+            let tail_idx = self.tokens_of(seq) / self.block_size;
+            let fresh = self.alloc_one().expect("capacity checked above");
+            self.refc[fresh as usize] = 1;
+            let bs = self.owned.get_mut(&seq).expect("cow implies ownership");
+            let old = bs[tail_idx];
+            bs[tail_idx] = fresh;
+            self.drop_ref(old);
+            self.cow_copies += 1;
+        }
+        let extra = self.extra_blocks_needed(seq, new_tokens);
+        for _ in 0..extra {
+            let b = self.alloc_one().expect("capacity checked above");
+            self.refc[b as usize] = 1;
+            self.owned.entry(seq).or_default().push(b);
         }
         self.tokens.insert(seq, new_tokens);
-        self.peak_used = self.peak_used.max(self.num_blocks - self.free.len());
+        self.peak_used = self.peak_used.max(self.used());
         true
     }
 
-    /// Release every block of `seq` (finish or preemption).
+    /// Drop every reference of `seq` (finish or preemption).  Shared
+    /// blocks survive under their other owners; exclusive indexed blocks
+    /// park in the cached pool; the rest free.
     pub fn release(&mut self, seq: u64) {
         if let Some(blocks) = self.owned.remove(&seq) {
-            self.free.extend(blocks);
+            for b in blocks {
+                self.drop_ref(b);
+            }
         }
         self.tokens.remove(&seq);
+    }
+
+    /// Give `seq` shared references to `blocks` — a chain of full,
+    /// indexed blocks (a cached prefix) covering exactly
+    /// `blocks.len() * block_size` tokens.  The sequence must not
+    /// currently own blocks.
+    pub fn adopt(&mut self, seq: u64, blocks: &[u32], tokens: usize) {
+        debug_assert!(self.owned.get(&seq).map_or(true, |v| v.is_empty()));
+        debug_assert_eq!(tokens, blocks.len() * self.block_size);
+        for &b in blocks {
+            let i = b as usize;
+            debug_assert!(self.indexed[i], "adopting unindexed block {b}");
+            if self.refc[i] == 0 {
+                // O(pool) scan per revived block; adoption is per-admission
+                // (not per-tick-per-seq), so this stays off the decode hot
+                // path — swap for a block->slot map if admission ever shows
+                // up in the coordinator bench
+                let pos = self.lru.iter().position(|&x| x == b);
+                debug_assert!(pos.is_some(), "refcount-0 block {b} missing from cache pool");
+                if let Some(p) = pos {
+                    self.lru.remove(p);
+                }
+            }
+            self.refc[i] += 1;
+        }
+        self.owned.insert(seq, blocks.to_vec());
+        self.tokens.insert(seq, tokens);
+        self.peak_used = self.peak_used.max(self.used());
+    }
+
+    /// Share every block of `parent` with `child` (parallel-sampling
+    /// fork).  The child starts at the parent's token count; whichever
+    /// side appends into the shared partial tail first copies-on-write.
+    pub fn fork(&mut self, parent: u64, child: u64) -> bool {
+        let bs = match self.owned.get(&parent) {
+            Some(bs) => bs.clone(),
+            None => return false,
+        };
+        if self.owned.get(&child).map_or(false, |v| !v.is_empty()) {
+            return false;
+        }
+        for &b in &bs {
+            self.refc[b as usize] += 1;
+        }
+        let t = self.tokens_of(parent);
+        self.owned.insert(child, bs);
+        self.tokens.insert(child, t);
+        true
+    }
+
+    /// Mark an owned block as registered in the prefix index, making it
+    /// shareable now and cacheable after its last ref drops.
+    pub fn mark_indexed(&mut self, b: u32) {
+        debug_assert!(self.refc[b as usize] > 0, "indexing unowned block {b}");
+        self.indexed[b as usize] = true;
+    }
+
+    /// Whether a prefix-index entry pointing at `b` is still backed by
+    /// live content (in use or parked in the cached pool).
+    pub fn is_adoptable(&self, b: u32) -> bool {
+        self.indexed[b as usize]
+    }
+
+    /// `j`-th block of `seq`'s table.
+    pub fn block_of(&self, seq: u64, j: usize) -> Option<u32> {
+        self.owned.get(&seq).and_then(|bs| bs.get(j).copied())
+    }
+
+    /// Drain the log of blocks evicted from the cached pool since the
+    /// last call (their prefix-index entries must be forgotten).
+    pub fn take_evicted(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.evicted)
     }
 
     pub fn tokens_of(&self, seq: u64) -> usize {
         self.tokens.get(&seq).copied().unwrap_or(0)
     }
 
-    /// Invariant check (used by property tests): no block is double-owned
-    /// and owned + free == total.
+    /// Invariant check (used by property tests): refcounts match owner
+    /// tables exactly, no block is simultaneously free/cached/referenced,
+    /// and `free + in_use + cached == num_blocks`.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.num_blocks];
+        let n = self.num_blocks;
+        // 0 = unseen, 1 = free, 2 = cached
+        let mut state = vec![0u8; n];
         for &b in &self.free {
-            if seen[b as usize] {
+            let i = b as usize;
+            if state[i] != 0 {
                 return Err(format!("block {b} duplicated in free list"));
             }
-            seen[b as usize] = true;
-        }
-        for (seq, blocks) in &self.owned {
-            for &b in blocks {
-                if seen[b as usize] {
-                    return Err(format!("block {b} double-owned (seq {seq})"));
-                }
-                seen[b as usize] = true;
+            state[i] = 1;
+            if self.refc[i] != 0 {
+                return Err(format!("free block {b} has refcount {}", self.refc[i]));
             }
         }
-        if !seen.iter().all(|&s| s) {
-            return Err("leaked blocks".into());
+        for &b in &self.lru {
+            let i = b as usize;
+            if state[i] != 0 {
+                return Err(format!("cached block {b} also free or duplicated"));
+            }
+            state[i] = 2;
+            if self.refc[i] != 0 {
+                return Err(format!("cached block {b} has refcount {}", self.refc[i]));
+            }
+            if !self.indexed[i] {
+                return Err(format!("cached block {b} is not indexed"));
+            }
+        }
+        let mut refs = vec![0u32; n];
+        for (seq, bs) in &self.owned {
+            let mut sorted: Vec<u32> = bs.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != bs.len() {
+                return Err(format!("seq {seq} lists a block twice"));
+            }
+            for &b in bs {
+                if state[b as usize] != 0 {
+                    return Err(format!("block {b} owned by seq {seq} but free/cached"));
+                }
+                refs[b as usize] += 1;
+            }
+            let t = self.tokens.get(seq).copied().unwrap_or(0);
+            if bs.len() < self.blocks_for(t) {
+                return Err(format!("seq {seq}: {} blocks < needed for {t} tokens", bs.len()));
+            }
+        }
+        let mut in_use = 0usize;
+        for b in 0..n {
+            if refs[b] != self.refc[b] {
+                return Err(format!(
+                    "block {b}: refcount {} != {} owner references",
+                    self.refc[b], refs[b]
+                ));
+            }
+            if self.refc[b] > 0 {
+                in_use += 1;
+            } else if state[b] == 0 {
+                return Err(format!("block {b} leaked (not free, cached, or referenced)"));
+            }
+        }
+        if self.free.len() + in_use + self.lru.len() != n {
+            return Err(format!(
+                "free {} + in_use {in_use} + cached {} != {n}",
+                self.free.len(),
+                self.lru.len()
+            ));
         }
         Ok(())
     }
@@ -151,6 +402,97 @@ mod tests {
     }
 
     #[test]
+    fn fork_shares_then_cow_on_append() {
+        let mut bm = BlockManager::new(16, 4);
+        assert!(bm.extend(1, 24)); // 2 blocks, tail half-full
+        assert!(bm.fork(1, 2));
+        assert_eq!(bm.used(), 2, "fork allocates nothing");
+        assert_eq!(bm.tokens_of(2), 24);
+        bm.check_invariants().unwrap();
+        // child appends into the shared partial tail -> private copy
+        assert!(bm.extend(2, 25));
+        assert_eq!(bm.cow_copies, 1);
+        assert_eq!(bm.used(), 3);
+        assert_ne!(bm.block_of(1, 1), bm.block_of(2, 1));
+        assert_eq!(bm.block_of(1, 0), bm.block_of(2, 0), "full block stays shared");
+        bm.check_invariants().unwrap();
+        // parent's tail is exclusive again: no further copy
+        assert!(bm.extend(1, 25));
+        assert_eq!(bm.cow_copies, 1);
+        bm.release(1);
+        bm.release(2);
+        assert_eq!(bm.used(), 0);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn indexed_blocks_park_in_cache_and_revive() {
+        let mut bm = BlockManager::new(16, 4);
+        bm.set_cache_capacity(4);
+        assert!(bm.extend(1, 32)); // 2 full blocks
+        let b0 = bm.block_of(1, 0).unwrap();
+        let b1 = bm.block_of(1, 1).unwrap();
+        bm.mark_indexed(b0);
+        bm.mark_indexed(b1);
+        bm.release(1);
+        assert_eq!(bm.used(), 0);
+        assert_eq!(bm.cached(), 2);
+        bm.check_invariants().unwrap();
+        // a new sequence adopts the cached chain
+        bm.adopt(7, &[b0, b1], 32);
+        assert_eq!(bm.cached(), 0);
+        assert_eq!(bm.used(), 2);
+        assert_eq!(bm.tokens_of(7), 32);
+        bm.check_invariants().unwrap();
+        // a second adopter shares the same physical blocks
+        bm.adopt(8, &[b0, b1], 32);
+        assert_eq!(bm.used(), 2);
+        bm.check_invariants().unwrap();
+        bm.release(7);
+        assert_eq!(bm.used(), 2, "still referenced by 8");
+        bm.release(8);
+        assert_eq!(bm.cached(), 2);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_blocks_are_evicted_lru_under_pressure() {
+        let mut bm = BlockManager::new(16, 2);
+        bm.set_cache_capacity(2);
+        assert!(bm.extend(1, 32));
+        let b0 = bm.block_of(1, 0).unwrap();
+        let b1 = bm.block_of(1, 1).unwrap();
+        bm.mark_indexed(b0);
+        bm.mark_indexed(b1);
+        bm.release(1);
+        assert_eq!(bm.cached(), 2);
+        // allocation must evict the oldest cached block, not fail
+        assert!(bm.can_extend(2, 16));
+        assert!(bm.extend(2, 16));
+        assert_eq!(bm.cached(), 1);
+        let evicted = bm.take_evicted();
+        assert_eq!(evicted, vec![b0], "oldest first");
+        assert!(!bm.is_adoptable(b0));
+        assert!(bm.is_adoptable(b1));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cache_capacity_bounds_the_pool() {
+        let mut bm = BlockManager::new(16, 8);
+        bm.set_cache_capacity(2);
+        assert!(bm.extend(1, 16 * 5));
+        for j in 0..5 {
+            let b = bm.block_of(1, j).unwrap();
+            bm.mark_indexed(b);
+        }
+        bm.release(1);
+        assert_eq!(bm.cached(), 2, "pool capped");
+        assert_eq!(bm.take_evicted().len(), 3);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_random_alloc_free_preserves_invariants() {
         check("block manager invariants", 30, |rng| {
             let mut bm = BlockManager::new(1 + rng.below(32), 1 + rng.below(64));
@@ -181,6 +523,94 @@ mod tests {
                         }
                     }
                 }
+                if let Err(e) = bm.check_invariants() {
+                    return Err(format!("step {step}: {e}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_share_release_preempt_preserves_invariants() {
+        // the full lifecycle under sharing: random extend / index /
+        // release / adopt / fork streams with the cache pool enabled
+        check("block manager sharing invariants", 30, |rng| {
+            let bs = 1 + rng.below(16);
+            let nb = 4 + rng.below(60);
+            let mut bm = BlockManager::new(bs, nb);
+            bm.set_cache_capacity(1 + rng.below(nb));
+            let mut live: Vec<u64> = Vec::new();
+            // chains of (blocks, tokens) released into the cache pool
+            let mut cached_chains: Vec<Vec<u32>> = Vec::new();
+            let mut next_seq = 100u64;
+            for step in 0..250 {
+                match rng.below(6) {
+                    0 | 1 => {
+                        // extend a random (possibly new) sequence
+                        let seq = if live.is_empty() || rng.below(3) == 0 {
+                            next_seq += 1;
+                            next_seq
+                        } else {
+                            live[rng.below(live.len())]
+                        };
+                        let t = bm.tokens_of(seq) + 1 + rng.below(3 * bs);
+                        let can = bm.can_extend(seq, t);
+                        let did = bm.extend(seq, t);
+                        prop_assert!(can == did, "step {step}: can {can} != did {did}");
+                        if did && !live.contains(&seq) {
+                            live.push(seq);
+                        }
+                    }
+                    2 => {
+                        // index the full blocks of a live sequence
+                        if let Some(&seq) = live.get(rng.below(live.len().max(1))) {
+                            let full = bm.tokens_of(seq) / bs;
+                            for j in 0..full {
+                                if let Some(b) = bm.block_of(seq, j) {
+                                    bm.mark_indexed(b);
+                                }
+                            }
+                        }
+                    }
+                    3 => {
+                        // release (finish / preempt): refs drop, blocks
+                        // survive in the pool or under other owners
+                        if let Some(&seq) = live.get(rng.below(live.len().max(1))) {
+                            let full = bm.tokens_of(seq) / bs;
+                            let chain: Vec<u32> = (0..full)
+                                .filter_map(|j| bm.block_of(seq, j))
+                                .collect();
+                            bm.release(seq);
+                            live.retain(|&s| s != seq);
+                            if !chain.is_empty() {
+                                cached_chains.push(chain);
+                            }
+                        }
+                    }
+                    4 => {
+                        // adopt a previously released chain (prefix hit),
+                        // guarded exactly like the scheduler does
+                        if let Some(chain) = cached_chains.pop() {
+                            let alive = chain.iter().all(|&b| bm.is_adoptable(b));
+                            if alive {
+                                next_seq += 1;
+                                bm.adopt(next_seq, &chain, chain.len() * bs);
+                                live.push(next_seq);
+                            }
+                        }
+                    }
+                    _ => {
+                        // fork a live sequence (CoW sharing of the tail)
+                        if let Some(&seq) = live.get(rng.below(live.len().max(1))) {
+                            next_seq += 1;
+                            if bm.fork(seq, next_seq) {
+                                live.push(next_seq);
+                            }
+                        }
+                    }
+                }
+                bm.take_evicted();
                 if let Err(e) = bm.check_invariants() {
                     return Err(format!("step {step}: {e}"));
                 }

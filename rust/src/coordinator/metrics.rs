@@ -14,6 +14,14 @@ pub struct ServeMetrics {
     pub preemptions: u64,
     pub kv_util: Welford,
     pub batch_size: Welford,
+    /// admissions that adopted a cached prompt prefix
+    pub prefix_hits: u64,
+    /// admissions that found no usable cached prefix (cache enabled)
+    pub prefix_misses: u64,
+    /// prefill tokens skipped by resuming from prefix-cache snapshots
+    pub saved_prefill_tokens: u64,
+    /// refcount-0 blocks parked in the prefix-cache pool (per tick)
+    pub kv_cached: Welford,
 }
 
 impl Default for ServeMetrics {
@@ -34,6 +42,20 @@ impl ServeMetrics {
             preemptions: 0,
             kv_util: Welford::new(),
             batch_size: Welford::new(),
+            prefix_hits: 0,
+            prefix_misses: 0,
+            saved_prefill_tokens: 0,
+            kv_cached: Welford::new(),
+        }
+    }
+
+    /// Prefix-cache hit rate over admissions (0 when the cache saw none).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
         }
     }
 
@@ -45,7 +67,8 @@ impl ServeMetrics {
         format!(
             "requests={} tokens_out={} throughput={:.1} tok/s  \
              ttft p50={:.1}ms p99={:.1}ms  tpot mean={:.2}ms  \
-             batch mean={:.1}  kv_util mean={:.0}%  preemptions={}",
+             batch mean={:.1}  kv_util mean={:.0}%  preemptions={}  \
+             prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}",
             self.requests_done,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -55,6 +78,10 @@ impl ServeMetrics {
             self.batch_size.mean(),
             self.kv_util.mean() * 100.0,
             self.preemptions,
+            self.prefix_hits,
+            self.prefix_misses,
+            self.saved_prefill_tokens,
+            self.kv_cached.mean(),
         )
     }
 }

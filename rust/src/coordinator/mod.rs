@@ -3,7 +3,10 @@
 //! vLLM-style composition: requests enter a bounded waiting queue
 //! ([`scheduler`]), a continuous batcher forms per-tick work under a token
 //! budget (chunked prefill + all running decodes), a paged KV block
-//! manager ([`blocks`]) gates admission and triggers preemption, and a
+//! manager ([`blocks`]) with refcounted copy-on-write sharing gates
+//! admission and triggers preemption, an automatic prefix cache
+//! ([`prefix_cache`]) lets sequences with equal prompt prefixes share
+//! blocks and skip prefill compute, and a
 //! router ([`router`]) spreads sequences across worker executors.  The
 //! Kascade plan lives in the per-sequence backend: anchor layers refresh
 //! the sequence's Top-k index state, reuse layers consume it (after head
@@ -13,6 +16,7 @@
 pub mod backends;
 pub mod blocks;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod router;
 pub mod scheduler;
 pub mod sequence;
@@ -20,6 +24,7 @@ pub mod sequence;
 pub use backends::{NativeBackend, PjrtBackend};
 pub use blocks::BlockManager;
 pub use metrics::ServeMetrics;
+pub use prefix_cache::{chain_hashes, PrefixIndex, PrefixMatch, PrefixStats};
 pub use router::Router;
 pub use scheduler::{Batch, Scheduler, WorkItem};
 pub use sequence::{Request, SeqBackend, SeqPhase, Sequence};

@@ -1,0 +1,263 @@
+//! Automatic prefix caching: a hash-of-token-block index (vLLM-style).
+//!
+//! Prompts are chunked into full blocks of `block_size` tokens; block `j`
+//! is identified by a *chain hash* folding block `j-1`'s hash with block
+//! `j`'s token contents, so equal hashes mean equal whole prefixes (up to
+//! 64-bit collisions), not just equal blocks.  The index maps chain
+//! hashes to physical block ids in the [`super::BlockManager`]; a new
+//! sequence whose prompt matches a cached chain adopts those blocks
+//! (refcount sharing) and starts prefill at its first uncached token.
+//!
+//! Entries are registered by the engine as sequences fill prompt blocks.
+//! Boundaries at which the engine also holds a backend state snapshot are
+//! flagged *resumable*; only resumable boundaries can be admission
+//! targets, because skipping prefill compute requires state to resume
+//! from.  Entries die when their physical block is evicted from the
+//! cached pool (the scheduler forwards [`super::BlockManager`] eviction
+//! logs into [`PrefixIndex::forget_block`]).
+
+use std::collections::HashMap;
+
+/// Seed for the block-0 chain hash.
+const CHAIN_SEED: u64 = 0x4B41_5343_4144_4531; // "KASCADE1"
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Chain hashes for every *full* block of `tokens`: `out[j]` covers
+/// `tokens[..(j + 1) * block_size]`.
+pub fn chain_hashes(tokens: &[u32], block_size: usize) -> Vec<u64> {
+    let n = tokens.len() / block_size;
+    let mut out = Vec::with_capacity(n);
+    let mut h = CHAIN_SEED;
+    for j in 0..n {
+        for &t in &tokens[j * block_size..(j + 1) * block_size] {
+            h = mix(h ^ (t as u64).wrapping_add(0x9E37_79B9_7F4A_7C15));
+        }
+        out.push(h);
+    }
+    out
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    block: u32,
+    /// the engine holds a state snapshot at this boundary
+    resumable: bool,
+}
+
+/// Scheduler-local counters (asserted by the scheduler's unit tests).
+/// The serving-surface source of truth is [`super::ServeMetrics`], whose
+/// hit/saved counts the engine increments only when a snapshot resume
+/// actually happens — the two can differ by design if a snapshot was
+/// capped away between adoption and resume.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// admissions that adopted a cached prefix
+    pub hits: u64,
+    /// admissions that found no usable cached prefix
+    pub misses: u64,
+    /// prefill tokens skipped via adopted prefixes
+    pub saved_tokens: u64,
+    /// index entries dropped because their block was evicted
+    pub evictions: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    entries: HashMap<u64, Entry>,
+    /// reverse map for eviction invalidation (block -> chain hash)
+    by_block: HashMap<u32, u64>,
+    /// hashes forgotten since the last drain (engine prunes snapshots)
+    invalidated: Vec<u64>,
+    pub stats: PrefixStats,
+}
+
+/// Result of a prefix match at admission.  The match covers
+/// `blocks.len() * block_size` prompt tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// physical blocks of the matched chain, in order
+    pub blocks: Vec<u32>,
+    /// chain hash at the resume boundary (keys the engine's snapshot)
+    pub hash: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Register `block` under `hash`.  First registration wins: an
+    /// existing live entry for the same content keeps its block (the
+    /// duplicate block stays private to its sequence).  Returns whether
+    /// `block` is now the indexed one.
+    pub fn register(&mut self, hash: u64, block: u32) -> bool {
+        if let Some(e) = self.entries.get(&hash) {
+            return e.block == block;
+        }
+        self.entries.insert(hash, Entry { block, resumable: false });
+        self.by_block.insert(block, hash);
+        true
+    }
+
+    /// Flag `hash` as a resume boundary (the engine stored a snapshot).
+    pub fn mark_resumable(&mut self, hash: u64) {
+        if let Some(e) = self.entries.get_mut(&hash) {
+            e.resumable = true;
+        }
+    }
+
+    /// Un-flag a resume boundary (the engine dropped its snapshot, e.g.
+    /// to bound snapshot memory); the blocks stay indexed and shareable
+    /// through deeper resumable boundaries.
+    pub fn unmark_resumable(&mut self, hash: u64) {
+        if let Some(e) = self.entries.get_mut(&hash) {
+            e.resumable = false;
+        }
+    }
+
+    pub fn is_resumable(&self, hash: u64) -> bool {
+        self.entries.get(&hash).map_or(false, |e| e.resumable)
+    }
+
+    /// Longest usable cached prefix for a prompt with chain hashes
+    /// `hashes`, considering at most `limit` blocks (the caller caps at
+    /// `(prompt_len - 1) / block_size` so at least one token is left to
+    /// compute).  `alive` reports whether a block's content still exists
+    /// (owned or cached in the block manager); dead entries found on the
+    /// walk are dropped.  Returns the deepest *resumable* boundary.
+    pub fn lookup<F: Fn(u32) -> bool>(
+        &mut self,
+        hashes: &[u64],
+        limit: usize,
+        alive: F,
+    ) -> Option<PrefixMatch> {
+        let mut chain = Vec::new();
+        let mut best: Option<(usize, u64)> = None;
+        for (j, &h) in hashes.iter().take(limit).enumerate() {
+            let e = match self.entries.get(&h) {
+                Some(e) => *e,
+                None => break,
+            };
+            if !alive(e.block) {
+                self.forget_hash(h);
+                break;
+            }
+            chain.push(e.block);
+            if e.resumable {
+                best = Some((j + 1, h));
+            }
+        }
+        best.map(|(depth, hash)| {
+            chain.truncate(depth);
+            PrefixMatch { blocks: chain, hash }
+        })
+    }
+
+    /// Drop the entry for an evicted block; returns its hash so the
+    /// engine can prune the matching snapshot.
+    pub fn forget_block(&mut self, block: u32) -> Option<u64> {
+        let h = self.by_block.get(&block).copied()?;
+        // guard against the block having been re-registered under a new
+        // hash after eviction + reallocation
+        if self.entries.get(&h).map_or(false, |e| e.block == block) {
+            self.forget_hash(h);
+            self.stats.evictions += 1;
+            Some(h)
+        } else {
+            self.by_block.remove(&block);
+            None
+        }
+    }
+
+    fn forget_hash(&mut self, h: u64) {
+        if let Some(e) = self.entries.remove(&h) {
+            self.by_block.remove(&e.block);
+            self.invalidated.push(h);
+        }
+    }
+
+    /// Drain hashes invalidated since the last call.
+    pub fn drain_invalidated(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.invalidated)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hashes_are_prefix_sensitive() {
+        let a: Vec<u32> = (0..64).collect();
+        let mut b = a.clone();
+        let ha = chain_hashes(&a, 16);
+        assert_eq!(ha.len(), 4);
+        // equal prefixes, equal hashes
+        assert_eq!(chain_hashes(&b, 16), ha);
+        // perturbing block 1 changes hashes 1.. but not hash 0
+        b[17] ^= 1;
+        let hb = chain_hashes(&b, 16);
+        assert_eq!(hb[0], ha[0]);
+        assert_ne!(hb[1], ha[1]);
+        assert_ne!(hb[2], ha[2]);
+        // partial trailing block contributes nothing
+        assert_eq!(chain_hashes(&a[..63], 16).len(), 3);
+    }
+
+    #[test]
+    fn register_lookup_roundtrip() {
+        let toks: Vec<u32> = (0..64).collect();
+        let hs = chain_hashes(&toks, 16);
+        let mut idx = PrefixIndex::new();
+        for (j, &h) in hs.iter().enumerate() {
+            assert!(idx.register(h, j as u32));
+        }
+        idx.mark_resumable(hs[2]);
+        // limit 4: deepest resumable boundary is block 3 (hash index 2)
+        let m = idx.lookup(&hs, 4, |_| true).unwrap();
+        assert_eq!(m.blocks, vec![0, 1, 2]);
+        assert_eq!(m.hash, hs[2]);
+        // limit 2: no resumable boundary within reach
+        assert!(idx.lookup(&hs, 2, |_| true).is_none());
+        // a dead block truncates the walk and drops the entry
+        let m = idx.lookup(&hs, 4, |b| b != 1);
+        assert!(m.is_none(), "resumable boundary beyond the dead block");
+        assert_eq!(idx.drain_invalidated(), vec![hs[1]]);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn first_registration_wins() {
+        let mut idx = PrefixIndex::new();
+        assert!(idx.register(42, 7));
+        assert!(!idx.register(42, 9), "duplicate content keeps the first block");
+        idx.mark_resumable(42);
+        let m = idx.lookup(&[42], 1, |_| true).unwrap();
+        assert_eq!(m.blocks, vec![7]);
+    }
+
+    #[test]
+    fn forget_block_invalidates_snapshot_hash() {
+        let mut idx = PrefixIndex::new();
+        idx.register(1, 10);
+        idx.register(2, 11);
+        assert_eq!(idx.forget_block(10), Some(1));
+        assert_eq!(idx.forget_block(10), None, "already gone");
+        assert_eq!(idx.stats.evictions, 1);
+        assert!(idx.lookup(&[1], 1, |_| true).is_none());
+    }
+}

@@ -1,17 +1,30 @@
 //! Continuous batcher: per-tick work formation under a token budget, with
-//! block-manager-gated admission and recompute-style preemption.
+//! block-manager-gated admission, recompute-style preemption and
+//! automatic prefix caching.
 //!
 //! Policy (vLLM-like):
 //! 1. every running decode gets one token (decodes are latency-critical);
 //!    if a decode cannot get its block, preempt the *youngest* running
 //!    sequence until it can;
 //! 2. remaining budget admits prefill chunks (chunked prefill), oldest
-//!    waiting first, gated on block availability and `max_running`.
+//!    waiting first, gated on block availability and `max_running`;
+//!    admission reserves blocks for the whole prompt up front, so a
+//!    half-prefilled sequence can never deadlock the pool.
+//!
+//! With `enable_prefix_cache`, admission first matches the prompt's
+//! block-chain hashes against the [`PrefixIndex`]: a hit adopts the
+//! cached blocks (refcount sharing, no KV storage) and the first prefill
+//! chunk starts at the first uncached token (no prefill compute for the
+//! shared prefix — the engine resumes from a state snapshot keyed by the
+//! matched chain hash).  Preemption drops refs, not blocks: a preempted
+//! sequence's indexed blocks park in the cached pool and are typically
+//! re-adopted wholesale when it is re-admitted.
 
 use super::blocks::BlockManager;
+use super::prefix_cache::{chain_hashes, PrefixIndex};
 use super::sequence::{SeqPhase, Sequence};
 use crate::config::ServeConfig;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 /// One unit of scheduled work.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -25,22 +38,45 @@ pub enum WorkItem {
 pub struct Batch {
     pub items: Vec<WorkItem>,
     pub preempted: Vec<u64>,
+    /// freshly admitted sequences that adopted a cached prefix:
+    /// `(seq, cached_tokens, snapshot_hash)` — the engine fast-forwards
+    /// the sequence to `cached_tokens` from the snapshot under the hash
+    pub cache_hits: Vec<(u64, usize, u64)>,
+    /// admissions that found no usable cached prefix (cache enabled)
+    pub cache_misses: u64,
     pub budget_used: usize,
 }
 
 pub struct Scheduler {
     pub cfg: ServeConfig,
     pub blocks: BlockManager,
+    pub prefix: PrefixIndex,
     pub waiting: VecDeque<u64>,
     pub running: Vec<u64>,
     /// sequences rejected at admission (queue full)
     pub rejected: u64,
+    /// per-sequence chain hashes of the prompt's full blocks
+    hashes: HashMap<u64, Vec<u64>>,
+    /// per-sequence count of prompt blocks already registered
+    registered: HashMap<u64, usize>,
 }
 
 impl Scheduler {
     pub fn new(cfg: ServeConfig) -> Self {
-        let blocks = BlockManager::new(cfg.block_size, cfg.num_blocks);
-        Self { cfg, blocks, waiting: VecDeque::new(), running: Vec::new(), rejected: 0 }
+        let mut blocks = BlockManager::new(cfg.block_size, cfg.num_blocks);
+        if cfg.enable_prefix_cache {
+            blocks.set_cache_capacity(cfg.prefix_cache_blocks);
+        }
+        Self {
+            cfg,
+            blocks,
+            prefix: PrefixIndex::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            rejected: 0,
+            hashes: HashMap::new(),
+            registered: HashMap::new(),
+        }
     }
 
     /// Admission control.  Returns false when the waiting queue is full.
@@ -53,9 +89,91 @@ impl Scheduler {
         true
     }
 
+    /// Submit with the prompt tokens so the prefix cache can match them.
+    pub fn submit_with_prompt(&mut self, seq: u64, prompt: &[u32]) -> bool {
+        if !self.submit(seq) {
+            return false;
+        }
+        self.set_prompt(seq, prompt);
+        true
+    }
+
+    /// (Re)compute `seq`'s prompt block hashes.  Must be called again
+    /// after preemption folds emitted tokens into the prompt.
+    pub fn set_prompt(&mut self, seq: u64, prompt: &[u32]) {
+        if !self.cfg.enable_prefix_cache {
+            return;
+        }
+        self.hashes.insert(seq, chain_hashes(prompt, self.cfg.block_size));
+        self.registered.insert(seq, 0);
+    }
+
     pub fn on_finished(&mut self, seq: u64) {
         self.running.retain(|&s| s != seq);
         self.blocks.release(seq);
+        self.hashes.remove(&seq);
+        self.registered.remove(&seq);
+    }
+
+    /// Register `seq`'s first `boundary / block_size` full prompt blocks
+    /// in the prefix index (engine-driven, after prefill work applies;
+    /// `boundary` is block-aligned).  With `resumable`, the boundary's
+    /// chain hash is flagged as a resume point — the engine stores a
+    /// backend state snapshot under the returned hash.
+    pub fn register_prefix(&mut self, seq: u64, boundary: usize, resumable: bool) -> Option<u64> {
+        if !self.cfg.enable_prefix_cache || boundary == 0 {
+            return None;
+        }
+        debug_assert_eq!(boundary % self.cfg.block_size, 0);
+        let nb = boundary / self.cfg.block_size;
+        let hs = self.hashes.get(&seq)?.clone();
+        if nb > hs.len() {
+            return None;
+        }
+        let start = self.registered.get(&seq).copied().unwrap_or(0);
+        for (j, &h) in hs.iter().enumerate().take(nb).skip(start) {
+            if let Some(b) = self.blocks.block_of(seq, j) {
+                if self.prefix.register(h, b) {
+                    self.blocks.mark_indexed(b);
+                }
+            }
+        }
+        let cur = self.registered.entry(seq).or_insert(0);
+        *cur = (*cur).max(nb);
+        let h = hs[nb - 1];
+        if resumable {
+            self.prefix.mark_resumable(h);
+        }
+        Some(h)
+    }
+
+    /// Whether the engine should snapshot `seq`'s state at the
+    /// block-aligned `boundary`: the boundary hash, unless it is already
+    /// a live resume point.
+    pub fn snapshot_wanted(&self, seq: u64, boundary: usize) -> Option<u64> {
+        if !self.cfg.enable_prefix_cache || boundary == 0 {
+            return None;
+        }
+        let nb = boundary / self.cfg.block_size;
+        let hs = self.hashes.get(&seq)?;
+        if nb == 0 || nb > hs.len() {
+            return None;
+        }
+        let h = hs[nb - 1];
+        if self.prefix.is_resumable(h) {
+            None
+        } else {
+            Some(h)
+        }
+    }
+
+    /// Sync index entries with block evictions; returns the chain hashes
+    /// whose engine-side snapshots must be dropped.
+    pub fn take_invalidated(&mut self) -> Vec<u64> {
+        for b in self.blocks.take_evicted() {
+            self.prefix.forget_block(b);
+        }
+        self.prefix.drain_invalidated()
     }
 
     /// Form one tick's batch.  `seqs` gives phase/size info per id.
@@ -114,7 +232,11 @@ impl Scheduler {
                 if take == 0 {
                     continue;
                 }
-                if self.blocks.extend(id, done + take) {
+                // blocks were reserved for the whole prompt at admission,
+                // so continuation never allocates (and never deadlocks
+                // half-prefilled); keep the reservation monotone
+                let reserved = self.blocks.tokens_of(id);
+                if self.blocks.extend(id, reserved.max(done + take)) {
                     batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
                     budget -= take;
                 }
@@ -134,13 +256,48 @@ impl Scheduler {
                     continue;
                 }
             };
-            debug_assert!(matches!(phase, SeqPhase::Waiting));
-            let take = self.cfg.prefill_chunk.min(prompt_len).min(budget);
-            if !self.blocks.extend(id, take) {
+            if !matches!(phase, SeqPhase::Waiting) {
+                // preempted earlier this very tick: its phase resets only
+                // once the batch applies — keep it queued (FCFS) and
+                // re-admit next tick
+                break;
+            }
+            // prefix-cache match: adopt shared blocks, start prefill at
+            // the first uncached token
+            let mut cached = 0usize;
+            let mut hit: Option<u64> = None;
+            if self.cfg.enable_prefix_cache && self.blocks.tokens_of(id) == 0 {
+                if let Some(hs) = self.hashes.get(&id) {
+                    let limit = prompt_len.saturating_sub(1) / self.cfg.block_size;
+                    let bm = &self.blocks;
+                    if let Some(m) = self.prefix.lookup(hs, limit, |b| bm.is_adoptable(b)) {
+                        cached = m.blocks.len() * self.cfg.block_size;
+                        self.blocks.adopt(id, &m.blocks, cached);
+                        hit = Some(m.hash);
+                    }
+                }
+            }
+            let take = self.cfg.prefill_chunk.min(prompt_len - cached).min(budget);
+            // reserve blocks for the WHOLE prompt up front (vLLM-style):
+            // a sequence that admits can always finish its prefill, so
+            // half-prefilled sequences can never deadlock the pool
+            if !self.blocks.extend(id, prompt_len) {
+                if hit.is_some() {
+                    // roll the adoption back (refs return to the pool)
+                    self.blocks.release(id);
+                }
                 break; // no memory: stop admitting (FCFS, no head-of-line skip)
             }
             self.waiting.pop_front();
             self.running.push(id);
+            if let Some(h) = hit {
+                batch.cache_hits.push((id, cached, h));
+                self.prefix.stats.hits += 1;
+                self.prefix.stats.saved_tokens += cached as u64;
+            } else if self.cfg.enable_prefix_cache {
+                batch.cache_misses += 1;
+                self.prefix.stats.misses += 1;
+            }
             batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
             budget -= take;
         }
@@ -150,7 +307,9 @@ impl Scheduler {
     }
 
     fn preempt(&mut self, victim: u64, batch: &mut Batch) {
+        // drop refs, not blocks: indexed blocks park in the cached pool
         self.blocks.release(victim);
+        self.registered.insert(victim, 0);
         self.running.retain(|&s| s != victim);
         self.waiting.push_front(victim);
         batch.preempted.push(victim);
@@ -158,6 +317,7 @@ impl Scheduler {
         batch.items.retain(|w| match w {
             WorkItem::Prefill { seq, .. } | WorkItem::Decode { seq } => *seq != victim,
         });
+        batch.cache_hits.retain(|&(seq, _, _)| seq != victim);
     }
 
     /// Apply a finished tick: mark sequences that completed.
@@ -190,6 +350,7 @@ mod tests {
             prefill_chunk: 128,
             queue_cap: 16,
             workers: 1,
+            ..ServeConfig::default()
         }
     }
 
@@ -268,6 +429,116 @@ mod tests {
         assert_eq!(s.rejected, 1);
     }
 
+    fn cache_cfg() -> ServeConfig {
+        ServeConfig { enable_prefix_cache: true, prefix_cache_blocks: 64, ..cfg() }
+    }
+
+    /// Drive one sequence through full prefill + registration, then
+    /// finish it, leaving its prompt blocks in the cached pool.
+    fn prefill_and_cache(
+        s: &mut Scheduler,
+        w: &mut World,
+        id: u64,
+        prompt: &[u32],
+    ) {
+        s.submit_with_prompt(id, prompt);
+        w.phases.insert(id, (SeqPhase::Waiting, prompt.len(), 0));
+        let mut done = 0;
+        while done < prompt.len() {
+            let b = s.tick(w.lookup());
+            let take = b
+                .items
+                .iter()
+                .find_map(|it| match it {
+                    WorkItem::Prefill { seq, tokens } if *seq == id => Some(*tokens),
+                    _ => None,
+                })
+                .expect("prefill scheduled");
+            done += take;
+            let ph = if done >= prompt.len() {
+                SeqPhase::Decoding
+            } else {
+                SeqPhase::Prefilling { done }
+            };
+            w.phases.insert(id, (ph, prompt.len(), done));
+            // engine-style registration at the block-aligned boundary
+            let boundary = done.min(prompt.len() - 1) / s.cfg.block_size * s.cfg.block_size;
+            s.register_prefix(id, boundary, true);
+        }
+        w.phases.remove(&id);
+        s.on_finished(id);
+    }
+
+    #[test]
+    fn admission_adopts_cached_prefix_and_skips_prefill() {
+        let mut s = Scheduler::new(cache_cfg());
+        let mut w = World { phases: HashMap::new() };
+        let prompt: Vec<u32> = (0..300).map(|i| i as u32 % 50).collect();
+        prefill_and_cache(&mut s, &mut w, 1, &prompt);
+        assert!(s.blocks.cached() > 0, "prompt blocks parked in the pool");
+        s.blocks.check_invariants().unwrap();
+
+        // same prompt again: admission must adopt the cached chain and
+        // schedule only the uncached remainder
+        s.submit_with_prompt(2, &prompt);
+        w.phases.insert(2, (SeqPhase::Waiting, prompt.len(), 0));
+        let b = s.tick(w.lookup());
+        assert_eq!(b.cache_hits.len(), 1);
+        let (seq, cached, _hash) = b.cache_hits[0];
+        assert_eq!(seq, 2);
+        // deepest registered boundary: floor((300 - 1) / 16) * 16 = 288
+        assert_eq!(cached, 288);
+        assert_eq!(s.prefix.stats.hits, 1);
+        assert_eq!(s.prefix.stats.saved_tokens, 288);
+        assert!(
+            b.items.contains(&WorkItem::Prefill { seq: 2, tokens: 12 }),
+            "only the 12 uncached tokens are prefilled: {:?}",
+            b.items
+        );
+        assert!(b.budget_used < prompt.len(), "cached tokens cost no budget");
+        s.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn different_prompt_misses() {
+        let mut s = Scheduler::new(cache_cfg());
+        let mut w = World { phases: HashMap::new() };
+        let prompt: Vec<u32> = (0..300).map(|i| i as u32 % 50).collect();
+        prefill_and_cache(&mut s, &mut w, 1, &prompt);
+        let other: Vec<u32> = (0..300).map(|i| (i as u32 % 50) + 1).collect();
+        s.submit_with_prompt(2, &other);
+        w.phases.insert(2, (SeqPhase::Waiting, other.len(), 0));
+        let b = s.tick(w.lookup());
+        assert!(b.cache_hits.is_empty());
+        assert_eq!(b.cache_misses, 1);
+        assert_eq!(s.prefix.stats.misses, 2, "seq 1's cold admission also missed");
+        assert!(b.items.contains(&WorkItem::Prefill { seq: 2, tokens: 128 }));
+    }
+
+    #[test]
+    fn eviction_under_pressure_invalidates_entries() {
+        // pool so small that new allocations must evict cached blocks
+        let mut s = Scheduler::new(ServeConfig {
+            num_blocks: 20, // 320 tokens
+            ..cache_cfg()
+        });
+        let mut w = World { phases: HashMap::new() };
+        let prompt: Vec<u32> = (0..300).map(|i| i as u32 % 50).collect();
+        prefill_and_cache(&mut s, &mut w, 1, &prompt);
+        let cached_before = s.blocks.cached();
+        assert!(cached_before >= 18);
+        // an unrelated large prompt forces eviction of the cached chain
+        let other: Vec<u32> = (0..300).map(|i| (i as u32 % 50) + 1).collect();
+        s.submit_with_prompt(2, &other);
+        w.phases.insert(2, (SeqPhase::Waiting, other.len(), 0));
+        let b = s.tick(w.lookup());
+        assert!(b.items.iter().any(|i| matches!(i, WorkItem::Prefill { seq: 2, .. })));
+        let invalidated = s.take_invalidated();
+        assert!(!invalidated.is_empty(), "evicted blocks drop their index entries");
+        assert!(s.prefix.stats.evictions > 0);
+        s.blocks.check_invariants().unwrap();
+    }
+
     #[test]
     fn prop_budget_and_block_invariants_hold() {
         check("scheduler invariants", 20, |rng| {
@@ -279,6 +550,7 @@ mod tests {
                 prefill_chunk: 1 + rng.below(128),
                 queue_cap: 64,
                 workers: 1,
+                ..ServeConfig::default()
             };
             let budget = c.token_budget;
             let mut s = Scheduler::new(c);

@@ -34,6 +34,16 @@ pub trait SeqBackend {
     fn prefill_chunk(&mut self, tokens: &[u32], last: bool) -> Option<Vec<f32>>;
     /// One decode step; returns next-token logits.
     fn decode(&mut self, token: u32) -> Vec<f32>;
+    /// Fork a copy of this backend holding exactly the first `tokens`
+    /// tokens of sequence state (`tokens <= ` what has been consumed so
+    /// far).  Powers prefix-cache snapshots: a forked copy is stored by
+    /// the engine and re-forked to fast-forward later sequences past
+    /// their cached prompt prefix.  `None` (the default) disables
+    /// prefix-cache compute reuse for this backend.
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        let _ = tokens;
+        None
+    }
 }
 
 /// A live sequence owned by a worker.
@@ -49,10 +59,17 @@ pub struct Sequence {
     pub finished_at: Option<Instant>,
     /// number of times this sequence was preempted (blocks reclaimed)
     pub preemptions: usize,
+    /// prompt length of the original request — preemption folds emitted
+    /// tokens into `req.prompt` for recompute, and everything past this
+    /// mark is response, not prompt
+    pub orig_prompt_len: usize,
+    /// prompt tokens skipped via prefix-cache resume (lifetime total)
+    pub cached_prefix: usize,
 }
 
 impl Sequence {
     pub fn new(req: Request, backend: Box<dyn SeqBackend>) -> Self {
+        let orig_prompt_len = req.prompt.len();
         Self {
             req,
             phase: SeqPhase::Waiting,
@@ -63,7 +80,33 @@ impl Sequence {
             first_token_at: None,
             finished_at: None,
             preemptions: 0,
+            orig_prompt_len,
+            cached_prefix: 0,
         }
+    }
+
+    /// Every response token emitted so far, including tokens folded into
+    /// the prompt by preemption.
+    pub fn response_tokens(&self) -> Vec<u32> {
+        let mut out = self.req.prompt[self.orig_prompt_len..].to_vec();
+        out.extend_from_slice(&self.emitted);
+        out
+    }
+
+    /// Total response tokens emitted (folded + live).
+    pub fn emitted_total(&self) -> usize {
+        self.req.prompt.len() - self.orig_prompt_len + self.emitted.len()
+    }
+
+    /// Fast-forward a waiting sequence past a cached prompt prefix: the
+    /// engine installs a backend snapshot already holding `done` tokens
+    /// and prefill resumes at the first uncached token.
+    pub fn fast_forward(&mut self, done: usize, backend: Box<dyn SeqBackend>) {
+        debug_assert_eq!(self.phase, SeqPhase::Waiting);
+        debug_assert!(done < self.req.prompt.len());
+        self.phase = SeqPhase::Prefilling { done };
+        self.backend = backend;
+        self.cached_prefix += done;
     }
 
     /// Total tokens this sequence will hold after `extra` more are added.
@@ -81,7 +124,9 @@ impl Sequence {
     }
 
     fn should_stop(&self, tok: u32) -> bool {
-        self.emitted.len() >= self.req.max_new || self.req.stop_token == Some(tok)
+        // count folded (pre-preemption) response tokens toward max_new so
+        // a preempted sequence completes with identical output
+        self.emitted_total() >= self.req.max_new || self.req.stop_token == Some(tok)
     }
 
     /// Run one unit of prefill work (`chunk` tokens).  Returns tokens consumed.

@@ -5,7 +5,8 @@
 //! 2025), built as a three-layer stack:
 //!
 //! * **L3 (this crate)** — a serving coordinator (router, continuous
-//!   batcher, paged KV cache, prefill/decode scheduler) plus the paper's
+//!   batcher, paged KV cache with refcounted copy-on-write block sharing,
+//!   automatic prefix caching, prefill/decode scheduler) plus the paper's
 //!   offline algorithms: cross-layer similarity (Eq. 3), dynamic-programming
 //!   anchor-layer selection (Algorithm 1), head remapping (Sec. 3.5) and
 //!   the serve-time Top-k index state.
@@ -21,6 +22,21 @@
 //! and **SynthLM** ([`model`]), a synthetic GQA transformer with wired
 //! retrieval circuits that makes task accuracy *really* depend on
 //! attention fidelity (DESIGN.md §2).
+//!
+//! ## Prefix caching (docs/serving.md)
+//!
+//! The coordinator implements vLLM-style automatic prefix caching for
+//! the RAG / agentic workloads Kascade targets: prompts are indexed by
+//! hash-of-token-block chains ([`coordinator::prefix_cache`]), full KV
+//! blocks are shared across sequences through refcounts with
+//! copy-on-write on divergence ([`coordinator::blocks`]), and admission
+//! starts a matching sequence at its first uncached token, resuming
+//! backend state from an engine-held snapshot
+//! ([`coordinator::SeqBackend::fork_prefix`]).  Block lifecycle:
+//! allocated -> shared -> cached -> evicted; see `docs/serving.md` for
+//! the full state machine and the prefix-cache/Kascade-index
+//! interaction (KV blocks are shared, per-sequence Top-k index state is
+//! not).
 
 pub mod attention;
 pub mod benchutil;

@@ -5,10 +5,17 @@
 //! loop is std::thread + mpsc, which on a 1-core host is the same thing.)
 
 use crate::config::ServeConfig;
-use crate::coordinator::{Request, Router, Scheduler, SeqBackend, Sequence, ServeMetrics, WorkItem};
-use std::collections::HashMap;
+use crate::coordinator::{Request, Router, Scheduler, SeqBackend, SeqPhase, Sequence, ServeMetrics, WorkItem};
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
+
+/// Bound on retained prefix-cache snapshots: each is a full backend
+/// state clone at a chunk boundary, so an uncapped engine would hold
+/// O(prompt_len / prefill_chunk) cumulative clones per distinct prefix.
+/// Oldest boundaries are dropped first and un-flagged in the index, so
+/// the scheduler simply stops matching at them.
+const MAX_SNAPSHOTS: usize = 256;
 
 /// Factory creating a fresh backend for a request (also used on
 /// preemption-recompute).  The `Send` variant crosses into worker threads
@@ -25,6 +32,8 @@ pub struct Completion {
     pub ttft_ms: f64,
     pub total_ms: f64,
     pub preemptions: usize,
+    /// prompt tokens whose prefill was skipped via the prefix cache
+    pub cached_prefix_tokens: usize,
 }
 
 /// Single-threaded serving engine: owns the scheduler and live sequences.
@@ -34,6 +43,12 @@ pub struct Engine {
     pub metrics: ServeMetrics,
     factory: LocalBackendFactory,
     finished: Vec<Completion>,
+    /// prefix-cache state snapshots, keyed by the chain hash of the
+    /// block-aligned prompt boundary they hold (see `coordinator::prefix_cache`)
+    snapshots: HashMap<u64, Box<dyn SeqBackend>>,
+    /// snapshot insertion order, for [`MAX_SNAPSHOTS`] eviction (may
+    /// contain hashes already pruned by index invalidation)
+    snapshot_order: VecDeque<u64>,
 }
 
 impl Engine {
@@ -44,13 +59,15 @@ impl Engine {
             metrics: ServeMetrics::new(),
             factory,
             finished: Vec::new(),
+            snapshots: HashMap::new(),
+            snapshot_order: VecDeque::new(),
         }
     }
 
     /// Returns false if admission control rejected the request.
     pub fn submit(&mut self, req: Request) -> bool {
         let id = req.id;
-        if !self.sched.submit(id) {
+        if !self.sched.submit_with_prompt(id, &req.prompt) {
             return false;
         }
         let backend = (self.factory)(&req);
@@ -73,13 +90,39 @@ impl Engine {
                     .map(|s| (s.phase, s.req.prompt.len(), s.req.prompt.len() + s.emitted.len()))
             })
         };
+        // drop snapshots whose index entries died with blocks evicted
+        // during batch formation — BEFORE this tick registers anything,
+        // so a recycled block can never leave a stale entry behind
+        for h in self.sched.take_invalidated() {
+            self.snapshots.remove(&h);
+        }
         for &victim in &batch.preempted {
             if let Some(s) = self.seqs.get_mut(&victim) {
                 let fresh = (self.factory)(&s.req);
                 s.preempt(fresh);
+                // emitted tokens folded into the prompt: re-hash so the
+                // re-admission can match its own cached prefix blocks
+                self.sched.set_prompt(victim, &s.req.prompt);
                 self.metrics.preemptions += 1;
             }
         }
+        // prefix-cache resumes: install snapshot state and fast-forward
+        // past the adopted blocks before any work executes
+        for &(seq, tokens, hash) in &batch.cache_hits {
+            let snap = self.snapshots.get(&hash).and_then(|b| b.fork_prefix(tokens));
+            debug_assert!(snap.is_some(), "resumable boundary without a snapshot");
+            if let Some(b) = snap {
+                if let Some(s) = self.seqs.get_mut(&seq) {
+                    s.fast_forward(tokens, b);
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.saved_prefill_tokens += tokens as u64;
+                }
+            }
+            // on a vanished snapshot the sequence stays Waiting-shaped
+            // (done = 0) and simply prefills from scratch — the adopted
+            // blocks only over-reserve, they never corrupt outputs
+        }
+        self.metrics.prefix_misses += batch.cache_misses;
         let n = batch.items.len();
         self.metrics.batch_size.add(n as f64);
         for item in batch.items {
@@ -88,6 +131,7 @@ impl Engine {
                     if let Some(s) = self.seqs.get_mut(&seq) {
                         s.step_prefill(tokens);
                     }
+                    self.register_prefix(seq);
                 }
                 WorkItem::Decode { seq } => {
                     if let Some(s) = self.seqs.get_mut(&seq) {
@@ -100,8 +144,53 @@ impl Engine {
             }
         }
         self.metrics.kv_util.add(self.sched.blocks.utilization());
+        self.metrics.kv_cached.add(self.sched.blocks.cached() as f64);
         self.retire();
         n
+    }
+
+    /// After prefill work lands for `seq`, publish its newly completed
+    /// full prompt blocks in the prefix index and store a backend state
+    /// snapshot at the block-aligned boundary so later sequences with
+    /// the same prefix can resume there.
+    fn register_prefix(&mut self, seq: u64) {
+        if !self.sched.cfg.enable_prefix_cache {
+            return;
+        }
+        let s = match self.seqs.get(&seq) {
+            Some(s) => s,
+            None => return,
+        };
+        let done = match s.phase {
+            SeqPhase::Prefilling { done } => done,
+            SeqPhase::Decoding | SeqPhase::Finished => s.req.prompt.len(),
+            SeqPhase::Waiting => return,
+        };
+        let bs = self.sched.cfg.block_size;
+        let plen = s.req.prompt.len();
+        // cap below the prompt end: the final token is always computed
+        // fresh so the resumed sequence produces first-token logits
+        let boundary = done.min(plen.saturating_sub(1)) / bs * bs;
+        if boundary == 0 {
+            return;
+        }
+        if let Some(hash) = self.sched.snapshot_wanted(seq, boundary) {
+            if let Some(snap) = s.backend.fork_prefix(boundary) {
+                self.sched.register_prefix(seq, boundary, true);
+                if self.snapshots.insert(hash, snap).is_none() {
+                    self.snapshot_order.push_back(hash);
+                }
+                while self.snapshots.len() > MAX_SNAPSHOTS {
+                    let old = match self.snapshot_order.pop_front() {
+                        Some(h) => h,
+                        None => break,
+                    };
+                    if self.snapshots.remove(&old).is_some() {
+                        self.sched.prefix.unmark_resumable(old);
+                    }
+                }
+            }
+        }
     }
 
     fn retire(&mut self) {
@@ -122,7 +211,9 @@ impl Engine {
             self.metrics.requests_done += 1;
             self.finished.push(Completion {
                 id,
-                tokens: s.emitted.clone(),
+                // includes tokens folded into the prompt by preemption —
+                // a preempted request completes with identical output
+                tokens: s.response_tokens(),
                 ttft_ms: s
                     .first_token_at
                     .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
@@ -132,6 +223,7 @@ impl Engine {
                     .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
                     .unwrap_or(0.0),
                 preemptions: s.preemptions,
+                cached_prefix_tokens: s.cached_prefix,
             });
         }
     }
@@ -247,6 +339,7 @@ mod tests {
             prefill_chunk: 64,
             queue_cap: 64,
             workers: 1,
+            ..ServeConfig::default()
         }
     }
 

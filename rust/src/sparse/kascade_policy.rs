@@ -133,6 +133,10 @@ impl SparsePolicy for KascadePolicy {
     fn sparse_prefill(&self) -> bool {
         true
     }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(KascadePolicy::new(self.plan.clone())))
+    }
 }
 
 /// Ablation variant (Sec. 3.5 / Tables 1-2 "All Heads Pooled"): one shared
@@ -267,6 +271,10 @@ impl SparsePolicy for KascadeAllPooledPolicy {
 
     fn sparse_prefill(&self) -> bool {
         true
+    }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(KascadeAllPooledPolicy::new(self.plan.clone())))
     }
 }
 

@@ -69,6 +69,14 @@ impl SparsePolicy for LessIsMorePolicy {
             None => Selection::Dense,
         }
     }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(LessIsMorePolicy::new(
+            self.n_layers,
+            self.recompute_layers.clone(),
+            self.rule,
+        )))
+    }
 }
 
 #[cfg(test)]

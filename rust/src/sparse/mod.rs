@@ -81,6 +81,17 @@ pub trait SparsePolicy: Send {
     fn sparse_prefill(&self) -> bool {
         false
     }
+
+    /// Fork a fresh policy with the same configuration but cleared
+    /// per-sequence state.  Powers prefix-cache snapshots: KV blocks are
+    /// shared across sequences, but Top-k index state (anchor-layer
+    /// selections, reuse-layer caches) is per-sequence and must NOT leak
+    /// through a shared snapshot — the resumed sequence rebuilds its own.
+    /// `None` disables prefix-cache compute reuse for backends driven by
+    /// this policy.
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        None
+    }
 }
 
 /// Always-dense baseline.
@@ -95,6 +106,10 @@ impl SparsePolicy for DensePolicy {
 
     fn decode(&mut self, _: usize, _: &[f32], _: &KvCache, _: usize, _: &mut CostTracker) -> Selection {
         Selection::Dense
+    }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(DensePolicy))
     }
 }
 
@@ -165,6 +180,10 @@ impl SparsePolicy for OraclePolicy {
 
     fn sparse_prefill(&self) -> bool {
         true
+    }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(OraclePolicy { rule: self.rule, layer0_dense: self.layer0_dense }))
     }
 }
 

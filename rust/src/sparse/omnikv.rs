@@ -86,6 +86,12 @@ impl SparsePolicy for OmniKvPolicy {
             None => Selection::Dense,
         }
     }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        let mut p = OmniKvPolicy::new(self.n_layers, self.filter_layers.clone(), self.rule);
+        p.refresh_every = self.refresh_every;
+        Some(Box::new(p))
+    }
 }
 
 #[cfg(test)]

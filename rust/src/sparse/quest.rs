@@ -85,6 +85,10 @@ impl SparsePolicy for QuestPolicy {
         }
         Selection::Sparse(idx)
     }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(QuestPolicy { rule: self.rule, dense_layers: self.dense_layers }))
+    }
 }
 
 #[cfg(test)]

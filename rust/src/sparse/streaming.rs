@@ -67,6 +67,10 @@ impl SparsePolicy for StreamingLlmPolicy {
     fn sparse_prefill(&self) -> bool {
         true
     }
+
+    fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
+        Some(Box::new(StreamingLlmPolicy { window_frac: self.window_frac, sinks: self.sinks }))
+    }
 }
 
 #[cfg(test)]

@@ -210,6 +210,53 @@ impl WorkloadGen {
         Task { prompt: toks, expect, max_new: hops * 3 + 8, hops }
     }
 
+    /// Shared-prefix RAG suite (the prefix-cache workload): `n` requests
+    /// over one shared ~`shared_ctx`-token document (system prompt +
+    /// retrieved corpus with `n` planted facts), each with a unique
+    /// ~`unique_ctx`-token tail and a query for its own fact in the
+    /// shared document.  All prompts share an identical token prefix of
+    /// `shared_ctx` tokens, so with prefix caching enabled only the
+    /// first request pays the document prefill.
+    pub fn rag_suite(&mut self, n: usize, shared_ctx: usize, unique_ctx: usize) -> Vec<Task> {
+        let lay = self.lay;
+        assert!(2 * n < lay.n_entities, "too many requests for the entity pool");
+        let mut doc = vec![VocabLayout::BOS];
+        self.filler_run(&mut doc, shared_ctx.saturating_sub(1), false);
+        let es = self.distinct_entities(2 * n);
+        let mut facts = Vec::with_capacity(n);
+        let mut used = Vec::new();
+        // interior positions [1, hi): the retry loop below needs at
+        // least n distinct ones or it would never terminate
+        let hi = doc.len().saturating_sub(16).max(2);
+        assert!(n < hi, "shared document too small for {n} distinct facts");
+        for i in 0..n {
+            let (a, b) = (es[2 * i], es[2 * i + 1]);
+            // plant at a distinct interior position (never clobber an
+            // earlier fact, never in the final guard region)
+            let mut pos = 1 + self.rng.below(hi - 1);
+            while used.contains(&pos) {
+                pos = 1 + self.rng.below(hi - 1);
+            }
+            used.push(pos);
+            doc[pos] = lay.pair_tok(a, b);
+            facts.push((a, b));
+        }
+        (0..n)
+            .map(|i| {
+                let mut toks = doc.clone();
+                self.filler_run(&mut toks, unique_ctx, false);
+                toks.push(VocabLayout::QUERY);
+                toks.push(lay.key_tok(facts[i].0));
+                Task {
+                    prompt: toks,
+                    expect: vec![lay.value_tok(facts[i].1)],
+                    max_new: 2,
+                    hops: 1,
+                }
+            })
+            .collect()
+    }
+
     /// Calibration prompt (MuSiQue substitute): mixed retrieval content.
     pub fn dev_prompt(&mut self, ctx: usize) -> Vec<u32> {
         let lay = self.lay;
@@ -304,6 +351,29 @@ mod tests {
         assert!(grade(&t, &[5, 6, 9]));
         assert!(!grade(&t, &[5]));
         assert!(!grade(&t, &[6, 5]));
+    }
+
+    #[test]
+    fn rag_suite_shares_an_identical_prefix() {
+        let s = spec();
+        let mut g = WorkloadGen::new(&s, 7);
+        let tasks = g.rag_suite(4, 256, 32);
+        assert_eq!(tasks.len(), 4);
+        let shared = tasks[0].prompt[..256].to_vec();
+        for t in &tasks {
+            assert_eq!(&t.prompt[..256], &shared[..], "identical shared document");
+            assert!(t.prompt.len() >= 256 + 32);
+            assert_eq!(t.prompt[t.prompt.len() - 2], VocabLayout::QUERY);
+            // the queried fact lives in the shared document
+            let key = t.prompt[t.prompt.len() - 1];
+            let i = (key - 16) as usize;
+            let j = g.lay.value_entity(t.expect[0]).unwrap();
+            assert_eq!(shared.iter().filter(|&&x| x == g.lay.pair_tok(i, j)).count(), 1);
+        }
+        // each request queries a distinct fact
+        let keys: std::collections::HashSet<u32> =
+            tasks.iter().map(|t| *t.prompt.last().unwrap()).collect();
+        assert_eq!(keys.len(), 4);
     }
 
     #[test]

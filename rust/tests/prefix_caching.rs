@@ -1,0 +1,165 @@
+//! Prefix-cache end-to-end properties on the SynthLM backend.
+//!
+//! * cache on vs. off must produce byte-identical per-request outputs
+//!   (dense attention is bit-exact under any chunk split, and a resumed
+//!   sequence's snapshot state is the very floats the donor computed);
+//! * cache on must do strictly fewer prefill tokens;
+//! * Kascade's per-sequence Top-k index state must not leak through
+//!   shared KV blocks — resumed sequences rebuild their own.
+
+use kascade::config::{ServeConfig, TopKRule};
+use kascade::coordinator::{NativeBackend, Request, SeqBackend};
+use kascade::kascade::KascadePlan;
+use kascade::model::{Model, SynthSpec};
+use kascade::server::{Completion, Engine, LocalBackendFactory};
+use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
+use kascade::workload::{grade, Task, WorkloadGen};
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn spec() -> SynthSpec {
+    let mut s = SynthSpec::eval_base(11);
+    s.cfg.n_layers = 4;
+    s.block_starts = vec![1];
+    s
+}
+
+/// Wraps a backend to count prefilled tokens (compute actually done).
+struct Counting {
+    inner: Box<dyn SeqBackend>,
+    prefilled: Rc<Cell<u64>>,
+}
+
+impl SeqBackend for Counting {
+    fn prefill_chunk(&mut self, tokens: &[u32], last: bool) -> Option<Vec<f32>> {
+        self.prefilled.set(self.prefilled.get() + tokens.len() as u64);
+        self.inner.prefill_chunk(tokens, last)
+    }
+
+    fn decode(&mut self, token: u32) -> Vec<f32> {
+        self.inner.decode(token)
+    }
+
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        let inner = self.inner.fork_prefix(tokens)?;
+        Some(Box::new(Counting { inner, prefilled: self.prefilled.clone() }))
+    }
+}
+
+fn factory(
+    model: Arc<Model>,
+    cap: usize,
+    counter: Rc<Cell<u64>>,
+    plan: Option<KascadePlan>,
+) -> LocalBackendFactory {
+    Box::new(move |_req| {
+        let policy: Box<dyn SparsePolicy> = match &plan {
+            Some(p) => Box::new(KascadePolicy::new(p.clone())),
+            None => Box::new(DensePolicy),
+        };
+        Box::new(Counting {
+            inner: Box::new(NativeBackend::new(model.clone(), cap, policy)),
+            prefilled: counter.clone(),
+        })
+    })
+}
+
+fn cfg(enable: bool) -> ServeConfig {
+    ServeConfig {
+        block_size: 16,
+        num_blocks: 512, // roomy: no preemption noise in these tests
+        max_running: 4,
+        token_budget: 256,
+        prefill_chunk: 128,
+        queue_cap: 64,
+        workers: 1,
+        enable_prefix_cache: enable,
+        prefix_cache_blocks: 256,
+    }
+}
+
+/// Serve `tasks` one after another (steady-state RAG shape) and return
+/// (completions by id, prefill tokens actually computed, engine).
+fn serve(tasks: &[Task], enable: bool, plan: Option<KascadePlan>) -> (Vec<Completion>, u64, Engine) {
+    let model = Arc::new(spec().build());
+    let cap = tasks.iter().map(|t| t.prompt.len() + t.max_new + 8).max().unwrap();
+    let counter = Rc::new(Cell::new(0u64));
+    let mut engine = Engine::new(cfg(enable), factory(model, cap, counter.clone(), plan));
+    let mut done = Vec::new();
+    for (id, t) in tasks.iter().enumerate() {
+        assert!(engine.submit(Request {
+            id: id as u64,
+            prompt: t.prompt.clone(),
+            max_new: t.max_new,
+            stop_token: None,
+        }));
+        done.extend(engine.run_to_completion());
+    }
+    done.sort_by_key(|c| c.id);
+    (done, counter.get(), engine)
+}
+
+#[test]
+fn cache_on_equals_cache_off_with_strictly_fewer_prefill_tokens() {
+    let mut gen = WorkloadGen::new(&spec(), 0xA11CE);
+    let tasks = gen.rag_suite(4, 400, 48);
+    let (off, prefilled_off, off_engine) = serve(&tasks, false, None);
+    let (on, prefilled_on, on_engine) = serve(&tasks, true, None);
+    assert_eq!(off.len(), 4);
+    assert_eq!(on.len(), 4);
+    for (a, b) in off.iter().zip(&on) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged with caching on", a.id);
+    }
+    // dense SynthLM retrieval is exact: the shared-document facts are
+    // recovered correctly in both runs
+    for (t, c) in tasks.iter().zip(&on) {
+        assert!(grade(t, &c.tokens), "request answered incorrectly");
+    }
+    assert!(
+        prefilled_on < prefilled_off,
+        "cache on must compute fewer prefill tokens ({prefilled_on} vs {prefilled_off})"
+    );
+    let m = &on_engine.metrics;
+    assert_eq!(m.prefix_hits, 3, "every follower hits");
+    assert_eq!(m.prefix_misses, 1, "only the first request misses");
+    // deepest resumable boundary below the 400-token shared prefix is
+    // the 384-token chunk boundary
+    assert_eq!(m.saved_prefill_tokens, 3 * 384);
+    assert_eq!(prefilled_off - prefilled_on, 3 * 384);
+    assert_eq!(off_engine.metrics.prefix_hits, 0);
+    for c in &on[1..] {
+        assert_eq!(c.cached_prefix_tokens, 384);
+    }
+    on_engine.sched.blocks.check_invariants().unwrap();
+    assert!(on_engine.sched.blocks.cached() > 0, "prefix blocks retained");
+}
+
+#[test]
+fn kascade_index_state_stays_per_sequence_across_shared_blocks() {
+    // the composition the tentpole must get right: KV blocks are shared
+    // through the prefix cache while reuse-layer Top-k state stays
+    // per-sequence.  Identical requests resumed from the same snapshot
+    // take identical compute paths, so their outputs must agree exactly.
+    let s = spec();
+    let plan = KascadePlan::from_anchors(
+        s.cfg.n_layers,
+        s.cfg.n_kv_heads,
+        vec![0, 2],
+        TopKRule::new(0.2, 48),
+    );
+    let mut gen = WorkloadGen::new(&s, 0xBEE);
+    let t = gen.rag_suite(1, 400, 32).remove(0);
+    let plen = t.prompt.len() as u64;
+    let tasks = vec![t.clone(), t.clone(), t];
+    let (done, prefilled, engine) = serve(&tasks, true, Some(plan));
+    assert_eq!(done.len(), 3);
+    let m = &engine.metrics;
+    assert_eq!(m.prefix_hits, 2);
+    assert!(prefilled < 3 * plen, "followers skipped shared prefill");
+    assert_eq!(done[1].tokens, done[2].tokens, "identical resumed requests must agree");
+    assert_eq!(done[1].cached_prefix_tokens, done[2].cached_prefix_tokens);
+    assert!(done[1].cached_prefix_tokens >= 384);
+    engine.sched.blocks.check_invariants().unwrap();
+}

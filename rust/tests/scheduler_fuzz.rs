@@ -1,0 +1,339 @@
+//! Scheduler / engine fuzz (seeded, deterministic): random
+//! submit/tick/finish/preempt streams with prefix caching enabled.
+//!
+//! Properties:
+//! * a tick never exceeds `token_budget` and never schedules the same
+//!   sequence twice in one batch;
+//! * block-manager invariants survive arbitrary interleavings of
+//!   admission, cache adoption, preemption and eviction;
+//! * every preempted sequence is eventually re-admitted and completes;
+//! * under heavy preemption + prefix caching, every request completes
+//!   with output tokens identical to an unpressured run.
+
+use kascade::config::ServeConfig;
+use kascade::coordinator::{Request, Scheduler, SeqBackend, SeqPhase, WorkItem};
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{Completion, Engine};
+use kascade::tensor::Rng;
+use std::collections::{HashMap, HashSet};
+
+#[test]
+fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
+    check("scheduler fuzz", 15, |rng| {
+        let bs = 2 + rng.below(14);
+        let c = ServeConfig {
+            block_size: bs,
+            num_blocks: 12 + rng.below(40),
+            max_running: 1 + rng.below(6),
+            token_budget: 8 + rng.below(128),
+            prefill_chunk: 1 + rng.below(64),
+            queue_cap: 1024,
+            workers: 1,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 8 + rng.below(32),
+        };
+        let budget = c.token_budget;
+        let mut s = Scheduler::new(c);
+        // (phase, prompt_len, stored_tokens) as the engine would report
+        let mut phases: HashMap<u64, (SeqPhase, usize, usize)> = HashMap::new();
+        let mut prompts: HashMap<u64, Vec<u32>> = HashMap::new();
+        // lifetime response tokens per sequence (engine's emitted_total)
+        let mut resp: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0u64;
+        let mut preempted_ever: HashSet<u64> = HashSet::new();
+        let mut readmitted: HashSet<u64> = HashSet::new();
+
+        let one_tick = |s: &mut Scheduler,
+                            phases: &mut HashMap<u64, (SeqPhase, usize, usize)>,
+                            prompts: &mut HashMap<u64, Vec<u32>>,
+                            resp: &mut HashMap<u64, usize>,
+                            preempted_ever: &mut HashSet<u64>,
+                            readmitted: &mut HashSet<u64>,
+                            rng: &mut Rng,
+                            drain: bool,
+                            step: usize|
+         -> Result<usize, String> {
+            let batch = {
+                let ph = phases.clone();
+                s.tick(move |id| ph.get(&id).copied())
+            };
+            // engine-style: drain eviction invalidations before this
+            // tick's registrations
+            s.take_invalidated();
+            prop_assert!(
+                batch.budget_used <= budget,
+                "step {step}: budget {} > {budget}",
+                batch.budget_used
+            );
+            let mut seen = HashSet::new();
+            for it in &batch.items {
+                let id = match it {
+                    WorkItem::Prefill { seq, .. } | WorkItem::Decode { seq } => *seq,
+                };
+                prop_assert!(seen.insert(id), "step {step}: duplicate work for {id}");
+            }
+            s.blocks.check_invariants().map_err(|e| format!("step {step}: {e}"))?;
+            // engine-style cache-hit fast-forward
+            for &(id, cached, _hash) in &batch.cache_hits {
+                let e = phases.get_mut(&id).ok_or("hit for unknown seq")?;
+                prop_assert!(
+                    matches!(e.0, SeqPhase::Waiting),
+                    "step {step}: cache hit on non-waiting {id}"
+                );
+                prop_assert!(cached < e.1, "step {step}: cached {cached} >= prompt {}", e.1);
+                *e = (SeqPhase::Prefilling { done: cached }, e.1, cached);
+                if preempted_ever.contains(&id) {
+                    readmitted.insert(id);
+                }
+            }
+            let n = batch.items.len();
+            // apply work
+            for it in &batch.items {
+                match *it {
+                    WorkItem::Prefill { seq, tokens } => {
+                        let (ph, plen, tot) = phases[&seq];
+                        let done = match ph {
+                            SeqPhase::Waiting => 0,
+                            SeqPhase::Prefilling { done } => done,
+                            _ => continue,
+                        };
+                        if preempted_ever.contains(&seq) {
+                            readmitted.insert(seq);
+                        }
+                        let nd = done + tokens;
+                        let nph = if nd >= plen {
+                            SeqPhase::Decoding
+                        } else {
+                            SeqPhase::Prefilling { done: nd }
+                        };
+                        phases.insert(seq, (nph, plen, tot + tokens));
+                        // engine-style registration; resumable models
+                        // "the backend produced a snapshot here"
+                        let boundary = nd.min(plen - 1) / bs * bs;
+                        if boundary > 0 {
+                            s.register_prefix(seq, boundary, drain || rng.below(2) == 0);
+                        }
+                    }
+                    WorkItem::Decode { seq } => {
+                        let (_, plen, tot) = phases[&seq];
+                        let r = resp.entry(seq).or_insert(0);
+                        *r += 1;
+                        // bounded responses keep recompute-preemption
+                        // footprints admissible (mirrors max_new)
+                        if *r >= 4 || (!drain && rng.below(6) == 0) {
+                            phases.remove(&seq);
+                            s.on_finished(seq);
+                        } else {
+                            phases.insert(seq, (SeqPhase::Decoding, plen, tot + 1));
+                        }
+                    }
+                }
+            }
+            // recompute-style preemption: emitted folds into the prompt
+            for &p in &batch.preempted {
+                preempted_ever.insert(p);
+                if let Some(e) = phases.get_mut(&p) {
+                    let new_len = e.2.max(e.1);
+                    let prompt = prompts.get_mut(&p).ok_or("preempt unknown prompt")?;
+                    while prompt.len() < new_len {
+                        prompt.push(7); // synthetic emitted token
+                    }
+                    prompt.truncate(new_len.max(e.1));
+                    *e = (SeqPhase::Waiting, prompt.len(), 0);
+                    s.set_prompt(p, prompt);
+                }
+            }
+            Ok(n)
+        };
+
+        for step in 0..120 {
+            for _ in 0..rng.below(3) {
+                next += 1;
+                // tiny token alphabet -> organic prefix collisions
+                let len = 1 + rng.below(6 * bs);
+                let prompt: Vec<u32> = (0..len).map(|_| rng.below(3) as u32).collect();
+                s.submit_with_prompt(next, &prompt);
+                phases.insert(next, (SeqPhase::Waiting, len, 0));
+                prompts.insert(next, prompt);
+            }
+            one_tick(
+                &mut s,
+                &mut phases,
+                &mut prompts,
+                &mut resp,
+                &mut preempted_ever,
+                &mut readmitted,
+                rng,
+                false,
+                step,
+            )?;
+        }
+        // drain: no new arrivals; every sequence must complete
+        let mut idle_ticks = 0usize;
+        let mut step = 120usize;
+        while !phases.is_empty() {
+            step += 1;
+            let n = one_tick(
+                &mut s,
+                &mut phases,
+                &mut prompts,
+                &mut resp,
+                &mut preempted_ever,
+                &mut readmitted,
+                rng,
+                true,
+                step,
+            )?;
+            idle_ticks = if n == 0 { idle_ticks + 1 } else { 0 };
+            prop_assert!(
+                idle_ticks < 100,
+                "drain stalled with {} sequences live",
+                phases.len()
+            );
+            prop_assert!(step < 20_000, "drain did not converge");
+        }
+        prop_assert!(s.running.is_empty(), "scheduler retains finished sequences");
+        for p in &preempted_ever {
+            prop_assert!(readmitted.contains(p), "preempted seq {p} never re-admitted");
+        }
+        s.blocks.check_invariants().map_err(|e| format!("after drain: {e}"))?;
+        Ok(())
+    });
+}
+
+/// Deterministic backend whose logits depend only on every token it has
+/// consumed — recompute after preemption or prefix-cache resume must
+/// reproduce the continuation exactly.
+struct EchoBackend {
+    seen: Vec<u32>,
+    vocab: usize,
+}
+
+impl EchoBackend {
+    fn new(vocab: usize) -> Self {
+        Self { seen: Vec::new(), vocab }
+    }
+
+    fn logits(&self) -> Vec<f32> {
+        let mut h = 0xABCD_EF01_2345_6789u64;
+        for &t in &self.seen {
+            h = h.wrapping_add(t as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 31;
+        }
+        let mut l = vec![0.0; self.vocab];
+        l[(h % self.vocab as u64) as usize] = 1.0;
+        l
+    }
+}
+
+impl SeqBackend for EchoBackend {
+    fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+        self.seen.extend_from_slice(tokens);
+        Some(self.logits())
+    }
+
+    fn decode(&mut self, token: u32) -> Vec<f32> {
+        self.seen.push(token);
+        self.logits()
+    }
+
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        if tokens > self.seen.len() {
+            return None;
+        }
+        Some(Box::new(EchoBackend { seen: self.seen[..tokens].to_vec(), vocab: self.vocab }))
+    }
+}
+
+fn echo_requests() -> Vec<Request> {
+    let mut rng = Rng::new(42);
+    // block-aligned prompts whose decode phase must cross block
+    // boundaries (prompt + 20 > 64 tokens): any two concurrently running
+    // sequences need 10+ blocks of an 8-block pool, so the tight run is
+    // structurally guaranteed to preempt.  Half the requests share a
+    // 32-token prefix so cache adoption and preemption interleave.
+    let shared: Vec<u32> = (0..32).map(|_| rng.below(32) as u32).collect();
+    (0..8u64)
+        .map(|id| {
+            let len = 48 + 16 * rng.below(2); // 48 or 64
+            let mut prompt = if id % 2 == 0 { shared.clone() } else { Vec::new() };
+            while prompt.len() < len {
+                prompt.push(rng.below(32) as u32);
+            }
+            Request { id, prompt, max_new: 20, stop_token: None }
+        })
+        .collect()
+}
+
+fn run_engine(cfg: ServeConfig, reqs: &[Request]) -> (Vec<Completion>, u64, u64) {
+    let mut engine = Engine::new(
+        cfg,
+        Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+    );
+    // serve the first request alone so its prefix is registered (and
+    // still cached) before the shared-prefix followers contend for it
+    let mut done = Vec::new();
+    assert!(engine.submit(reqs[0].clone()));
+    done.extend(engine.run_to_completion());
+    for r in &reqs[1..] {
+        assert!(engine.submit(r.clone()));
+    }
+    done.extend(engine.run_to_completion());
+    done.sort_by_key(|c| c.id);
+    engine.sched.blocks.check_invariants().unwrap();
+    (done, engine.metrics.preemptions, engine.metrics.prefix_hits)
+}
+
+#[test]
+fn preempted_and_resumed_requests_complete_with_identical_outputs() {
+    let reqs = echo_requests();
+    // roomy baseline: no preemption, no caching
+    let (baseline, base_preempts, _) = run_engine(
+        ServeConfig {
+            block_size: 16,
+            num_blocks: 256,
+            max_running: 8,
+            token_budget: 128,
+            prefill_chunk: 32,
+            queue_cap: 64,
+            workers: 1,
+            ..ServeConfig::default()
+        },
+        &reqs,
+    );
+    assert_eq!(base_preempts, 0, "baseline must be unpressured");
+    assert_eq!(baseline.len(), 8);
+    for c in &baseline {
+        assert_eq!(c.tokens.len(), 20);
+    }
+    // tight memory + prefix caching: decode OOM forces preemption while
+    // followers adopt cached prefixes
+    let (tight, tight_preempts, tight_hits) = run_engine(
+        ServeConfig {
+            block_size: 16,
+            num_blocks: 8, // 128 tokens for ~450 tokens of demand
+            max_running: 8,
+            token_budget: 128,
+            prefill_chunk: 32,
+            queue_cap: 64,
+            workers: 1,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 4,
+        },
+        &reqs,
+    );
+    assert!(tight_preempts > 0, "scenario must actually preempt");
+    assert!(tight_hits > 0, "shared prefixes must actually hit the cache");
+    assert_eq!(tight.len(), 8, "every request completes despite preemption");
+    for (a, b) in baseline.iter().zip(&tight) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {} output changed under preemption + caching",
+            a.id
+        );
+        assert_eq!(b.tokens.len(), 20);
+    }
+}
