@@ -388,6 +388,10 @@ pub fn prefill_pooled_scores(
     let kv_len = (start + tile).min(cache.len);
     let sc = scale(d);
     let inv = 1.0 / (tile * g) as f32;
+    // causal triangular work: row r reads min(start + r + 1, kv_len) keys
+    // per (head, group) query — NOT tile * kv_len (Fig. 8 / Table 3 cost
+    // ratios were overcounting the anchor pass before this was fixed)
+    let row_reads: u64 = (0..tile).map(|r| (start + r + 1).min(kv_len) as u64).sum();
     let mut pooled = vec![vec![0.0f32; kv_len]; n_kv];
     let mut s = vec![0.0f32; kv_len];
     for h in 0..n_kv {
@@ -405,7 +409,7 @@ pub fn prefill_pooled_scores(
                 }
             }
         }
-        cost.score_key_reads += (g * tile * kv_len) as u64;
+        cost.score_key_reads += g as u64 * row_reads;
     }
     pooled
 }
@@ -428,17 +432,26 @@ pub fn prefill_sparse_tile(
     for r in 0..tile {
         let qpos = start + r;
         for (h, hidx) in idx.iter().enumerate() {
-            let mut s = Vec::with_capacity(hidx.len());
-            let mut kept: Vec<u32> = Vec::with_capacity(hidx.len());
+            let mut s = Vec::with_capacity(hidx.len() + r + 1);
+            let mut kept: Vec<u32> = Vec::with_capacity(hidx.len() + r + 1);
+            // which of the tile's own (causally visible) positions the
+            // index set already covers: offset j <=> position start + j
+            let mut own = vec![false; r + 1];
             for &p in hidx {
                 if (p as usize) <= qpos {
                     kept.push(p);
+                    if (p as usize) >= start {
+                        own[p as usize - start] = true;
+                    }
                 }
             }
-            // every query must at least see itself (guaranteed: the rolling
-            // top-k always includes the tile's own positions? no — clamp):
-            if kept.is_empty() {
-                kept.push(qpos as u32);
+            // rolling-Top-k guarantee (paper Sec. 4.1): a tile's own
+            // positions are always visible to its queries, even when the
+            // anchor's indices all land in this query's causal future
+            for (j, seen) in own.iter().enumerate() {
+                if !seen {
+                    kept.push((start + j) as u32);
+                }
             }
             for qi in 0..g {
                 let hq = h * g + qi;
@@ -658,6 +671,77 @@ mod tests {
                 assert!((out[hq * d + i] - cache.val(0, 0)[i]).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn prefill_sparse_always_sees_tile_own_positions() {
+        // all anchor indices land in the tile's future: every query must
+        // still see the tile's own causally-visible range (Sec. 4.1), not
+        // collapse to self-only attention
+        let mut r = Rng::new(12);
+        let (n_kv, g, d, tile, start) = (1usize, 2usize, 8usize, 8usize, 8usize);
+        let n_q = n_kv * g;
+        let mut cache = KvCache::new(n_kv, d, 16);
+        for _ in 0..16 {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            cache.push(&k, &v);
+        }
+        let mut qs = vec![0.0; tile * n_q * d];
+        r.fill_normal(&mut qs, 1.0);
+        // anchor indices all at the end of the tile (future for early rows)
+        let idx = vec![vec![12u32, 13, 14, 15]];
+        let mut out = vec![0.0; tile * n_q * d];
+        let mut c = CostTracker::default();
+        prefill_sparse_tile(&qs, start, &cache, g, &idx, &mut out, &mut c);
+        for row in 0..tile {
+            let qpos = start + row;
+            // expected: attention over the union {idx <= qpos} u {start..=qpos},
+            // which here is exactly the tile's own visible range
+            let expect_idx: Vec<Vec<u32>> = vec![(start as u32..=qpos as u32).collect()];
+            let mut want = vec![0.0; n_q * d];
+            decode_sparse(
+                &qs[row * n_q * d..(row + 1) * n_q * d],
+                &cache,
+                g,
+                &expect_idx,
+                &mut want,
+                &mut CostTracker::default(),
+            );
+            for (a, b) in out[row * n_q * d..(row + 1) * n_q * d].iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "row {row}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_pooled_cost_matches_dense_tile_pass() {
+        // the anchor estimation pass reads exactly the causal triangle of
+        // keys — its accounted cost must equal the dense tile pass's
+        let mut r = Rng::new(13);
+        let (n_kv, g, d, tile, start) = (2usize, 2usize, 8usize, 16usize, 32usize);
+        let n_q = n_kv * g;
+        let mut cache = KvCache::new(n_kv, d, 64);
+        for _ in 0..48 {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            cache.push(&k, &v);
+        }
+        let mut qs = vec![0.0; tile * n_q * d];
+        r.fill_normal(&mut qs, 1.0);
+        let mut c_pool = CostTracker::default();
+        let _ = prefill_pooled_scores(&qs, start, &cache, g, &mut c_pool);
+        let mut c_dense = CostTracker::default();
+        let mut out = vec![0.0; tile * n_q * d];
+        prefill_dense_tile(&qs, start, &cache, g, &mut out, &mut c_dense);
+        assert_eq!(c_pool.score_key_reads, c_dense.score_key_reads);
+        // triangular sum, explicitly: sum_r min(start + r + 1, kv_len)
+        let want: u64 = (0..tile).map(|r| (start + r + 1).min(48) as u64).sum();
+        assert_eq!(c_pool.score_key_reads, (n_kv * g) as u64 * want);
     }
 
     #[test]

@@ -123,6 +123,11 @@ pub struct ServeConfig {
     /// Max refcount-0 blocks retained in the prefix-cache pool before
     /// LRU eviction (only meaningful with `enable_prefix_cache`).
     pub prefix_cache_blocks: usize,
+    /// Execute each tick's decodes as one step-batched forward pass on
+    /// batch-capable backends (layer-major over the batch, amortizing
+    /// weight reads).  Logits are bitwise-identical to the sequential
+    /// path; disable only to measure the sequential baseline.
+    pub batched_decode: bool,
 }
 
 impl Default for ServeConfig {
@@ -137,6 +142,7 @@ impl Default for ServeConfig {
             workers: 1,
             enable_prefix_cache: false,
             prefix_cache_blocks: 1024,
+            batched_decode: true,
         }
     }
 }

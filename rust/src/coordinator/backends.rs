@@ -1,7 +1,7 @@
 //! Concrete [`SeqBackend`]s: the native SynthLM engine (policy-driven) and
 //! the PJRT artifact path (plan-driven).
 
-use super::sequence::SeqBackend;
+use super::sequence::{BatchParts, SeqBackend};
 use crate::kascade::KascadePlan;
 use crate::model::{Model, SeqState};
 use crate::runtime::{PjrtModel, PjrtSeqState};
@@ -31,6 +31,16 @@ impl SeqBackend for NativeBackend {
 
     fn decode(&mut self, token: u32) -> Vec<f32> {
         self.model.decode_step(token, &mut self.st, self.policy.as_mut())
+    }
+
+    /// Native sequences are step-batchable: the engine groups them by
+    /// shared model and amortizes weight reads across the tick's decodes.
+    fn batch_parts(&mut self) -> Option<BatchParts<'_>> {
+        Some(BatchParts {
+            model: &self.model,
+            st: &mut self.st,
+            policy: self.policy.as_mut(),
+        })
     }
 
     /// Prefix-cache snapshot: clone the KV state truncated to the first

@@ -22,6 +22,13 @@ pub struct ServeMetrics {
     pub saved_prefill_tokens: u64,
     /// refcount-0 blocks parked in the prefix-cache pool (per tick)
     pub kv_cached: Welford,
+    /// decode step-batch sizes, one sample per batched forward pass
+    /// (log-bucketed histogram + exact percentiles)
+    pub decode_batch: LatencyHist,
+    /// decode tokens produced (batched + sequential decode execution)
+    pub decode_tokens: u64,
+    /// wall time spent inside decode execution, microseconds
+    pub decode_time_us: f64,
 }
 
 impl Default for ServeMetrics {
@@ -46,6 +53,19 @@ impl ServeMetrics {
             prefix_misses: 0,
             saved_prefill_tokens: 0,
             kv_cached: Welford::new(),
+            decode_batch: LatencyHist::new(),
+            decode_tokens: 0,
+            decode_time_us: 0.0,
+        }
+    }
+
+    /// Decode throughput over time actually spent decoding (excludes
+    /// prefill and scheduling work — the paper's decode-attention metric).
+    pub fn decode_tok_s(&self) -> f64 {
+        if self.decode_time_us <= 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / (self.decode_time_us / 1e6)
         }
     }
 
@@ -68,7 +88,8 @@ impl ServeMetrics {
             "requests={} tokens_out={} throughput={:.1} tok/s  \
              ttft p50={:.1}ms p99={:.1}ms  tpot mean={:.2}ms  \
              batch mean={:.1}  kv_util mean={:.0}%  preemptions={}  \
-             prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}",
+             prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
+             decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s",
             self.requests_done,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -82,6 +103,9 @@ impl ServeMetrics {
             self.prefix_misses,
             self.saved_prefill_tokens,
             self.kv_cached.mean(),
+            self.decode_batch.percentile(50.0),
+            self.decode_batch.percentile(100.0),
+            self.decode_tok_s(),
         )
     }
 }

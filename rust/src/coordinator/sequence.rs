@@ -1,5 +1,8 @@
 //! Request / sequence lifecycle and the inference-backend abstraction.
 
+use crate::model::{Model, SeqState};
+use crate::sparse::SparsePolicy;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Client request.
@@ -44,6 +47,27 @@ pub trait SeqBackend {
         let _ = tokens;
         None
     }
+    /// Exclusive access to the pieces the step-batched decode engine
+    /// needs ([`crate::model::Model::decode_batch`]): the shared model
+    /// plus this sequence's state and policy.  `None` (the default) means
+    /// the backend only supports sequential decode — the engine falls
+    /// back to [`SeqBackend::decode`] for it (PJRT, test doubles).
+    /// Implementations should be stable between mutations: a `Some`
+    /// answer is expected to stay `Some` (with the same model) for
+    /// repeated calls within one engine tick.
+    fn batch_parts(&mut self) -> Option<BatchParts<'_>> {
+        None
+    }
+}
+
+/// Borrowed view into a batch-capable backend (see
+/// [`SeqBackend::batch_parts`]).  The engine groups sequences whose
+/// `model` Arcs are identical and runs them through one
+/// [`crate::model::Model::decode_batch`] call per tick.
+pub struct BatchParts<'a> {
+    pub model: &'a Arc<Model>,
+    pub st: &'a mut SeqState,
+    pub policy: &'a mut dyn SparsePolicy,
 }
 
 /// A live sequence owned by a worker.
@@ -159,7 +183,27 @@ impl Sequence {
                 self.backend.decode(last)
             }
         };
-        let tok = crate::tensor::argmax(&logits) as u32;
+        self.apply_decoded_logits(&logits)
+    }
+
+    /// The token a batched decode pass must feed this sequence, or `None`
+    /// when logits are already buffered (prefill just completed) and no
+    /// forward pass is needed this step.
+    pub fn decode_input(&self) -> Option<u32> {
+        if self.pending_logits.is_some() {
+            None
+        } else {
+            Some(*self.emitted.last().expect("decode without pending logits"))
+        }
+    }
+
+    /// Greedy bookkeeping for one decode step whose logits were computed
+    /// externally (the step-batched engine path): argmax, emission,
+    /// stop/finish accounting.  Shared with [`Sequence::step_decode`] so
+    /// batched and sequential execution retire tokens identically.
+    pub fn apply_decoded_logits(&mut self, logits: &[f32]) -> u32 {
+        debug_assert_eq!(self.phase, SeqPhase::Decoding);
+        let tok = crate::tensor::argmax(logits) as u32;
         if self.first_token_at.is_none() {
             self.first_token_at = Some(Instant::now());
         }

@@ -7,7 +7,7 @@ use crate::attention::{self, CostTracker, KvCache};
 use crate::config::ModelConfig;
 use crate::kascade::similarity::{CalibrationCapture, ProbeCapture};
 use crate::sparse::{Selection, SparsePolicy};
-use crate::tensor::{self, matvec_t, rmsnorm, rope};
+use crate::tensor::{self, matmul_t, matvec_t, rmsnorm, rope};
 
 /// Prefill Q-tile (matches the paper's 128-query kernel tile).
 pub const PREFILL_TILE: usize = 128;
@@ -23,6 +23,15 @@ pub struct SeqState {
     pub caches: Vec<KvCache>,
     pub pos: usize,
     pub cost: CostTracker,
+}
+
+/// One sequence's slot in a step-batched decode call
+/// ([`Model::decode_batch`]): the token to feed plus exclusive borrows of
+/// the sequence's state and sparse policy.
+pub struct DecodeReq<'a> {
+    pub token: u32,
+    pub st: &'a mut SeqState,
+    pub policy: &'a mut dyn SparsePolicy,
 }
 
 /// Requests calibration capture during a prefill: pooled per-KV-head
@@ -153,12 +162,16 @@ impl Model {
             }
             // attention per Q-tile
             let cache = &st.caches[layer];
-            let mut tile_idx = 0;
             let mut t0 = 0;
             while t0 < t_total {
                 let tlen = PREFILL_TILE.min(t_total - t0);
                 let qs = &qbuf[t0 * nqd..(t0 + tlen) * nqd];
                 let out = &mut attn[t0 * nqd..(t0 + tlen) * nqd];
+                // tiles are keyed by ABSOLUTE position so policy state
+                // (Kascade anchor Top-k) stays consistent across chunked
+                // prefill calls — chunk-relative ids would alias slot 0
+                // of every chunk onto the same policy state
+                let tile_idx = (base + t0) / PREFILL_TILE;
                 let sel = policy.prefill_tile(
                     layer,
                     tile_idx,
@@ -188,7 +201,6 @@ impl Model {
                     ),
                 }
                 t0 += tlen;
-                tile_idx += 1;
             }
             // calibration probes (dense oracle, before residual update)
             if let Some(cap) = capture {
@@ -311,6 +323,108 @@ impl Model {
         self.logits(&x)
     }
 
+    /// One step-batched decode pass over `reqs` concurrent sequences,
+    /// processed **layer-major over the batch**: per layer, one pass over
+    /// each weight matrix serves every sequence's projection / MLP row
+    /// (via [`matmul_t`]), then attention runs per-sequence so each
+    /// sequence's [`KvCache`] and [`SparsePolicy`] (Kascade anchor /
+    /// reuse decisions) stay fully independent.
+    ///
+    /// Per-row accumulation order is identical to [`Model::decode_step`],
+    /// so the returned logits are **bitwise equal** to running the
+    /// sequences one at a time — the batch only amortizes weight reads,
+    /// the dominant memory-bandwidth cost at small contexts.
+    pub fn decode_batch(&self, reqs: &mut [DecodeReq]) -> Vec<Vec<f32>> {
+        let b = reqs.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        let cfg = &self.cfg;
+        let dm = cfg.d_model;
+        let nqd = cfg.n_q_heads * cfg.d_head;
+        let nkd = cfg.n_kv_heads * cfg.d_head;
+        let mut xs: Vec<f32> = Vec::with_capacity(b * dm);
+        for r in reqs.iter() {
+            xs.extend_from_slice(self.w.embedding(r.token as usize, dm));
+        }
+        let mut h = vec![0.0f32; b * dm];
+        let mut q = vec![0.0f32; b * nqd];
+        let mut k = vec![0.0f32; b * nkd];
+        let mut v = vec![0.0f32; b * nkd];
+        let mut attn = vec![0.0f32; b * nqd];
+        let mut delta = vec![0.0f32; b * dm];
+        let mut a = vec![0.0f32; b * cfg.d_ff];
+        let mut bb = vec![0.0f32; b * cfg.d_ff];
+        for layer in 0..cfg.n_layers {
+            let lw = &self.w.layers[layer];
+            // batched QKV projection: one pass over wq/wk/wv for all rows
+            for i in 0..b {
+                rmsnorm(&xs[i * dm..(i + 1) * dm], &lw.ln1, &mut h[i * dm..(i + 1) * dm]);
+            }
+            matmul_t(&h, &lw.wq, b, dm, nqd, &mut q);
+            matmul_t(&h, &lw.wk, b, dm, nkd, &mut k);
+            matmul_t(&h, &lw.wv, b, dm, nkd, &mut v);
+            if cfg.rope {
+                for (i, r) in reqs.iter().enumerate() {
+                    let pos = r.st.pos;
+                    for hq in 0..cfg.n_q_heads {
+                        let o = i * nqd + hq * cfg.d_head;
+                        rope(&mut q[o..o + cfg.d_head], pos, cfg.rope_theta);
+                    }
+                    for hk in 0..cfg.n_kv_heads {
+                        let o = i * nkd + hk * cfg.d_head;
+                        rope(&mut k[o..o + cfg.d_head], pos, cfg.rope_theta);
+                    }
+                }
+            }
+            // per-sequence policy-driven attention (own cache, own policy)
+            for (i, r) in reqs.iter_mut().enumerate() {
+                let st = &mut *r.st;
+                st.caches[layer].push(&k[i * nkd..(i + 1) * nkd], &v[i * nkd..(i + 1) * nkd]);
+                let cache = &st.caches[layer];
+                let qrow = &q[i * nqd..(i + 1) * nqd];
+                let out = &mut attn[i * nqd..(i + 1) * nqd];
+                let sel = r.policy.decode(layer, qrow, cache, cfg.group(), &mut st.cost);
+                match sel {
+                    Selection::Dense => {
+                        attention::decode_dense(qrow, cache, cfg.group(), out, &mut st.cost)
+                    }
+                    Selection::Sparse(idx) => {
+                        attention::decode_sparse(qrow, cache, cfg.group(), &idx, out, &mut st.cost)
+                    }
+                }
+            }
+            // batched residual write + SwiGLU MLP
+            matmul_t(&attn, &lw.wo, b, nqd, dm, &mut delta);
+            for (xi, di) in xs.iter_mut().zip(delta.iter()) {
+                *xi += di;
+            }
+            for i in 0..b {
+                rmsnorm(&xs[i * dm..(i + 1) * dm], &lw.ln2, &mut h[i * dm..(i + 1) * dm]);
+            }
+            matmul_t(&h, &lw.w1, b, dm, cfg.d_ff, &mut a);
+            matmul_t(&h, &lw.w3, b, dm, cfg.d_ff, &mut bb);
+            for (ai, bi) in a.iter_mut().zip(bb.iter()) {
+                let s = *ai / (1.0 + (-*ai).exp()); // silu
+                *ai = s * bi;
+            }
+            matmul_t(&a, &lw.w2, b, cfg.d_ff, dm, &mut delta);
+            for (xi, di) in xs.iter_mut().zip(delta.iter()) {
+                *xi += di;
+            }
+        }
+        for r in reqs.iter_mut() {
+            r.st.pos += 1;
+        }
+        // batched unembedding
+        for i in 0..b {
+            rmsnorm(&xs[i * dm..(i + 1) * dm], &self.w.lnf, &mut h[i * dm..(i + 1) * dm]);
+        }
+        let mut logits = vec![0.0f32; b * cfg.vocab];
+        matmul_t(&h, &self.w.w_u, b, dm, cfg.vocab, &mut logits);
+        (0..b).map(|i| logits[i * cfg.vocab..(i + 1) * cfg.vocab].to_vec()).collect()
+    }
+
     /// Greedy decode until `stop(token)` or `max_new` tokens.
     /// Returns the emitted tokens.
     pub fn greedy_decode(
@@ -428,6 +542,110 @@ mod tests {
                 let imp = cap.probes[pi].importance[l];
                 assert!((0.0..=2.0).contains(&imp));
             }
+        }
+    }
+
+    /// The tentpole invariant: a step-batched decode pass must produce
+    /// logits **bitwise equal** to decoding each sequence alone.
+    #[test]
+    fn decode_batch_bitwise_equals_decode_step() {
+        use crate::config::TopKRule;
+        use crate::kascade::KascadePlan;
+        use crate::sparse::KascadePolicy;
+
+        let m = random_model(11);
+        let mut r = Rng::new(12);
+        for bsz in [1usize, 2, 5, 8] {
+            // per-sequence prompts of different lengths, mixed policies
+            let mut seq_sts = Vec::new();
+            let mut seq_pols: Vec<Box<dyn crate::sparse::SparsePolicy>> = Vec::new();
+            let mut bat_sts = Vec::new();
+            let mut bat_pols: Vec<Box<dyn crate::sparse::SparsePolicy>> = Vec::new();
+            let mut last_toks = Vec::new();
+            for i in 0..bsz {
+                let plen = 4 + r.below(24);
+                let toks: Vec<u32> = (0..plen).map(|_| r.below(64) as u32).collect();
+                let mk_pol = |i: usize| -> Box<dyn crate::sparse::SparsePolicy> {
+                    if i % 2 == 0 {
+                        Box::new(DensePolicy)
+                    } else {
+                        Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+                            2,
+                            2,
+                            vec![0],
+                            TopKRule::new(0.5, 4),
+                        )))
+                    }
+                };
+                let mut st_a = m.new_state(128);
+                let mut pol_a = mk_pol(i);
+                m.prefill(&toks, &mut st_a, pol_a.as_mut(), None);
+                let mut st_b = m.new_state(128);
+                let mut pol_b = mk_pol(i);
+                m.prefill(&toks, &mut st_b, pol_b.as_mut(), None);
+                seq_sts.push(st_a);
+                seq_pols.push(pol_a);
+                bat_sts.push(st_b);
+                bat_pols.push(pol_b);
+                last_toks.push(r.below(64) as u32);
+            }
+            for _step in 0..4 {
+                // sequential reference
+                let mut seq_logits = Vec::new();
+                for i in 0..bsz {
+                    seq_logits.push(m.decode_step(
+                        last_toks[i],
+                        &mut seq_sts[i],
+                        seq_pols[i].as_mut(),
+                    ));
+                }
+                // batched
+                let mut reqs: Vec<DecodeReq> = bat_sts
+                    .iter_mut()
+                    .zip(bat_pols.iter_mut())
+                    .zip(last_toks.iter())
+                    .map(|((st, pol), &token)| DecodeReq { token, st, policy: pol.as_mut() })
+                    .collect();
+                let bat_logits = m.decode_batch(&mut reqs);
+                drop(reqs);
+                for i in 0..bsz {
+                    for (a, b) in seq_logits[i].iter().zip(&bat_logits[i]) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "bsz={bsz} seq={i}");
+                    }
+                    last_toks[i] = tensor::argmax(&bat_logits[i]) as u32;
+                }
+            }
+        }
+    }
+
+    /// Chunked prefill with a Kascade policy must match single-shot
+    /// prefill: prefill Top-k state is keyed by absolute tile, so a reuse
+    /// layer consumes exactly what its anchor produced for each tile
+    /// regardless of chunk boundaries.
+    #[test]
+    fn chunked_prefill_kascade_consistency() {
+        use crate::config::TopKRule;
+        use crate::kascade::KascadePlan;
+        use crate::sparse::KascadePolicy;
+
+        let m = random_model(21);
+        let mut r = Rng::new(22);
+        let toks: Vec<u32> = (0..384).map(|_| r.below(64) as u32).collect();
+        // layer 0 anchors, layer 1 reuses — the cross-chunk state path
+        let plan = KascadePlan::from_anchors(2, 2, vec![0], TopKRule::new(0.25, 16));
+
+        let mut st_a = m.new_state(512);
+        let mut pol_a = KascadePolicy::new(plan.clone());
+        let (la, _) = m.prefill(&toks, &mut st_a, &mut pol_a, None);
+
+        let mut st_b = m.new_state(512);
+        let mut pol_b = KascadePolicy::new(plan);
+        m.prefill(&toks[..128], &mut st_b, &mut pol_b, None);
+        m.prefill(&toks[128..256], &mut st_b, &mut pol_b, None);
+        let (lb, _) = m.prefill(&toks[256..], &mut st_b, &mut pol_b, None);
+
+        for (a, b) in la.iter().zip(&lb) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -6,8 +6,10 @@
 
 use crate::config::ServeConfig;
 use crate::coordinator::{Request, Router, Scheduler, SeqBackend, SeqPhase, Sequence, ServeMetrics, WorkItem};
-use std::collections::{HashMap, VecDeque};
+use crate::model::{DecodeReq, Model};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Bound on retained prefix-cache snapshots: each is a full backend
@@ -125,28 +127,119 @@ impl Engine {
         self.metrics.prefix_misses += batch.cache_misses;
         let n = batch.items.len();
         self.metrics.batch_size.add(n as f64);
+        // split the tick: decodes execute first (scheduler order) as one
+        // step-batched forward per shared model, then prefill chunks
+        let mut decode_ids: Vec<u64> = Vec::new();
+        let mut prefills: Vec<(u64, usize)> = Vec::new();
         for item in batch.items {
             match item {
-                WorkItem::Prefill { seq, tokens } => {
-                    if let Some(s) = self.seqs.get_mut(&seq) {
-                        s.step_prefill(tokens);
-                    }
-                    self.register_prefix(seq);
-                }
-                WorkItem::Decode { seq } => {
-                    if let Some(s) = self.seqs.get_mut(&seq) {
-                        let t0 = Instant::now();
-                        s.step_decode();
-                        self.metrics.tpot_us.add(t0.elapsed().as_secs_f64() * 1e6);
-                        self.metrics.tokens_out += 1;
-                    }
-                }
+                WorkItem::Decode { seq } => decode_ids.push(seq),
+                WorkItem::Prefill { seq, tokens } => prefills.push((seq, tokens)),
             }
+        }
+        self.run_decodes(&decode_ids);
+        for (seq, tokens) in prefills {
+            if let Some(s) = self.seqs.get_mut(&seq) {
+                s.step_prefill(tokens);
+            }
+            self.register_prefix(seq);
         }
         self.metrics.kv_util.add(self.sched.blocks.utilization());
         self.metrics.kv_cached.add(self.sched.blocks.cached() as f64);
         self.retire();
         n
+    }
+
+    /// Execute one tick's decode work items.  With
+    /// [`ServeConfig::batched_decode`], every batch-capable sequence
+    /// sharing a model runs through ONE layer-major
+    /// [`Model::decode_batch`] pass — logits bitwise-identical to the
+    /// sequential path, weight reads amortized across the batch.
+    /// Sequences with buffered prefill logits (no forward needed),
+    /// non-batchable backends (PJRT, test doubles), and — on mixed
+    /// ticks — sequences of a different model fall back sequentially.
+    fn run_decodes(&mut self, ids: &[u64]) {
+        if ids.is_empty() {
+            return;
+        }
+        let t0 = Instant::now();
+        let use_batch = self.sched.cfg.batched_decode;
+        let metrics = &mut self.metrics;
+        let idset: HashSet<u64> = ids.iter().copied().collect();
+        let mut by_id: HashMap<u64, &mut Sequence> = self
+            .seqs
+            .iter_mut()
+            .filter(|(id, _)| idset.contains(id))
+            .map(|(&id, s)| (id, s))
+            .collect();
+        let mut tokens_done = 0u64;
+        let mut rest: Vec<&mut Sequence> = Vec::new();
+        for id in ids {
+            let s = match by_id.remove(id) {
+                Some(s) => s,
+                None => continue,
+            };
+            if use_batch && s.decode_input().is_some() && s.backend.batch_parts().is_some() {
+                rest.push(s);
+            } else {
+                s.step_decode();
+                tokens_done += 1;
+            }
+        }
+        // group by shared model (Arc identity), one batched pass per group
+        while !rest.is_empty() {
+            let mut group: Vec<&mut Sequence> = Vec::new();
+            let mut next: Vec<&mut Sequence> = Vec::new();
+            let mut key: Option<*const Model> = None;
+            for s in rest {
+                let ptr = s.backend.batch_parts().map(|p| Arc::as_ptr(p.model));
+                match (key, ptr) {
+                    (None, Some(p)) => {
+                        key = Some(p);
+                        group.push(s);
+                    }
+                    (Some(kp), Some(p)) if p == kp => group.push(s),
+                    (_, Some(_)) => next.push(s),
+                    // backend stopped being batchable since the probe:
+                    // decode it sequentially rather than panic/livelock
+                    (_, None) => {
+                        s.step_decode();
+                        tokens_done += 1;
+                    }
+                }
+            }
+            rest = next;
+            if group.is_empty() {
+                continue;
+            }
+            let model: Arc<Model> = {
+                let parts = group[0].backend.batch_parts().expect("probed batchable");
+                parts.model.clone()
+            };
+            let mut reqs: Vec<DecodeReq> = Vec::with_capacity(group.len());
+            for s in group.iter_mut() {
+                let token = s.decode_input().expect("probed: logits not buffered");
+                let parts = s.backend.batch_parts().expect("probed batchable");
+                reqs.push(DecodeReq { token, st: parts.st, policy: parts.policy });
+            }
+            let logits = model.decode_batch(&mut reqs);
+            drop(reqs);
+            metrics.decode_batch.add_us(group.len() as f64);
+            for (s, l) in group.iter_mut().zip(logits.iter()) {
+                s.apply_decoded_logits(l);
+                tokens_done += 1;
+            }
+        }
+        let dt_us = t0.elapsed().as_secs_f64() * 1e6;
+        metrics.tokens_out += tokens_done;
+        metrics.decode_tokens += tokens_done;
+        metrics.decode_time_us += dt_us;
+        if tokens_done > 0 {
+            let per_tok = dt_us / tokens_done as f64;
+            for _ in 0..tokens_done {
+                metrics.tpot_us.add(per_tok);
+            }
+        }
     }
 
     /// After prefill work lands for `seq`, publish its newly completed

@@ -10,7 +10,10 @@ pub struct KascadePolicy {
     pub plan: KascadePlan,
     /// Last Top-k index sets per anchor layer (decode path).
     decode_idx: Vec<Option<Vec<Vec<u32>>>>,
-    /// Per anchor layer, per Q-tile index sets (prefill path).
+    /// Per anchor layer, per **absolute** Q-tile index sets (prefill
+    /// path).  Tiles are keyed by `start / PREFILL_TILE` so state stays
+    /// consistent across chunked-prefill calls; an anchor that falls back
+    /// to dense clears its slot (empty = no indices for this tile).
     prefill_idx: Vec<Vec<Vec<Vec<u32>>>>,
 }
 
@@ -89,13 +92,14 @@ impl SparsePolicy for KascadePolicy {
         let tile_len = qs.len() / (n_q * cache.d);
         let kv_len = start + tile_len;
         let k = self.plan.topk.k(kv_len);
+        // always write the slot: a dense fallback (None) must CLEAR any
+        // previously stored tile so a reuse layer can never go sparse with
+        // indices its anchor did not produce for this query range
         let store = |slot: &mut Vec<Vec<Vec<u32>>>, tile: usize, idx: Option<Vec<Vec<u32>>>| {
             while slot.len() <= tile {
                 slot.push(Vec::new());
             }
-            if let Some(i) = idx {
-                slot[tile] = i;
-            }
+            slot[tile] = idx.unwrap_or_default();
         };
         match self.plan.role(layer) {
             LayerRole::Anchor0 => {
@@ -236,6 +240,8 @@ impl SparsePolicy for KascadeAllPooledPolicy {
             cost.topk_items += all.len() as u64;
             crate::tensor::topk_indices(&all, k)
         };
+        // as in [`KascadePolicy`]: dense fallbacks clear the slot, keyed
+        // by absolute tile, so stale indices never leak across chunks
         let store = |slot: &mut Vec<Vec<u32>>, tile: usize, idx: Vec<u32>| {
             while slot.len() <= tile {
                 slot.push(Vec::new());
@@ -247,11 +253,14 @@ impl SparsePolicy for KascadeAllPooledPolicy {
                 if k < kv_len {
                     let idx = extract(cost);
                     store(&mut self.prefill_idx[layer], tile, idx);
+                } else {
+                    store(&mut self.prefill_idx[layer], tile, Vec::new());
                 }
                 Selection::Dense
             }
             LayerRole::Anchor => {
                 if k >= kv_len {
+                    store(&mut self.prefill_idx[layer], tile, Vec::new());
                     return Selection::Dense;
                 }
                 let idx = extract(cost);
@@ -419,5 +428,89 @@ mod tests {
         }
         // tile that the anchor never saw -> dense fallback
         assert_eq!(pol.prefill_tile(4, 3, 384, &qs, &c, g, &mut cost), Selection::Dense);
+    }
+
+    /// A dense fallback must CLEAR previously stored indices for the same
+    /// absolute tile — the old `store(..., None)` left them in place, so a
+    /// reuse layer went sparse with indices its anchor never produced for
+    /// that query range.
+    #[test]
+    fn prefill_dense_fallback_clears_stale_tile_state() {
+        let mut r = Rng::new(6);
+        let (n_kv, g, d) = (2, 2, 16);
+        let n_q = n_kv * g;
+        // big context: anchor goes sparse at tile 0 and stores indices
+        let mut big = KvCache::new(n_kv, d, 512);
+        for _ in 0..512 {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            big.push(&k, &v);
+        }
+        let mut qs_big = vec![0.0; 128 * n_q * d];
+        r.fill_normal(&mut qs_big, 1.0);
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        match pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut cost) {
+            Selection::Sparse(_) => {}
+            _ => panic!("anchor must be sparse at 128 ctx / k=16"),
+        }
+        // tiny context view over the same tile: k >= kv_len -> dense,
+        // which must clear the stored slot
+        let mut small = KvCache::new(n_kv, d, 16);
+        let kz = vec![0.0; n_kv * d];
+        for _ in 0..8 {
+            small.push(&kz, &kz);
+        }
+        let mut qs_small = vec![0.0; 8 * n_q * d];
+        r.fill_normal(&mut qs_small, 1.0);
+        assert_eq!(
+            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut cost),
+            Selection::Dense
+        );
+        // the reuse layer must NOT consume the stale tile-0 indices
+        assert_eq!(
+            pol.prefill_tile(4, 0, 0, &qs_small, &small, g, &mut cost),
+            Selection::Dense
+        );
+    }
+
+    #[test]
+    fn all_pooled_dense_fallback_clears_stale_tile_state() {
+        let mut r = Rng::new(7);
+        let (n_kv, g, d) = (2, 2, 16);
+        let n_q = n_kv * g;
+        let mut big = KvCache::new(n_kv, d, 512);
+        for _ in 0..512 {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            big.push(&k, &v);
+        }
+        let mut qs_big = vec![0.0; 128 * n_q * d];
+        r.fill_normal(&mut qs_big, 1.0);
+        let mut pol = KascadeAllPooledPolicy::new(plan());
+        let mut cost = CostTracker::default();
+        match pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut cost) {
+            Selection::Sparse(_) => {}
+            _ => panic!("anchor must be sparse"),
+        }
+        let mut small = KvCache::new(n_kv, d, 16);
+        let kz = vec![0.0; n_kv * d];
+        for _ in 0..8 {
+            small.push(&kz, &kz);
+        }
+        let mut qs_small = vec![0.0; 8 * n_q * d];
+        r.fill_normal(&mut qs_small, 1.0);
+        assert_eq!(
+            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut cost),
+            Selection::Dense
+        );
+        assert_eq!(
+            pol.prefill_tile(3, 0, 0, &qs_small, &small, g, &mut cost),
+            Selection::Dense
+        );
     }
 }

@@ -119,6 +119,31 @@ pub fn matvec_t(x: &[f32], w: &[f32], m: usize, n: usize, y: &mut [f32]) {
     }
 }
 
+/// ys[b][n] = xs[b][m] * w[m][n]  (w row-major [m, n], xs row-major [b, m]).
+///
+/// Step-batched mat-mul for the decode engine: the loop is **weight-row
+/// major** so each row of `w` is streamed exactly once and serves every
+/// batch row while it is hot in cache — the memory-bandwidth win over
+/// calling [`matvec_t`] per sequence.  Each output row accumulates its
+/// `w`-row contributions in the same ascending-`i` order (with the same
+/// zero-skip) as `matvec_t`, so per-row results are **bitwise identical**
+/// to the sequential path.
+pub fn matmul_t(xs: &[f32], w: &[f32], b: usize, m: usize, n: usize, ys: &mut [f32]) {
+    debug_assert_eq!(xs.len(), b * m);
+    debug_assert_eq!(w.len(), m * n);
+    debug_assert_eq!(ys.len(), b * n);
+    ys.fill(0.0);
+    for i in 0..m {
+        let wrow = &w[i * n..(i + 1) * n];
+        for r in 0..b {
+            let xi = xs[r * m + i];
+            if xi != 0.0 {
+                axpy(&mut ys[r * n..(r + 1) * n], xi, wrow);
+            }
+        }
+    }
+}
+
 /// In-place numerically-stable softmax.  Returns the max score (useful for
 /// diagnostics).  All-(-inf) rows become all-zero rather than NaN.
 pub fn softmax(s: &mut [f32]) -> f32 {
@@ -397,6 +422,31 @@ mod tests {
                     .then(a.cmp(&b))
             });
             assert_eq!(got, idx[..k].to_vec());
+        }
+    }
+
+    #[test]
+    fn matmul_t_rows_bitwise_equal_matvec_t() {
+        let mut r = Rng::new(17);
+        let (m, n) = (48, 33);
+        for b in [1usize, 2, 5, 8] {
+            let mut xs = vec![0.0; b * m];
+            let mut w = vec![0.0; m * n];
+            r.fill_normal(&mut xs, 1.0);
+            r.fill_normal(&mut w, 1.0);
+            // sprinkle exact zeros so the zero-skip path is exercised
+            for i in (0..xs.len()).step_by(7) {
+                xs[i] = 0.0;
+            }
+            let mut ys = vec![0.0; b * n];
+            matmul_t(&xs, &w, b, m, n, &mut ys);
+            for row in 0..b {
+                let mut want = vec![0.0; n];
+                matvec_t(&xs[row * m..(row + 1) * m], &w, m, n, &mut want);
+                for (a, e) in ys[row * n..(row + 1) * n].iter().zip(&want) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "b={b} row={row}");
+                }
+            }
         }
     }
 

@@ -1,0 +1,206 @@
+//! Step-batched decode equivalence: an engine executing each tick's
+//! decodes as one layer-major batched forward must produce exactly the
+//! same token streams as the sequential path, across random batch sizes,
+//! policies (dense / Kascade), mid-stream sequence completion and
+//! admission, and prefix-cache-fork resumed sequences joining a live
+//! batch.  (Bitwise logits equality of `Model::decode_batch` itself is
+//! unit-tested next to the forward pass; this exercises the whole
+//! scheduler -> engine -> backend stack.)
+
+use kascade::config::{ModelConfig, ServeConfig, TopKRule};
+use kascade::coordinator::{NativeBackend, Request};
+use kascade::kascade::KascadePlan;
+use kascade::model::{Model, Weights};
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{Completion, Engine, LocalBackendFactory};
+use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
+use kascade::tensor::Rng;
+use std::sync::Arc;
+
+const VOCAB: usize = 64;
+
+fn random_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        n_layers: 4,
+        d_model: 32,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        d_ff: 64,
+        vocab: VOCAB,
+        rope_theta: 10000.0,
+        rope: true,
+    };
+    let mut w = Weights::zeros(&cfg);
+    let mut r = Rng::new(seed);
+    r.fill_normal(&mut w.w_e, 0.3);
+    for lw in &mut w.layers {
+        r.fill_normal(&mut lw.wq, 0.18);
+        r.fill_normal(&mut lw.wk, 0.18);
+        r.fill_normal(&mut lw.wv, 0.18);
+        r.fill_normal(&mut lw.wo, 0.18);
+        r.fill_normal(&mut lw.w1, 0.18);
+        r.fill_normal(&mut lw.w3, 0.18);
+        r.fill_normal(&mut lw.w2, 0.12);
+    }
+    r.fill_normal(&mut w.w_u, 0.18);
+    Model::new(cfg, w)
+}
+
+fn factory(model: Arc<Model>, cap: usize, kascade: bool) -> LocalBackendFactory {
+    Box::new(move |_req| {
+        let policy: Box<dyn SparsePolicy> = if kascade {
+            Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+                4,
+                2,
+                vec![0, 2],
+                TopKRule::new(0.25, 8),
+            )))
+        } else {
+            Box::new(DensePolicy)
+        };
+        Box::new(NativeBackend::new(model.clone(), cap, policy))
+    })
+}
+
+/// Run `arrivals` (request, submit-at-tick) to completion and return the
+/// per-request completions (sorted by id) plus the engine for metric
+/// inspection.
+fn run(
+    arrivals: &[(Request, usize)],
+    batched: bool,
+    kascade: bool,
+    model: Arc<Model>,
+    cap: usize,
+) -> (Vec<Completion>, Engine) {
+    let cfg = ServeConfig {
+        block_size: 8,
+        num_blocks: 512,
+        max_running: 8,
+        token_budget: 128,
+        prefill_chunk: 32,
+        queue_cap: 64,
+        workers: 1,
+        enable_prefix_cache: true,
+        prefix_cache_blocks: 128,
+        batched_decode: batched,
+    };
+    let mut e = Engine::new(cfg, factory(model, cap, kascade));
+    let mut tick = 0usize;
+    let mut submitted = 0usize;
+    let mut guard = 0usize;
+    loop {
+        for (req, at) in arrivals {
+            if *at == tick {
+                assert!(e.submit(req.clone()), "admission rejected request {}", req.id);
+                submitted += 1;
+            }
+        }
+        if submitted == arrivals.len() && e.idle() {
+            break;
+        }
+        let did = e.tick();
+        guard = if did == 0 { guard + 1 } else { 0 };
+        assert!(guard < 1000, "engine livelock");
+        tick += 1;
+    }
+    let mut done = e.drain_finished();
+    done.sort_by_key(|c| c.id);
+    (done, e)
+}
+
+#[test]
+fn batched_decode_streams_equal_sequential_property() {
+    let model = Arc::new(random_model(0xBA7C4));
+    check("batched == sequential decode", 6, |rng| {
+        let kascade = rng.below(2) == 0;
+        let n_reqs = 3 + rng.below(6); // up to 8 concurrent decoders
+        // a shared document prefix so later arrivals resume from
+        // prefix-cache forks and join the live decode batch
+        let shared_len = 16 + 8 * rng.below(4);
+        let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(VOCAB) as u32).collect();
+        let mut arrivals = Vec::new();
+        let mut cap = 0usize;
+        for id in 0..n_reqs {
+            let mut prompt = if rng.below(3) > 0 {
+                shared.clone() // prefix-cache candidates
+            } else {
+                (0..8 + rng.below(24)).map(|_| rng.below(VOCAB) as u32).collect()
+            };
+            for _ in 0..rng.below(12) {
+                prompt.push(rng.below(VOCAB) as u32);
+            }
+            // mid-stream completion; request 0 always decodes several
+            // tokens so at least one step-batched forward pass happens
+            let max_new = if id == 0 { 4 + rng.below(9) } else { 1 + rng.below(12) };
+            cap = cap.max(prompt.len() + max_new + 8);
+            let at = rng.below(6); // staggered admission joins live batches
+            arrivals.push((
+                Request { id: id as u64, prompt, max_new, stop_token: None },
+                at,
+            ));
+        }
+        let (seq, _) = run(&arrivals, false, kascade, model.clone(), cap);
+        let (bat, eng) = run(&arrivals, true, kascade, model.clone(), cap);
+        prop_assert!(seq.len() == arrivals.len(), "sequential lost requests");
+        prop_assert!(bat.len() == arrivals.len(), "batched lost requests");
+        prop_assert!(
+            eng.metrics.decode_batch.count() > 0,
+            "batched run never took the step-batched path"
+        );
+        for (a, b) in seq.iter().zip(&bat) {
+            prop_assert!(a.id == b.id, "id mismatch {} vs {}", a.id, b.id);
+            prop_assert!(
+                a.tokens == b.tokens,
+                "req {} diverged: sequential {:?} vs batched {:?} (kascade={kascade})",
+                a.id,
+                a.tokens,
+                b.tokens
+            );
+        }
+        Ok(())
+    });
+}
+
+/// A prefix-cache resume mid-stream must not perturb batched decode: the
+/// follower forks the leader's snapshot, finishes its short prefill, and
+/// joins the live decode batch.  Batched and sequential execution of the
+/// exact same arrival schedule (caching held constant — a Kascade resume
+/// legitimately re-tiles prefill vs. an uncached run) must agree exactly.
+#[test]
+fn prefix_fork_joins_live_batch_unperturbed() {
+    let model = Arc::new(random_model(0xF0F0));
+    let shared: Vec<u32> = (0..40).map(|i| (i * 7 % VOCAB) as u32).collect();
+    let mut leader_prompt = shared.clone();
+    leader_prompt.extend([3u32, 9, 27]);
+    let mut follower_prompt = shared;
+    follower_prompt.extend([5u32, 25]);
+    let arrivals = vec![
+        (
+            Request { id: 0, prompt: leader_prompt, max_new: 24, stop_token: None },
+            0usize,
+        ),
+        // arrives while the leader is mid-decode
+        (
+            Request { id: 1, prompt: follower_prompt, max_new: 8, stop_token: None },
+            8usize,
+        ),
+    ];
+    let (bat, bat_eng) = run(&arrivals, true, true, model.clone(), 128);
+    let (seq, seq_eng) = run(&arrivals, false, true, model, 128);
+    assert_eq!(bat.len(), 2);
+    assert_eq!(seq.len(), 2);
+    assert!(
+        bat_eng.metrics.prefix_hits > 0 && seq_eng.metrics.prefix_hits > 0,
+        "follower must resume from the leader's prefix snapshot in both runs"
+    );
+    assert!(
+        bat_eng.metrics.decode_batch.percentile(100.0) >= 2.0,
+        "leader and follower must actually decode together in one batch"
+    );
+    for (a, b) in bat.iter().zip(&seq) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged under batching", a.id);
+    }
+}

@@ -76,6 +76,7 @@ fn cfg(enable: bool) -> ServeConfig {
         workers: 1,
         enable_prefix_cache: enable,
         prefix_cache_blocks: 256,
+        batched_decode: true,
     }
 }
 

@@ -32,6 +32,7 @@ fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
             workers: 1,
             enable_prefix_cache: true,
             prefix_cache_blocks: 8 + rng.below(32),
+            batched_decode: true,
         };
         let budget = c.token_budget;
         let mut s = Scheduler::new(c);
@@ -321,6 +322,7 @@ fn preempted_and_resumed_requests_complete_with_identical_outputs() {
             workers: 1,
             enable_prefix_cache: true,
             prefix_cache_blocks: 4,
+            batched_decode: true,
         },
         &reqs,
     );
