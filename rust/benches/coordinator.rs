@@ -7,12 +7,13 @@
 //! Writes machine-readable results to `results/coordinator_bench.json`.
 
 use kascade::benchutil::{bench, header};
-use kascade::config::ServeConfig;
+use kascade::config::{KvDtype, ServeConfig, TopKRule};
 use kascade::coordinator::{BlockManager, NativeBackend, Request, Router, SeqBackend, Sequence};
 use kascade::jsonutil::Json;
+use kascade::kascade::KascadePlan;
 use kascade::model::SynthSpec;
 use kascade::server::{Completion, Engine};
-use kascade::sparse::DensePolicy;
+use kascade::sparse::{DensePolicy, KascadePolicy};
 use kascade::workload::WorkloadGen;
 use std::cell::Cell;
 use std::rc::Rc;
@@ -131,6 +132,7 @@ fn main() {
         enable_prefix_cache: true,
         prefix_cache_blocks: 4096,
         batched_decode: true,
+        ..ServeConfig::default()
     };
     let prefilled = Rc::new(Cell::new(0u64));
     let counter = prefilled.clone();
@@ -198,6 +200,7 @@ fn main() {
             enable_prefix_cache: false,
             prefix_cache_blocks: 0,
             batched_decode: batched,
+            ..ServeConfig::default()
         };
         let model = model.clone();
         let mut engine = Engine::new(
@@ -239,6 +242,107 @@ fn main() {
         "step-batched decode must reach >= 1.5x sequential tokens/s at batch 8 (got {ratio:.2}x)"
     );
 
+    // quantized KV: f32 vs int8 serving on the same Kascade workload.
+    // Anchor Top-k scoring runs FUSED over the int8 tiles (no dequant);
+    // only the selected/attended value rows dequantize.  Records peak
+    // resident KV bytes, decode throughput, and the teacher-forced
+    // per-token logit divergence of int8 against the f32 stream.
+    let mut qspec = SynthSpec::eval_base(0xBEEF);
+    qspec.cfg.n_layers = 6;
+    qspec.block_starts = vec![1, 3];
+    let qmodel = Arc::new(qspec.build());
+    let mut qgen = WorkloadGen::new(&qspec, 0xFACE);
+    let qprompts: Vec<Vec<u32>> = (0..4).map(|_| qgen.dev_prompt(96)).collect();
+    let mk_plan = || KascadePlan::from_anchors(6, 4, vec![0, 3], TopKRule::new(0.25, 16));
+    let quant_run = |dtype: KvDtype| -> (Vec<Completion>, f64, usize, u64) {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 2048,
+            max_running: 4,
+            token_budget: 1024,
+            prefill_chunk: 128,
+            queue_cap: 16,
+            workers: 1,
+            kv_dtype: dtype,
+            ..ServeConfig::default()
+        };
+        let model = qmodel.clone();
+        let mut engine = Engine::new(
+            cfg,
+            Box::new(move |_req: &Request| {
+                Box::new(NativeBackend::with_dtype(
+                    model.clone(),
+                    256,
+                    Box::new(KascadePolicy::new(mk_plan())),
+                    dtype,
+                )) as Box<dyn SeqBackend>
+            }),
+        );
+        for (id, p) in qprompts.iter().enumerate() {
+            engine.submit(Request {
+                id: id as u64,
+                prompt: p.clone(),
+                max_new: 24,
+                stop_token: None,
+            });
+        }
+        let mut done = engine.run_to_completion();
+        done.sort_by_key(|c| c.id);
+        (
+            done,
+            engine.metrics.decode_tok_s(),
+            engine.metrics.peak_kv_bytes,
+            engine.metrics.dequant_rows,
+        )
+    };
+    let (f32_done, f32_tok_s, f32_bytes, _) = quant_run(KvDtype::F32);
+    let (_, int8_tok_s, int8_bytes, int8_dequant) = quant_run(KvDtype::Int8);
+    let bytes_ratio = f32_bytes as f64 / (int8_bytes as f64).max(1.0);
+    let tok_s_ratio = int8_tok_s / f32_tok_s.max(1e-9);
+    // teacher-forced divergence: feed the f32 run's streams to both
+    // precisions so one low-margin argmax flip cannot cascade
+    let rel_l2 = |a: &[f32], b: &[f32]| -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            num += ((x - y) as f64).powi(2);
+            den += (*x as f64).powi(2);
+        }
+        (num / den.max(1e-12)).sqrt()
+    };
+    let mut max_rel = 0.0f64;
+    for (p, c) in qprompts.iter().zip(&f32_done) {
+        let mut st_f = qmodel.new_state_with_dtype(256, KvDtype::F32);
+        let mut st_q = qmodel.new_state_with_dtype(256, KvDtype::Int8);
+        let mut pol_f = KascadePolicy::new(mk_plan());
+        let mut pol_q = KascadePolicy::new(mk_plan());
+        let (lf, _) = qmodel.prefill(p, &mut st_f, &mut pol_f, None);
+        let (lq, _) = qmodel.prefill(p, &mut st_q, &mut pol_q, None);
+        max_rel = max_rel.max(rel_l2(&lf, &lq));
+        for &tok in &c.tokens {
+            let lf = qmodel.decode_step(tok, &mut st_f, &mut pol_f);
+            let lq = qmodel.decode_step(tok, &mut st_q, &mut pol_q);
+            max_rel = max_rel.max(rel_l2(&lf, &lq));
+        }
+    }
+    println!("\nquantized KV (4 decoders x 24 tok, 6-layer SynthLM, Kascade policy):");
+    println!(
+        "  peak KV bytes f32 {f32_bytes}  int8 {int8_bytes}  ratio {bytes_ratio:.2}x  \
+         decode f32 {f32_tok_s:.1} tok/s  int8 {int8_tok_s:.1} tok/s  ratio {tok_s_ratio:.2}x"
+    );
+    println!(
+        "  max per-token logit divergence (teacher-forced, rel L2) {max_rel:.4}  \
+         dequant rows {int8_dequant}"
+    );
+    assert!(
+        bytes_ratio >= 1.8,
+        "int8 KV must cut peak resident bytes >= 1.8x (got {bytes_ratio:.2}x)"
+    );
+    assert!(
+        max_rel <= 0.15,
+        "int8 per-token logit divergence {max_rel:.4} exceeds the 0.15 bound"
+    );
+
     // machine-readable record (ratio + prefix-cache savings)
     std::fs::create_dir_all("results").expect("results dir");
     let record = Json::obj(vec![
@@ -259,6 +363,22 @@ fn main() {
             Json::obj(vec![
                 ("saved_frac", Json::num(saved_frac)),
                 ("hit_rate", Json::num(m.prefix_hit_rate())),
+            ]),
+        ),
+        (
+            "quantized_kv",
+            Json::obj(vec![
+                ("batch", Json::num(4.0)),
+                ("max_new", Json::num(24.0)),
+                ("n_layers", Json::num(6.0)),
+                ("peak_kv_bytes_f32", Json::num(f32_bytes as f64)),
+                ("peak_kv_bytes_int8", Json::num(int8_bytes as f64)),
+                ("kv_bytes_ratio", Json::num(bytes_ratio)),
+                ("decode_tok_s_f32", Json::num(f32_tok_s)),
+                ("decode_tok_s_int8", Json::num(int8_tok_s)),
+                ("decode_tok_s_ratio", Json::num(tok_s_ratio)),
+                ("max_rel_logit_divergence", Json::num(max_rel)),
+                ("dequant_rows", Json::num(int8_dequant as f64)),
             ]),
         ),
     ]);

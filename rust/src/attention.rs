@@ -8,18 +8,48 @@
 //! pipeline cost structure.  A [`CostTracker`] accounts key/value reads and
 //! score FLOPs so experiments can report work ratios alongside wall-clock.
 
-use crate::tensor::{dot, softmax, topk_indices_unordered};
+use crate::config::KvDtype;
+use crate::tensor::{
+    axpy_q8, dequantize_q8, dot, qk_dot_q8, quantize_q8, softmax, topk_indices_unordered,
+};
 
-/// Per-layer KV cache: contiguous `[n_kv, cap, d]` buffers plus optional
-/// per-page min/max summaries (used by the Quest baseline).
+/// Per-layer KV cache: contiguous `[n_kv, cap, d]` storage plus per-page
+/// min/max key summaries (used by the Quest baseline).
+///
+/// Two storage modes ([`KvDtype`]):
+///
+/// * **F32** — plain f32 buffers, the exact baseline.
+/// * **Int8** — completed quantization tiles (one tile = `page_size`
+///   positions, aligned with the paged-KV block size) are stored as int8
+///   with a per-tile, per-head affine `(scale, zero)` pair for K and for
+///   V; the current partially-filled tail tile lives in a small f32
+///   staging buffer (`[n_kv, page_size, d]`) until it completes, then is
+///   quantized once with its final min/max and never touched again —
+///   which is what lets copy-on-write forks share quantized blocks
+///   byte-for-byte without re-quantizing.
+///
+/// Kernels never read raw storage directly: [`KvCache::dot_key`] scores
+/// fused over int8 rows (no dequantized materialization) and
+/// [`KvCache::add_val`] dequantizes value rows on attend.
 #[derive(Clone)]
 pub struct KvCache {
     pub n_kv: usize,
     pub d: usize,
     pub cap: usize,
     pub len: usize,
+    dtype: KvDtype,
+    /// F32 mode: full `[n_kv, cap, d]` K/V storage.  Int8 mode: the f32
+    /// staging tail, `[n_kv, page_size, d]` (current partial tile only).
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Int8 mode: quantized completed tiles, `[n_kv, cap, d]`.
+    kq: Vec<i8>,
+    vq: Vec<i8>,
+    /// Int8 mode: per `(head, tile)` affine params, `[n_kv, n_tiles]`.
+    kscale: Vec<f32>,
+    kzero: Vec<f32>,
+    vscale: Vec<f32>,
+    vzero: Vec<f32>,
     /// page summaries: for each kv head and page, elementwise min and max
     /// of the keys in the page: `[n_kv, n_pages, 2, d]`.
     page_size: usize,
@@ -32,14 +62,29 @@ impl KvCache {
     }
 
     pub fn with_page_size(n_kv: usize, d: usize, cap: usize, page_size: usize) -> Self {
+        Self::with_opts(n_kv, d, cap, page_size, KvDtype::F32)
+    }
+
+    pub fn with_opts(n_kv: usize, d: usize, cap: usize, page_size: usize, dtype: KvDtype) -> Self {
         let n_pages = cap.div_ceil(page_size);
+        let (f32_len, q_len, s_len) = match dtype {
+            KvDtype::F32 => (n_kv * cap * d, 0, 0),
+            KvDtype::Int8 => (n_kv * page_size * d, n_kv * cap * d, n_kv * n_pages),
+        };
         Self {
             n_kv,
             d,
             cap,
             len: 0,
-            k: vec![0.0; n_kv * cap * d],
-            v: vec![0.0; n_kv * cap * d],
+            dtype,
+            k: vec![0.0; f32_len],
+            v: vec![0.0; f32_len],
+            kq: vec![0; q_len],
+            vq: vec![0; q_len],
+            kscale: vec![0.0; s_len],
+            kzero: vec![0.0; s_len],
+            vscale: vec![0.0; s_len],
+            vzero: vec![0.0; s_len],
             page_size,
             pages: vec![0.0; n_kv * n_pages * 2 * d],
         }
@@ -53,15 +98,52 @@ impl KvCache {
         self.len.div_ceil(self.page_size)
     }
 
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    #[inline]
+    pub fn is_quantized(&self) -> bool {
+        self.dtype == KvDtype::Int8
+    }
+
+    /// First position of the f32 staging tail (Int8 mode): positions at
+    /// or beyond this sit in the not-yet-quantized partial tile.
+    #[inline]
+    fn staged_from(&self) -> usize {
+        (self.len / self.page_size) * self.page_size
+    }
+
+    /// KV bytes resident for the `len` stored positions (storage the
+    /// tokens actually occupy; excludes unused capacity).  Int8 counts
+    /// the quantized tiles, the per-tile scale/zero params, and the f32
+    /// staging tail.
+    pub fn kv_bytes(&self) -> usize {
+        let rows = self.n_kv * self.d * 2; // K + V elements per position
+        match self.dtype {
+            KvDtype::F32 => self.len * rows * 4,
+            KvDtype::Int8 => {
+                let full = self.staged_from();
+                let staged = self.len - full;
+                let tiles = full / self.page_size;
+                full * rows + staged * rows * 4 + tiles * self.n_kv * 4 * 4
+            }
+        }
+    }
+
     /// Append one position: `k_new`/`v_new` are `[n_kv * d]` (head-major).
     pub fn push(&mut self, k_new: &[f32], v_new: &[f32]) {
         assert!(self.len < self.cap, "KV cache overflow (cap {})", self.cap);
         debug_assert_eq!(k_new.len(), self.n_kv * self.d);
         let pos = self.len;
         let page = pos / self.page_size;
-        let fresh_page = pos % self.page_size == 0;
+        let r = pos % self.page_size;
+        let fresh_page = r == 0;
         for h in 0..self.n_kv {
-            let dst = (h * self.cap + pos) * self.d;
+            let dst = match self.dtype {
+                KvDtype::F32 => (h * self.cap + pos) * self.d,
+                KvDtype::Int8 => (h * self.page_size + r) * self.d,
+            };
             self.k[dst..dst + self.d].copy_from_slice(&k_new[h * self.d..(h + 1) * self.d]);
             self.v[dst..dst + self.d].copy_from_slice(&v_new[h * self.d..(h + 1) * self.d]);
             // update page min/max
@@ -80,18 +162,115 @@ impl KvCache {
             }
         }
         self.len += 1;
+        if self.dtype == KvDtype::Int8 && r == self.page_size - 1 {
+            self.quantize_tile(page);
+        }
     }
 
+    /// Quantize the (full) staging tile into the int8 store (Int8 mode).
+    fn quantize_tile(&mut self, tile: usize) {
+        let td = self.page_size * self.d;
+        let nt = self.cap.div_ceil(self.page_size);
+        for h in 0..self.n_kv {
+            let src = h * td;
+            let dst = (h * self.cap + tile * self.page_size) * self.d;
+            let (ks, kz) = quantize_q8(&self.k[src..src + td], &mut self.kq[dst..dst + td]);
+            let (vs, vz) = quantize_q8(&self.v[src..src + td], &mut self.vq[dst..dst + td]);
+            self.kscale[h * nt + tile] = ks;
+            self.kzero[h * nt + tile] = kz;
+            self.vscale[h * nt + tile] = vs;
+            self.vzero[h * nt + tile] = vz;
+        }
+    }
+
+    /// Raw f32 key row.  Int8 mode: only valid for staged (tail)
+    /// positions — completed tiles have no f32 representation.
     #[inline]
     pub fn key(&self, h: usize, pos: usize) -> &[f32] {
-        let o = (h * self.cap + pos) * self.d;
+        let o = match self.dtype {
+            KvDtype::F32 => (h * self.cap + pos) * self.d,
+            KvDtype::Int8 => {
+                assert!(pos >= self.staged_from(), "f32 key read of quantized position {pos}");
+                (h * self.page_size + pos % self.page_size) * self.d
+            }
+        };
         &self.k[o..o + self.d]
     }
 
+    /// Raw f32 value row (same staging restriction as [`KvCache::key`]).
     #[inline]
     pub fn val(&self, h: usize, pos: usize) -> &[f32] {
-        let o = (h * self.cap + pos) * self.d;
+        let o = match self.dtype {
+            KvDtype::F32 => (h * self.cap + pos) * self.d,
+            KvDtype::Int8 => {
+                assert!(pos >= self.staged_from(), "f32 val read of quantized position {pos}");
+                (h * self.page_size + pos % self.page_size) * self.d
+            }
+        };
         &self.v[o..o + self.d]
+    }
+
+    /// `dot(q, key(h, pos))` in whatever precision the row is stored:
+    /// f32 rows use the exact [`dot`]; quantized rows the fused
+    /// [`qk_dot_q8`] (no dequantized materialization).
+    #[inline]
+    pub fn dot_key(&self, h: usize, pos: usize, q: &[f32]) -> f32 {
+        match self.dtype {
+            KvDtype::F32 => dot(q, self.key(h, pos)),
+            KvDtype::Int8 => {
+                if pos >= self.staged_from() {
+                    dot(q, self.key(h, pos))
+                } else {
+                    let tile = pos / self.page_size;
+                    let nt = self.cap.div_ceil(self.page_size);
+                    let o = (h * self.cap + pos) * self.d;
+                    qk_dot_q8(
+                        q,
+                        &self.kq[o..o + self.d],
+                        self.kscale[h * nt + tile],
+                        self.kzero[h * nt + tile],
+                    )
+                }
+            }
+        }
+    }
+
+    /// `out += w * val(h, pos)` — f32 rows via [`crate::tensor::axpy`],
+    /// quantized rows via the fused dequantize-on-attend [`axpy_q8`].
+    #[inline]
+    pub fn add_val(&self, h: usize, pos: usize, w: f32, out: &mut [f32]) {
+        match self.dtype {
+            KvDtype::F32 => crate::tensor::axpy(out, w, self.val(h, pos)),
+            KvDtype::Int8 => {
+                if pos >= self.staged_from() {
+                    crate::tensor::axpy(out, w, self.val(h, pos));
+                } else {
+                    let tile = pos / self.page_size;
+                    let nt = self.cap.div_ceil(self.page_size);
+                    let o = (h * self.cap + pos) * self.d;
+                    axpy_q8(
+                        out,
+                        w,
+                        &self.vq[o..o + self.d],
+                        self.vscale[h * nt + tile],
+                        self.vzero[h * nt + tile],
+                    );
+                }
+            }
+        }
+    }
+
+    /// The stored int8 key row and its tile `(scale, zero)` — `None` for
+    /// f32 caches and staged positions.  Diagnostics/tests only (e.g.
+    /// asserting CoW forks share quantized tiles byte-for-byte).
+    pub fn quantized_key_row(&self, h: usize, pos: usize) -> Option<(&[i8], f32, f32)> {
+        if self.dtype != KvDtype::Int8 || pos >= self.staged_from() {
+            return None;
+        }
+        let tile = pos / self.page_size;
+        let nt = self.cap.div_ceil(self.page_size);
+        let o = (h * self.cap + pos) * self.d;
+        Some((&self.kq[o..o + self.d], self.kscale[h * nt + tile], self.kzero[h * nt + tile]))
     }
 
     /// (min, max) key summary of `page` for head `h`.
@@ -106,28 +285,61 @@ impl KvCache {
 
     /// Truncate to the first `n` positions (prefix-cache snapshot forks).
     /// The (now partial) last page's min/max summary is rebuilt from the
-    /// raw keys so Quest-style page bounds stay exact after truncation.
+    /// stored keys so Quest-style page bounds stay exact after
+    /// truncation.  Int8 mode: a boundary inside a completed tile
+    /// dequantizes that tile's surviving rows back into the staging tail
+    /// (they re-quantize when the tile refills); tile-aligned boundaries
+    /// — the common case, since prefix-cache snapshots are block-aligned
+    /// and blocks equal tiles — keep every quantized tile byte-for-byte.
     pub fn truncate(&mut self, n: usize) {
         assert!(n <= self.len, "truncate {n} beyond len {}", self.len);
+        let old_len = self.len;
         self.len = n;
         if n == 0 {
             return;
         }
-        let page = (n - 1) / self.page_size;
-        let p0 = page * self.page_size;
+        let ps = self.page_size;
         let d = self.d;
+        let tail = n % ps;
+        if self.dtype == KvDtype::Int8 && tail != 0 {
+            let tile = n / ps;
+            if old_len / ps > tile {
+                // the tail tile had completed: restore its surviving rows
+                // into staging from the quantized store
+                let nt = self.cap.div_ceil(ps);
+                for h in 0..self.n_kv {
+                    let (ks, kz) = (self.kscale[h * nt + tile], self.kzero[h * nt + tile]);
+                    let (vs, vz) = (self.vscale[h * nt + tile], self.vzero[h * nt + tile]);
+                    for r in 0..tail {
+                        let src = (h * self.cap + tile * ps + r) * d;
+                        let dst = (h * ps + r) * d;
+                        dequantize_q8(&self.kq[src..src + d], ks, kz, &mut self.k[dst..dst + d]);
+                        dequantize_q8(&self.vq[src..src + d], vs, vz, &mut self.v[dst..dst + d]);
+                    }
+                }
+            }
+            // else: the tile was already partial; rows [tile*ps, n) are a
+            // prefix of what staging holds — nothing to restore
+        }
+        let page = (n - 1) / ps;
+        if self.dtype == KvDtype::Int8 && tail == 0 {
+            // tile-aligned boundary: the last page was complete before
+            // truncation too, so its stored summary is already exact (and
+            // its raw f32 rows no longer exist to rebuild from)
+            return;
+        }
+        let p0 = page * ps;
         for h in 0..self.n_kv {
             let mut mins = vec![f32::INFINITY; d];
             let mut maxs = vec![f32::NEG_INFINITY; d];
             for pos in p0..n {
-                let o = (h * self.cap + pos) * d;
+                let row = self.key(h, pos);
                 for i in 0..d {
-                    let x = self.k[o + i];
-                    mins[i] = mins[i].min(x);
-                    maxs[i] = maxs[i].max(x);
+                    mins[i] = mins[i].min(row[i]);
+                    maxs[i] = maxs[i].max(row[i]);
                 }
             }
-            let pb = ((h * self.cap.div_ceil(self.page_size)) + page) * 2 * d;
+            let pb = ((h * self.cap.div_ceil(ps)) + page) * 2 * d;
             self.pages[pb..pb + d].copy_from_slice(&mins);
             self.pages[pb + d..pb + 2 * d].copy_from_slice(&maxs);
         }
@@ -143,6 +355,12 @@ pub struct CostTracker {
     pub attend_kv_reads: u64,
     /// Entries pushed through top-k selection.
     pub topk_items: u64,
+    /// Quantized KV rows read through the dequantizing attend path
+    /// (value reads of int8 tiles).  Scoring over quantized keys is
+    /// fused ([`crate::tensor::qk_dot_q8`]) and never counts here — the
+    /// gap between `attend_kv_reads` and `dequant_rows` is exactly the
+    /// work the Top-k selection saved from touching full precision.
+    pub dequant_rows: u64,
 }
 
 impl CostTracker {
@@ -150,6 +368,7 @@ impl CostTracker {
         self.score_key_reads += o.score_key_reads;
         self.attend_kv_reads += o.attend_kv_reads;
         self.topk_items += o.topk_items;
+        self.dequant_rows += o.dequant_rows;
     }
 }
 
@@ -174,7 +393,7 @@ pub fn decode_dense(q: &[f32], cache: &KvCache, g: usize, out: &mut [f32], cost:
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
             for p in 0..len {
-                s[p] = dot(qrow, cache.key(h, p)) * sc;
+                s[p] = cache.dot_key(h, p, qrow) * sc;
             }
             softmax(&mut s);
             let orow = &mut out[hq * d..(hq + 1) * d];
@@ -182,13 +401,16 @@ pub fn decode_dense(q: &[f32], cache: &KvCache, g: usize, out: &mut [f32], cost:
             for p in 0..len {
                 let w = s[p];
                 if w > 1e-9 {
-                    crate::tensor::axpy(orow, w, cache.val(h, p));
+                    cache.add_val(h, p, w, orow);
                 }
             }
         }
     }
     cost.score_key_reads += (n_kv * g * len) as u64;
     cost.attend_kv_reads += (n_kv * g * len) as u64;
+    if cache.is_quantized() {
+        cost.dequant_rows += (n_kv * g * len) as u64;
+    }
 }
 
 /// Per-query-head post-softmax distributions for one decode query:
@@ -203,7 +425,7 @@ pub fn decode_head_scores(q: &[f32], cache: &KvCache, g: usize, cost: &mut CostT
             let qrow = &q[hq * d..(hq + 1) * d];
             let mut s = vec![0.0f32; len];
             for p in 0..len {
-                s[p] = dot(qrow, cache.key(h, p)) * sc;
+                s[p] = cache.dot_key(h, p, qrow) * sc;
             }
             softmax(&mut s);
             all.push(s);
@@ -240,7 +462,7 @@ pub fn decode_pooled_scores_upto(
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
             for p in 0..len {
-                s[p] = dot(qrow, cache.key(h, p)) * sc;
+                s[p] = cache.dot_key(h, p, qrow) * sc;
             }
             softmax(&mut s);
             for p in 0..len {
@@ -288,14 +510,14 @@ pub fn decode_sparse(
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
             for (j, &p) in hidx.iter().enumerate() {
-                s[j] = dot(qrow, cache.key(h, p as usize)) * sc;
+                s[j] = cache.dot_key(h, p as usize, qrow) * sc;
             }
             softmax(&mut s);
             let orow = &mut out[hq * d..(hq + 1) * d];
             orow.fill(0.0);
             for (j, &p) in hidx.iter().enumerate() {
                 if s[j] > 1e-9 {
-                    crate::tensor::axpy(orow, s[j], cache.val(h, p as usize));
+                    cache.add_val(h, p as usize, s[j], orow);
                 }
             }
         }
@@ -303,6 +525,9 @@ pub fn decode_sparse(
     }
     cost.score_key_reads += total;
     cost.attend_kv_reads += total;
+    if cache.is_quantized() {
+        cost.dequant_rows += total;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -355,20 +580,23 @@ pub fn decode_dense_upto(
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
             for p in 0..len {
-                s[p] = dot(qrow, cache.key(h, p)) * sc;
+                s[p] = cache.dot_key(h, p, qrow) * sc;
             }
             softmax(&mut s);
             let orow = &mut out[hq * d..(hq + 1) * d];
             orow.fill(0.0);
             for p in 0..len {
                 if s[p] > 1e-9 {
-                    crate::tensor::axpy(orow, s[p], cache.val(h, p));
+                    cache.add_val(h, p, s[p], orow);
                 }
             }
         }
     }
     cost.score_key_reads += (n_kv * g * len) as u64;
     cost.attend_kv_reads += (n_kv * g * len) as u64;
+    if cache.is_quantized() {
+        cost.dequant_rows += (n_kv * g * len) as u64;
+    }
 }
 
 /// Tile-level post-softmax pooled scores for prefill (anchor passes 1+2):
@@ -401,7 +629,7 @@ pub fn prefill_pooled_scores(
                 let hq = h * g + qi;
                 let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
                 for p in 0..upto {
-                    s[p] = dot(qrow, cache.key(h, p)) * sc;
+                    s[p] = cache.dot_key(h, p, qrow) * sc;
                 }
                 softmax(&mut s[..upto]);
                 for p in 0..upto {
@@ -458,19 +686,22 @@ pub fn prefill_sparse_tile(
                 let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
                 s.clear();
                 for &p in &kept {
-                    s.push(dot(qrow, cache.key(h, p as usize)) * sc);
+                    s.push(cache.dot_key(h, p as usize, qrow) * sc);
                 }
                 softmax(&mut s);
                 let orow = &mut out[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
                 orow.fill(0.0);
                 for (j, &p) in kept.iter().enumerate() {
                     if s[j] > 1e-9 {
-                        crate::tensor::axpy(orow, s[j], cache.val(h, p as usize));
+                        cache.add_val(h, p as usize, s[j], orow);
                     }
                 }
             }
             cost.score_key_reads += (g * kept.len()) as u64;
             cost.attend_kv_reads += (g * kept.len()) as u64;
+            if cache.is_quantized() {
+                cost.dequant_rows += (g * kept.len()) as u64;
+            }
         }
     }
 }
@@ -769,6 +1000,110 @@ mod tests {
         for _ in 0..3 {
             cache.push(&k, &k);
         }
+    }
+
+    /// Build an f32 cache and an int8 cache holding identical pushes.
+    fn paired_caches(n_kv: usize, d: usize, len: usize, seed: u64) -> (KvCache, KvCache) {
+        let mut r = Rng::new(seed);
+        let mut cf = KvCache::new(n_kv, d, len + 8);
+        let mut cq = KvCache::with_opts(n_kv, d, len + 8, 16, crate::config::KvDtype::Int8);
+        for _ in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 1.0);
+            cf.push(&k, &v);
+            cq.push(&k, &v);
+        }
+        (cf, cq)
+    }
+
+    #[test]
+    fn int8_dense_decode_close_to_f32() {
+        let mut r = Rng::new(41);
+        let (n_kv, g, d, len) = (2, 2, 16, 200);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let (cf, cq) = paired_caches(n_kv, d, len, 42);
+        let mut of = vec![0.0; n_kv * g * d];
+        let mut oq = vec![0.0; n_kv * g * d];
+        let mut c = CostTracker::default();
+        decode_dense(&q, &cf, g, &mut of, &mut c);
+        let mut c8 = CostTracker::default();
+        decode_dense(&q, &cq, g, &mut oq, &mut c8);
+        let cos = crate::tensor::cosine_sim(&of, &oq);
+        assert!(cos > 0.999, "cos {cos}");
+        assert!(c8.dequant_rows > 0, "dense fallback must dequantize");
+        assert_eq!(c.dequant_rows, 0, "f32 never dequantizes");
+    }
+
+    #[test]
+    fn int8_pooled_scores_close_and_fused() {
+        let mut r = Rng::new(43);
+        let (n_kv, g, d, len) = (2, 2, 16, 200);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let (cf, cq) = paired_caches(n_kv, d, len, 44);
+        let mut c = CostTracker::default();
+        let pf = decode_pooled_scores(&q, &cf, g, &mut c);
+        let mut c8 = CostTracker::default();
+        let pq = decode_pooled_scores(&q, &cq, g, &mut c8);
+        assert_eq!(c8.dequant_rows, 0, "scoring is fused over int8 — no dequant");
+        for (a, b) in pf.iter().zip(&pq) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() < 5e-3, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_kv_bytes_shrink() {
+        let (cf, cq) = paired_caches(2, 16, 200, 45);
+        let (bf, bq) = (cf.kv_bytes(), cq.kv_bytes());
+        let ratio = bf as f64 / bq as f64;
+        assert!(ratio >= 1.8, "bytes ratio {ratio:.2} (f32 {bf} int8 {bq})");
+    }
+
+    #[test]
+    fn int8_staged_tail_is_exact_f32() {
+        // positions past the last full tile are staged — identical reads
+        let (cf, cq) = paired_caches(2, 8, 41, 46); // 2 full tiles + 9 staged
+        for h in 0..2 {
+            for p in 32..41 {
+                assert_eq!(cf.key(h, p), cq.key(h, p));
+                assert_eq!(cf.val(h, p), cq.val(h, p));
+                assert!(cq.quantized_key_row(h, p).is_none());
+            }
+            assert!(cq.quantized_key_row(h, 31).is_some());
+        }
+    }
+
+    #[test]
+    fn int8_truncate_mid_tile_restores_staging() {
+        // truncate into a completed tile, then refill: reads must match a
+        // cache that was never truncated past that point (up to the one
+        // dequant/requant round-trip, which is deterministic)
+        let (_, mut cq) = paired_caches(2, 8, 48, 47); // 3 full tiles
+        let probe_q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.31).sin()).collect();
+        let before: Vec<f32> = (0..23).map(|p| cq.dot_key(1, p, &probe_q)).collect();
+        cq.truncate(23); // mid-tile boundary inside full tile 1
+        assert_eq!(cq.len, 23);
+        let after: Vec<f32> = (0..23).map(|p| cq.dot_key(1, p, &probe_q)).collect();
+        // full tile 0 untouched (bitwise); restored rows within quant error
+        for (p, (a, b)) in before.iter().zip(&after).enumerate() {
+            if p < 16 {
+                assert_eq!(a.to_bits(), b.to_bits(), "pos {p}");
+            } else {
+                assert!((a - b).abs() < 1e-3, "pos {p}: {a} vs {b}");
+            }
+        }
+        // refilling re-quantizes the tail tile without panicking
+        let k = vec![0.25; 2 * 8];
+        for _ in 0..12 {
+            cq.push(&k, &k);
+        }
+        assert_eq!(cq.len, 35);
+        assert!(cq.quantized_key_row(0, 17).is_some());
     }
 
     #[test]

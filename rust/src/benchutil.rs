@@ -1,6 +1,9 @@
 //! Tiny benchmark harness (criterion is unavailable offline): warmup +
-//! fixed-sample measurement with mean/std/min, markdown reporting.
+//! fixed-sample measurement with mean/std/min, markdown reporting —
+//! plus the CI bench-regression gate, which compares the bench run's
+//! machine-readable results against a checked-in baseline.
 
+use crate::jsonutil::Json;
 use crate::stats::{Timer, Welford};
 
 pub struct BenchResult {
@@ -47,6 +50,79 @@ pub fn header() {
     println!("|---|---|---|---|---|");
 }
 
+/// One metric's comparison against the checked-in baseline.
+#[derive(Debug, Clone)]
+pub struct GateCheck {
+    /// dotted path into the results JSON, e.g. `"prefix_cache.saved_frac"`
+    pub metric: String,
+    pub baseline: f64,
+    /// minimum acceptable value: `baseline * (1 - tolerance)`
+    pub floor: f64,
+    pub current: f64,
+    pub ok: bool,
+}
+
+impl GateCheck {
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {:.4} | {:.4} | {:.4} | {} |",
+            self.metric,
+            self.baseline,
+            self.floor,
+            self.current,
+            if self.ok { "ok" } else { "REGRESSED" }
+        )
+    }
+}
+
+/// Resolve a dotted path (`"a.b.c"`) through nested JSON objects.
+fn resolve<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = j;
+    for part in path.split('.') {
+        cur = cur.get(part)?;
+    }
+    Some(cur)
+}
+
+/// Bench-regression gate: every metric listed in `baseline.metrics`
+/// (dotted paths into `results`, higher-is-better) must be at least
+/// `baseline * (1 - tolerance)`, with `tolerance` read from the
+/// baseline file (default 0.10).  Returns every check so callers can
+/// print the full table; `Err` on malformed inputs or a metric missing
+/// from the results (a silently skipped metric is a gate that never
+/// fires).
+pub fn gate_against_baseline(results: &Json, baseline: &Json) -> Result<Vec<GateCheck>, String> {
+    let tol = baseline.get("tolerance").and_then(|t| t.as_f64()).unwrap_or(0.10);
+    if !(0.0..1.0).contains(&tol) {
+        return Err(format!("baseline tolerance {tol} outside [0, 1)"));
+    }
+    let metrics = baseline
+        .get("metrics")
+        .and_then(|m| m.as_obj())
+        .ok_or("baseline missing 'metrics' object")?;
+    if metrics.is_empty() {
+        return Err("baseline 'metrics' is empty — the gate would never fire".into());
+    }
+    let mut out = Vec::new();
+    for (path, v) in metrics {
+        let base = v
+            .as_f64()
+            .ok_or_else(|| format!("baseline metric '{path}' is not a number"))?;
+        let cur = resolve(results, path)
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| format!("results missing metric '{path}'"))?;
+        let floor = base * (1.0 - tol);
+        out.push(GateCheck {
+            metric: path.clone(),
+            baseline: base,
+            floor,
+            current: cur,
+            ok: cur >= floor,
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -58,5 +134,54 @@ mod tests {
         });
         assert!(r.mean_us >= 0.0);
         assert_eq!(r.samples, 5);
+    }
+
+    fn baseline(tol: f64) -> Json {
+        Json::obj(vec![
+            ("tolerance", Json::num(tol)),
+            (
+                "metrics",
+                Json::obj(vec![
+                    ("a.ratio", Json::num(2.0)),
+                    ("b.frac", Json::num(0.8)),
+                ]),
+            ),
+        ])
+    }
+
+    fn results(ratio: f64, frac: f64) -> Json {
+        Json::obj(vec![
+            ("a", Json::obj(vec![("ratio", Json::num(ratio))])),
+            ("b", Json::obj(vec![("frac", Json::num(frac))])),
+        ])
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let checks = gate_against_baseline(&results(1.85, 0.79), &baseline(0.10)).unwrap();
+        assert_eq!(checks.len(), 2);
+        assert!(checks.iter().all(|c| c.ok), "{checks:?}");
+    }
+
+    #[test]
+    fn gate_fails_past_tolerance() {
+        let checks = gate_against_baseline(&results(1.75, 0.9), &baseline(0.10)).unwrap();
+        let bad: Vec<_> = checks.iter().filter(|c| !c.ok).collect();
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].metric, "a.ratio");
+        assert!((bad[0].floor - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gate_errors_on_missing_metric() {
+        let partial = Json::obj(vec![("a", Json::obj(vec![("ratio", Json::num(2.0))]))]);
+        let err = gate_against_baseline(&partial, &baseline(0.10)).unwrap_err();
+        assert!(err.contains("b.frac"), "{err}");
+    }
+
+    #[test]
+    fn gate_errors_on_empty_baseline() {
+        let empty = Json::obj(vec![("metrics", Json::obj(vec![]))]);
+        assert!(gate_against_baseline(&results(2.0, 0.8), &empty).is_err());
     }
 }

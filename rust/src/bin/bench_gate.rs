@@ -1,0 +1,57 @@
+//! CI bench-regression gate: compares the machine-readable bench record
+//! (`results/coordinator_bench.json`, written by `make bench`) against
+//! the checked-in baseline (`benches/baseline.json`) and exits non-zero
+//! if any tracked metric regressed past the baseline's tolerance.
+//!
+//!   bench_gate [results.json] [baseline.json]
+//!
+//! Exit codes: 0 all metrics within tolerance, 1 regression, 2 bad input.
+
+use kascade::benchutil::gate_against_baseline;
+use kascade::jsonutil::Json;
+
+fn load(path: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("bench-gate: cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench-gate: cannot parse {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let results_path = args.next().unwrap_or_else(|| "results/coordinator_bench.json".into());
+    let baseline_path = args.next().unwrap_or_else(|| "benches/baseline.json".into());
+    let results = load(&results_path);
+    let baseline = load(&baseline_path);
+    let checks = match gate_against_baseline(&results, &baseline) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench-gate: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!("| metric | baseline | floor | current | status |");
+    println!("|---|---|---|---|---|");
+    for c in &checks {
+        println!("{}", c.row());
+    }
+    let regressed: Vec<_> = checks.iter().filter(|c| !c.ok).collect();
+    if regressed.is_empty() {
+        println!("bench-gate: all {} metrics within tolerance", checks.len());
+    } else {
+        for c in &regressed {
+            eprintln!(
+                "bench-gate: '{}' regressed: {:.4} < floor {:.4} (baseline {:.4})",
+                c.metric, c.current, c.floor, c.baseline
+            );
+        }
+        std::process::exit(1);
+    }
+}

@@ -74,6 +74,33 @@ impl ModelConfig {
     }
 }
 
+/// Storage precision of the paged KV cache.
+///
+/// `Int8` stores full quantization tiles (one tile = the cache's page
+/// size, matching the block size) as int8 with a per-tile, per-head
+/// affine `(scale, zero)` pair for K and for V; the partially-filled
+/// tail tile stays f32 in a small staging buffer until it completes.
+/// Tile Top-k *scoring* (Kascade anchors, pooled scores, OmniKV
+/// filters) runs fused over the int8 rows without materializing f32
+/// ([`crate::tensor::qk_dot_q8`]); only the value rows actually
+/// attended (the selected Top-k, or everything on a dense fallback)
+/// are dequantized.  See `docs/serving.md` § KV storage modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl KvDtype {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+}
+
 /// The paper's Top-k rule (Sec. 4.1): `k = min(max(frac * L, min_k), L)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TopKRule {
@@ -128,6 +155,12 @@ pub struct ServeConfig {
     /// weight reads).  Logits are bitwise-identical to the sequential
     /// path; disable only to measure the sequential baseline.
     pub batched_decode: bool,
+    /// Storage precision for paged KV blocks ([`KvDtype`]).  `Int8`
+    /// roughly quarters resident KV bytes (per-tile scales + the f32
+    /// staging tail are the overhead) at a bounded output divergence;
+    /// backends created for this config and the block manager's
+    /// per-block mode bookkeeping both follow it.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for ServeConfig {
@@ -143,6 +176,7 @@ impl Default for ServeConfig {
             enable_prefix_cache: false,
             prefix_cache_blocks: 1024,
             batched_decode: true,
+            kv_dtype: KvDtype::F32,
         }
     }
 }

@@ -1,7 +1,8 @@
 //! Concrete [`SeqBackend`]s: the native SynthLM engine (policy-driven) and
 //! the PJRT artifact path (plan-driven).
 
-use super::sequence::{BatchParts, SeqBackend};
+use super::sequence::{BatchParts, KvStats, SeqBackend};
+use crate::config::KvDtype;
 use crate::kascade::KascadePlan;
 use crate::model::{Model, SeqState};
 use crate::runtime::{PjrtModel, PjrtSeqState};
@@ -18,7 +19,20 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     pub fn new(model: Arc<Model>, cap: usize, policy: Box<dyn SparsePolicy>) -> Self {
-        let st = model.new_state(cap);
+        Self::with_dtype(model, cap, policy, KvDtype::F32)
+    }
+
+    /// Backend with an explicit KV storage precision
+    /// ([`crate::config::ServeConfig::kv_dtype`]).  Int8 states store
+    /// completed KV tiles quantized; sparse policies score over them
+    /// fused, and only attended value rows dequantize.
+    pub fn with_dtype(
+        model: Arc<Model>,
+        cap: usize,
+        policy: Box<dyn SparsePolicy>,
+        dtype: KvDtype,
+    ) -> Self {
+        let st = model.new_state_with_dtype(cap, dtype);
         Self { model, st, policy }
     }
 }
@@ -43,10 +57,21 @@ impl SeqBackend for NativeBackend {
         })
     }
 
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(KvStats {
+            bytes: self.model.kv_bytes(&self.st),
+            dequant_rows: self.st.cost.dequant_rows,
+        })
+    }
+
     /// Prefix-cache snapshot: clone the KV state truncated to the first
     /// `tokens` positions.  The policy is forked *fresh* — Top-k index
     /// state is per-sequence and must not leak through shared snapshots
     /// (the resumed sequence's anchor layers rebuild their own).
+    /// Cloning preserves the KV storage mode, and a block-aligned
+    /// boundary (the only kind the engine snapshots) lands on a
+    /// quantization-tile edge, so shared int8 tiles survive the fork
+    /// byte-for-byte — no re-quantization.
     fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
         if tokens > self.st.pos {
             return None;

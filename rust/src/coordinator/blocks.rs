@@ -26,12 +26,19 @@
 //! [`BlockManager::fork`]), the append triggers copy-on-write: the writer
 //! gets a fresh block and drops its ref on the shared one.
 
+use crate::config::KvDtype;
 use std::collections::{HashMap, VecDeque};
 
 #[derive(Debug)]
 pub struct BlockManager {
     pub block_size: usize,
     pub num_blocks: usize,
+    /// storage mode stamped onto newly allocated blocks
+    dtype: KvDtype,
+    /// per-block storage mode: set at allocation, preserved across
+    /// sharing (adopt / fork / prefix-cache parking) — a CoW-shared int8
+    /// block stays int8 for every owner and is never re-quantized
+    block_dtype: Vec<KvDtype>,
     free: Vec<u32>,
     /// per-block owner count (number of sequences whose table lists it)
     refc: Vec<u32>,
@@ -61,6 +68,8 @@ impl BlockManager {
         Self {
             block_size,
             num_blocks,
+            dtype: KvDtype::F32,
+            block_dtype: vec![KvDtype::F32; num_blocks],
             free: (0..num_blocks as u32).rev().collect(),
             refc: vec![0; num_blocks],
             indexed: vec![false; num_blocks],
@@ -78,6 +87,48 @@ impl BlockManager {
     /// blocks are kept adoptable instead of being freed.
     pub fn set_cache_capacity(&mut self, cap: usize) {
         self.cache_cap = cap;
+    }
+
+    /// Storage mode for blocks allocated from now on
+    /// ([`crate::config::ServeConfig::kv_dtype`]).  Existing blocks keep
+    /// the mode they were written in.
+    pub fn set_dtype(&mut self, dtype: KvDtype) {
+        self.dtype = dtype;
+    }
+
+    /// The storage mode block `b` was allocated under.
+    pub fn block_dtype_of(&self, b: u32) -> KvDtype {
+        self.block_dtype[b as usize]
+    }
+
+    /// Whether block `i` holds live content: referenced by a sequence,
+    /// or parked in the cached pool (refc 0 + indexed <=> on the LRU —
+    /// `drop_ref` un-indexes any block it frees).
+    #[inline]
+    fn is_live(&self, i: usize) -> bool {
+        self.refc[i] > 0 || self.indexed[i]
+    }
+
+    /// Live (in-use or cached) blocks stored quantized.  O(num_blocks).
+    pub fn quantized_blocks(&self) -> usize {
+        (0..self.num_blocks)
+            .filter(|&i| self.block_dtype[i] == KvDtype::Int8 && self.is_live(i))
+            .count()
+    }
+
+    /// Estimated KV bytes held by live (in-use + cached) blocks, given
+    /// the f32 cost of one full block.  Int8 blocks count a quarter (the
+    /// per-tile scale overhead is ignored here; exact per-sequence bytes
+    /// come from [`crate::coordinator::SeqBackend::kv_stats`]).
+    /// O(num_blocks).
+    pub fn kv_bytes_est(&self, f32_bytes_per_block: usize) -> usize {
+        (0..self.num_blocks)
+            .filter(|&i| self.is_live(i))
+            .map(|i| match self.block_dtype[i] {
+                KvDtype::F32 => f32_bytes_per_block,
+                KvDtype::Int8 => f32_bytes_per_block / 4,
+            })
+            .sum()
     }
 
     /// Blocks actively referenced by sequences.
@@ -132,11 +183,13 @@ impl BlockManager {
     /// the free list is empty.
     fn alloc_one(&mut self) -> Option<u32> {
         if let Some(b) = self.free.pop() {
+            self.block_dtype[b as usize] = self.dtype;
             return Some(b);
         }
         let b = self.lru.pop_front()?;
         self.indexed[b as usize] = false;
         self.evicted.push(b);
+        self.block_dtype[b as usize] = self.dtype;
         Some(b)
     }
 
@@ -489,6 +542,39 @@ mod tests {
         bm.release(1);
         assert_eq!(bm.cached(), 2, "pool capped");
         assert_eq!(bm.take_evicted().len(), 3);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn block_dtype_sticks_across_sharing_and_cow() {
+        use crate::config::KvDtype;
+        let mut bm = BlockManager::new(16, 8);
+        bm.set_cache_capacity(8);
+        bm.set_dtype(KvDtype::Int8);
+        assert!(bm.extend(1, 24)); // 2 int8 blocks, partial tail
+        let b0 = bm.block_of(1, 0).unwrap();
+        assert_eq!(bm.block_dtype_of(b0), KvDtype::Int8);
+        assert_eq!(bm.quantized_blocks(), 2);
+        // fork shares the same physical blocks: mode unchanged, nothing
+        // re-stamped (the shared int8 tiles are never re-quantized)
+        assert!(bm.fork(1, 2));
+        assert_eq!(bm.quantized_blocks(), 2);
+        // CoW copy of the shared tail allocates under the CURRENT mode
+        bm.set_dtype(KvDtype::F32);
+        assert!(bm.extend(2, 25));
+        let tail2 = bm.block_of(2, 1).unwrap();
+        assert_eq!(bm.block_dtype_of(tail2), KvDtype::F32);
+        assert_eq!(bm.block_dtype_of(b0), KvDtype::Int8, "shared block keeps its mode");
+        // parking in the cache pool and re-adopting preserves the mode
+        bm.mark_indexed(b0);
+        bm.release(1);
+        bm.release(2);
+        assert_eq!(bm.block_dtype_of(b0), KvDtype::Int8);
+        bm.adopt(7, &[b0], 16);
+        assert_eq!(bm.block_dtype_of(b0), KvDtype::Int8);
+        // byte estimate: int8 blocks count a quarter
+        let est = bm.kv_bytes_est(1024);
+        assert_eq!(est, 1024 / 4);
         bm.check_invariants().unwrap();
     }
 

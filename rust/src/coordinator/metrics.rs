@@ -29,6 +29,15 @@ pub struct ServeMetrics {
     pub decode_tokens: u64,
     /// wall time spent inside decode execution, microseconds
     pub decode_time_us: f64,
+    /// KV bytes resident across live sequences (sampled per tick from
+    /// backends that track storage — storage-mode aware, so int8 blocks
+    /// report their true size)
+    pub kv_bytes_resident: Welford,
+    /// high-water mark of resident KV bytes
+    pub peak_kv_bytes: usize,
+    /// quantized KV value rows read through the dequantizing attend path
+    /// (accumulated from finished sequences; 0 in pure-f32 serving)
+    pub dequant_rows: u64,
 }
 
 impl Default for ServeMetrics {
@@ -56,7 +65,16 @@ impl ServeMetrics {
             decode_batch: LatencyHist::new(),
             decode_tokens: 0,
             decode_time_us: 0.0,
+            kv_bytes_resident: Welford::new(),
+            peak_kv_bytes: 0,
+            dequant_rows: 0,
         }
+    }
+
+    /// Record one tick's total resident KV bytes.
+    pub fn sample_kv_bytes(&mut self, bytes: usize) {
+        self.kv_bytes_resident.add(bytes as f64);
+        self.peak_kv_bytes = self.peak_kv_bytes.max(bytes);
     }
 
     /// Decode throughput over time actually spent decoding (excludes
@@ -89,7 +107,8 @@ impl ServeMetrics {
              ttft p50={:.1}ms p99={:.1}ms  tpot mean={:.2}ms  \
              batch mean={:.1}  kv_util mean={:.0}%  preemptions={}  \
              prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
-             decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s",
+             decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s  \
+             kv_bytes peak={}  dequant_rows={}",
             self.requests_done,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -106,6 +125,8 @@ impl ServeMetrics {
             self.decode_batch.percentile(50.0),
             self.decode_batch.percentile(100.0),
             self.decode_tok_s(),
+            self.peak_kv_bytes,
+            self.dequant_rows,
         )
     }
 }

@@ -27,4 +27,4 @@ pub use metrics::ServeMetrics;
 pub use prefix_cache::{chain_hashes, PrefixIndex, PrefixMatch, PrefixStats};
 pub use router::Router;
 pub use scheduler::{Batch, Scheduler, WorkItem};
-pub use sequence::{BatchParts, Request, SeqBackend, SeqPhase, Sequence};
+pub use sequence::{BatchParts, KvStats, Request, SeqBackend, SeqPhase, Sequence};

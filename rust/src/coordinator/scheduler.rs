@@ -63,7 +63,18 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: ServeConfig) -> Self {
+        // int8 KV relies on block-aligned boundaries (prefix snapshots,
+        // CoW forks) landing on quantization-tile edges; the tile is the
+        // KvCache page (16).  A misaligned block size would silently
+        // re-quantize forked tails — refuse it up front.
+        assert!(
+            cfg.kv_dtype != crate::config::KvDtype::Int8 || cfg.block_size % 16 == 0,
+            "kv_dtype=int8 requires block_size to be a multiple of the 16-token \
+             quantization tile (got {})",
+            cfg.block_size
+        );
         let mut blocks = BlockManager::new(cfg.block_size, cfg.num_blocks);
+        blocks.set_dtype(cfg.kv_dtype);
         if cfg.enable_prefix_cache {
             blocks.set_cache_capacity(cfg.prefix_cache_blocks);
         }

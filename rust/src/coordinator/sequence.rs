@@ -58,6 +58,24 @@ pub trait SeqBackend {
     fn batch_parts(&mut self) -> Option<BatchParts<'_>> {
         None
     }
+    /// KV-storage accounting for this sequence, if the backend tracks it
+    /// (`None` for PJRT and test doubles).  The engine samples these per
+    /// tick into [`crate::coordinator::ServeMetrics`]: resident KV bytes
+    /// (storage-mode aware — int8 blocks count their true size) and the
+    /// cumulative count of quantized rows read through the dequantizing
+    /// attend path.
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
+}
+
+/// KV-storage accounting snapshot (see [`SeqBackend::kv_stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvStats {
+    /// Bytes of KV storage currently resident for the sequence.
+    pub bytes: usize,
+    /// Cumulative quantized value rows dequantized on attend.
+    pub dequant_rows: u64,
 }
 
 /// Borrowed view into a batch-capable backend (see

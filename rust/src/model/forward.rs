@@ -47,10 +47,22 @@ impl Model {
     }
 
     pub fn new_state(&self, cap: usize) -> SeqState {
+        self.new_state_with_dtype(cap, crate::config::KvDtype::F32)
+    }
+
+    /// Per-sequence state with an explicit KV storage precision
+    /// ([`crate::config::KvDtype`]): the quantization tile equals the
+    /// cache page size, so paged-KV blocks and int8 tiles stay aligned.
+    pub fn new_state_with_dtype(&self, cap: usize, dtype: crate::config::KvDtype) -> SeqState {
         let caches = (0..self.cfg.n_layers)
-            .map(|_| KvCache::new(self.cfg.n_kv_heads, self.cfg.d_head, cap))
+            .map(|_| KvCache::with_opts(self.cfg.n_kv_heads, self.cfg.d_head, cap, 16, dtype))
             .collect();
         SeqState { caches, pos: 0, cost: CostTracker::default() }
+    }
+
+    /// KV bytes resident across all layers of `st`.
+    pub fn kv_bytes(&self, st: &SeqState) -> usize {
+        st.caches.iter().map(|c| c.kv_bytes()).sum()
     }
 
     /// Project one hidden row into (q, k, v) head vectors with RoPE.

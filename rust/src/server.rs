@@ -48,8 +48,10 @@ pub struct Engine {
     /// prefix-cache state snapshots, keyed by the chain hash of the
     /// block-aligned prompt boundary they hold (see `coordinator::prefix_cache`)
     snapshots: HashMap<u64, Box<dyn SeqBackend>>,
-    /// snapshot insertion order, for [`MAX_SNAPSHOTS`] eviction (may
-    /// contain hashes already pruned by index invalidation)
+    /// snapshot insertion order, for [`MAX_SNAPSHOTS`] eviction.  May
+    /// transiently contain hashes already pruned by index invalidation;
+    /// the tick loop compacts those away once they outnumber live
+    /// entries, keeping the queue O(live snapshots)
     snapshot_order: VecDeque<u64>,
 }
 
@@ -98,8 +100,22 @@ impl Engine {
         for h in self.sched.take_invalidated() {
             self.snapshots.remove(&h);
         }
+        // compact stale order entries (hashes the invalidation path
+        // pruned from the map): without this the queue grows without
+        // bound under index churn, one dead hash per evicted boundary.
+        // Amortized O(1): compaction restores order.len() == map len.
+        if self.snapshot_order.len() > 2 * self.snapshots.len().max(32) {
+            let live = &self.snapshots;
+            self.snapshot_order.retain(|h| live.contains_key(h));
+        }
         for &victim in &batch.preempted {
             if let Some(s) = self.seqs.get_mut(&victim) {
+                // the discarded backend's dequant accounting would vanish
+                // with it (the fresh one restarts at 0) — fold it now;
+                // retire() later adds only the post-restart count
+                if let Some(ks) = s.backend.kv_stats() {
+                    self.metrics.dequant_rows += ks.dequant_rows;
+                }
                 let fresh = (self.factory)(&s.req);
                 s.preempt(fresh);
                 // emitted tokens folded into the prompt: re-hash so the
@@ -146,6 +162,12 @@ impl Engine {
         }
         self.metrics.kv_util.add(self.sched.blocks.utilization());
         self.metrics.kv_cached.add(self.sched.blocks.cached() as f64);
+        let kv_bytes: usize = self
+            .seqs
+            .values()
+            .filter_map(|s| s.backend.kv_stats().map(|k| k.bytes))
+            .sum();
+        self.metrics.sample_kv_bytes(kv_bytes);
         self.retire();
         n
     }
@@ -296,6 +318,9 @@ impl Engine {
         for id in done_ids {
             self.sched.on_finished(id);
             let s = self.seqs.remove(&id).unwrap();
+            if let Some(ks) = s.backend.kv_stats() {
+                self.metrics.dequant_rows += ks.dequant_rows;
+            }
             if let Some(t) = s.first_token_at {
                 self.metrics
                     .ttft_us
@@ -474,6 +499,71 @@ mod tests {
         for c in &done {
             assert_eq!(c.tokens.len(), 30, "req {} emitted {}", c.id, c.tokens.len());
         }
+        e.sched.blocks.check_invariants().unwrap();
+    }
+
+    /// Null-compute backend whose state is just a token count, with
+    /// prefix-snapshot support — lets tests drive the snapshot/index
+    /// machinery without a model.
+    struct ForkableToy {
+        tokens: usize,
+    }
+
+    impl SeqBackend for ForkableToy {
+        fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+            self.tokens += tokens.len();
+            Some(vec![0.0, 1.0])
+        }
+
+        fn decode(&mut self, _token: u32) -> Vec<f32> {
+            self.tokens += 1;
+            vec![0.0, 1.0]
+        }
+
+        fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+            if tokens > self.tokens {
+                return None;
+            }
+            Some(Box::new(ForkableToy { tokens }))
+        }
+    }
+
+    /// `snapshot_order` used to accumulate one dead hash per boundary
+    /// whose snapshot was pruned by index invalidation (block eviction
+    /// under pressure) — unbounded growth under churn.  The tick loop
+    /// now compacts stale entries; this churns hundreds of distinct
+    /// prompts through a tiny pool and asserts the queue stays
+    /// proportional to the live snapshot count.
+    #[test]
+    fn snapshot_order_stays_bounded_under_invalidation_churn() {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 16, // 256 tokens: constant eviction pressure
+            max_running: 2,
+            token_budget: 256,
+            prefill_chunk: 64,
+            queue_cap: 64,
+            workers: 1,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 16,
+            ..ServeConfig::default()
+        };
+        let mut e = Engine::new(cfg, Box::new(|_req| Box::new(ForkableToy { tokens: 0 })));
+        for id in 0..600u64 {
+            // distinct prompts: every admission registers fresh boundaries
+            // and evicts someone else's blocks (invalidating their hashes)
+            let prompt: Vec<u32> = (0..64).map(|j| (id * 64 + j) as u32).collect();
+            assert!(e.submit(Request { id, prompt, max_new: 2, stop_token: None }));
+            e.run_to_completion();
+        }
+        assert!(
+            // threshold + a tick's worth of registrations (compaction
+            // runs at the START of the next tick)
+            e.snapshot_order.len() <= 2 * e.snapshots.len().max(32) + 8,
+            "snapshot_order grew to {} with only {} live snapshots",
+            e.snapshot_order.len(),
+            e.snapshots.len()
+        );
         e.sched.blocks.check_invariants().unwrap();
     }
 

@@ -476,6 +476,63 @@ mod tests {
         );
     }
 
+    /// Anchor Top-k extracted from an int8 cache must select the same
+    /// tiles as from f32 when the score landscape has margin: pooled
+    /// scoring runs fused over the quantized keys (no dequant cost) and
+    /// the per-tile quantization error is far below the planted gap.
+    #[test]
+    fn int8_cache_matches_f32_topk_selection() {
+        use crate::config::KvDtype;
+        let mut r = Rng::new(88);
+        let (n_kv, g, d, len) = (2usize, 2usize, 16usize, 256usize);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut cf = KvCache::new(n_kv, d, len);
+        let mut cq = KvCache::with_opts(n_kv, d, len, 16, KvDtype::Int8);
+        // exactly k = 25 strongly aligned keys; the rest low noise
+        let strong: Vec<usize> = (0..25).map(|i| i * 10 + 3).collect();
+        for p in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.05);
+            r.fill_normal(&mut v, 1.0);
+            if strong.contains(&p) {
+                for h in 0..n_kv {
+                    for i in 0..d {
+                        k[h * d + i] = q[h * g * d + i] * 2.0;
+                    }
+                }
+            }
+            cf.push(&k, &v);
+            cq.push(&k, &v);
+        }
+        let mk = || {
+            let p = KascadePlan::from_anchors(8, 2, vec![0, 2], TopKRule::new(0.1, 16));
+            KascadePolicy::new(p)
+        };
+        let (mut pf, mut pq) = (mk(), mk());
+        let mut cost_f = CostTracker::default();
+        let mut cost_q = CostTracker::default();
+        let sf = pf.decode(2, &q, &cf, g, &mut cost_f);
+        let sq = pq.decode(2, &q, &cq, g, &mut cost_q);
+        assert_eq!(cost_q.dequant_rows, 0, "anchor scoring is fused — no dequant");
+        match (sf, sq) {
+            (Selection::Sparse(a), Selection::Sparse(b)) => {
+                for (ha, hb) in a.iter().zip(&b) {
+                    let mut sa = ha.clone();
+                    let mut sb = hb.clone();
+                    sa.sort_unstable();
+                    sb.sort_unstable();
+                    assert_eq!(sa, sb, "int8 Top-k selection diverged from f32");
+                    for &s in &strong {
+                        assert!(sa.contains(&(s as u32)), "planted key {s} missing");
+                    }
+                }
+            }
+            _ => panic!("expected sparse selections"),
+        }
+    }
+
     #[test]
     fn all_pooled_dense_fallback_clears_stale_tile_state() {
         let mut r = Rng::new(7);

@@ -135,6 +135,53 @@ mod tests {
         assert_eq!(s1, s3);
     }
 
+    /// OmniKV's filter-layer selection over an int8 cache (fused pooled
+    /// scoring) must pick the same shared set as over f32 when the
+    /// planted scores have margin.
+    #[test]
+    fn int8_cache_selects_same_filter_set() {
+        use crate::config::KvDtype;
+        let mut r = Rng::new(62);
+        let (n_kv, g, d, len) = (2, 2, 16, 256);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut cf = KvCache::new(n_kv, d, len);
+        let mut cq = KvCache::with_opts(n_kv, d, len, 16, KvDtype::Int8);
+        let strong: Vec<usize> = (0..25).map(|i| i * 10 + 4).collect();
+        for p in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.05);
+            r.fill_normal(&mut v, 1.0);
+            if strong.contains(&p) {
+                for h in 0..n_kv {
+                    for i in 0..d {
+                        k[h * d + i] = q[h * g * d + i] * 2.0;
+                    }
+                }
+            }
+            cf.push(&k, &v);
+            cq.push(&k, &v);
+        }
+        let mk = || OmniKvPolicy::new(4, vec![0], TopKRule::new(0.1, 16));
+        let (mut pf, mut pq) = (mk(), mk());
+        let mut cost = CostTracker::default();
+        pf.decode(0, &q, &cf, 2, &mut cost);
+        pq.decode(0, &q, &cq, 2, &mut cost);
+        let sf = pf.decode(1, &q, &cf, 2, &mut cost);
+        let sq = pq.decode(1, &q, &cq, 2, &mut cost);
+        match (sf, sq) {
+            (Selection::Sparse(a), Selection::Sparse(b)) => {
+                let mut sa = a[0].clone();
+                let mut sb = b[0].clone();
+                sa.sort_unstable();
+                sb.sort_unstable();
+                assert_eq!(sa, sb, "filter selection diverged between storage modes");
+            }
+            _ => panic!("expected sparse selections"),
+        }
+    }
+
     #[test]
     fn refresh_cadence() {
         let (q, c) = setup();

@@ -129,6 +129,40 @@ mod tests {
         }
     }
 
+    /// Quest scores pages from the f32 min/max summaries, which int8
+    /// caches keep exact (summaries are computed from the raw keys at
+    /// push time) — page selection is identical across storage modes.
+    #[test]
+    fn int8_cache_selects_identical_pages() {
+        use crate::config::KvDtype;
+        let mut r = Rng::new(61);
+        let (n_kv, g, d, len) = (2, 2, 16, 256);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let mut cf = KvCache::new(n_kv, d, len);
+        let mut cq = KvCache::with_opts(n_kv, d, len, 16, KvDtype::Int8);
+        for p in 0..len {
+            let mut k = vec![0.0; n_kv * d];
+            let mut v = vec![0.0; n_kv * d];
+            r.fill_normal(&mut k, 0.2);
+            r.fill_normal(&mut v, 1.0);
+            if p == 133 {
+                for h in 0..n_kv {
+                    for i in 0..d {
+                        k[h * d + i] = q[h * g * d + i] * 3.0;
+                    }
+                }
+            }
+            cf.push(&k, &v);
+            cq.push(&k, &v);
+        }
+        let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
+        let mut cost = CostTracker::default();
+        let sf = pol.decode(2, &q, &cf, g, &mut cost);
+        let sq = pol.decode(2, &q, &cq, g, &mut cost);
+        assert_eq!(sf, sq, "page selection must not depend on KV storage mode");
+    }
+
     #[test]
     fn early_layers_dense_and_prefill_dense() {
         let mut r = Rng::new(7);

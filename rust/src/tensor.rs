@@ -285,6 +285,99 @@ pub fn topk_indices_unordered(vals: &[f32], k: usize) -> Vec<u32> {
     pairs.into_iter().map(|(_, i)| i).collect()
 }
 
+// ---------------------------------------------------------------------------
+// int8 quantization kernels (quantized paged-KV storage)
+// ---------------------------------------------------------------------------
+
+/// Affine int8 quantization of one tile: `x ~= scale * q + zero` with
+/// `q` in `[-127, 127]`.  Returns `(scale, zero)`.
+///
+/// `scale`/`zero` are chosen from the tile's **finite** min/max, so the
+/// round-trip error of every finite element is bounded by
+/// `scale / 2 = (max - min) / 508`.  A constant tile gets
+/// `scale == 0.0` and all-zero codes (dequantizing to exactly `zero`);
+/// non-finite elements saturate to the code range (NaN encodes as 0,
+/// i.e. dequantizes to the tile midpoint) without poisoning the scale
+/// of their healthy neighbors.
+pub fn quantize_q8(src: &[f32], dst: &mut [i8]) -> (f32, f32) {
+    debug_assert_eq!(src.len(), dst.len());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in src {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        // empty tile or no finite elements: store zeros
+        dst.fill(0);
+        return (0.0, 0.0);
+    }
+    let zero = 0.5 * (lo + hi);
+    let scale = (hi - lo) / 254.0;
+    if scale <= 0.0 {
+        dst.fill(0);
+        return (0.0, zero);
+    }
+    let inv = 1.0 / scale;
+    for (d, &x) in dst.iter_mut().zip(src.iter()) {
+        let q = ((x - zero) * inv).round();
+        *d = q.clamp(-127.0, 127.0) as i8;
+    }
+    (scale, zero)
+}
+
+/// Dequantize `q` with an affine `(scale, zero)` pair into `out`.
+pub fn dequantize_q8(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(q.iter()) {
+        *o = c as f32 * scale + zero;
+    }
+}
+
+/// Fused f32 x int8 dot product: `dot(a, scale * q + zero)` without
+/// materializing the dequantized row.  One pass accumulates both
+/// `sum a_i * q_i` and `sum a_i`, so the zero-point costs no extra
+/// memory traffic — this is the scoring kernel for quantized KV tiles.
+#[inline]
+pub fn qk_dot_q8(a: &[f32], q: &[i8], scale: f32, zero: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let mut sq = [0.0f32; 4];
+    let mut sa = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 4..i * 4 + 4]);
+        sq[0] += x[0] * c[0] as f32;
+        sq[1] += x[1] * c[1] as f32;
+        sq[2] += x[2] * c[2] as f32;
+        sq[3] += x[3] * c[3] as f32;
+        sa[0] += x[0];
+        sa[1] += x[1];
+        sa[2] += x[2];
+        sa[3] += x[3];
+    }
+    let mut dq = sq[0] + sq[1] + sq[2] + sq[3];
+    let mut da = sa[0] + sa[1] + sa[2] + sa[3];
+    for i in chunks * 4..a.len() {
+        dq += a[i] * q[i] as f32;
+        da += a[i];
+    }
+    scale * dq + zero * da
+}
+
+/// Fused `y += w * (scale * q + zero)` — the weighted-value
+/// accumulation over a quantized V row (dequantize-on-attend).
+#[inline]
+pub fn axpy_q8(y: &mut [f32], w: f32, q: &[i8], scale: f32, zero: f32) {
+    debug_assert_eq!(y.len(), q.len());
+    let ws = w * scale;
+    let wz = w * zero;
+    for (yi, &c) in y.iter_mut().zip(q.iter()) {
+        *yi += ws * c as f32 + wz;
+    }
+}
+
 /// argmax of a slice (first max wins).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
@@ -466,6 +559,78 @@ mod tests {
         }
     }
 }
+#[cfg(test)]
+mod quant_tests {
+    use super::*;
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        let mut r = Rng::new(31);
+        for _ in 0..50 {
+            let n = 1 + r.below(256);
+            let scale_in = 0.1 + r.uniform() * 10.0;
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * scale_in).collect();
+            let mut q = vec![0i8; n];
+            let (s, z) = quantize_q8(&src, &mut q);
+            let mut back = vec![0.0f32; n];
+            dequantize_q8(&q, s, z, &mut back);
+            let lo = src.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let bound = (hi - lo) / 508.0 + 1e-6;
+            for (a, b) in src.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_constant_tile_is_exact() {
+        let src = vec![3.25f32; 64];
+        let mut q = vec![0i8; 64];
+        let (s, z) = quantize_q8(&src, &mut q);
+        assert_eq!(s, 0.0);
+        assert!(q.iter().all(|&c| c == 0));
+        let mut back = vec![0.0f32; 64];
+        dequantize_q8(&q, s, z, &mut back);
+        assert!(back.iter().all(|&x| x == 3.25));
+    }
+
+    #[test]
+    fn qk_dot_q8_matches_dequantized_dot() {
+        let mut r = Rng::new(33);
+        for _ in 0..30 {
+            let n = 1 + r.below(128);
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 0.5).collect();
+            let mut q = vec![0i8; n];
+            let (s, z) = quantize_q8(&src, &mut q);
+            let mut deq = vec![0.0f32; n];
+            dequantize_q8(&q, s, z, &mut deq);
+            let want = dot(&a, &deq);
+            let got = qk_dot_q8(&a, &q, s, z);
+            assert!((want - got).abs() < 1e-3 * (1.0 + want.abs()), "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn axpy_q8_matches_dequantized_axpy() {
+        let mut r = Rng::new(34);
+        let n = 96;
+        let src: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mut q = vec![0i8; n];
+        let (s, z) = quantize_q8(&src, &mut q);
+        let mut deq = vec![0.0f32; n];
+        dequantize_q8(&q, s, z, &mut deq);
+        let mut want = vec![0.5f32; n];
+        let mut got = vec![0.5f32; n];
+        axpy(&mut want, 0.7, &deq);
+        axpy_q8(&mut got, 0.7, &q, s, z);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}
+
 #[cfg(test)]
 mod quickselect_tests {
     use super::*;

@@ -85,6 +85,7 @@ fn run(
         enable_prefix_cache: true,
         prefix_cache_blocks: 128,
         batched_decode: batched,
+        ..ServeConfig::default()
     };
     let mut e = Engine::new(cfg, factory(model, cap, kascade));
     let mut tick = 0usize;

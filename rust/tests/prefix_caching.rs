@@ -77,6 +77,7 @@ fn cfg(enable: bool) -> ServeConfig {
         enable_prefix_cache: enable,
         prefix_cache_blocks: 256,
         batched_decode: true,
+        ..ServeConfig::default()
     }
 }
 

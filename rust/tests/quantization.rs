@@ -1,0 +1,258 @@
+//! Quantized paged-KV integration suite: round-trip error bounds
+//! (property-tested), f32-vs-int8 Top-k tile selection identity on
+//! synthetic score landscapes with margin, CoW-fork preservation of
+//! quantized tiles (no re-quantization), and end-to-end output
+//! divergence of int8 serving against the f32 stream.
+
+use kascade::attention::{self, CostTracker, KvCache};
+use kascade::config::{KvDtype, ServeConfig, TopKRule};
+use kascade::coordinator::{NativeBackend, Request, SeqBackend};
+use kascade::kascade::KascadePlan;
+use kascade::model::SynthSpec;
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::Engine;
+use kascade::sparse::{DensePolicy, KascadePolicy};
+use kascade::tensor::{dequantize_q8, quantize_q8};
+use kascade::workload::WorkloadGen;
+use std::sync::Arc;
+
+/// Round-trip error of affine int8 quantization is bounded by half a
+/// quantization step, `(max - min) / 508`, for arbitrary tiles.
+#[test]
+fn prop_quantize_round_trip_error_bound() {
+    check("quantize round trip", 40, |rng| {
+        let n = 1 + rng.below(512);
+        let spread = 0.01 + rng.uniform() * 20.0;
+        let shift = rng.normal() * 5.0;
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() * spread + shift).collect();
+        let mut q = vec![0i8; n];
+        let (s, z) = quantize_q8(&src, &mut q);
+        let mut back = vec![0.0f32; n];
+        dequantize_q8(&q, s, z, &mut back);
+        let lo = src.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let bound = (hi - lo) / 508.0 + (hi - lo).abs().max(1.0) * 1e-6;
+        for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+            prop_assert!(
+                (a - b).abs() <= bound,
+                "elem {i}: {a} vs {b} exceeds bound {bound}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Quantizing a cache must not change which tiles Top-k selects when the
+/// score landscape has margin: plant exactly `k` strongly aligned keys
+/// among low noise and require bitwise-identical selections (as sets)
+/// from f32 and int8 caches, across random layouts.
+#[test]
+fn prop_topk_selection_identical_f32_vs_int8() {
+    check("topk selection f32 vs int8", 15, |rng| {
+        let (n_kv, g, d) = (2usize, 2usize, 16usize);
+        let len = 192 + rng.below(4) * 64; // 192..384
+        let k = TopKRule::new(0.1, 16).k(len);
+        let mut q = vec![0.0; n_kv * g * d];
+        rng.fill_normal(&mut q, 1.0);
+        // k distinct planted positions
+        let mut all: Vec<usize> = (0..len).collect();
+        rng.shuffle(&mut all);
+        let mut strong = all[..k].to_vec();
+        strong.sort_unstable();
+        let mut cf = KvCache::new(n_kv, d, len);
+        let mut cq = KvCache::with_opts(n_kv, d, len, 16, KvDtype::Int8);
+        for p in 0..len {
+            let mut kr = vec![0.0; n_kv * d];
+            let mut vr = vec![0.0; n_kv * d];
+            rng.fill_normal(&mut kr, 0.05);
+            rng.fill_normal(&mut vr, 1.0);
+            if strong.binary_search(&p).is_ok() {
+                for h in 0..n_kv {
+                    for i in 0..d {
+                        kr[h * d + i] = q[h * g * d + i] * 2.0;
+                    }
+                }
+            }
+            cf.push(&kr, &vr);
+            cq.push(&kr, &vr);
+        }
+        let mut cost_f = CostTracker::default();
+        let mut cost_q = CostTracker::default();
+        let pf = attention::decode_pooled_scores(&q, &cf, g, &mut cost_f);
+        let pq = attention::decode_pooled_scores(&q, &cq, g, &mut cost_q);
+        prop_assert!(
+            cost_q.dequant_rows == 0,
+            "pooled scoring over int8 must be fused (dequant_rows {})",
+            cost_q.dequant_rows
+        );
+        let sf = attention::select_topk(&pf, k, &mut cost_f);
+        let sq = attention::select_topk(&pq, k, &mut cost_q);
+        for h in 0..n_kv {
+            let mut a = sf[h].clone();
+            let mut b = sq[h].clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            prop_assert!(a == b, "head {h}: f32 {a:?} != int8 {b:?} (len {len}, k {k})");
+            let want: Vec<u32> = strong.iter().map(|&p| p as u32).collect();
+            prop_assert!(a == want, "head {h}: planted set not selected");
+        }
+        Ok(())
+    });
+}
+
+/// A prefix-cache fork of an int8 backend shares the completed quantized
+/// tiles byte-for-byte — the fork must NOT re-quantize them (block
+/// boundaries equal tile boundaries, so a block-aligned fork point never
+/// splits a tile).
+#[test]
+fn cow_fork_preserves_quantized_tiles_bitwise() {
+    let mut spec = SynthSpec::eval_base(0xAB);
+    spec.cfg.n_layers = 4;
+    spec.block_starts = vec![1];
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0xF00);
+    let prompt = gen.dev_prompt(96); // 6 full 16-token tiles
+    let mut parent =
+        NativeBackend::with_dtype(model.clone(), 256, Box::new(DensePolicy), KvDtype::Int8);
+    parent.prefill_chunk(&prompt[..prompt.len() - 1], false);
+    parent.prefill_chunk(&prompt[prompt.len() - 1..], true);
+    let boundary = 64; // block- and tile-aligned
+    assert!(parent.fork_prefix(boundary).is_some(), "int8 backend must support forking");
+    // fork_prefix is clone + tile-aligned truncate: reproduce it on the
+    // state directly so the quantized tiles are comparable byte-for-byte
+    let mut st2 = parent.st.clone();
+    for c in &mut st2.caches {
+        c.truncate(boundary);
+    }
+    for layer in 0..model.cfg.n_layers {
+        let a = &parent.st.caches[layer];
+        let b = &st2.caches[layer];
+        for h in 0..model.cfg.n_kv_heads {
+            for pos in 0..boundary {
+                let (ra, sa, za) = a.quantized_key_row(h, pos).unwrap();
+                let (rb, sb, zb) = b.quantized_key_row(h, pos).unwrap();
+                assert_eq!(ra, rb, "layer {layer} head {h} pos {pos}: int8 bytes re-quantized");
+                assert_eq!(sa.to_bits(), sb.to_bits());
+                assert_eq!(za.to_bits(), zb.to_bits());
+            }
+        }
+    }
+}
+
+/// End-to-end: int8 serving through the engine must stay within a small
+/// per-token divergence of the f32 stream, at a large KV-byte reduction.
+#[test]
+fn int8_engine_bounded_divergence_and_smaller_kv() {
+    let mut spec = SynthSpec::eval_base(0xC4);
+    spec.cfg.n_layers = 6;
+    spec.block_starts = vec![1, 3];
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0xBEE);
+    let prompts: Vec<Vec<u32>> = (0..4).map(|_| gen.dev_prompt(96)).collect();
+    let run = |dtype: KvDtype| {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 1024,
+            max_running: 4,
+            token_budget: 512,
+            prefill_chunk: 128,
+            queue_cap: 16,
+            workers: 1,
+            kv_dtype: dtype,
+            ..ServeConfig::default()
+        };
+        let model = model.clone();
+        let mut engine = Engine::new(
+            cfg,
+            Box::new(move |_req: &Request| {
+                let plan = KascadePlan::from_anchors(6, 4, vec![0, 3], TopKRule::new(0.25, 16));
+                Box::new(NativeBackend::with_dtype(
+                    model.clone(),
+                    256,
+                    Box::new(KascadePolicy::new(plan)),
+                    dtype,
+                )) as Box<dyn SeqBackend>
+            }),
+        );
+        for (id, p) in prompts.iter().enumerate() {
+            engine.submit(Request {
+                id: id as u64,
+                prompt: p.clone(),
+                max_new: 16,
+                stop_token: None,
+            });
+        }
+        let mut done = engine.run_to_completion();
+        done.sort_by_key(|c| c.id);
+        let toks: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+        (toks, engine.metrics.peak_kv_bytes, engine.metrics.dequant_rows)
+    };
+    let (tf, bytes_f, deq_f) = run(KvDtype::F32);
+    let (_tq, bytes_q, deq_q) = run(KvDtype::Int8);
+    assert_eq!(deq_f, 0, "f32 serving never dequantizes");
+    assert!(deq_q > 0, "int8 serving must report dequantized rows");
+    let ratio = bytes_f as f64 / bytes_q as f64;
+    assert!(ratio >= 1.8, "peak KV bytes ratio {ratio:.2} below 1.8x");
+    // per-token divergence bound, teacher-forced on the f32 stream so a
+    // single low-margin argmax flip cannot cascade: feed the f32 run's
+    // tokens to both precisions and bound the relative logit error
+    let mut max_rel = 0.0f64;
+    for (p, stream) in prompts.iter().zip(&tf) {
+        let mut st_f = model.new_state_with_dtype(256, KvDtype::F32);
+        let mut st_q = model.new_state_with_dtype(256, KvDtype::Int8);
+        let mut pol_f = DensePolicy;
+        let mut pol_q = DensePolicy;
+        let (lf, _) = model.prefill(p, &mut st_f, &mut pol_f, None);
+        let (lq, _) = model.prefill(p, &mut st_q, &mut pol_q, None);
+        max_rel = max_rel.max(rel_l2(&lf, &lq));
+        for &tok in stream {
+            let lf = model.decode_step(tok, &mut st_f, &mut pol_f);
+            let lq = model.decode_step(tok, &mut st_q, &mut pol_q);
+            max_rel = max_rel.max(rel_l2(&lf, &lq));
+        }
+    }
+    assert!(max_rel <= 0.15, "per-token logit divergence {max_rel:.4} exceeds bound 0.15");
+}
+
+/// Relative L2 distance between two logit vectors.
+fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        num += ((x - y) as f64).powi(2);
+        den += (*x as f64).powi(2);
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+/// `SparsePolicy::fork_fresh` + int8: a resumed sequence rebuilds its own
+/// Top-k state, but the adopted quantized KV is shared — its scoring
+/// must match the parent's bit-for-bit on the shared prefix.
+#[test]
+fn forked_policy_scores_shared_int8_prefix_identically() {
+    let mut spec = SynthSpec::eval_base(0xD5);
+    spec.cfg.n_layers = 4;
+    spec.block_starts = vec![1];
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0xA11);
+    let prompt = gen.dev_prompt(64);
+    let plan = KascadePlan::from_anchors(4, 4, vec![0, 2], TopKRule::new(0.25, 8));
+    let mut parent = NativeBackend::with_dtype(
+        model.clone(),
+        256,
+        Box::new(KascadePolicy::new(plan)),
+        KvDtype::Int8,
+    );
+    parent.prefill_chunk(&prompt, true);
+    let mut child = parent.fork_prefix(48).expect("fork at block boundary");
+    // both decode the same next token from the shared 48-token prefix:
+    // the child's caches must contain the identical quantized tiles, so
+    // after the parent is truncated to the same point their logits match
+    let mut parent_trunc = parent.fork_prefix(48).expect("second fork");
+    let la = parent_trunc.decode(7);
+    let lb = child.decode(7);
+    for (a, b) in la.iter().zip(&lb) {
+        assert_eq!(a.to_bits(), b.to_bits(), "shared int8 prefix scored differently");
+    }
+}

@@ -323,6 +323,7 @@ fn preempted_and_resumed_requests_complete_with_identical_outputs() {
             enable_prefix_cache: true,
             prefix_cache_blocks: 4,
             batched_decode: true,
+            ..ServeConfig::default()
         },
         &reqs,
     );
