@@ -64,18 +64,18 @@ fn main() -> anyhow::Result<()> {
         let mut engine = Engine::new(cfg.clone(), factory);
         let mut gen = WorkloadGen::new(&spec, 0x7E57);
         let mut expected = Vec::new();
-        for id in 0..N_REQUESTS {
+        let mut handles = Vec::new();
+        for _ in 0..N_REQUESTS {
             let t = gen.longbench(Category::Sqa, CTX);
             expected.push(t.expect[0]);
-            engine.submit(Request {
-                id: id as u64,
-                prompt: t.prompt,
-                max_new: 2,
-                stop_token: Some(t.expect[0]),
-            });
+            handles.push(
+                engine
+                    .submit(Request::new(t.prompt).max_new(2).stop(t.expect[0]))
+                    .expect("admission"),
+            );
         }
         let t0 = std::time::Instant::now();
-        let done = engine.run_to_completion();
+        let done = engine.run_to_completion(&mut handles);
         let wall = t0.elapsed().as_secs_f64();
         let correct = done
             .iter()

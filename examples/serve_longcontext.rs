@@ -49,18 +49,32 @@ fn main() -> anyhow::Result<()> {
         let mut engine = Engine::new(cfg.clone(), factory(model.clone(), plan));
         let mut gen = WorkloadGen::new(&spec, 0x5EED);
         let mut expected = Vec::new();
-        for id in 0..N_REQUESTS {
+        let mut handles = Vec::new();
+        for _ in 0..N_REQUESTS {
             let t = gen.longbench(Category::Sqa, CTX);
             expected.push(t.expect[0]);
-            engine.submit(Request {
-                id: id as u64,
-                prompt: t.prompt,
-                max_new: t.max_new,
-                stop_token: Some(*t.expect.last().unwrap()),
-            });
+            handles.push(
+                engine
+                    .submit(
+                        Request::new(t.prompt)
+                            .max_new(t.max_new)
+                            .stop(*t.expect.last().unwrap()),
+                    )
+                    .expect("admission"),
+            );
         }
+        // one extra session we tear down mid-stream: cancellation frees
+        // its KV blocks within a tick, surfaced in the metrics report
+        let bonus = gen.longbench(Category::Sqa, CTX);
+        let cancelled = engine
+            .submit(Request::new(bonus.prompt).max_new(1_000))
+            .expect("admission");
         let t0 = std::time::Instant::now();
-        let done = engine.run_to_completion();
+        for _ in 0..20 {
+            engine.tick();
+        }
+        cancelled.cancel();
+        let done = engine.run_to_completion(&mut handles);
         let wall = t0.elapsed().as_secs_f64();
         let correct = done
             .iter()
@@ -69,9 +83,12 @@ fn main() -> anyhow::Result<()> {
         println!("== {name} ==");
         println!("  {}", engine.metrics.report());
         println!(
-            "  wall {wall:.2}s, prompt tokens {} — accuracy {correct}/{N_REQUESTS}\n",
+            "  wall {wall:.2}s, prompt tokens {} — accuracy {correct}/{N_REQUESTS} \
+             (1 session cancelled mid-stream, blocks reclaimed)\n",
             N_REQUESTS * CTX
         );
+        assert_eq!(engine.metrics.cancelled, 1);
+        assert_eq!(engine.sched.blocks.used(), 0);
     }
     Ok(())
 }

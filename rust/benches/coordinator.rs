@@ -1,18 +1,22 @@
 //! Coordinator hot-path benches: scheduler tick formation, block manager
-//! churn, router throughput, the step-batched decode engine, and the
-//! prefix-cache RAG scenario — the L3 overheads and wins that frame the
-//! paper's serving numbers.
+//! churn, router throughput, the step-batched decode engine, the
+//! prefix-cache RAG scenario, and the streaming-session scenario
+//! (handle-observed TTFT fidelity + cancellation block-reclaim latency)
+//! — the L3 overheads and wins that frame the paper's serving numbers.
 //!
 //! Run: `cargo bench --bench coordinator`
 //! Writes machine-readable results to `results/coordinator_bench.json`.
 
 use kascade::benchutil::{bench, header};
 use kascade::config::{KvDtype, ServeConfig, TopKRule};
-use kascade::coordinator::{BlockManager, NativeBackend, Request, Router, SeqBackend, Sequence};
+use kascade::coordinator::{
+    BlockManager, Completion, Event, NativeBackend, Request, Router, SeqBackend, Sequence,
+    Session,
+};
 use kascade::jsonutil::Json;
 use kascade::kascade::KascadePlan;
 use kascade::model::SynthSpec;
-use kascade::server::{Completion, Engine};
+use kascade::server::Engine;
 use kascade::sparse::{DensePolicy, KascadePolicy};
 use kascade::workload::WorkloadGen;
 use std::cell::Cell;
@@ -78,7 +82,7 @@ fn main() {
     let mut router = Router::new(8);
     bench("router route x10k (mixed affinity)", 3, 30, || {
         for i in 0..10_000u64 {
-            let w = router.route(if i % 2 == 0 { Some(i % 64) } else { None });
+            let w = router.route(if i % 2 == 0 { Some(i % 64) } else { None }).unwrap();
             router.release(w);
         }
     });
@@ -95,14 +99,19 @@ fn main() {
         ..ServeConfig::default()
     };
     let mut engine = Engine::new(cfg, Box::new(|_req: &Request| Box::new(NullBackend) as Box<dyn SeqBackend>));
-    for id in 0..256u64 {
-        engine.submit(Request {
-            id,
-            prompt: vec![0; 512],
-            max_new: 1_000_000, // keep decoding forever
-            stop_token: None,
-        });
+    let mut tick_handles = Vec::new();
+    for _ in 0..256u64 {
+        // keep decoding forever
+        tick_handles.push(
+            engine
+                .submit(Request::new(vec![0; 512]).max_new(1_000_000))
+                .expect("admission"),
+        );
     }
+    // drop the handles: token events are discarded at send instead of
+    // queueing unboundedly across the timed iterations, keeping the
+    // tick measurement steady-state
+    drop(tick_handles);
     // warm into decode phase
     for _ in 0..8 {
         engine.tick();
@@ -144,16 +153,16 @@ fn main() {
         }),
     );
     let t0 = std::time::Instant::now();
-    for (id, t) in tasks.iter().enumerate() {
-        engine.submit(Request {
-            id: id as u64,
-            prompt: t.prompt.clone(),
-            max_new: 2,
-            stop_token: None,
-        });
+    let mut rag_handles = Vec::new();
+    for t in tasks.iter() {
+        rag_handles.push(
+            engine
+                .submit(Request::new(t.prompt.clone()).max_new(2))
+                .expect("admission"),
+        );
         // run each request to completion so request 0's registered
         // prefix is available to every follower (steady-state RAG shape)
-        engine.run_to_completion();
+        engine.run_to_completion(&mut rag_handles);
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = &engine.metrics;
@@ -210,15 +219,15 @@ fn main() {
                     as Box<dyn SeqBackend>
             }),
         );
-        for (id, p) in prompts.iter().enumerate() {
-            engine.submit(Request {
-                id: id as u64,
-                prompt: p.clone(),
-                max_new: 24,
-                stop_token: None,
-            });
+        let mut handles = Vec::new();
+        for p in prompts.iter() {
+            handles.push(
+                engine
+                    .submit(Request::new(p.clone()).max_new(24))
+                    .expect("admission"),
+            );
         }
-        let mut done = engine.run_to_completion();
+        let mut done = engine.run_to_completion(&mut handles);
         done.sort_by_key(|c| c.id);
         (done, engine.metrics.decode_tok_s())
     };
@@ -278,15 +287,15 @@ fn main() {
                 )) as Box<dyn SeqBackend>
             }),
         );
-        for (id, p) in qprompts.iter().enumerate() {
-            engine.submit(Request {
-                id: id as u64,
-                prompt: p.clone(),
-                max_new: 24,
-                stop_token: None,
-            });
+        let mut handles = Vec::new();
+        for p in qprompts.iter() {
+            handles.push(
+                engine
+                    .submit(Request::new(p.clone()).max_new(24))
+                    .expect("admission"),
+            );
         }
-        let mut done = engine.run_to_completion();
+        let mut done = engine.run_to_completion(&mut handles);
         done.sort_by_key(|c| c.id);
         (
             done,
@@ -343,6 +352,100 @@ fn main() {
         "int8 per-token logit divergence {max_rel:.4} exceeds the 0.15 bound"
     );
 
+    // streaming sessions: (a) handle-observed TTFT vs engine-observed
+    // TTFT — the gap is the event-delivery overhead a client actually
+    // sees, recorded as a fidelity ratio (engine/handle, ~1.0 when
+    // events arrive the tick they are produced); (b) cancellation
+    // reclaim — mid-decode cancel() must release every KV block within
+    // ONE tick, with the wall latency recorded.
+    let mut sspec = SynthSpec::eval_base(0x51D);
+    sspec.cfg.n_layers = 4;
+    sspec.block_starts = vec![1];
+    let smodel = Arc::new(sspec.build());
+    let mut sgen = WorkloadGen::new(&sspec, 0x717);
+    let sprompts: Vec<Vec<u32>> = (0..6).map(|_| sgen.dev_prompt(256)).collect();
+    let scfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 2048,
+        max_running: 8,
+        token_budget: 512,
+        prefill_chunk: 128,
+        queue_cap: 64,
+        workers: 1,
+        ..ServeConfig::default()
+    };
+    let stream_factory = |model: Arc<kascade::model::Model>| {
+        Box::new(move |_req: &Request| {
+            Box::new(NativeBackend::new(model.clone(), 512, Box::new(DensePolicy)))
+                as Box<dyn SeqBackend>
+        })
+    };
+    let mut engine = Engine::new(scfg.clone(), stream_factory(smodel.clone()));
+    let mut handles = Vec::new();
+    for p in &sprompts {
+        handles.push(engine.submit(Request::new(p.clone()).max_new(16)).expect("admission"));
+    }
+    let mut streamed: Vec<Vec<u32>> = (0..handles.len()).map(|_| Vec::new()).collect();
+    let mut completions: Vec<Completion> = Vec::new();
+    while !engine.idle() {
+        engine.tick();
+        for (i, h) in handles.iter_mut().enumerate() {
+            while let Some(ev) = h.try_next() {
+                match ev {
+                    Event::Token { tok, .. } => streamed[i].push(tok),
+                    Event::Done(c) => completions.push(c),
+                    _ => {}
+                }
+            }
+        }
+    }
+    assert_eq!(completions.len(), sprompts.len());
+    for c in &completions {
+        assert_eq!(
+            streamed[c.id as usize], c.tokens,
+            "streamed tokens must reassemble the completion (req {})",
+            c.id
+        );
+    }
+    let handle_ttft_p50 = engine.metrics.streamed_ttft_percentile(50.0);
+    let engine_ttft_p50 = engine.metrics.ttft_us.percentile(50.0);
+    let ttft_fidelity = (engine_ttft_p50 / handle_ttft_p50.max(1e-9)).min(1.0);
+
+    // cancellation reclaim
+    let mut engine = Engine::new(scfg, stream_factory(smodel));
+    let mut handles = Vec::new();
+    for p in &sprompts {
+        handles.push(engine.submit(Request::new(p.clone()).max_new(10_000)).expect("admission"));
+    }
+    // run everyone into decode
+    while engine.metrics.decode_tokens < 2 * sprompts.len() as u64 {
+        engine.tick();
+    }
+    let blocks_held = engine.sched.blocks.used();
+    assert!(blocks_held > 0);
+    for h in &handles {
+        h.cancel();
+    }
+    let t0 = std::time::Instant::now();
+    engine.tick();
+    let cancel_reclaim_us = t0.elapsed().as_secs_f64() * 1e6;
+    let reclaim_within_one_tick = if engine.sched.blocks.used() == 0 { 1.0 } else { 0.0 };
+    assert_eq!(
+        engine.sched.blocks.used(),
+        0,
+        "mid-stream cancel must release every KV block within one tick"
+    );
+    engine.sched.blocks.check_invariants().unwrap();
+    assert_eq!(engine.metrics.cancelled, sprompts.len() as u64);
+    println!("\nstreaming sessions (6 requests x 256-tok prompts, 4-layer SynthLM):");
+    println!(
+        "  ttft handle p50 {handle_ttft_p50:.0}us  engine p50 {engine_ttft_p50:.0}us  \
+         fidelity {ttft_fidelity:.3}"
+    );
+    println!(
+        "  cancel: {blocks_held} blocks reclaimed in {cancel_reclaim_us:.0}us (one tick)"
+    );
+
     // machine-readable record (ratio + prefix-cache savings)
     std::fs::create_dir_all("results").expect("results dir");
     let record = Json::obj(vec![
@@ -381,13 +484,21 @@ fn main() {
                 ("dequant_rows", Json::num(int8_dequant as f64)),
             ]),
         ),
+        (
+            "streaming",
+            Json::obj(vec![
+                ("requests", Json::num(sprompts.len() as f64)),
+                ("handle_ttft_p50_us", Json::num(handle_ttft_p50)),
+                ("engine_ttft_p50_us", Json::num(engine_ttft_p50)),
+                ("ttft_fidelity", Json::num(ttft_fidelity)),
+                ("cancel_reclaim_us", Json::num(cancel_reclaim_us)),
+                ("reclaim_within_one_tick", Json::num(reclaim_within_one_tick)),
+            ]),
+        ),
     ]);
     std::fs::write("results/coordinator_bench.json", record.to_string())
         .expect("write bench json");
     println!("  wrote results/coordinator_bench.json");
 
-    let _ = Sequence::new(
-        Request { id: 0, prompt: vec![], max_new: 0, stop_token: None },
-        Box::new(NullBackend),
-    );
+    let _ = Sequence::new(Request::new(vec![]), Session::detached(), Box::new(NullBackend));
 }

@@ -101,6 +101,145 @@ impl KvDtype {
     }
 }
 
+/// Token-selection rule for decode, applied identically by the
+/// sequential and step-batched execution paths (both retire tokens
+/// through `Sequence::apply_decoded_logits`) and by the standalone
+/// [`crate::model::Model::sample_decode`] loop.
+///
+/// Fully deterministic: `Seeded` draws from a counter-based RNG keyed by
+/// `(seed, response position)`, so replays — preemption recompute,
+/// batched vs. sequential execution, a re-run of the same request —
+/// select identical tokens.  Ties in the candidate ordering break toward
+/// the lower token index.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SamplingParams {
+    /// Argmax (the default; bitwise-deterministic).
+    #[default]
+    Greedy,
+    /// Softmax sampling at `temperature`, truncated to the `top_k`
+    /// highest-logit tokens (`0` disables) and then to the smallest
+    /// nucleus with probability mass >= `top_p` (`1.0` disables).
+    Seeded { temperature: f32, top_k: usize, top_p: f32, seed: u64 },
+}
+
+impl SamplingParams {
+    /// Seeded sampling with neutral knobs (temperature 1, no truncation).
+    pub fn seeded(seed: u64) -> Self {
+        SamplingParams::Seeded { temperature: 1.0, top_k: 0, top_p: 1.0, seed }
+    }
+
+    pub fn temperature(self, t: f32) -> Self {
+        match self {
+            SamplingParams::Seeded { top_k, top_p, seed, .. } => {
+                SamplingParams::Seeded { temperature: t, top_k, top_p, seed }
+            }
+            g => g,
+        }
+    }
+
+    pub fn top_k(self, k: usize) -> Self {
+        match self {
+            SamplingParams::Seeded { temperature, top_p, seed, .. } => {
+                SamplingParams::Seeded { temperature, top_k: k, top_p, seed }
+            }
+            g => g,
+        }
+    }
+
+    pub fn top_p(self, p: f32) -> Self {
+        match self {
+            SamplingParams::Seeded { temperature, top_k, seed, .. } => {
+                SamplingParams::Seeded { temperature, top_k, top_p: p, seed }
+            }
+            g => g,
+        }
+    }
+
+    /// Counter-based uniform draw in [0, 1): splitmix-style finalizer of
+    /// `(seed, pos)`, so the draw for a response position is a pure
+    /// function of the request seed — independent of execution order.
+    fn unit_uniform(seed: u64, pos: u64) -> f64 {
+        let z = crate::tensor::splitmix64(
+            (seed ^ pos.wrapping_mul(0x9E37_79B9_7F4A_7C15)).wrapping_add(0xD1B5_4A32_D192_ED03),
+        );
+        (z >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Select the token for response position `pos` from `logits`.
+    pub fn sample(&self, logits: &[f32], pos: usize) -> u32 {
+        match *self {
+            SamplingParams::Greedy => crate::tensor::argmax(logits) as u32,
+            SamplingParams::Seeded { temperature, top_k, top_p, seed } => {
+                if !(temperature > 0.0) {
+                    // the T -> 0 limit of softmax sampling is argmax
+                    return crate::tensor::argmax(logits) as u32;
+                }
+                let t = temperature as f64;
+                if top_k == 0 && top_p >= 1.0 {
+                    // no truncation: one O(V) pass over the logits in
+                    // index order (no sort, no index buffer) — the hot
+                    // decode path for plain temperature sampling
+                    let m = logits.iter().fold(f64::NEG_INFINITY, |a, &x| a.max(x as f64));
+                    let mut sum = 0.0f64;
+                    for &x in logits {
+                        sum += ((x as f64 - m) / t).exp();
+                    }
+                    let mut u = Self::unit_uniform(seed, pos as u64) * sum;
+                    for (i, &x) in logits.iter().enumerate() {
+                        u -= ((x as f64 - m) / t).exp();
+                        if u <= 0.0 {
+                            return i as u32;
+                        }
+                    }
+                    return logits.len().saturating_sub(1) as u32;
+                }
+                // candidates ordered by logit desc, index asc on ties
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    logits[b]
+                        .partial_cmp(&logits[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                if top_k > 0 && top_k < idx.len() {
+                    idx.truncate(top_k);
+                }
+                // softmax over the candidates in f64 (stable + identical
+                // regardless of how the f32 logits were produced)
+                let m = logits[idx[0]] as f64;
+                let mut probs: Vec<f64> =
+                    idx.iter().map(|&i| ((logits[i] as f64 - m) / t).exp()).collect();
+                let sum: f64 = probs.iter().sum();
+                for p in &mut probs {
+                    *p /= sum;
+                }
+                // nucleus: smallest prefix of the sorted candidates whose
+                // mass reaches top_p (the crossing token is included)
+                let mut keep = probs.len();
+                if top_p < 1.0 {
+                    let mut acc = 0.0;
+                    for (i, p) in probs.iter().enumerate() {
+                        acc += p;
+                        if acc >= top_p as f64 {
+                            keep = i + 1;
+                            break;
+                        }
+                    }
+                }
+                let mass: f64 = probs[..keep].iter().sum();
+                let mut u = Self::unit_uniform(seed, pos as u64) * mass;
+                for (i, p) in probs[..keep].iter().enumerate() {
+                    u -= p;
+                    if u <= 0.0 {
+                        return idx[i] as u32;
+                    }
+                }
+                idx[keep - 1] as u32
+            }
+        }
+    }
+}
+
 /// The paper's Top-k rule (Sec. 4.1): `k = min(max(frac * L, min_k), L)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TopKRule {
@@ -161,6 +300,12 @@ pub struct ServeConfig {
     /// backends created for this config and the block manager's
     /// per-block mode bookkeeping both follow it.
     pub kv_dtype: KvDtype,
+    /// Hard cap on prompt length accepted at submit
+    /// (`SubmitError::PromptTooLong`).  `None` bounds prompts only by
+    /// what the block pool can physically hold (a prompt that could
+    /// never decode a single token is rejected up front instead of
+    /// livelocking admission).
+    pub max_prompt_tokens: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -177,6 +322,7 @@ impl Default for ServeConfig {
             prefix_cache_blocks: 1024,
             batched_decode: true,
             kv_dtype: KvDtype::F32,
+            max_prompt_tokens: None,
         }
     }
 }
@@ -211,5 +357,53 @@ mod tests {
         let mut c = ModelConfig::pjrt_small();
         c.n_kv_heads = 3;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let logits = vec![0.1, 2.5, -1.0, 2.4];
+        assert_eq!(SamplingParams::Greedy.sample(&logits, 0), 1);
+        assert_eq!(SamplingParams::default().sample(&logits, 7), 1);
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_per_seed_and_pos() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37 % 64) as f32) * 0.07).collect();
+        let s = SamplingParams::seeded(42).temperature(1.2).top_k(16).top_p(0.9);
+        for pos in 0..32 {
+            assert_eq!(s.sample(&logits, pos), s.sample(&logits, pos));
+        }
+        // different positions (and seeds) must actually vary the draw
+        let picks: std::collections::HashSet<u32> =
+            (0..32).map(|p| s.sample(&logits, p)).collect();
+        assert!(picks.len() > 1, "seeded sampling never varied across positions");
+        let other = SamplingParams::seeded(43).temperature(1.2).top_k(16).top_p(0.9);
+        let a: Vec<u32> = (0..32).map(|p| s.sample(&logits, p)).collect();
+        let b: Vec<u32> = (0..32).map(|p| other.sample(&logits, p)).collect();
+        assert_ne!(a, b, "different seeds produced identical 32-token streams");
+    }
+
+    #[test]
+    fn sampling_truncations_collapse_to_argmax() {
+        let logits = vec![0.3, 4.0, 0.2, 3.9, -2.0];
+        // top_k = 1 and a tiny nucleus both leave only the max token
+        let k1 = SamplingParams::seeded(9).top_k(1);
+        let p_small = SamplingParams::seeded(9).top_p(1e-6);
+        let cold = SamplingParams::seeded(9).temperature(0.0);
+        for pos in 0..16 {
+            assert_eq!(k1.sample(&logits, pos), 1);
+            assert_eq!(p_small.sample(&logits, pos), 1);
+            assert_eq!(cold.sample(&logits, pos), 1);
+        }
+    }
+
+    #[test]
+    fn nucleus_respects_mass_bound() {
+        // 0.7 mass on token 0: top_p(0.6) must always pick it
+        let logits = vec![2.0, 0.0, -1.0, -1.0];
+        let s = SamplingParams::seeded(5).top_p(0.6);
+        for pos in 0..32 {
+            assert_eq!(s.sample(&logits, pos), 0);
+        }
     }
 }

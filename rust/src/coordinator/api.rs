@@ -1,0 +1,416 @@
+//! Streaming session API: the typed front door of the serving stack.
+//!
+//! A client builds a [`Request`] (prompt + decode budget + stop token +
+//! deadline + priority + [`SamplingParams`]), submits it to an
+//! [`crate::server::Engine`] or [`crate::server::Server`], and receives a
+//! [`RequestHandle`] that streams [`Event`]s: `Started` when the sequence
+//! is admitted into the running batch, one `Token` per decoded token as
+//! the engine ticks, and a terminal `Done(Completion)` or
+//! `Failed(FailReason)`.  The handle's `cancel()` tears the request down
+//! inside the engine within one tick — all KV blocks released, indexed
+//! blocks parked in the prefix-cache pool (snapshots stay valid).
+//!
+//! Submission is typed end to end: admission failures are a synchronous
+//! [`SubmitError`] (queue full, prompt too long, worker dead), not a
+//! silent `false`.
+
+use crate::stats::LatencyHist;
+/// Re-exported: the typed token-selection rule lives in [`crate::config`]
+/// so the model layer (`Model::sample_decode`) can share it.
+pub use crate::config::SamplingParams;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Client request, assembled with the builder:
+/// `Request::new(prompt).max_new(64).stop(eos).deadline_ms(500.0)
+///  .priority(1).sampling(SamplingParams::seeded(42))`.
+///
+/// Request ids are assigned by the engine/server at submit and returned
+/// through [`RequestHandle::id`] (and on the [`Completion`]).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    /// Lifetime cap on emitted response tokens (preemption-folded tokens
+    /// count — a preempted request completes with identical output).
+    pub max_new: usize,
+    /// Stop decoding when this token is emitted (in addition to max_new).
+    pub stop_token: Option<u32>,
+    /// Wall-clock budget from submission; expiry fails the request with
+    /// [`FailReason::DeadlineExceeded`] and releases its blocks.
+    pub deadline_ms: Option<f64>,
+    /// Admission priority: higher jumps the waiting queue (FCFS within a
+    /// priority level; preempted sequences keep their head-of-queue
+    /// recovery slot).
+    pub priority: i32,
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    pub fn new(prompt: Vec<u32>) -> Self {
+        Self {
+            prompt,
+            max_new: 16,
+            stop_token: None,
+            deadline_ms: None,
+            priority: 0,
+            sampling: SamplingParams::Greedy,
+        }
+    }
+
+    pub fn max_new(mut self, n: usize) -> Self {
+        self.max_new = n;
+        self
+    }
+
+    pub fn stop(mut self, tok: u32) -> Self {
+        self.stop_token = Some(tok);
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn priority(mut self, p: i32) -> Self {
+        self.priority = p;
+        self
+    }
+
+    pub fn sampling(mut self, s: SamplingParams) -> Self {
+        self.sampling = s;
+        self
+    }
+}
+
+/// Typed admission failure (replaces the old `submit() -> bool`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The waiting queue is at `ServeConfig::queue_cap`.
+    QueueFull,
+    /// The prompt exceeds `ServeConfig::max_prompt_tokens` (or could
+    /// never fit the block pool with one decode token).
+    PromptTooLong { prompt: usize, limit: usize },
+    /// No alive worker to route to.
+    WorkerDead,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "waiting queue full"),
+            SubmitError::PromptTooLong { prompt, limit } => {
+                write!(f, "prompt of {prompt} tokens exceeds limit {limit}")
+            }
+            SubmitError::WorkerDead => write!(f, "no alive worker"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Finished-request report.  `ttft_ms` is `None` when no token was ever
+/// emitted (e.g. cancelled during prefill) — never a silent `0.0`.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Submission -> first emitted token, engine-observed.  `None` if no
+    /// token was emitted.
+    pub ttft_ms: Option<f64>,
+    /// Submission -> termination (finish, cancel, or deadline expiry).
+    pub total_ms: Option<f64>,
+    pub preemptions: usize,
+    /// prompt tokens whose prefill was skipped via the prefix cache
+    pub cached_prefix_tokens: usize,
+}
+
+/// Why a request terminated without completing.  `Cancelled` and
+/// `DeadlineExceeded` carry the partial completion (tokens streamed so
+/// far, `ttft_ms: None` if the request never produced one).
+#[derive(Debug, Clone)]
+pub enum FailReason {
+    /// Rejected at admission; the request never ran.
+    Rejected(SubmitError),
+    /// The client called [`RequestHandle::cancel`].
+    Cancelled(Completion),
+    /// `Request::deadline_ms` elapsed before completion.
+    DeadlineExceeded(Completion),
+    /// The worker serving the request died (channel disconnected).
+    WorkerDead,
+    /// Client-side [`RequestHandle::wait`] timeout — the request may
+    /// still be running; never sent by the engine itself.
+    TimedOut,
+}
+
+impl FailReason {
+    /// The partial completion, when the request got far enough to have one.
+    pub fn partial(&self) -> Option<&Completion> {
+        match self {
+            FailReason::Cancelled(c) | FailReason::DeadlineExceeded(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request lifecycle events streamed to the [`RequestHandle`].
+/// Ordering per request: `Started`, then `Token`s with strictly
+/// increasing `pos` (the index into the final response), then exactly one
+/// terminal `Done` or `Failed`.  A request rejected or cancelled before
+/// admission sees only the terminal event.
+#[derive(Debug, Clone)]
+pub enum Event {
+    Started,
+    Token { pos: usize, tok: u32 },
+    Done(Completion),
+    Failed(FailReason),
+}
+
+/// Engine-side half of a session: the event sender plus the shared
+/// cancellation flag.  Created by [`handle_pair`]; crosses into worker
+/// threads with the request.
+#[derive(Debug, Clone)]
+pub struct Session {
+    events: Sender<Event>,
+    cancel: Arc<AtomicBool>,
+    /// client-side submission instant — the epoch for `deadline_ms`,
+    /// `ttft_ms` and `total_ms`, so channel queueing time (a busy
+    /// `Server` worker draining late) counts against the budget
+    created: Instant,
+}
+
+impl Session {
+    /// Deliver an event to the handle (dropped handles discard silently).
+    pub fn send(&self, ev: Event) {
+        let _ = self.events.send(ev);
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// When the client submitted (the deadline/latency epoch).
+    pub fn created(&self) -> Instant {
+        self.created
+    }
+
+    /// A session with no listening handle — for driving a [`Sequence`]
+    /// outside an engine (unit tests, type-level bench checks).
+    ///
+    /// [`Sequence`]: super::Sequence
+    pub fn detached() -> Self {
+        let (events, _rx) = channel();
+        Self { events, cancel: Arc::new(AtomicBool::new(false)), created: Instant::now() }
+    }
+}
+
+/// Client-side half of a session: streams [`Event`]s and exposes
+/// `cancel()`.  With a [`crate::server::Server`] the worker thread ticks
+/// for you — block on [`RequestHandle::wait`].  With a single-threaded
+/// [`crate::server::Engine`] nothing runs while you block: interleave
+/// `engine.tick()` with [`RequestHandle::try_next`] (or use
+/// `Engine::run_to_completion`).
+#[derive(Debug)]
+pub struct RequestHandle {
+    id: u64,
+    rx: Receiver<Event>,
+    cancel: Arc<AtomicBool>,
+    created: Instant,
+    /// handle-observed TTFT collector, shared with `ServeMetrics`
+    streamed: Arc<Mutex<LatencyHist>>,
+    saw_token: bool,
+    terminal: bool,
+}
+
+/// Create a connected handle/session pair.  `streamed` receives the
+/// handle-observed TTFT (submit -> first `Token` *observed by the
+/// client*, queueing included — the latency a user actually sees, as
+/// opposed to the engine-side `ServeMetrics::ttft_us`).
+pub fn handle_pair(id: u64, streamed: Arc<Mutex<LatencyHist>>) -> (RequestHandle, Session) {
+    let (events, rx) = channel();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let created = Instant::now();
+    let handle = RequestHandle {
+        id,
+        rx,
+        cancel: cancel.clone(),
+        created,
+        streamed,
+        saw_token: false,
+        terminal: false,
+    };
+    (handle, Session { events, cancel, created })
+}
+
+impl RequestHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Request teardown.  The engine applies it at the top of its next
+    /// tick: the sequence leaves the scheduler, every KV block is
+    /// released, and the handle receives
+    /// `Failed(Cancelled(partial))`.  Idempotent; a no-op after the
+    /// terminal event.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the terminal event (`Done` / `Failed`) has been observed.
+    pub fn is_terminal(&self) -> bool {
+        self.terminal
+    }
+
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::Token { .. } if !self.saw_token => {
+                self.saw_token = true;
+                let us = self.created.elapsed().as_secs_f64() * 1e6;
+                if let Ok(mut h) = self.streamed.lock() {
+                    h.add_us(us);
+                }
+            }
+            Event::Done(_) | Event::Failed(_) => self.terminal = true,
+            _ => {}
+        }
+    }
+
+    /// Non-blocking: the next pending event, if any.
+    pub fn try_next(&mut self) -> Option<Event> {
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                self.observe(&ev);
+                Some(ev)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Blocking with timeout: the next event, or `None` on timeout /
+    /// disconnection.
+    pub fn next_timeout(&mut self, timeout: Duration) -> Option<Event> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.observe(&ev);
+                Some(ev)
+            }
+            Err(_) => None,
+        }
+    }
+
+    /// Block until the terminal event (server usage).  Token events are
+    /// consumed along the way (TTFT still recorded).  A disconnected
+    /// worker surfaces as `Err(WorkerDead)`; running out of `timeout`
+    /// as `Err(TimedOut)` — the request may still be running.
+    pub fn wait(&mut self, timeout: Duration) -> Result<Completion, FailReason> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(left) {
+                Ok(ev) => {
+                    self.observe(&ev);
+                    match ev {
+                        Event::Done(c) => return Ok(c),
+                        Event::Failed(f) => return Err(f),
+                        _ => {}
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(FailReason::WorkerDead),
+                Err(RecvTimeoutError::Timeout) => return Err(FailReason::TimedOut),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collector() -> Arc<Mutex<LatencyHist>> {
+        Arc::new(Mutex::new(LatencyHist::new()))
+    }
+
+    #[test]
+    fn builder_defaults_and_chaining() {
+        let r = Request::new(vec![1, 2, 3]);
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.stop_token, None);
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.priority, 0);
+        assert_eq!(r.sampling, SamplingParams::Greedy);
+        let r = r
+            .max_new(5)
+            .stop(9)
+            .deadline_ms(250.0)
+            .priority(3)
+            .sampling(SamplingParams::seeded(7));
+        assert_eq!(r.max_new, 5);
+        assert_eq!(r.stop_token, Some(9));
+        assert_eq!(r.deadline_ms, Some(250.0));
+        assert_eq!(r.priority, 3);
+        assert!(matches!(r.sampling, SamplingParams::Seeded { seed: 7, .. }));
+    }
+
+    #[test]
+    fn events_stream_in_order_and_record_ttft() {
+        let stats = collector();
+        let (mut h, s) = handle_pair(4, stats.clone());
+        assert_eq!(h.id(), 4);
+        s.send(Event::Started);
+        s.send(Event::Token { pos: 0, tok: 11 });
+        s.send(Event::Token { pos: 1, tok: 12 });
+        s.send(Event::Done(Completion {
+            id: 4,
+            tokens: vec![11, 12],
+            ttft_ms: Some(1.0),
+            total_ms: Some(2.0),
+            preemptions: 0,
+            cached_prefix_tokens: 0,
+        }));
+        assert!(matches!(h.try_next(), Some(Event::Started)));
+        assert!(matches!(h.try_next(), Some(Event::Token { pos: 0, tok: 11 })));
+        assert!(!h.is_terminal());
+        assert!(matches!(h.try_next(), Some(Event::Token { pos: 1, tok: 12 })));
+        assert!(matches!(h.try_next(), Some(Event::Done(_))));
+        assert!(h.is_terminal());
+        assert!(h.try_next().is_none());
+        assert_eq!(stats.lock().unwrap().count(), 1, "one TTFT sample, on the first token");
+    }
+
+    #[test]
+    fn cancel_sets_the_shared_flag() {
+        let (h, s) = handle_pair(0, collector());
+        assert!(!s.cancelled());
+        h.cancel();
+        assert!(s.cancelled());
+        h.cancel(); // idempotent
+        assert!(s.cancelled());
+    }
+
+    #[test]
+    fn wait_returns_failure_reasons() {
+        let (mut h, s) = handle_pair(0, collector());
+        s.send(Event::Failed(FailReason::Rejected(SubmitError::QueueFull)));
+        match h.wait(Duration::from_millis(100)) {
+            Err(FailReason::Rejected(SubmitError::QueueFull)) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        // disconnected sender -> WorkerDead
+        let (mut h, s) = handle_pair(1, collector());
+        drop(s);
+        assert!(matches!(h.wait(Duration::from_millis(100)), Err(FailReason::WorkerDead)));
+        // live sender but nothing arriving -> TimedOut, not WorkerDead
+        let (mut h, _s) = handle_pair(2, collector());
+        assert!(matches!(h.wait(Duration::from_millis(10)), Err(FailReason::TimedOut)));
+    }
+
+    #[test]
+    fn detached_session_discards_events() {
+        let s = Session::detached();
+        s.send(Event::Started); // must not panic
+        assert!(!s.cancelled());
+    }
+}

@@ -1,6 +1,8 @@
-//! Serving metrics: TTFT / TPOT / throughput / KV utilization.
+//! Serving metrics: TTFT / TPOT / throughput / KV utilization /
+//! session outcomes (cancellations, deadline misses, streamed TTFT).
 
 use crate::stats::{LatencyHist, Welford};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 #[derive(Debug)]
@@ -38,6 +40,16 @@ pub struct ServeMetrics {
     /// quantized KV value rows read through the dequantizing attend path
     /// (accumulated from finished sequences; 0 in pure-f32 serving)
     pub dequant_rows: u64,
+    /// requests torn down by a client `cancel()`
+    pub cancelled: u64,
+    /// requests torn down by deadline expiry
+    pub deadline_missed: u64,
+    /// TTFT measured at the *handle* (submit -> first `Token` event
+    /// observed by the client, queueing and delivery included) — the
+    /// latency a user actually sees, vs. the engine-side `ttft_us`.
+    /// Shared with every `RequestHandle` the engine/server creates; in a
+    /// multi-worker `Server` all workers share one collector.
+    pub streamed_ttft_us: Arc<Mutex<LatencyHist>>,
 }
 
 impl Default for ServeMetrics {
@@ -68,7 +80,15 @@ impl ServeMetrics {
             kv_bytes_resident: Welford::new(),
             peak_kv_bytes: 0,
             dequant_rows: 0,
+            cancelled: 0,
+            deadline_missed: 0,
+            streamed_ttft_us: Arc::new(Mutex::new(LatencyHist::new())),
         }
+    }
+
+    /// Handle-observed TTFT percentile (microseconds).
+    pub fn streamed_ttft_percentile(&self, p: f64) -> f64 {
+        self.streamed_ttft_us.lock().map(|h| h.percentile(p)).unwrap_or(0.0)
     }
 
     /// Record one tick's total resident KV bytes.
@@ -108,7 +128,8 @@ impl ServeMetrics {
              batch mean={:.1}  kv_util mean={:.0}%  preemptions={}  \
              prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
              decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s  \
-             kv_bytes peak={}  dequant_rows={}",
+             kv_bytes peak={}  dequant_rows={}  \
+             cancelled={} deadline_miss={} streamed_ttft p50={:.1}ms",
             self.requests_done,
             self.tokens_out,
             self.throughput_tok_s(),
@@ -127,6 +148,9 @@ impl ServeMetrics {
             self.decode_tok_s(),
             self.peak_kv_bytes,
             self.dequant_rows,
+            self.cancelled,
+            self.deadline_missed,
+            self.streamed_ttft_percentile(50.0) / 1e3,
         )
     }
 }
@@ -142,8 +166,14 @@ mod tests {
         m.tpot_us.add(800.0);
         m.tokens_out = 10;
         m.requests_done = 1;
+        m.cancelled = 2;
+        m.deadline_missed = 1;
+        m.streamed_ttft_us.lock().unwrap().add_us(2000.0);
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("tokens_out=10"));
+        assert!(r.contains("cancelled=2"));
+        assert!(r.contains("deadline_miss=1"));
+        assert!((m.streamed_ttft_percentile(50.0) - 2000.0).abs() < 1e-9);
     }
 }

@@ -1,6 +1,8 @@
 //! Serving coordinator: the L3 system the paper's kernels plug into.
 //!
-//! vLLM-style composition: requests enter a bounded waiting queue
+//! vLLM-style composition: typed streaming requests enter through the
+//! session API ([`api`]: request builder, per-token events, cancellation,
+//! deadlines, seeded sampling), land in a bounded waiting queue
 //! ([`scheduler`]), a continuous batcher forms per-tick work under a token
 //! budget (chunked prefill + all running decodes), a paged KV block
 //! manager ([`blocks`]) with refcounted copy-on-write sharing gates
@@ -13,6 +15,7 @@
 //! remapping) — see [`crate::sparse::KascadePolicy`] (native path) and
 //! [`crate::runtime::PjrtModel`] (PJRT path).
 
+pub mod api;
 pub mod backends;
 pub mod blocks;
 pub mod metrics;
@@ -21,10 +24,13 @@ pub mod router;
 pub mod scheduler;
 pub mod sequence;
 
+pub use api::{
+    handle_pair, Completion, Event, FailReason, Request, RequestHandle, Session, SubmitError,
+};
 pub use backends::{NativeBackend, PjrtBackend};
 pub use blocks::BlockManager;
 pub use metrics::ServeMetrics;
 pub use prefix_cache::{chain_hashes, PrefixIndex, PrefixMatch, PrefixStats};
 pub use router::Router;
 pub use scheduler::{Batch, Scheduler, WorkItem};
-pub use sequence::{BatchParts, KvStats, Request, SeqBackend, SeqPhase, Sequence};
+pub use sequence::{BatchParts, KvStats, SeqBackend, SeqPhase, Sequence};

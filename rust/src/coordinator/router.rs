@@ -1,48 +1,76 @@
 //! Request router: spreads sequences across worker executors with session
 //! affinity (same session lands on the same worker, preserving any warm
 //! prefix state) and least-loaded fallback — the vllm-project/router
-//! pattern scaled to this repo.
+//! pattern scaled to this repo.  Workers whose threads died are marked
+//! dead and skipped: affinity linearly probes to the next alive worker
+//! (stable for a fixed death set), and `route` returns `None` only when
+//! every worker is dead.
 
 #[derive(Debug)]
 pub struct Router {
     loads: Vec<usize>,
+    dead: Vec<bool>,
 }
 
 impl Router {
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0);
-        Self { loads: vec![0; workers] }
+        Self { loads: vec![0; workers], dead: vec![false; workers] }
     }
 
     pub fn workers(&self) -> usize {
         self.loads.len()
     }
 
-    fn hash(session: u64) -> u64 {
-        // splitmix-style finalizer
-        let mut z = session.wrapping_add(0x9E3779B97F4A7C15);
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+    /// Stop routing to `worker` (its thread died or was shut down).
+    pub fn mark_dead(&mut self, worker: usize) {
+        self.dead[worker] = true;
     }
 
-    /// Route a request.  `session` pins affinity when `Some`; otherwise the
-    /// least-loaded worker wins.
-    pub fn route(&mut self, session: Option<u64>) -> usize {
+    pub fn is_dead(&self, worker: usize) -> bool {
+        self.dead[worker]
+    }
+
+    pub fn alive_workers(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
+    }
+
+    fn hash(session: u64) -> u64 {
+        crate::tensor::splitmix64(session.wrapping_add(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Route a request.  `session` pins affinity when `Some` (probing
+    /// past dead workers); otherwise the least-loaded alive worker wins.
+    /// `None` when no worker is alive.
+    pub fn route(&mut self, session: Option<u64>) -> Option<usize> {
+        if self.alive_workers() == 0 {
+            return None;
+        }
+        let n = self.loads.len();
         let w = match session {
-            Some(s) => (Self::hash(s) % self.loads.len() as u64) as usize,
-            None => {
-                let mut best = 0;
-                for i in 1..self.loads.len() {
-                    if self.loads[i] < self.loads[best] {
-                        best = i;
-                    }
+            Some(s) => {
+                let mut w = (Self::hash(s) % n as u64) as usize;
+                while self.dead[w] {
+                    w = (w + 1) % n;
                 }
-                best
+                w
+            }
+            None => {
+                let mut best: Option<usize> = None;
+                for i in 0..n {
+                    if self.dead[i] {
+                        continue;
+                    }
+                    best = match best {
+                        Some(b) if self.loads[b] <= self.loads[i] => Some(b),
+                        _ => Some(i),
+                    };
+                }
+                best?
             }
         };
         self.loads[w] += 1;
-        w
+        Some(w)
     }
 
     pub fn release(&mut self, worker: usize) {
@@ -61,9 +89,9 @@ mod tests {
     #[test]
     fn session_affinity_is_stable() {
         let mut r = Router::new(4);
-        let w1 = r.route(Some(42));
+        let w1 = r.route(Some(42)).unwrap();
         for _ in 0..10 {
-            assert_eq!(r.route(Some(42)), w1);
+            assert_eq!(r.route(Some(42)).unwrap(), w1);
         }
     }
 
@@ -71,7 +99,7 @@ mod tests {
     fn least_loaded_balances() {
         let mut r = Router::new(3);
         for _ in 0..30 {
-            r.route(None);
+            r.route(None).unwrap();
         }
         for w in 0..3 {
             assert_eq!(r.load(w), 10);
@@ -81,11 +109,11 @@ mod tests {
     #[test]
     fn release_rebalances() {
         let mut r = Router::new(2);
-        let a = r.route(None);
-        let _b = r.route(None);
+        let a = r.route(None).unwrap();
+        let _b = r.route(None).unwrap();
         r.release(a);
         // worker `a` is now less loaded and must win
-        assert_eq!(r.route(None), a);
+        assert_eq!(r.route(None).unwrap(), a);
     }
 
     #[test]
@@ -93,8 +121,41 @@ mod tests {
         let mut r = Router::new(8);
         let mut seen = std::collections::HashSet::new();
         for s in 0..256u64 {
-            seen.insert(r.route(Some(s)));
+            seen.insert(r.route(Some(s)).unwrap());
         }
         assert!(seen.len() >= 6, "sessions landed on only {} workers", seen.len());
+    }
+
+    #[test]
+    fn dead_workers_are_skipped_with_stable_reaffinity() {
+        let mut r = Router::new(4);
+        // find a session pinned to worker 0, then kill worker 0
+        let s = (0..1024u64).find(|&s| {
+            let mut probe = Router::new(4);
+            probe.route(Some(s)) == Some(0)
+        });
+        let s = s.expect("some session hashes to worker 0");
+        assert_eq!(r.route(Some(s)), Some(0));
+        r.mark_dead(0);
+        let w = r.route(Some(s)).unwrap();
+        assert_ne!(w, 0, "dead worker must be skipped");
+        for _ in 0..10 {
+            assert_eq!(r.route(Some(s)).unwrap(), w, "re-affinity must be stable");
+        }
+        // least-loaded fallback also skips the dead worker
+        for _ in 0..30 {
+            assert_ne!(r.route(None).unwrap(), 0);
+        }
+        assert_eq!(r.alive_workers(), 3);
+    }
+
+    #[test]
+    fn all_dead_routes_none() {
+        let mut r = Router::new(2);
+        r.mark_dead(0);
+        r.mark_dead(1);
+        assert_eq!(r.route(Some(1)), None);
+        assert_eq!(r.route(None), None);
+        assert_eq!(r.alive_workers(), 0);
     }
 }

@@ -24,7 +24,7 @@ use super::blocks::BlockManager;
 use super::prefix_cache::{chain_hashes, PrefixIndex};
 use super::sequence::{SeqPhase, Sequence};
 use crate::config::ServeConfig;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 /// One unit of scheduled work.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -59,6 +59,11 @@ pub struct Scheduler {
     hashes: HashMap<u64, Vec<u64>>,
     /// per-sequence count of prompt blocks already registered
     registered: HashMap<u64, usize>,
+    /// per-sequence admission priority (default 0; higher admits first)
+    priorities: HashMap<u64, i32>,
+    /// sequences parked at the queue head for preemption recovery —
+    /// they keep their slot regardless of later submits' priorities
+    recovering: HashSet<u64>,
 }
 
 impl Scheduler {
@@ -87,22 +92,47 @@ impl Scheduler {
             rejected: 0,
             hashes: HashMap::new(),
             registered: HashMap::new(),
+            priorities: HashMap::new(),
+            recovering: HashSet::new(),
         }
     }
 
-    /// Admission control.  Returns false when the waiting queue is full.
+    /// Admission control at default priority.  Returns false when the
+    /// waiting queue is full.
     pub fn submit(&mut self, seq: u64) -> bool {
+        self.submit_prio(seq, 0)
+    }
+
+    /// Admission control with an explicit priority: the sequence queues
+    /// ahead of every strictly-lower-priority waiter (stable FCFS within
+    /// a priority level).  Returns false when the waiting queue is full.
+    pub fn submit_prio(&mut self, seq: u64, priority: i32) -> bool {
         if self.waiting.len() >= self.cfg.queue_cap {
             self.rejected += 1;
             return false;
         }
-        self.waiting.push_back(seq);
+        self.priorities.insert(seq, priority);
+        let prios = &self.priorities;
+        // never jump a preemption-recovery waiter: it keeps its
+        // head-of-queue slot no matter the submitter's priority
+        let rec = &self.recovering;
+        let at = self
+            .waiting
+            .iter()
+            .position(|w| !rec.contains(w) && prios.get(w).copied().unwrap_or(0) < priority)
+            .unwrap_or(self.waiting.len());
+        self.waiting.insert(at, seq);
         true
     }
 
     /// Submit with the prompt tokens so the prefix cache can match them.
     pub fn submit_with_prompt(&mut self, seq: u64, prompt: &[u32]) -> bool {
-        if !self.submit(seq) {
+        self.submit_request(seq, prompt, 0)
+    }
+
+    /// Full typed admission: prompt (for prefix matching) + priority.
+    pub fn submit_request(&mut self, seq: u64, prompt: &[u32], priority: i32) -> bool {
+        if !self.submit_prio(seq, priority) {
             return false;
         }
         self.set_prompt(seq, prompt);
@@ -120,10 +150,23 @@ impl Scheduler {
     }
 
     pub fn on_finished(&mut self, seq: u64) {
+        self.remove(seq);
+    }
+
+    /// Remove a sequence wherever it lives — waiting queue, running set,
+    /// or both-neither — releasing every block it holds.  This is the
+    /// cancellation/deadline teardown path: indexed blocks park in the
+    /// prefix-cache pool (refcounts drop, content survives), so
+    /// engine-held snapshots for boundaries the sequence registered stay
+    /// valid for future admissions.
+    pub fn remove(&mut self, seq: u64) {
         self.running.retain(|&s| s != seq);
+        self.waiting.retain(|&s| s != seq);
         self.blocks.release(seq);
         self.hashes.remove(&seq);
         self.registered.remove(&seq);
+        self.priorities.remove(&seq);
+        self.recovering.remove(&seq);
     }
 
     /// Register `seq`'s first `boundary / block_size` full prompt blocks
@@ -264,6 +307,7 @@ impl Scheduler {
                 Some(x) => x,
                 None => {
                     self.waiting.pop_front();
+                    self.recovering.remove(&id);
                     continue;
                 }
             };
@@ -300,6 +344,7 @@ impl Scheduler {
                 break; // no memory: stop admitting (FCFS, no head-of-line skip)
             }
             self.waiting.pop_front();
+            self.recovering.remove(&id);
             self.running.push(id);
             if let Some(h) = hit {
                 batch.cache_hits.push((id, cached, h));
@@ -322,6 +367,7 @@ impl Scheduler {
         self.blocks.release(victim);
         self.registered.insert(victim, 0);
         self.running.retain(|&s| s != victim);
+        self.recovering.insert(victim);
         self.waiting.push_front(victim);
         batch.preempted.push(victim);
         // drop any work already scheduled for the victim this tick
@@ -438,6 +484,82 @@ mod tests {
         assert!(s.submit(2));
         assert!(!s.submit(3));
         assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn higher_priority_jumps_the_queue_stably() {
+        let mut s = Scheduler::new(cfg());
+        assert!(s.submit_prio(1, 0));
+        assert!(s.submit_prio(2, 0));
+        assert!(s.submit_prio(3, 5));
+        assert!(s.submit_prio(4, 5));
+        assert!(s.submit_prio(5, 1));
+        // priority desc, FCFS within a level
+        assert_eq!(s.waiting.iter().copied().collect::<Vec<_>>(), vec![3, 4, 5, 1, 2]);
+    }
+
+    #[test]
+    fn priority_admission_order() {
+        let mut s = Scheduler::new(ServeConfig { max_running: 1, ..cfg() });
+        let mut w = World { phases: HashMap::new() };
+        w.phases.insert(1, (SeqPhase::Waiting, 32, 0));
+        w.phases.insert(2, (SeqPhase::Waiting, 32, 0));
+        s.submit_prio(1, 0);
+        s.submit_prio(2, 3);
+        let b = s.tick(w.lookup());
+        assert!(
+            b.items.contains(&WorkItem::Prefill { seq: 2, tokens: 32 }),
+            "high-priority request must admit first: {:?}",
+            b.items
+        );
+        assert!(s.waiting.contains(&1));
+    }
+
+    /// A later submit must not jump a preempted sequence's recovery
+    /// slot — and higher-priority waiters queued behind it still outrank
+    /// the newcomer.
+    #[test]
+    fn submit_cannot_jump_a_preemption_recovery_slot() {
+        let mut s = Scheduler::new(ServeConfig { num_blocks: 4, ..cfg() }); // 64 tokens
+        let mut w = World { phases: HashMap::new() };
+        w.phases.insert(1, (SeqPhase::Decoding, 16, 16));
+        w.phases.insert(2, (SeqPhase::Decoding, 48, 48));
+        s.running.push(1);
+        s.running.push(2);
+        s.blocks.extend(1, 16);
+        s.blocks.extend(2, 48);
+        s.submit_prio(3, 5); // high-priority waiter
+        let b = s.tick(w.lookup());
+        assert_eq!(b.preempted, vec![2], "OOM preempts the youngest");
+        assert_eq!(s.waiting.front(), Some(&2), "victim parks at the head");
+        // mid-priority submit: behind the recovering victim AND behind
+        // the strictly-higher-priority waiter
+        s.submit_prio(4, 1);
+        assert_eq!(s.waiting.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
+        s.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_tears_down_waiting_and_running() {
+        let mut s = Scheduler::new(cfg());
+        let mut w = World { phases: HashMap::new() };
+        // running sequence with blocks
+        w.phases.insert(1, (SeqPhase::Waiting, 64, 0));
+        s.submit_with_prompt(1, &[0u32; 64]);
+        let b = s.tick(w.lookup());
+        assert!(!b.items.is_empty());
+        assert!(s.blocks.used() > 0);
+        // plus one still waiting
+        s.submit_with_prompt(2, &[1u32; 64]);
+        s.remove(1);
+        s.remove(2);
+        assert!(s.running.is_empty());
+        assert!(s.waiting.is_empty());
+        assert_eq!(s.blocks.used(), 0, "cancelled sequences release every block");
+        s.blocks.check_invariants().unwrap();
+        // removing an unknown id is a no-op
+        s.remove(99);
+        s.blocks.check_invariants().unwrap();
     }
 
     fn cache_cfg() -> ServeConfig {

@@ -1,19 +1,11 @@
-//! Request / sequence lifecycle and the inference-backend abstraction.
+//! Sequence lifecycle and the inference-backend abstraction.  The
+//! client-facing request/event types live in [`super::api`].
 
+use super::api::{Event, Request, Session};
 use crate::model::{Model, SeqState};
 use crate::sparse::SparsePolicy;
 use std::sync::Arc;
-use std::time::Instant;
-
-/// Client request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<u32>,
-    pub max_new: usize,
-    /// Stop decoding when this token is emitted (in addition to max_new).
-    pub stop_token: Option<u32>,
-}
+use std::time::{Duration, Instant};
 
 /// Sequence phase in the continuous batcher.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,9 +86,11 @@ pub struct Sequence {
     pub phase: SeqPhase,
     pub backend: Box<dyn SeqBackend>,
     pub emitted: Vec<u32>,
-    /// logits pending argmax (set after prefill completes)
+    /// logits pending token selection (set after prefill completes)
     pub pending_logits: Option<Vec<f32>>,
     pub arrived: Instant,
+    /// absolute deadline derived from `req.deadline_ms` at submission
+    pub deadline: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
     /// number of times this sequence was preempted (blocks reclaimed)
@@ -107,23 +101,60 @@ pub struct Sequence {
     pub orig_prompt_len: usize,
     /// prompt tokens skipped via prefix-cache resume (lifetime total)
     pub cached_prefix: usize,
+    /// the event/cancellation channel back to the client's handle
+    session: Session,
+    /// `Event::Started` already delivered (survives preemption — a
+    /// re-admission is not a second start)
+    started_sent: bool,
 }
 
 impl Sequence {
-    pub fn new(req: Request, backend: Box<dyn SeqBackend>) -> Self {
+    pub fn new(req: Request, session: Session, backend: Box<dyn SeqBackend>) -> Self {
         let orig_prompt_len = req.prompt.len();
+        // the latency/deadline epoch is the CLIENT's submission instant
+        // (the session's creation), not when a busy worker dequeued the
+        // request — queueing time counts against the budget
+        let arrived = session.created();
+        let deadline = req
+            .deadline_ms
+            .map(|ms| arrived + Duration::from_secs_f64(ms.max(0.0) / 1e3));
         Self {
             req,
             phase: SeqPhase::Waiting,
             backend,
             emitted: Vec::new(),
             pending_logits: None,
-            arrived: Instant::now(),
+            arrived,
+            deadline,
             first_token_at: None,
             finished_at: None,
             preemptions: 0,
             orig_prompt_len,
             cached_prefix: 0,
+            session,
+            started_sent: false,
+        }
+    }
+
+    /// Deliver an event to the client's handle.
+    pub fn send_event(&self, ev: Event) {
+        self.session.send(ev);
+    }
+
+    /// Whether the client requested cancellation via its handle.
+    pub fn cancel_requested(&self) -> bool {
+        self.session.cancelled()
+    }
+
+    /// Whether the request's deadline has expired as of `now`.
+    pub fn past_deadline(&self, now: Instant) -> bool {
+        self.deadline.map(|d| now >= d).unwrap_or(false)
+    }
+
+    fn mark_started(&mut self) {
+        if !self.started_sent {
+            self.started_sent = true;
+            self.session.send(Event::Started);
         }
     }
 
@@ -146,6 +177,7 @@ impl Sequence {
     pub fn fast_forward(&mut self, done: usize, backend: Box<dyn SeqBackend>) {
         debug_assert_eq!(self.phase, SeqPhase::Waiting);
         debug_assert!(done < self.req.prompt.len());
+        self.mark_started();
         self.phase = SeqPhase::Prefilling { done };
         self.backend = backend;
         self.cached_prefix += done;
@@ -178,6 +210,7 @@ impl Sequence {
             SeqPhase::Prefilling { done } => done,
             _ => return 0,
         };
+        self.mark_started();
         let remaining = self.req.prompt.len() - done;
         let take = chunk.min(remaining);
         let last = done + take >= self.req.prompt.len();
@@ -191,7 +224,7 @@ impl Sequence {
         take
     }
 
-    /// Run one decode step (greedy).  Returns the emitted token.
+    /// Run one decode step.  Returns the emitted token.
     pub fn step_decode(&mut self) -> u32 {
         debug_assert_eq!(self.phase, SeqPhase::Decoding);
         let logits = match self.pending_logits.take() {
@@ -215,17 +248,22 @@ impl Sequence {
         }
     }
 
-    /// Greedy bookkeeping for one decode step whose logits were computed
-    /// externally (the step-batched engine path): argmax, emission,
-    /// stop/finish accounting.  Shared with [`Sequence::step_decode`] so
-    /// batched and sequential execution retire tokens identically.
+    /// Token-selection bookkeeping for one decode step whose logits were
+    /// computed externally (the step-batched engine path): sample per
+    /// `req.sampling`, emit, stream the `Token` event, stop/finish
+    /// accounting.  Shared with [`Sequence::step_decode`] so batched and
+    /// sequential execution retire tokens identically — and since the
+    /// sampling RNG is keyed by `(seed, lifetime response position)`,
+    /// preemption recompute replays pick the same tokens too.
     pub fn apply_decoded_logits(&mut self, logits: &[f32]) -> u32 {
         debug_assert_eq!(self.phase, SeqPhase::Decoding);
-        let tok = crate::tensor::argmax(logits) as u32;
+        let pos = self.emitted_total();
+        let tok = self.req.sampling.sample(logits, pos);
         if self.first_token_at.is_none() {
             self.first_token_at = Some(Instant::now());
         }
         self.emitted.push(tok);
+        self.session.send(Event::Token { pos, tok });
         if self.should_stop(tok) {
             self.phase = SeqPhase::Finished;
             self.finished_at = Some(Instant::now());
@@ -291,12 +329,8 @@ mod tests {
 
     fn seq(prompt_len: usize, max_new: usize) -> Sequence {
         Sequence::new(
-            Request {
-                id: 1,
-                prompt: (0..prompt_len as u32).collect(),
-                max_new,
-                stop_token: None,
-            },
+            Request::new((0..prompt_len as u32).collect()).max_new(max_new),
+            Session::detached(),
             Box::new(ToyBackend::new(64)),
         )
     }
@@ -344,5 +378,89 @@ mod tests {
         assert_eq!(s.tokens_with(64), 64);
         s.step_prefill(64);
         assert_eq!(s.tokens_with(36), 100);
+    }
+
+    #[test]
+    fn events_stream_started_tokens_and_positions() {
+        use super::super::api::{handle_pair, Event};
+        let stats = std::sync::Arc::new(std::sync::Mutex::new(crate::stats::LatencyHist::new()));
+        let (mut h, session) = handle_pair(1, stats);
+        let mut s = Sequence::new(
+            Request::new((0..20).collect()).max_new(3),
+            session,
+            Box::new(ToyBackend::new(64)),
+        );
+        s.step_prefill(64);
+        s.step_decode();
+        s.step_decode();
+        s.step_decode();
+        assert!(s.is_finished());
+        assert!(matches!(h.try_next(), Some(Event::Started)));
+        let mut streamed = Vec::new();
+        while let Some(ev) = h.try_next() {
+            if let Event::Token { pos, tok } = ev {
+                assert_eq!(pos, streamed.len(), "positions must be dense from 0");
+                streamed.push(tok);
+            }
+        }
+        assert_eq!(streamed, s.emitted, "streamed tokens mirror emissions");
+    }
+
+    #[test]
+    fn started_not_resent_after_preemption() {
+        use super::super::api::{handle_pair, Event};
+        let stats = std::sync::Arc::new(std::sync::Mutex::new(crate::stats::LatencyHist::new()));
+        let (mut h, session) = handle_pair(1, stats);
+        let mut s = Sequence::new(
+            Request::new((0..10).collect()).max_new(5),
+            session,
+            Box::new(ToyBackend::new(64)),
+        );
+        s.step_prefill(64);
+        s.step_decode();
+        s.preempt(Box::new(ToyBackend::new(64)));
+        s.step_prefill(64); // re-admission prefill
+        let starts = {
+            let mut n = 0;
+            while let Some(ev) = h.try_next() {
+                if matches!(ev, Event::Started) {
+                    n += 1;
+                }
+            }
+            n
+        };
+        assert_eq!(starts, 1, "preemption re-admission is not a second start");
+    }
+
+    #[test]
+    fn seeded_sampling_drives_emission() {
+        use crate::config::SamplingParams;
+        // backend emitting flat-ish logits so sampling (not argmax)
+        // decides; identical seeds must replay identically
+        struct Flat;
+        impl SeqBackend for Flat {
+            fn prefill_chunk(&mut self, _t: &[u32], _l: bool) -> Option<Vec<f32>> {
+                Some((0..16).map(|i| (i as f32 * 0.37).sin()).collect())
+            }
+            fn decode(&mut self, token: u32) -> Vec<f32> {
+                (0..16).map(|i| ((i + token as usize) as f32 * 0.53).sin()).collect()
+            }
+        }
+        let run = |seed: u64| -> Vec<u32> {
+            let mut s = Sequence::new(
+                Request::new((0..8).collect())
+                    .max_new(6)
+                    .sampling(SamplingParams::seeded(seed)),
+                Session::detached(),
+                Box::new(Flat),
+            );
+            s.step_prefill(64);
+            while !s.is_finished() {
+                s.step_decode();
+            }
+            s.emitted.clone()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay identically");
+        assert_ne!(run(7), run(8), "different seeds must diverge");
     }
 }

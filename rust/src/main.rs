@@ -4,6 +4,7 @@
 //!   eval <fig1..fig7|table1..table3|all> [--fast]   regenerate experiments
 //!   calibrate [--anchors M] [--out plan.json]       offline anchor selection
 //!   serve [--requests N] [--policy P]               run the serving demo
+//!                                                   (streaming sessions; --deadline-ms bounds each request)
 //!   export-weights [--out artifacts/synth_weights]  SynthLM -> PJRT weights
 //!   pjrt-smoke                                      artifact load + parity check
 //!
@@ -65,7 +66,7 @@ fn usage() -> ! {
          commands:\n\
            eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
            calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
-           serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N]\n\
+           serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--deadline-ms MS]\n\
            export-weights [--out PATH] [--seed S]\n\
            pjrt-smoke [--artifacts DIR]"
     );
@@ -152,19 +153,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         factory,
     );
+    let deadline_ms: Option<f64> = args.flag("deadline-ms").and_then(|s| s.parse().ok());
     let mut expected = Vec::new();
-    for id in 0..n_requests {
+    let mut handles = Vec::new();
+    for _ in 0..n_requests {
         let t = gen.longbench(kascade::workload::Category::Sqa, ctx);
         expected.push(t.expect.clone());
-        engine.submit(Request {
-            id: id as u64,
-            prompt: t.prompt,
-            max_new: t.max_new,
-            stop_token: Some(*t.expect.last().unwrap()),
-        });
+        let mut req = Request::new(t.prompt)
+            .max_new(t.max_new)
+            .stop(*t.expect.last().unwrap());
+        if let Some(ms) = deadline_ms {
+            req = req.deadline_ms(ms);
+        }
+        handles.push(engine.submit(req).expect("admission"));
     }
     let t0 = std::time::Instant::now();
-    let done = engine.run_to_completion();
+    let done = engine.run_to_completion(&mut handles);
     let secs = t0.elapsed().as_secs_f64();
     let mut correct = 0;
     for c in &done {

@@ -447,12 +447,36 @@ impl Model {
         max_new: usize,
         stop: impl Fn(u32) -> bool,
     ) -> Vec<u32> {
+        self.sample_decode(
+            first_logits,
+            st,
+            policy,
+            max_new,
+            &crate::config::SamplingParams::Greedy,
+            stop,
+        )
+    }
+
+    /// Decode loop under a typed [`crate::config::SamplingParams`] — the
+    /// same rule the serving engine applies per token, keyed by response
+    /// position, so a standalone loop and a served request with the same
+    /// seed emit identical streams.  `Greedy` reproduces `greedy_decode`
+    /// exactly.
+    pub fn sample_decode(
+        &self,
+        first_logits: &[f32],
+        st: &mut SeqState,
+        policy: &mut dyn SparsePolicy,
+        max_new: usize,
+        sampling: &crate::config::SamplingParams,
+        stop: impl Fn(u32) -> bool,
+    ) -> Vec<u32> {
         let mut out = Vec::new();
-        let mut tok = tensor::argmax(first_logits) as u32;
+        let mut tok = sampling.sample(first_logits, 0);
         out.push(tok);
         while out.len() < max_new && !stop(tok) {
             let logits = self.decode_step(tok, st, policy);
-            tok = tensor::argmax(&logits) as u32;
+            tok = sampling.sample(&logits, out.len());
             out.push(tok);
         }
         out
@@ -669,5 +693,24 @@ mod tests {
         let first = crate::tensor::argmax(&logits) as u32;
         let out = m.greedy_decode(&logits, &mut st, &mut DensePolicy, 10, |t| t == first);
         assert_eq!(out, vec![first]); // stop() true on the very first token
+    }
+
+    #[test]
+    fn sample_decode_greedy_matches_greedy_decode_and_seeds_replay() {
+        use crate::config::SamplingParams;
+        let m = random_model(13);
+        let run = |sampling: &SamplingParams| -> Vec<u32> {
+            let mut st = m.new_state(64);
+            let (logits, _) = m.prefill(&[1, 2, 3, 4], &mut st, &mut DensePolicy, None);
+            m.sample_decode(&logits, &mut st, &mut DensePolicy, 8, sampling, |_| false)
+        };
+        let greedy = {
+            let mut st = m.new_state(64);
+            let (logits, _) = m.prefill(&[1, 2, 3, 4], &mut st, &mut DensePolicy, None);
+            m.greedy_decode(&logits, &mut st, &mut DensePolicy, 8, |_| false)
+        };
+        assert_eq!(run(&SamplingParams::Greedy), greedy);
+        let seeded = SamplingParams::seeded(0xFEED).temperature(1.5);
+        assert_eq!(run(&seeded), run(&seeded), "seeded decode must replay exactly");
     }
 }

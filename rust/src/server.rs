@@ -3,13 +3,30 @@
 //! that runs one engine per worker with a session-affinity router in
 //! front.  (tokio is unavailable in this offline environment; the event
 //! loop is std::thread + mpsc, which on a 1-core host is the same thing.)
+//!
+//! Both expose the streaming session API ([`crate::coordinator::api`]):
+//! `submit` returns a typed `Result<RequestHandle, SubmitError>`, the
+//! handle streams `Started` / `Token` / `Done` / `Failed` events per
+//! tick, and `cancel()` (or deadline expiry) tears the request down
+//! inside the engine within one tick — every KV block released, indexed
+//! blocks parked in the prefix-cache pool with their snapshots intact.
 
 use crate::config::ServeConfig;
-use crate::coordinator::{Request, Router, Scheduler, SeqBackend, SeqPhase, Sequence, ServeMetrics, WorkItem};
+use crate::coordinator::{
+    handle_pair, Router, Scheduler, SeqBackend, SeqPhase, Sequence, ServeMetrics, Session,
+    WorkItem,
+};
 use crate::model::{DecodeReq, Model};
+use crate::stats::LatencyHist;
+
+/// The session API, re-exported so front-end callers can pull everything
+/// from one module.
+pub use crate::coordinator::api::{
+    Completion, Event, FailReason, Request, RequestHandle, SubmitError,
+};
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Bound on retained prefix-cache snapshots: each is a full backend
@@ -26,25 +43,14 @@ const MAX_SNAPSHOTS: usize = 256;
 pub type BackendFactory = Box<dyn Fn(&Request) -> Box<dyn SeqBackend> + Send>;
 pub type LocalBackendFactory = Box<dyn Fn(&Request) -> Box<dyn SeqBackend>>;
 
-/// Finished-request report.
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: u64,
-    pub tokens: Vec<u32>,
-    pub ttft_ms: f64,
-    pub total_ms: f64,
-    pub preemptions: usize,
-    /// prompt tokens whose prefill was skipped via the prefix cache
-    pub cached_prefix_tokens: usize,
-}
-
 /// Single-threaded serving engine: owns the scheduler and live sequences.
 pub struct Engine {
     pub sched: Scheduler,
     pub seqs: HashMap<u64, Sequence>,
     pub metrics: ServeMetrics,
     factory: LocalBackendFactory,
-    finished: Vec<Completion>,
+    /// next auto-assigned request id (see [`Engine::submit`])
+    next_id: u64,
     /// prefix-cache state snapshots, keyed by the chain hash of the
     /// block-aligned prompt boundary they hold (see `coordinator::prefix_cache`)
     snapshots: HashMap<u64, Box<dyn SeqBackend>>,
@@ -62,31 +68,68 @@ impl Engine {
             seqs: HashMap::new(),
             metrics: ServeMetrics::new(),
             factory,
-            finished: Vec::new(),
+            next_id: 0,
             snapshots: HashMap::new(),
             snapshot_order: VecDeque::new(),
         }
     }
 
-    /// Returns false if admission control rejected the request.
-    pub fn submit(&mut self, req: Request) -> bool {
-        let id = req.id;
-        if !self.sched.submit_with_prompt(id, &req.prompt) {
-            return false;
+    /// Submit a request: typed admission, streaming handle back.  The
+    /// engine assigns the request id (monotonic per engine), readable
+    /// via [`RequestHandle::id`] and on the final [`Completion`].
+    pub fn submit(&mut self, req: Request) -> Result<RequestHandle, SubmitError> {
+        let id = self.next_id;
+        let (handle, session) = handle_pair(id, self.metrics.streamed_ttft_us.clone());
+        self.submit_session(id, req, session)?;
+        Ok(handle)
+    }
+
+    /// Submit with an externally created session under an explicit id —
+    /// the [`Server`]'s workers route pre-built handles here.  On
+    /// rejection the session receives the terminal `Failed(Rejected)`
+    /// event *and* the error is returned.
+    pub fn submit_session(
+        &mut self,
+        id: u64,
+        req: Request,
+        session: Session,
+    ) -> Result<(), SubmitError> {
+        assert!(!self.seqs.contains_key(&id), "duplicate request id {id}");
+        self.next_id = self.next_id.max(id + 1);
+        // a prompt the pool cannot hold alongside one decode token would
+        // stall admission forever — reject it up front, typed
+        let pool = self.sched.cfg.num_blocks * self.sched.cfg.block_size;
+        let limit = self
+            .sched
+            .cfg
+            .max_prompt_tokens
+            .unwrap_or(usize::MAX)
+            .min(pool.saturating_sub(1));
+        if req.prompt.len() > limit {
+            let e = SubmitError::PromptTooLong { prompt: req.prompt.len(), limit };
+            session.send(Event::Failed(FailReason::Rejected(e)));
+            return Err(e);
+        }
+        if !self.sched.submit_request(id, &req.prompt, req.priority) {
+            let e = SubmitError::QueueFull;
+            session.send(Event::Failed(FailReason::Rejected(e)));
+            return Err(e);
         }
         let backend = (self.factory)(&req);
         self.metrics.prompts_in += 1;
-        self.seqs.insert(id, Sequence::new(req, backend));
-        true
+        self.seqs.insert(id, Sequence::new(req, session, backend));
+        Ok(())
     }
 
     pub fn idle(&self) -> bool {
         self.sched.running.is_empty() && self.sched.waiting.is_empty()
     }
 
-    /// One scheduler tick: form a batch, execute it, retire finished.
-    /// Returns the number of work items executed.
+    /// One scheduler tick: apply cancellations/deadlines, form a batch,
+    /// execute it, retire finished.  Returns the number of work items
+    /// executed.
     pub fn tick(&mut self) -> usize {
+        self.sweep_sessions();
         let batch = {
             let seqs = &self.seqs;
             self.sched.tick(|id| {
@@ -170,6 +213,54 @@ impl Engine {
         self.metrics.sample_kv_bytes(kv_bytes);
         self.retire();
         n
+    }
+
+    /// Apply client cancellations and expired deadlines: the sequence
+    /// leaves the scheduler (waiting or running), releases every KV
+    /// block it holds (indexed blocks park in the prefix-cache pool, so
+    /// engine-held snapshots stay valid), and the handle receives the
+    /// terminal `Failed` event carrying the partial completion.  Runs at
+    /// the top of every tick — a mid-stream `cancel()` reclaims all
+    /// blocks within one tick.
+    fn sweep_sessions(&mut self) {
+        let now = Instant::now();
+        let mut ended: Vec<(u64, bool)> = Vec::new(); // (id, deadline?)
+        for (&id, s) in &self.seqs {
+            if s.cancel_requested() {
+                ended.push((id, false));
+            } else if s.past_deadline(now) {
+                ended.push((id, true));
+            }
+        }
+        for (id, deadline) in ended {
+            self.sched.remove(id);
+            let s = self.seqs.remove(&id).unwrap();
+            if let Some(ks) = s.backend.kv_stats() {
+                self.metrics.dequant_rows += ks.dequant_rows;
+            }
+            let partial = Self::completion_of(id, &s, now);
+            let reason = if deadline {
+                self.metrics.deadline_missed += 1;
+                FailReason::DeadlineExceeded(partial)
+            } else {
+                self.metrics.cancelled += 1;
+                FailReason::Cancelled(partial)
+            };
+            s.send_event(Event::Failed(reason));
+        }
+    }
+
+    fn completion_of(id: u64, s: &Sequence, end: Instant) -> Completion {
+        Completion {
+            id,
+            tokens: s.response_tokens(),
+            ttft_ms: s
+                .first_token_at
+                .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3),
+            total_ms: Some(end.duration_since(s.arrived).as_secs_f64() * 1e3),
+            preemptions: s.preemptions,
+            cached_prefix_tokens: s.cached_prefix,
+        }
     }
 
     /// Execute one tick's decode work items.  With
@@ -327,64 +418,108 @@ impl Engine {
                     .add_us(t.duration_since(s.arrived).as_secs_f64() * 1e6);
             }
             self.metrics.requests_done += 1;
-            self.finished.push(Completion {
-                id,
-                // includes tokens folded into the prompt by preemption —
-                // a preempted request completes with identical output
-                tokens: s.response_tokens(),
-                ttft_ms: s
-                    .first_token_at
-                    .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
-                    .unwrap_or(0.0),
-                total_ms: s
-                    .finished_at
-                    .map(|t| t.duration_since(s.arrived).as_secs_f64() * 1e3)
-                    .unwrap_or(0.0),
-                preemptions: s.preemptions,
-                cached_prefix_tokens: s.cached_prefix,
-            });
+            let end = s.finished_at.unwrap_or_else(Instant::now);
+            let c = Self::completion_of(id, &s, end);
+            s.send_event(Event::Done(c));
         }
     }
 
-    pub fn drain_finished(&mut self) -> Vec<Completion> {
-        std::mem::take(&mut self.finished)
-    }
-
-    /// Run until every submitted request completes.
-    pub fn run_to_completion(&mut self) -> Vec<Completion> {
+    /// Thin convenience wrapper over the streaming API: tick until every
+    /// live sequence terminates, draining `handles` along the way.
+    /// Returns the successful completions (a cancelled / expired /
+    /// rejected handle contributes nothing here — read its `Failed`
+    /// event via [`RequestHandle::try_next`] if you need the partial).
+    pub fn run_to_completion(&mut self, handles: &mut [RequestHandle]) -> Vec<Completion> {
+        let mut out = Vec::new();
         let mut guard = 0usize;
         while !self.idle() {
             let did = self.tick();
             guard = if did == 0 { guard + 1 } else { 0 };
             assert!(guard < 1000, "scheduler livelock: no work for 1000 ticks");
+            for h in handles.iter_mut() {
+                while let Some(ev) = h.try_next() {
+                    if let Event::Done(c) = ev {
+                        out.push(c);
+                    }
+                }
+            }
         }
-        self.drain_finished()
+        out
+    }
+
+    /// Tear down EVERY live session as `Failed(Cancelled(partial))`,
+    /// releasing all blocks — the abort path behind
+    /// [`Server::stop_worker`], so stopping a worker never blocks on an
+    /// unbounded in-flight request.
+    pub fn cancel_all(&mut self) {
+        let now = Instant::now();
+        let ids: Vec<u64> = self.seqs.keys().copied().collect();
+        for id in ids {
+            self.sched.remove(id);
+            let s = self.seqs.remove(&id).unwrap();
+            if let Some(ks) = s.backend.kv_stats() {
+                self.metrics.dequant_rows += ks.dequant_rows;
+            }
+            self.metrics.cancelled += 1;
+            let partial = Self::completion_of(id, &s, now);
+            s.send_event(Event::Failed(FailReason::Cancelled(partial)));
+        }
+    }
+
+    /// Snapshot-store consistency: every held snapshot is still flagged
+    /// resumable in the prefix index (no orphans the scheduler could
+    /// never hand out), and the store respects its cap.  Meaningful
+    /// after a tick has drained pending invalidations.
+    pub fn check_snapshot_invariants(&self) -> Result<(), String> {
+        if self.snapshots.len() > MAX_SNAPSHOTS {
+            return Err(format!(
+                "{} snapshots exceed the {MAX_SNAPSHOTS} cap",
+                self.snapshots.len()
+            ));
+        }
+        for h in self.snapshots.keys() {
+            if !self.sched.prefix.is_resumable(*h) {
+                return Err(format!("orphaned snapshot {h:#x}: not resumable in the index"));
+            }
+        }
+        Ok(())
     }
 }
 
 enum Msg {
-    Submit(Request, Sender<Completion>),
+    Submit(u64, Request, Session),
+    /// Graceful: drain the queue, finish in-flight work, exit.
     Shutdown,
+    /// Immediate: fail every live session as `Cancelled`, exit.
+    Abort,
 }
 
-/// Multi-worker server: router + one engine thread per worker.
+/// Multi-worker server: router + one engine thread per worker.  All
+/// workers share one handle-observed-TTFT collector (each worker's
+/// returned metrics reports the server-wide histogram).
 pub struct Server {
     router: Router,
     txs: Vec<Sender<Msg>>,
-    handles: Vec<std::thread::JoinHandle<ServeMetrics>>,
+    handles: Vec<Option<std::thread::JoinHandle<ServeMetrics>>>,
+    /// metrics of workers stopped before shutdown
+    reaped: Vec<ServeMetrics>,
+    streamed: Arc<Mutex<LatencyHist>>,
+    next_id: u64,
 }
 
 impl Server {
     /// `factories` — one backend factory per worker.
     pub fn start(cfg: ServeConfig, factories: Vec<BackendFactory>) -> Self {
+        let streamed: Arc<Mutex<LatencyHist>> = Arc::new(Mutex::new(LatencyHist::new()));
         let mut txs = Vec::new();
         let mut handles = Vec::new();
         for factory in factories {
             let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
             let cfg = cfg.clone();
-            handles.push(std::thread::spawn(move || {
+            let streamed = streamed.clone();
+            handles.push(Some(std::thread::spawn(move || {
                 let mut engine = Engine::new(cfg, factory);
-                let mut replies: HashMap<u64, Sender<Completion>> = HashMap::new();
+                engine.metrics.streamed_ttft_us = streamed;
                 let mut open = true;
                 loop {
                     // drain incoming without blocking while work remains
@@ -398,11 +533,16 @@ impl Server {
                             }
                         };
                         match msg {
-                            Some(Msg::Submit(req, reply)) => {
-                                replies.insert(req.id, reply);
-                                engine.submit(req);
+                            Some(Msg::Submit(id, req, session)) => {
+                                // rejections surface on the handle as
+                                // Failed(Rejected(..)) — sent by submit_session
+                                let _ = engine.submit_session(id, req, session);
                             }
                             Some(Msg::Shutdown) => open = false,
+                            Some(Msg::Abort) => {
+                                engine.cancel_all();
+                                open = false;
+                            }
                             None => break,
                         }
                     }
@@ -413,33 +553,94 @@ impl Server {
                         continue;
                     }
                     engine.tick();
-                    for c in engine.drain_finished() {
-                        if let Some(reply) = replies.remove(&c.id) {
-                            let _ = reply.send(c);
-                        }
-                    }
                 }
                 engine.metrics
-            }));
+            })));
             txs.push(tx);
         }
-        Self { router: Router::new(txs.len()), txs, handles }
+        Self {
+            router: Router::new(txs.len()),
+            txs,
+            handles,
+            reaped: Vec::new(),
+            streamed,
+            next_id: 0,
+        }
     }
 
-    /// Submit a request; the completion arrives on the returned receiver.
-    pub fn submit(&mut self, req: Request, session: Option<u64>) -> Receiver<Completion> {
-        let (tx, rx) = channel();
-        let w = self.router.route(session);
-        self.txs[w].send(Msg::Submit(req, tx)).expect("worker alive");
-        rx
+    /// Submit a request; events stream on the returned handle (block on
+    /// [`RequestHandle::wait`]).  `session` pins worker affinity.  A dead
+    /// worker is skipped and marked (subsequent affinity re-routes);
+    /// `Err(SubmitError::WorkerDead)` only when no worker is alive.
+    pub fn submit(
+        &mut self,
+        req: Request,
+        session: Option<u64>,
+    ) -> Result<RequestHandle, SubmitError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (handle, sess) = handle_pair(id, self.streamed.clone());
+        let mut msg = Msg::Submit(id, req, sess);
+        loop {
+            let w = self.router.route(session).ok_or(SubmitError::WorkerDead)?;
+            match self.txs[w].send(msg) {
+                Ok(()) => return Ok(handle),
+                Err(SendError(m)) => {
+                    // the worker thread is gone: never route to it again
+                    self.router.mark_dead(w);
+                    self.reap(w);
+                    msg = m;
+                }
+            }
+        }
     }
 
-    /// Shut down and collect per-worker metrics.
-    pub fn shutdown(self) -> Vec<ServeMetrics> {
+    /// Stop one worker NOW: every queued and in-flight session on it
+    /// fails with `Cancelled` (blocks released), the thread exits and is
+    /// joined — bounded even with an unbounded request in flight.  The
+    /// router routes around it from then on (session affinity re-probes
+    /// to the next alive worker).  For a graceful full drain use
+    /// [`Server::shutdown`].
+    pub fn stop_worker(&mut self, w: usize) {
+        let _ = self.txs[w].send(Msg::Abort);
+        self.router.mark_dead(w);
+        self.reap(w);
+    }
+
+    pub fn alive_workers(&self) -> usize {
+        self.router.alive_workers()
+    }
+
+    /// Server-wide handle-observed TTFT histogram.
+    pub fn streamed_ttft(&self) -> LatencyHist {
+        match self.streamed.lock() {
+            Ok(h) => h.clone(),
+            Err(_) => LatencyHist::new(),
+        }
+    }
+
+    fn reap(&mut self, w: usize) {
+        if let Some(h) = self.handles[w].take() {
+            if let Ok(m) = h.join() {
+                self.reaped.push(m);
+            }
+        }
+    }
+
+    /// Shut down and collect per-worker metrics (stopped workers included).
+    pub fn shutdown(mut self) -> Vec<ServeMetrics> {
         for tx in &self.txs {
             let _ = tx.send(Msg::Shutdown);
         }
-        self.handles.into_iter().map(|h| h.join().unwrap()).collect()
+        let mut out = std::mem::take(&mut self.reaped);
+        for h in self.handles.iter_mut() {
+            if let Some(h) = h.take() {
+                if let Ok(m) = h.join() {
+                    out.push(m);
+                }
+            }
+        }
+        out
     }
 }
 
@@ -447,6 +648,7 @@ impl Server {
 mod tests {
     use super::*;
     use crate::coordinator::sequence::test_backend::ToyBackend;
+    use std::time::Duration;
 
     fn cfg() -> ServeConfig {
         ServeConfig {
@@ -466,23 +668,30 @@ mod tests {
     }
 
     #[test]
-    fn engine_completes_all_requests() {
+    fn engine_completes_all_requests_with_streamed_events() {
         let mut e = Engine::new(cfg(), toy_factory());
-        for id in 0..10 {
-            assert!(e.submit(Request {
-                id,
-                prompt: vec![0; 100 + 13 * id as usize],
-                max_new: 5,
-                stop_token: None,
-            }));
+        let mut handles = Vec::new();
+        for id in 0..10u64 {
+            let h = e
+                .submit(Request::new(vec![0; 100 + 13 * id as usize]).max_new(5))
+                .unwrap();
+            assert_eq!(h.id(), id, "engine assigns monotonic ids");
+            handles.push(h);
         }
-        let done = e.run_to_completion();
+        let done = e.run_to_completion(&mut handles);
         assert_eq!(done.len(), 10);
         for c in &done {
             assert_eq!(c.tokens.len(), 5);
+            assert!(c.ttft_ms.is_some(), "tokens were emitted -> ttft present");
+            assert!(c.total_ms.is_some());
         }
         assert_eq!(e.metrics.requests_done, 10);
         assert_eq!(e.metrics.tokens_out, 50);
+        assert_eq!(
+            e.metrics.streamed_ttft_us.lock().unwrap().count(),
+            10,
+            "every handle recorded a streamed TTFT"
+        );
         e.sched.blocks.check_invariants().unwrap();
         assert_eq!(e.sched.blocks.used(), 0, "all blocks released");
     }
@@ -491,15 +700,116 @@ mod tests {
     fn engine_survives_memory_pressure_with_preemption() {
         let tight = ServeConfig { num_blocks: 12, max_running: 8, ..cfg() }; // 192 tokens
         let mut e = Engine::new(tight, toy_factory());
-        for id in 0..6 {
-            e.submit(Request { id, prompt: vec![0; 40], max_new: 30, stop_token: None });
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            handles.push(e.submit(Request::new(vec![0; 40]).max_new(30)).unwrap());
         }
-        let done = e.run_to_completion();
+        let done = e.run_to_completion(&mut handles);
         assert_eq!(done.len(), 6);
         for c in &done {
             assert_eq!(c.tokens.len(), 30, "req {} emitted {}", c.id, c.tokens.len());
         }
         e.sched.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn typed_submit_errors() {
+        let mut e = Engine::new(ServeConfig { queue_cap: 1, ..cfg() }, toy_factory());
+        assert!(e.submit(Request::new(vec![0; 32])).is_ok());
+        assert_eq!(
+            e.submit(Request::new(vec![0; 32])).unwrap_err(),
+            SubmitError::QueueFull
+        );
+        // pool is 128 blocks * 16 = 2048 tokens; a prompt that can never
+        // also fit one decode token is rejected up front
+        let mut e = Engine::new(cfg(), toy_factory());
+        match e.submit(Request::new(vec![0; 4096])) {
+            Err(SubmitError::PromptTooLong { prompt: 4096, .. }) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+        // explicit cap
+        let mut e = Engine::new(
+            ServeConfig { max_prompt_tokens: Some(50), ..cfg() },
+            toy_factory(),
+        );
+        assert!(matches!(
+            e.submit(Request::new(vec![0; 51])),
+            Err(SubmitError::PromptTooLong { limit: 50, .. })
+        ));
+        assert!(e.submit(Request::new(vec![0; 50])).is_ok());
+    }
+
+    #[test]
+    fn cancel_releases_blocks_within_one_tick() {
+        let mut e = Engine::new(cfg(), toy_factory());
+        let h = e.submit(Request::new(vec![0; 100]).max_new(1000)).unwrap();
+        // into decode
+        for _ in 0..4 {
+            e.tick();
+        }
+        assert!(e.sched.blocks.used() > 0);
+        h.cancel();
+        e.tick();
+        assert_eq!(e.sched.blocks.used(), 0, "cancel reclaims all blocks in one tick");
+        assert_eq!(e.metrics.cancelled, 1);
+        assert!(e.idle());
+        e.sched.blocks.check_invariants().unwrap();
+        let mut h = h;
+        let mut failed = None;
+        while let Some(ev) = h.try_next() {
+            if let Event::Failed(f) = ev {
+                failed = Some(f);
+            }
+        }
+        match failed {
+            Some(FailReason::Cancelled(partial)) => {
+                assert!(!partial.tokens.is_empty(), "mid-decode cancel keeps the partial");
+                assert!(partial.ttft_ms.is_some());
+            }
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_before_admission_reports_no_ttft() {
+        // cancelled before the first tick: the request never leaves the
+        // waiting queue and never emits a token
+        let mut e = Engine::new(cfg(), toy_factory());
+        let h = e.submit(Request::new(vec![0; 64]).max_new(4)).unwrap();
+        h.cancel();
+        e.tick();
+        assert_eq!(e.metrics.cancelled, 1);
+        let mut h = h;
+        match h.wait(Duration::from_millis(100)) {
+            Err(FailReason::Cancelled(partial)) => {
+                assert!(partial.tokens.is_empty());
+                assert!(partial.ttft_ms.is_none(), "no token -> no ttft, not 0.0");
+                assert!(partial.total_ms.is_some());
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_fails_the_request() {
+        let mut e = Engine::new(cfg(), toy_factory());
+        let mut doomed = e
+            .submit(Request::new(vec![0; 64]).max_new(1000).deadline_ms(0.0))
+            .unwrap();
+        let mut ok = e.submit(Request::new(vec![0; 64]).max_new(3)).unwrap();
+        let mut guard = 0;
+        while !e.idle() {
+            e.tick();
+            guard += 1;
+            assert!(guard < 1000);
+        }
+        assert!(matches!(
+            doomed.wait(Duration::from_millis(100)),
+            Err(FailReason::DeadlineExceeded(_))
+        ));
+        assert_eq!(ok.wait(Duration::from_millis(100)).unwrap().tokens.len(), 3);
+        assert_eq!(e.metrics.deadline_missed, 1);
+        assert_eq!(e.sched.blocks.used(), 0);
     }
 
     /// Null-compute backend whose state is just a token count, with
@@ -553,8 +863,8 @@ mod tests {
             // distinct prompts: every admission registers fresh boundaries
             // and evicts someone else's blocks (invalidating their hashes)
             let prompt: Vec<u32> = (0..64).map(|j| (id * 64 + j) as u32).collect();
-            assert!(e.submit(Request { id, prompt, max_new: 2, stop_token: None }));
-            e.run_to_completion();
+            let mut h = vec![e.submit(Request::new(prompt).max_new(2)).unwrap()];
+            e.run_to_completion(&mut h);
         }
         assert!(
             // threshold + a tick's worth of registrations (compaction
@@ -565,24 +875,66 @@ mod tests {
             e.snapshots.len()
         );
         e.sched.blocks.check_invariants().unwrap();
+        e.tick(); // drain pending invalidations, then audit the store
+        e.check_snapshot_invariants().unwrap();
     }
 
     #[test]
     fn server_round_trips_across_workers() {
         let mut srv = Server::start(cfg(), vec![toy_factory(), toy_factory()]);
-        let mut rxs = Vec::new();
-        for id in 0..8 {
-            rxs.push(srv.submit(
-                Request { id, prompt: vec![0; 64], max_new: 3, stop_token: None },
-                Some(id % 3),
-            ));
+        let mut handles = Vec::new();
+        for id in 0..8u64 {
+            handles.push(
+                srv.submit(Request::new(vec![0; 64]).max_new(3), Some(id % 3))
+                    .unwrap(),
+            );
         }
-        for rx in rxs {
-            let c = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        for h in &mut handles {
+            let c = h.wait(Duration::from_secs(30)).unwrap();
             assert_eq!(c.tokens.len(), 3);
         }
+        assert!(srv.streamed_ttft().count() >= 8, "handles recorded streamed TTFT");
         let metrics = srv.shutdown();
         let total: u64 = metrics.iter().map(|m| m.requests_done).sum();
         assert_eq!(total, 8);
+    }
+
+    /// `stop_worker` must return promptly even with an effectively
+    /// unbounded request in flight — the session fails as `Cancelled`
+    /// instead of the stopping thread blocking on a ~1M-tick drain.
+    #[test]
+    fn stop_worker_aborts_unbounded_inflight_sessions() {
+        let mut srv = Server::start(cfg(), vec![toy_factory()]);
+        let mut h = srv
+            .submit(Request::new(vec![0; 64]).max_new(1_000_000), None)
+            .unwrap();
+        // wait until it demonstrably runs
+        assert!(h.next_timeout(Duration::from_secs(30)).is_some());
+        srv.stop_worker(0);
+        match h.wait(Duration::from_secs(30)) {
+            Err(FailReason::Cancelled(_)) => {}
+            other => panic!("expected Cancelled on abort, got {other:?}"),
+        }
+        let metrics = srv.shutdown();
+        assert_eq!(metrics.iter().map(|m| m.cancelled).sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn dead_worker_is_skipped_and_requests_complete() {
+        let mut srv = Server::start(cfg(), vec![toy_factory(), toy_factory()]);
+        srv.stop_worker(0);
+        assert_eq!(srv.alive_workers(), 1);
+        let mut handles = Vec::new();
+        for s in 0..6u64 {
+            // sessions that would have hashed to either worker all land
+            // on the survivor — no panic, no lost requests
+            handles.push(srv.submit(Request::new(vec![0; 32]).max_new(2), Some(s)).unwrap());
+        }
+        for h in &mut handles {
+            assert_eq!(h.wait(Duration::from_secs(30)).unwrap().tokens.len(), 2);
+        }
+        let metrics = srv.shutdown();
+        let total: u64 = metrics.iter().map(|m| m.requests_done).sum();
+        assert_eq!(total, 6);
     }
 }

@@ -378,6 +378,15 @@ pub fn axpy_q8(y: &mut [f32], w: f32, q: &[i8], scale: f32, zero: f32) {
     }
 }
 
+/// Splitmix64 finalizer — the shared integer mixer behind the router's
+/// session hash and the counter-based sampling RNG.  Keep the constants
+/// here, in one place.
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// argmax of a slice (first max wins).
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;

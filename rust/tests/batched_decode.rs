@@ -8,12 +8,12 @@
 //! scheduler -> engine -> backend stack.)
 
 use kascade::config::{ModelConfig, ServeConfig, TopKRule};
-use kascade::coordinator::{NativeBackend, Request};
+use kascade::coordinator::{Completion, Event, NativeBackend, Request, RequestHandle};
 use kascade::kascade::KascadePlan;
 use kascade::model::{Model, Weights};
 use kascade::prop_assert;
 use kascade::proptest_lite::check;
-use kascade::server::{Completion, Engine, LocalBackendFactory};
+use kascade::server::{Engine, LocalBackendFactory};
 use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
 use kascade::tensor::Rng;
 use std::sync::Arc;
@@ -91,10 +91,14 @@ fn run(
     let mut tick = 0usize;
     let mut submitted = 0usize;
     let mut guard = 0usize;
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
     loop {
         for (req, at) in arrivals {
             if *at == tick {
-                assert!(e.submit(req.clone()), "admission rejected request {}", req.id);
+                // submission order fixes the engine-assigned ids, so the
+                // batched and sequential runs stay comparable by id
+                handles.push(e.submit(req.clone()).expect("admission rejected request"));
                 submitted += 1;
             }
         }
@@ -104,9 +108,15 @@ fn run(
         let did = e.tick();
         guard = if did == 0 { guard + 1 } else { 0 };
         assert!(guard < 1000, "engine livelock");
+        for h in &mut handles {
+            while let Some(ev) = h.try_next() {
+                if let Event::Done(c) = ev {
+                    done.push(c);
+                }
+            }
+        }
         tick += 1;
     }
-    let mut done = e.drain_finished();
     done.sort_by_key(|c| c.id);
     (done, e)
 }
@@ -137,10 +147,7 @@ fn batched_decode_streams_equal_sequential_property() {
             let max_new = if id == 0 { 4 + rng.below(9) } else { 1 + rng.below(12) };
             cap = cap.max(prompt.len() + max_new + 8);
             let at = rng.below(6); // staggered admission joins live batches
-            arrivals.push((
-                Request { id: id as u64, prompt, max_new, stop_token: None },
-                at,
-            ));
+            arrivals.push((Request::new(prompt).max_new(max_new), at));
         }
         let (seq, _) = run(&arrivals, false, kascade, model.clone(), cap);
         let (bat, eng) = run(&arrivals, true, kascade, model.clone(), cap);
@@ -178,15 +185,9 @@ fn prefix_fork_joins_live_batch_unperturbed() {
     let mut follower_prompt = shared;
     follower_prompt.extend([5u32, 25]);
     let arrivals = vec![
-        (
-            Request { id: 0, prompt: leader_prompt, max_new: 24, stop_token: None },
-            0usize,
-        ),
+        (Request::new(leader_prompt).max_new(24), 0usize),
         // arrives while the leader is mid-decode
-        (
-            Request { id: 1, prompt: follower_prompt, max_new: 8, stop_token: None },
-            8usize,
-        ),
+        (Request::new(follower_prompt).max_new(8), 8usize),
     ];
     let (bat, bat_eng) = run(&arrivals, true, true, model.clone(), 128);
     let (seq, seq_eng) = run(&arrivals, false, true, model, 128);

@@ -117,17 +117,17 @@ fn served_kascade_engine_end_to_end() {
         },
         factory,
     );
-    for id in 0..4u64 {
+    let mut handles = Vec::new();
+    for _ in 0..4u64 {
         let t = gen.longbench(Category::Fewshot, 900);
         expected.push(t.expect[0]);
-        engine.submit(Request {
-            id,
-            prompt: t.prompt,
-            max_new: 2,
-            stop_token: Some(t.expect[0]),
-        });
+        handles.push(
+            engine
+                .submit(Request::new(t.prompt).max_new(2).stop(t.expect[0]))
+                .expect("admission"),
+        );
     }
-    let done = engine.run_to_completion();
+    let done = engine.run_to_completion(&mut handles);
     assert_eq!(done.len(), 4);
     let correct = done
         .iter()

@@ -8,10 +8,10 @@
 //!   shared KV blocks — resumed sequences rebuild their own.
 
 use kascade::config::{ServeConfig, TopKRule};
-use kascade::coordinator::{NativeBackend, Request, SeqBackend};
+use kascade::coordinator::{Completion, NativeBackend, Request, SeqBackend};
 use kascade::kascade::KascadePlan;
 use kascade::model::{Model, SynthSpec};
-use kascade::server::{Completion, Engine, LocalBackendFactory};
+use kascade::server::{Engine, LocalBackendFactory};
 use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
 use kascade::workload::{grade, Task, WorkloadGen};
 use std::cell::Cell;
@@ -89,14 +89,14 @@ fn serve(tasks: &[Task], enable: bool, plan: Option<KascadePlan>) -> (Vec<Comple
     let counter = Rc::new(Cell::new(0u64));
     let mut engine = Engine::new(cfg(enable), factory(model, cap, counter.clone(), plan));
     let mut done = Vec::new();
-    for (id, t) in tasks.iter().enumerate() {
-        assert!(engine.submit(Request {
-            id: id as u64,
-            prompt: t.prompt.clone(),
-            max_new: t.max_new,
-            stop_token: None,
-        }));
-        done.extend(engine.run_to_completion());
+    let mut handles = Vec::new();
+    for t in tasks {
+        handles.push(
+            engine
+                .submit(Request::new(t.prompt.clone()).max_new(t.max_new))
+                .expect("admission"),
+        );
+        done.extend(engine.run_to_completion(&mut handles));
     }
     done.sort_by_key(|c| c.id);
     (done, counter.get(), engine)

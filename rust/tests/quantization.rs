@@ -175,15 +175,15 @@ fn int8_engine_bounded_divergence_and_smaller_kv() {
                 )) as Box<dyn SeqBackend>
             }),
         );
-        for (id, p) in prompts.iter().enumerate() {
-            engine.submit(Request {
-                id: id as u64,
-                prompt: p.clone(),
-                max_new: 16,
-                stop_token: None,
-            });
+        let mut handles = Vec::new();
+        for p in &prompts {
+            handles.push(
+                engine
+                    .submit(Request::new(p.clone()).max_new(16))
+                    .expect("admission"),
+            );
         }
-        let mut done = engine.run_to_completion();
+        let mut done = engine.run_to_completion(&mut handles);
         done.sort_by_key(|c| c.id);
         let toks: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
         (toks, engine.metrics.peak_kv_bytes, engine.metrics.dequant_rows)

@@ -1,20 +1,26 @@
 //! Scheduler / engine fuzz (seeded, deterministic): random
-//! submit/tick/finish/preempt streams with prefix caching enabled.
+//! submit/tick/finish/preempt streams with prefix caching enabled,
+//! interleaved with random cancellations and deadlines.
 //!
 //! Properties:
 //! * a tick never exceeds `token_budget` and never schedules the same
 //!   sequence twice in one batch;
 //! * block-manager invariants survive arbitrary interleavings of
-//!   admission, cache adoption, preemption and eviction;
-//! * every preempted sequence is eventually re-admitted and completes;
+//!   admission, cache adoption, preemption, eviction and cancellation
+//!   (`Scheduler::remove` at any phase), with zero leaked blocks after
+//!   drain and no orphaned engine snapshots;
+//! * every preempted-and-not-cancelled sequence is eventually
+//!   re-admitted and completes (no livelock);
 //! * under heavy preemption + prefix caching, every request completes
 //!   with output tokens identical to an unpressured run.
 
 use kascade::config::ServeConfig;
-use kascade::coordinator::{Request, Scheduler, SeqBackend, SeqPhase, WorkItem};
+use kascade::coordinator::{
+    Completion, Event, FailReason, Request, Scheduler, SeqBackend, SeqPhase, WorkItem,
+};
 use kascade::prop_assert;
 use kascade::proptest_lite::check;
-use kascade::server::{Completion, Engine};
+use kascade::server::Engine;
 use kascade::tensor::Rng;
 use std::collections::{HashMap, HashSet};
 
@@ -33,6 +39,7 @@ fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
             enable_prefix_cache: true,
             prefix_cache_blocks: 8 + rng.below(32),
             batched_decode: true,
+            ..ServeConfig::default()
         };
         let budget = c.token_budget;
         let mut s = Scheduler::new(c);
@@ -148,6 +155,7 @@ fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
             Ok(n)
         };
 
+        let mut cancelled_count = 0u64;
         for step in 0..120 {
             for _ in 0..rng.below(3) {
                 next += 1;
@@ -157,6 +165,25 @@ fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
                 s.submit_with_prompt(next, &prompt);
                 phases.insert(next, (SeqPhase::Waiting, len, 0));
                 prompts.insert(next, prompt);
+            }
+            // random cancellation at an arbitrary phase (waiting,
+            // mid-prefill, decoding, freshly preempted): the typed
+            // teardown path must keep the pool clean at any interleaving
+            if rng.below(5) == 0 && !phases.is_empty() {
+                let mut live: Vec<u64> = phases.keys().copied().collect();
+                live.sort_unstable(); // deterministic pick under a seeded rng
+                let victim = live[rng.below(live.len())];
+                s.remove(victim);
+                phases.remove(&victim);
+                prompts.remove(&victim);
+                resp.remove(&victim);
+                // a cancelled sequence is excused from the
+                // "preempted implies re-admitted" liveness property
+                preempted_ever.remove(&victim);
+                cancelled_count += 1;
+                s.blocks
+                    .check_invariants()
+                    .map_err(|e| format!("step {step} post-cancel: {e}"))?;
             }
             one_tick(
                 &mut s,
@@ -195,10 +222,152 @@ fn fuzz_scheduler_budget_uniqueness_and_preemption_recovery() {
             prop_assert!(step < 20_000, "drain did not converge");
         }
         prop_assert!(s.running.is_empty(), "scheduler retains finished sequences");
+        prop_assert!(s.waiting.is_empty(), "scheduler retains cancelled waiters");
         for p in &preempted_ever {
             prop_assert!(readmitted.contains(p), "preempted seq {p} never re-admitted");
         }
         s.blocks.check_invariants().map_err(|e| format!("after drain: {e}"))?;
+        prop_assert!(
+            s.blocks.used() == 0,
+            "{} blocks leaked after drain ({cancelled_count} cancellations)",
+            s.blocks.used()
+        );
+        Ok(())
+    });
+}
+
+/// Engine-level fuzz of the full session surface: random arrivals with
+/// random priorities, deadlines and seeded sampling, random `cancel()`
+/// calls at arbitrary phases — all over a tight pool with prefix caching
+/// so cancellation interleaves with preemption, CoW adoption and
+/// eviction.  Every handle must reach exactly one terminal event, every
+/// block must come home, and the snapshot store must hold no orphans.
+#[test]
+fn fuzz_engine_cancellation_deadline_hygiene() {
+    check("engine session fuzz", 10, |rng| {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 10 + rng.below(24), // tight: forced preemption
+            max_running: 1 + rng.below(6),
+            token_budget: 16 + rng.below(128),
+            prefill_chunk: 8 + rng.below(48),
+            queue_cap: 256,
+            workers: 1,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 4 + rng.below(16),
+            ..ServeConfig::default()
+        };
+        let mut e = Engine::new(
+            cfg,
+            Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+        );
+        let shared: Vec<u32> = (0..32).map(|_| rng.below(32) as u32).collect();
+        let mut handles = Vec::new();
+        let mut expect_deadline: HashSet<u64> = HashSet::new();
+        let mut step = 0usize;
+        let mut idle_ticks = 0usize;
+        let mut to_submit = 6 + rng.below(8);
+        let mut cancels_left = 4;
+        loop {
+            step += 1;
+            prop_assert!(step < 20_000, "engine fuzz did not converge");
+            if to_submit > 0 && rng.below(2) == 0 {
+                to_submit -= 1;
+                let mut prompt = if rng.below(2) == 0 { shared.clone() } else { Vec::new() };
+                let len = 17 + rng.below(48);
+                while prompt.len() < len {
+                    prompt.push(rng.below(32) as u32);
+                }
+                let mut req = Request::new(prompt)
+                    .max_new(1 + rng.below(12))
+                    .priority(rng.below(3) as i32);
+                if rng.below(4) == 0 {
+                    let seed = rng.below(1 << 16) as u64;
+                    req = req.sampling(kascade::config::SamplingParams::seeded(seed));
+                }
+                if rng.below(5) == 0 {
+                    // an already-expired deadline: must fail, not hang
+                    req = req.deadline_ms(0.0);
+                }
+                let h = e.submit(req.clone()).map_err(|err| format!("admission: {err}"))?;
+                if req.deadline_ms.is_some() {
+                    expect_deadline.insert(h.id());
+                }
+                handles.push(h);
+            }
+            if cancels_left > 0 && !handles.is_empty() && rng.below(4) == 0 {
+                cancels_left -= 1;
+                let h = &handles[rng.below(handles.len())];
+                h.cancel(); // cancelling a terminal handle is a no-op
+            }
+            let n = e.tick();
+            e.sched
+                .blocks
+                .check_invariants()
+                .map_err(|err| format!("step {step}: {err}"))?;
+            idle_ticks = if n == 0 { idle_ticks + 1 } else { 0 };
+            prop_assert!(idle_ticks < 1000, "engine livelock");
+            if to_submit == 0 && e.idle() {
+                break;
+            }
+        }
+        e.tick(); // drain pending index invalidations before the audit
+        e.check_snapshot_invariants().map_err(|err| format!("snapshots: {err}"))?;
+        prop_assert!(
+            e.sched.blocks.used() == 0,
+            "{} blocks leaked after drain",
+            e.sched.blocks.used()
+        );
+        // every handle reaches exactly one terminal event, and streamed
+        // tokens reassemble the completion byte-for-byte
+        for h in &mut handles {
+            let id = h.id();
+            let mut streamed = Vec::new();
+            let mut terminal: Option<Result<Completion, FailReason>> = None;
+            while let Some(ev) = h.try_next() {
+                match ev {
+                    Event::Token { pos, tok } => {
+                        prop_assert!(pos == streamed.len(), "seq {id}: token gap at {pos}");
+                        streamed.push(tok);
+                    }
+                    Event::Done(c) => {
+                        prop_assert!(terminal.is_none(), "seq {id}: two terminal events");
+                        terminal = Some(Ok(c));
+                    }
+                    Event::Failed(f) => {
+                        prop_assert!(terminal.is_none(), "seq {id}: two terminal events");
+                        terminal = Some(Err(f));
+                    }
+                    Event::Started => {}
+                }
+            }
+            match terminal {
+                Some(Ok(c)) => {
+                    prop_assert!(
+                        c.tokens == streamed,
+                        "seq {id}: streamed tokens diverge from completion"
+                    );
+                    prop_assert!(
+                        !expect_deadline.contains(&id),
+                        "seq {id} completed past an already-expired deadline"
+                    );
+                    prop_assert!(c.ttft_ms.is_some(), "seq {id}: completed without ttft");
+                }
+                Some(Err(f)) => {
+                    if let Some(p) = f.partial() {
+                        prop_assert!(
+                            p.tokens == streamed,
+                            "seq {id}: partial diverges from streamed tokens"
+                        );
+                        prop_assert!(
+                            p.ttft_ms.is_some() == !p.tokens.is_empty(),
+                            "seq {id}: ttft must be Some iff tokens were emitted"
+                        );
+                    }
+                }
+                None => return Err(format!("seq {id}: no terminal event")),
+            }
+        }
         Ok(())
     });
 }
@@ -263,7 +432,7 @@ fn echo_requests() -> Vec<Request> {
             while prompt.len() < len {
                 prompt.push(rng.below(32) as u32);
             }
-            Request { id, prompt, max_new: 20, stop_token: None }
+            Request::new(prompt).max_new(20)
         })
         .collect()
 }
@@ -275,13 +444,12 @@ fn run_engine(cfg: ServeConfig, reqs: &[Request]) -> (Vec<Completion>, u64, u64)
     );
     // serve the first request alone so its prefix is registered (and
     // still cached) before the shared-prefix followers contend for it
-    let mut done = Vec::new();
-    assert!(engine.submit(reqs[0].clone()));
-    done.extend(engine.run_to_completion());
+    let mut handles = vec![engine.submit(reqs[0].clone()).expect("admission")];
+    let mut done = engine.run_to_completion(&mut handles);
     for r in &reqs[1..] {
-        assert!(engine.submit(r.clone()));
+        handles.push(engine.submit(r.clone()).expect("admission"));
     }
-    done.extend(engine.run_to_completion());
+    done.extend(engine.run_to_completion(&mut handles));
     done.sort_by_key(|c| c.id);
     engine.sched.blocks.check_invariants().unwrap();
     (done, engine.metrics.preemptions, engine.metrics.prefix_hits)

@@ -1,0 +1,495 @@
+//! Streaming-session API end-to-end properties:
+//!
+//! * streamed-token identity — the concatenated `Event::Token`s a handle
+//!   observes are bitwise-equal to `Completion::tokens`, including
+//!   across recompute preemption and prefix-cache resume;
+//! * cancellation hygiene — `cancel()` at a random phase (waiting,
+//!   mid-prefill, mid-decode) leaves the block pool clean
+//!   (`check_invariants`, `used() == 0` after drain) and the snapshot
+//!   store orphan-free;
+//! * seeded sampling — batched and sequential decode emit identical
+//!   streams under `SamplingParams::Seeded`, and preemption replays pick
+//!   identical tokens;
+//! * the multi-worker `Server` streams, cancels and survives dead
+//!   workers through the same typed surface.
+
+use kascade::config::{ModelConfig, SamplingParams, ServeConfig};
+use kascade::coordinator::{
+    Completion, Event, FailReason, NativeBackend, Request, RequestHandle, SeqBackend,
+};
+use kascade::model::{Model, Weights};
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{BackendFactory, Engine, Server};
+use kascade::tensor::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic backend whose logits depend only on every token it has
+/// consumed — recompute after preemption or prefix-cache resume must
+/// reproduce the continuation exactly.
+struct EchoBackend {
+    seen: Vec<u32>,
+    vocab: usize,
+}
+
+impl EchoBackend {
+    fn new(vocab: usize) -> Self {
+        Self { seen: Vec::new(), vocab }
+    }
+
+    fn logits(&self) -> Vec<f32> {
+        let mut h = 0xABCD_EF01_2345_6789u64;
+        for &t in &self.seen {
+            h = h.wrapping_add(t as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 31;
+        }
+        let mut l = vec![0.0; self.vocab];
+        l[(h % self.vocab as u64) as usize] = 1.0;
+        l
+    }
+}
+
+impl SeqBackend for EchoBackend {
+    fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+        self.seen.extend_from_slice(tokens);
+        Some(self.logits())
+    }
+
+    fn decode(&mut self, token: u32) -> Vec<f32> {
+        self.seen.push(token);
+        self.logits()
+    }
+
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        if tokens > self.seen.len() {
+            return None;
+        }
+        Some(Box::new(EchoBackend { seen: self.seen[..tokens].to_vec(), vocab: self.vocab }))
+    }
+}
+
+/// Drain every pending event from `handles` into per-request streams,
+/// returning the Done completions encountered.
+fn drain(
+    handles: &mut [RequestHandle],
+    starts: &mut [usize],
+    streams: &mut [Vec<u32>],
+) -> Vec<Completion> {
+    let mut done = Vec::new();
+    for (i, h) in handles.iter_mut().enumerate() {
+        while let Some(ev) = h.try_next() {
+            match ev {
+                Event::Started => starts[i] += 1,
+                Event::Token { pos, tok } => {
+                    assert_eq!(pos, streams[i].len(), "req {i}: non-contiguous token pos");
+                    streams[i].push(tok);
+                }
+                Event::Done(c) => done.push(c),
+                Event::Failed(f) => panic!("req {i} failed: {f:?}"),
+            }
+        }
+    }
+    done
+}
+
+/// Streamed-token identity under forced preemption + prefix-cache
+/// resume: 8 requests on an 8-block pool (two concurrent decoders need
+/// 10+), half sharing a 32-token prefix.
+#[test]
+fn streamed_tokens_equal_completion_across_preemption_and_resume() {
+    let mut rng = Rng::new(42);
+    let shared: Vec<u32> = (0..32).map(|_| rng.below(32) as u32).collect();
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 8,
+        max_running: 8,
+        token_budget: 128,
+        prefill_chunk: 32,
+        queue_cap: 64,
+        workers: 1,
+        enable_prefix_cache: true,
+        prefix_cache_blocks: 4,
+        ..ServeConfig::default()
+    };
+    let mut e = Engine::new(
+        cfg,
+        Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+    );
+    let reqs: Vec<Request> = (0..8u64)
+        .map(|id| {
+            let len = 48 + 16 * rng.below(2);
+            let mut prompt = if id % 2 == 0 { shared.clone() } else { Vec::new() };
+            while prompt.len() < len {
+                prompt.push(rng.below(32) as u32);
+            }
+            Request::new(prompt).max_new(20)
+        })
+        .collect();
+    let mut handles = Vec::new();
+    let mut starts = vec![0usize; reqs.len()];
+    let mut streams: Vec<Vec<u32>> = vec![Vec::new(); reqs.len()];
+    let mut completions = Vec::new();
+    let mut guard = 0;
+    // serve the first request alone so its shared prefix is registered
+    // (and still cached) before the followers contend for it — the
+    // followers then interleave prefix resume with forced preemption
+    handles.push(e.submit(reqs[0].clone()).expect("admission"));
+    while !e.idle() {
+        let n = e.tick();
+        guard = if n == 0 { guard + 1 } else { 0 };
+        assert!(guard < 1000, "livelock");
+        completions.extend(drain(&mut handles, &mut starts, &mut streams));
+    }
+    for r in &reqs[1..] {
+        handles.push(e.submit(r.clone()).expect("admission"));
+    }
+    while !e.idle() {
+        let n = e.tick();
+        guard = if n == 0 { guard + 1 } else { 0 };
+        assert!(guard < 1000, "livelock");
+        completions.extend(drain(&mut handles, &mut starts, &mut streams));
+    }
+    assert_eq!(completions.len(), 8);
+    assert!(e.metrics.preemptions > 0, "scenario must actually preempt");
+    assert!(e.metrics.prefix_hits > 0, "shared prefixes must actually resume");
+    for c in &completions {
+        let i = c.id as usize;
+        assert_eq!(c.tokens.len(), 20);
+        assert_eq!(
+            streams[i], c.tokens,
+            "req {i}: streamed tokens diverge from the completion"
+        );
+        assert_eq!(starts[i], 1, "req {i}: exactly one Started, even across preemption");
+        assert!(c.ttft_ms.is_some() && c.total_ms.is_some());
+    }
+    e.sched.blocks.check_invariants().unwrap();
+    assert_eq!(e.sched.blocks.used(), 0);
+}
+
+/// Cancellation at random phases: every cancelled request reports
+/// `Failed(Cancelled)` with its partial tokens; survivors complete; the
+/// pool ends clean and the snapshot store holds no orphans.
+#[test]
+fn cancellation_at_random_phases_keeps_the_pool_clean() {
+    check("cancel hygiene", 12, |rng| {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 12 + rng.below(32),
+            max_running: 1 + rng.below(5),
+            token_budget: 32 + rng.below(128),
+            prefill_chunk: 8 + rng.below(48),
+            queue_cap: 64,
+            workers: 1,
+            enable_prefix_cache: true,
+            prefix_cache_blocks: 4 + rng.below(16),
+            ..ServeConfig::default()
+        };
+        let mut e = Engine::new(
+            cfg,
+            Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+        );
+        let shared: Vec<u32> = (0..32).map(|_| rng.below(32) as u32).collect();
+        let n = 6;
+        let mut handles = Vec::new();
+        let mut cancel_at: Vec<Option<usize>> = Vec::new();
+        for i in 0..n {
+            let mut prompt = if i % 2 == 0 { shared.clone() } else { Vec::new() };
+            let len = 17 + rng.below(64);
+            while prompt.len() < len {
+                prompt.push(rng.below(32) as u32);
+            }
+            handles.push(
+                e.submit(Request::new(prompt).max_new(1 + rng.below(16)))
+                    .map_err(|err| format!("admission: {err}"))?,
+            );
+            // phases: tick 0 = still waiting, later = mid-prefill/decode
+            cancel_at.push(if rng.below(2) == 0 { Some(rng.below(12)) } else { None });
+        }
+        let mut tick = 0usize;
+        let mut guard = 0usize;
+        while !e.idle() {
+            for (i, at) in cancel_at.iter().enumerate() {
+                if *at == Some(tick) {
+                    handles[i].cancel();
+                }
+            }
+            let did = e.tick();
+            e.sched
+                .blocks
+                .check_invariants()
+                .map_err(|err| format!("tick {tick}: {err}"))?;
+            guard = if did == 0 { guard + 1 } else { 0 };
+            prop_assert!(guard < 1000, "livelock with cancellations");
+            tick += 1;
+        }
+        let mut done = 0;
+        let mut failed = 0;
+        for h in &mut handles {
+            let mut streamed = Vec::new();
+            loop {
+                match h.try_next() {
+                    Some(Event::Token { tok, .. }) => streamed.push(tok),
+                    Some(Event::Done(c)) => {
+                        done += 1;
+                        prop_assert!(c.tokens == streamed, "done diverges from stream");
+                        break;
+                    }
+                    Some(Event::Failed(FailReason::Cancelled(p))) => {
+                        failed += 1;
+                        prop_assert!(p.tokens == streamed, "partial diverges from stream");
+                        prop_assert!(
+                            p.ttft_ms.is_some() == !p.tokens.is_empty(),
+                            "ttft must be Some iff a token was emitted"
+                        );
+                        break;
+                    }
+                    Some(Event::Failed(f)) => return Err(format!("unexpected failure {f:?}")),
+                    Some(_) => {}
+                    None => return Err("handle ended without a terminal event".into()),
+                }
+            }
+        }
+        prop_assert!(done + failed == n, "terminal events lost: {done} + {failed} != {n}");
+        prop_assert!(failed as u64 == e.metrics.cancelled, "cancelled metric drifted");
+        prop_assert!(
+            e.sched.blocks.used() == 0,
+            "{} blocks leaked after drain",
+            e.sched.blocks.used()
+        );
+        e.tick(); // drain pending invalidations, then audit the snapshots
+        e.check_snapshot_invariants()?;
+        Ok(())
+    });
+}
+
+fn random_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        n_layers: 4,
+        d_model: 32,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        d_ff: 64,
+        vocab: 64,
+        rope_theta: 10000.0,
+        rope: true,
+    };
+    let mut w = Weights::zeros(&cfg);
+    let mut r = Rng::new(seed);
+    r.fill_normal(&mut w.w_e, 0.3);
+    for lw in &mut w.layers {
+        r.fill_normal(&mut lw.wq, 0.18);
+        r.fill_normal(&mut lw.wk, 0.18);
+        r.fill_normal(&mut lw.wv, 0.18);
+        r.fill_normal(&mut lw.wo, 0.18);
+        r.fill_normal(&mut lw.w1, 0.18);
+        r.fill_normal(&mut lw.w3, 0.18);
+        r.fill_normal(&mut lw.w2, 0.12);
+    }
+    r.fill_normal(&mut w.w_u, 0.18);
+    Model::new(cfg, w)
+}
+
+/// Seeded sampling is an engine-level contract: the step-batched and
+/// sequential decode paths see bitwise-equal logits, and the sampler is
+/// keyed by `(seed, position)` — so full token streams must agree.
+#[test]
+fn seeded_sampling_identical_across_batched_and_sequential() {
+    let model = Arc::new(random_model(0x5EED));
+    let run = |batched: bool| -> Vec<Completion> {
+        let cfg = ServeConfig {
+            block_size: 8,
+            num_blocks: 256,
+            max_running: 6,
+            token_budget: 128,
+            prefill_chunk: 32,
+            queue_cap: 16,
+            workers: 1,
+            batched_decode: batched,
+            ..ServeConfig::default()
+        };
+        let model = model.clone();
+        let mut e = Engine::new(
+            cfg,
+            Box::new(move |_req: &Request| {
+                Box::new(NativeBackend::new(
+                    model.clone(),
+                    128,
+                    Box::new(kascade::sparse::DensePolicy),
+                )) as Box<dyn SeqBackend>
+            }),
+        );
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let prompt: Vec<u32> = (0..16 + i).map(|j| ((j * 11 + i) % 64) as u32).collect();
+            handles.push(
+                e.submit(
+                    Request::new(prompt).max_new(12).sampling(
+                        SamplingParams::seeded(1000 + i).temperature(1.3).top_k(16).top_p(0.95),
+                    ),
+                )
+                .expect("admission"),
+            );
+        }
+        let mut done = e.run_to_completion(&mut handles);
+        done.sort_by_key(|c| c.id);
+        done
+    };
+    let seq = run(false);
+    let bat = run(true);
+    assert_eq!(seq.len(), 6);
+    for (a, b) in seq.iter().zip(&bat) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {}: seeded streams diverged under batching", a.id);
+    }
+    // and the same seed replays across an independent engine run
+    assert_eq!(run(true)[0].tokens, bat[0].tokens);
+}
+
+/// Seeded sampling across recompute preemption: a tight pool forces
+/// preemption mid-decode; the replayed sequence must emit the same
+/// stream an unpressured run does (the sampler is position-keyed, so
+/// folded tokens are not re-drawn).
+#[test]
+fn seeded_sampling_survives_preemption() {
+    let run = |num_blocks: usize| -> (Vec<Completion>, u64) {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks,
+            max_running: 8,
+            token_budget: 128,
+            prefill_chunk: 32,
+            queue_cap: 64,
+            workers: 1,
+            ..ServeConfig::default()
+        };
+        let mut e = Engine::new(
+            cfg,
+            Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+        );
+        let mut rng = Rng::new(7);
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let prompt: Vec<u32> = (0..48).map(|_| rng.below(32) as u32).collect();
+            handles.push(
+                e.submit(
+                    Request::new(prompt)
+                        .max_new(20)
+                        .sampling(SamplingParams::seeded(i).temperature(2.0)),
+                )
+                .expect("admission"),
+            );
+        }
+        let mut done = e.run_to_completion(&mut handles);
+        done.sort_by_key(|c| c.id);
+        e.sched.blocks.check_invariants().unwrap();
+        (done, e.metrics.preemptions)
+    };
+    let (roomy, p0) = run(256);
+    let (tight, p1) = run(8);
+    assert_eq!(p0, 0, "roomy run must be unpressured");
+    assert!(p1 > 0, "tight run must actually preempt");
+    assert_eq!(roomy.len(), 6);
+    for (a, b) in roomy.iter().zip(&tight) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "req {}: seeded stream changed under preemption",
+            a.id
+        );
+    }
+}
+
+/// Priority jumps the admission queue: with one running slot, a
+/// high-priority request submitted second still starts (and finishes)
+/// first.
+#[test]
+fn priority_request_starts_first() {
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 64,
+        max_running: 1,
+        token_budget: 64,
+        prefill_chunk: 64,
+        queue_cap: 8,
+        workers: 1,
+        ..ServeConfig::default()
+    };
+    let mut e = Engine::new(
+        cfg,
+        Box::new(|_req: &Request| Box::new(EchoBackend::new(32)) as Box<dyn SeqBackend>),
+    );
+    let mut low = e.submit(Request::new(vec![1; 32]).max_new(2)).unwrap();
+    let mut high = e
+        .submit(Request::new(vec![2; 32]).max_new(2).priority(10))
+        .unwrap();
+    e.tick();
+    assert!(
+        matches!(high.try_next(), Some(Event::Started)),
+        "high priority must be admitted on the first tick"
+    );
+    assert!(
+        !matches!(low.try_next(), Some(Event::Started)),
+        "the single running slot belongs to the high-priority request"
+    );
+    let mut handles = [low, high];
+    let done = e.run_to_completion(&mut handles);
+    assert_eq!(done.len(), 2, "both eventually complete");
+}
+
+fn echo_factory() -> BackendFactory {
+    Box::new(|_req| Box::new(EchoBackend::new(32)))
+}
+
+/// The Server streams the same events across threads: tokens arrive
+/// while the request runs, cancel() tears a live session down, and the
+/// partial completion matches what was streamed.
+#[test]
+fn server_streams_tokens_and_cancels_mid_flight() {
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 256,
+        max_running: 4,
+        token_budget: 64,
+        prefill_chunk: 32,
+        queue_cap: 32,
+        workers: 1,
+        ..ServeConfig::default()
+    };
+    let mut srv = Server::start(cfg, vec![echo_factory(), echo_factory()]);
+    // a finite request, streamed to completion
+    let mut h = srv
+        .submit(Request::new(vec![3; 40]).max_new(8), Some(1))
+        .unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        match h.next_timeout(Duration::from_secs(30)) {
+            Some(Event::Token { tok, .. }) => streamed.push(tok),
+            Some(Event::Done(c)) => break c,
+            Some(Event::Failed(f)) => panic!("unexpected failure: {f:?}"),
+            Some(_) => {}
+            None => panic!("timed out waiting for events"),
+        }
+    };
+    assert_eq!(done.tokens.len(), 8);
+    assert_eq!(done.tokens, streamed, "server-streamed tokens reassemble the completion");
+    // an effectively-unbounded request, cancelled mid-stream
+    let mut h = srv
+        .submit(Request::new(vec![4; 40]).max_new(1_000_000), Some(2))
+        .unwrap();
+    // wait until it demonstrably streams, then cancel
+    let first = h.next_timeout(Duration::from_secs(30));
+    assert!(first.is_some(), "request never started streaming");
+    h.cancel();
+    match h.wait(Duration::from_secs(30)) {
+        Err(FailReason::Cancelled(partial)) => {
+            assert!(partial.total_ms.is_some());
+        }
+        other => panic!("expected Cancelled, got {other:?}"),
+    }
+    let metrics = srv.shutdown();
+    let cancelled: u64 = metrics.iter().map(|m| m.cancelled).sum();
+    assert_eq!(cancelled, 1);
+}
