@@ -446,6 +446,77 @@ fn main() {
         "  cancel: {blocks_held} blocks reclaimed in {cancel_reclaim_us:.0}us (one tick)"
     );
 
+    // parallel tick: the same step-batched scenario sharded over the
+    // engine's worker pool (ServeConfig::num_threads), on a heavier model
+    // so attention dominates scheduling.  Output streams must be BITWISE
+    // identical to the single-threaded engine; the tokens/s ratio is
+    // recorded for the perf trajectory (and gated not to collapse).
+    let mut pspec = SynthSpec::eval_base(0xFA57);
+    pspec.cfg.n_layers = 6;
+    pspec.block_starts = vec![1, 3];
+    let pmodel = Arc::new(pspec.build());
+    let mut pgen = WorkloadGen::new(&pspec, 0xFA58);
+    let pprompts: Vec<Vec<u32>> = (0..8).map(|_| pgen.dev_prompt(384)).collect();
+    let mk_pplan = || KascadePlan::from_anchors(6, 4, vec![0, 3], TopKRule::new(0.25, 16));
+    let parallel_run = |threads: usize| -> (Vec<Completion>, f64) {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 4096,
+            max_running: 8,
+            token_budget: 1024,
+            prefill_chunk: 128,
+            queue_cap: 64,
+            workers: 1,
+            num_threads: threads,
+            ..ServeConfig::default()
+        };
+        let model = pmodel.clone();
+        let mut engine = Engine::new(
+            cfg,
+            Box::new(move |_req: &Request| {
+                Box::new(NativeBackend::new(
+                    model.clone(),
+                    512,
+                    Box::new(KascadePolicy::new(mk_pplan())),
+                )) as Box<dyn SeqBackend>
+            }),
+        );
+        let mut handles = Vec::new();
+        for p in pprompts.iter() {
+            handles.push(engine.submit(Request::new(p.clone()).max_new(32)).expect("admission"));
+        }
+        let mut done = engine.run_to_completion(&mut handles);
+        done.sort_by_key(|c| c.id);
+        (done, engine.metrics.decode_tok_s())
+    };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let par_threads = cores.clamp(2, 4);
+    let (one_done, one_tok_s) = parallel_run(1);
+    let (par_done, par_tok_s) = parallel_run(par_threads);
+    for (a, b) in one_done.iter().zip(&par_done) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "parallel tick must be bitwise-equivalent to single-threaded (req {})",
+            a.id
+        );
+    }
+    let par_ratio = par_tok_s / one_tok_s.max(1e-9);
+    println!(
+        "\nparallel tick (8 Kascade decoders x 32 tok, 6-layer SynthLM, \
+         {par_threads} threads on {cores} cores):"
+    );
+    println!(
+        "  1-thread {one_tok_s:.1} tok/s  {par_threads}-thread {par_tok_s:.1} tok/s  \
+         ratio {par_ratio:.2}x  outputs identical"
+    );
+    if cores >= 2 {
+        assert!(
+            par_ratio >= 0.5,
+            "parallel tick collapsed to {par_ratio:.2}x of single-threaded decode tok/s"
+        );
+    }
+
     // machine-readable record (ratio + prefix-cache savings)
     std::fs::create_dir_all("results").expect("results dir");
     let record = Json::obj(vec![
@@ -495,10 +566,30 @@ fn main() {
                 ("reclaim_within_one_tick", Json::num(reclaim_within_one_tick)),
             ]),
         ),
+        (
+            "parallel_tick",
+            Json::obj(vec![
+                ("batch", Json::num(8.0)),
+                ("max_new", Json::num(32.0)),
+                ("n_layers", Json::num(6.0)),
+                ("threads", Json::num(par_threads as f64)),
+                ("host_cores", Json::num(cores as f64)),
+                ("decode_tok_s_single", Json::num(one_tok_s)),
+                ("decode_tok_s_parallel", Json::num(par_tok_s)),
+                ("ratio_vs_single_thread", Json::num(par_ratio)),
+                ("outputs_identical", Json::num(1.0)),
+            ]),
+        ),
     ]);
     std::fs::write("results/coordinator_bench.json", record.to_string())
         .expect("write bench json");
     println!("  wrote results/coordinator_bench.json");
+    // repo-root perf-trajectory artifact for this PR (schema shared with
+    // benchutil::trajectory / the CI gate) — the bench runs with the
+    // package root (rust/) as cwd, so the repo root is one level up
+    std::fs::write("../BENCH_5.json", kascade::benchutil::trajectory(5, record).to_string())
+        .expect("write trajectory json");
+    println!("  wrote ../BENCH_5.json (perf trajectory, PR 5)");
 
     let _ = Sequence::new(Request::new(vec![]), Session::detached(), Box::new(NullBackend));
 }

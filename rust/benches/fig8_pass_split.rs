@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench fig8_pass_split`
 
-use kascade::attention::{self, CostTracker, KvCache};
+use kascade::attention::{self, AttnScratch, CostTracker, KvCache};
 use kascade::benchutil::bench;
 use kascade::config::TopKRule;
 use kascade::tensor::Rng;
@@ -26,6 +26,7 @@ fn main() {
         }
     }
     let samples = if full { 3 } else { 10 };
+    let mut scratch = AttnScratch::new();
 
     println!("# Fig 8 — anchor pass split at ctx {len}, k {k}\n");
     println!("## decode");
@@ -36,15 +37,16 @@ fn main() {
     // pass 1+2 are fused in the native engine (scores+softmax+pool);
     // measure pooled-scores, top-k, sparse-attend separately.
     let p12 = bench("decode pass1+2 (scores+pool)", 1, samples, || {
-        let _ = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
+        attention::decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut cost);
     });
-    let pooled = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
+    attention::decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut cost);
     let p3 = bench("decode pass3 (top-k)", 1, samples, || {
-        let _ = attention::select_topk(&pooled, k, &mut cost);
+        attention::select_topk(&mut scratch, k, &mut cost);
     });
-    let idx = attention::select_topk(&pooled, k, &mut cost);
+    attention::select_topk(&mut scratch, k, &mut cost);
     let p4 = bench("decode pass4 (sparse attend)", 1, samples, || {
-        attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+        let AttnScratch { sel, planes } = &mut scratch;
+        attention::decode_sparse(&q, &cache, g, sel, &mut out, planes, &mut cost);
     });
     let total = p12.mean_us + p3.mean_us + p4.mean_us;
     println!(
@@ -62,15 +64,16 @@ fn main() {
     rng.fill_normal(&mut qs, 1.0);
     let mut pout = vec![0.0f32; tile * n_kv * g * d];
     let p12 = bench("prefill pass1+2 (stats+pool)", 1, samples, || {
-        let _ = attention::prefill_pooled_scores(&qs, start, &cache, g, &mut cost);
+        attention::prefill_pooled_scores(&qs, start, &cache, g, &mut scratch.planes, &mut cost);
     });
-    let pooled = attention::prefill_pooled_scores(&qs, start, &cache, g, &mut cost);
+    attention::prefill_pooled_scores(&qs, start, &cache, g, &mut scratch.planes, &mut cost);
     let p3 = bench("prefill pass3 (top-k)", 1, samples, || {
-        let _ = attention::select_topk(&pooled, k, &mut cost);
+        attention::select_topk(&mut scratch, k, &mut cost);
     });
-    let idx = attention::select_topk(&pooled, k, &mut cost);
+    attention::select_topk(&mut scratch, k, &mut cost);
     let p4 = bench("prefill pass4 (sparse attend)", 1, samples, || {
-        attention::prefill_sparse_tile(&qs, start, &cache, g, &idx, &mut pout, &mut cost);
+        let AttnScratch { sel, planes } = &mut scratch;
+        attention::prefill_sparse_tile(&qs, start, &cache, g, sel, &mut pout, planes, &mut cost);
     });
     let total = p12.mean_us + p3.mean_us + p4.mean_us;
     println!(

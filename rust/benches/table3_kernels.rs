@@ -1,18 +1,20 @@
 //! Table 3 bench: decode + prefill attention time, dense vs the Kascade
 //! layer mix, across context lengths and Top-k fractions.  Also reports
 //! the paper-config weighting (32 layers / 5 anchors) alongside this
-//! model's 16/5.
+//! model's 16/5 — and, since the tile-major rework, the kernel-level
+//! speedup of the tile-major/arena kernels over the retained seed
+//! row-at-a-time kernels (`attention::reference`), per storage mode.
 //!
 //! Run: `cargo bench --bench table3_kernels` (KASCADE_BENCH_FULL=1 for the
 //! full context sweep)
 
-use kascade::attention::{self, CostTracker, KvCache};
+use kascade::attention::{self, reference, AttnScratch, CostTracker, IndexSet, KvCache};
 use kascade::benchutil::bench;
-use kascade::config::TopKRule;
+use kascade::config::{KvDtype, TopKRule};
 use kascade::tensor::Rng;
 
-fn fill_cache(n_kv: usize, d: usize, len: usize, rng: &mut Rng) -> KvCache {
-    let mut cache = KvCache::new(n_kv, d, len);
+fn fill_cache(n_kv: usize, d: usize, len: usize, dtype: KvDtype, rng: &mut Rng) -> KvCache {
+    let mut cache = KvCache::with_opts(n_kv, d, len, 16, dtype);
     let mut k = vec![0.0f32; n_kv * d];
     let mut v = vec![0.0f32; n_kv * d];
     for _ in 0..len {
@@ -33,8 +35,9 @@ fn main() {
     println!("# Table 3 kernel bench (decode attention, per step)\n");
     println!("| ctx | k% | dense us | anchor us | reuse us | speedup L16/A5 | speedup L32/A5 |");
     println!("|---|---|---|---|---|---|---|");
+    let mut scratch = AttnScratch::new();
     for &len in ctxs {
-        let cache = fill_cache(n_kv, d, len, &mut rng);
+        let cache = fill_cache(n_kv, d, len, KvDtype::F32, &mut rng);
         let mut q = vec![0.0f32; n_kv * g * d];
         rng.fill_normal(&mut q, 1.0);
         let mut out = vec![0.0f32; n_kv * g * d];
@@ -42,20 +45,24 @@ fn main() {
 
         let mut cost = CostTracker::default();
         let dense = bench(&format!("dense ctx={len}"), 1, samples, || {
-            attention::decode_dense(&q, &cache, g, &mut out, &mut cost);
+            attention::decode_dense(&q, &cache, g, &mut out, &mut scratch.planes, &mut cost);
         });
         for &f in fracs {
             let k = TopKRule::new(f, 128).k(len);
             let anchor = bench(&format!("anchor ctx={len} k={k}"), 1, samples, || {
-                let pooled = attention::decode_pooled_scores(&q, &cache, g, &mut cost);
-                let idx = attention::select_topk(&pooled, k, &mut cost);
-                attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+                attention::decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut cost);
+                attention::select_topk(&mut scratch, k, &mut cost);
+                let AttnScratch { sel, planes } = &mut scratch;
+                attention::decode_sparse(&q, &cache, g, sel, &mut out, planes, &mut cost);
             });
-            let idx: Vec<Vec<u32>> = (0..n_kv)
-                .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % len as u32).collect())
-                .collect();
+            let fixed = IndexSet::from_nested(
+                &(0..n_kv)
+                    .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % len as u32).collect())
+                    .collect::<Vec<Vec<u32>>>(),
+            );
             let reuse = bench(&format!("reuse ctx={len} k={k}"), 1, samples, || {
-                attention::decode_sparse(&q, &cache, g, &idx, &mut out, &mut cost);
+                let planes = &mut scratch.planes;
+                attention::decode_sparse(&q, &cache, g, &fixed, &mut out, planes, &mut cost);
             });
             let mix = |l: f64, a: f64| -> f64 {
                 let anchor0 = dense.mean_us + (anchor.mean_us - reuse.mean_us);
@@ -70,6 +77,65 @@ fn main() {
                 dense.mean_us / mix(16.0, 5.0),
                 dense.mean_us / mix(32.0, 5.0),
             );
+        }
+    }
+
+    // ---- tile-major vs seed row-at-a-time kernels -----------------------
+    // The perf claim of the tile-major rework, measured at kernel level:
+    // same inputs, same outputs (bitwise — unit-tested), storage-mode
+    // dispatch and tile params hoisted out of the inner loops.
+    let tm_ctxs: &[usize] = if full { &[8192, 32768, 131072] } else { &[8192, 32768] };
+    println!("\n# Tile-major vs seed (row-at-a-time) kernels\n");
+    println!("| ctx | dtype | op | seed us | tile us | speedup |");
+    println!("|---|---|---|---|---|---|");
+    for &len in tm_ctxs {
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let cache = fill_cache(n_kv, d, len, dtype, &mut rng);
+            let mut q = vec![0.0f32; n_kv * g * d];
+            rng.fill_normal(&mut q, 1.0);
+            let mut out = vec![0.0f32; n_kv * g * d];
+            let samples = (4_000_000 / len).clamp(3, 30);
+            let mut cost = CostTracker::default();
+            let k = TopKRule::new(0.10, 128).k(len);
+            let idx_nested: Vec<Vec<u32>> = (0..n_kv)
+                .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % len as u32).collect())
+                .collect();
+            let sel = IndexSet::from_nested(&idx_nested);
+
+            let seed_dense = bench(&format!("seed dense {}/{len}", dtype.label()), 1, samples, || {
+                reference::decode_dense(&q, &cache, g, &mut out, &mut cost);
+            });
+            let tile_dense = bench(&format!("tile dense {}/{len}", dtype.label()), 1, samples, || {
+                attention::decode_dense(&q, &cache, g, &mut out, &mut scratch.planes, &mut cost);
+            });
+            let seed_pool = bench(&format!("seed pooled {}/{len}", dtype.label()), 1, samples, || {
+                let _ = reference::decode_pooled_scores(&q, &cache, g, &mut cost);
+            });
+            let tile_pool = bench(&format!("tile pooled {}/{len}", dtype.label()), 1, samples, || {
+                attention::decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut cost);
+            });
+            let name = format!("seed sparse {}/{len}", dtype.label());
+            let seed_sparse = bench(&name, 1, samples, || {
+                reference::decode_sparse(&q, &cache, g, &idx_nested, &mut out, &mut cost);
+            });
+            let name = format!("tile sparse {}/{len}", dtype.label());
+            let tile_sparse = bench(&name, 1, samples, || {
+                let planes = &mut scratch.planes;
+                attention::decode_sparse(&q, &cache, g, &sel, &mut out, planes, &mut cost);
+            });
+            for (op, s, t) in [
+                ("dense", &seed_dense, &tile_dense),
+                ("pooled", &seed_pool, &tile_pool),
+                ("sparse", &seed_sparse, &tile_sparse),
+            ] {
+                println!(
+                    "| {len} | {} | {op} | {:.0} | {:.0} | {:.2}x |",
+                    dtype.label(),
+                    s.mean_us,
+                    t.mean_us,
+                    s.mean_us / t.mean_us.max(1e-9)
+                );
+            }
         }
     }
 }

@@ -10,7 +10,8 @@
 
 use crate::config::KvDtype;
 use crate::tensor::{
-    axpy_q8, dequantize_q8, dot, qk_dot_q8, quantize_q8, softmax, topk_indices_unordered,
+    axpy_q8, dequantize_q8, dot, dot_i8, qk_dot_q8, quantize_q8, softmax, sum4,
+    topk_unordered_into,
 };
 
 /// Per-layer KV cache: contiguous `[n_kv, cap, d]` storage plus per-page
@@ -273,6 +274,145 @@ impl KvCache {
         Some((&self.kq[o..o + self.d], self.kscale[h * nt + tile], self.kzero[h * nt + tile]))
     }
 
+    /// Score one KV tile for head `h`: writes `dot(q, key(h, p)) * scale`
+    /// for every position `p` of the tile below `upto` into `out[..n]`,
+    /// returning `n` (0 when the tile is empty under the clamp).
+    ///
+    /// This is the tile-major scoring primitive: the dtype dispatch, the
+    /// tile's quantization `(scale, zero)` pair, the base offset, and the
+    /// query's element sum (the int8 zero-point term) are all resolved
+    /// ONCE per call, and the inner loop runs over contiguous rows.
+    /// Results are bitwise-identical to calling [`KvCache::dot_key`] per
+    /// position and scaling (see `attention::reference`).
+    pub fn score_tile(
+        &self,
+        h: usize,
+        tile: usize,
+        upto: usize,
+        q: &[f32],
+        scale: f32,
+        out: &mut [f32],
+    ) -> usize {
+        let ps = self.page_size;
+        let d = self.d;
+        let t0 = tile * ps;
+        let hi = upto.min(self.len);
+        if t0 >= hi {
+            return 0;
+        }
+        let n = (hi - t0).min(ps);
+        match self.dtype {
+            KvDtype::F32 => {
+                let base = (h * self.cap + t0) * d;
+                let rows = &self.k[base..base + n * d];
+                for (j, o) in out[..n].iter_mut().enumerate() {
+                    *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+                }
+            }
+            KvDtype::Int8 => {
+                if t0 >= self.staged_from() {
+                    // the (single) f32 staging tail tile
+                    let base = h * ps * d;
+                    let rows = &self.k[base..base + n * d];
+                    for (j, o) in out[..n].iter_mut().enumerate() {
+                        *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+                    }
+                } else {
+                    let nt = self.cap.div_ceil(ps);
+                    let ks = self.kscale[h * nt + tile];
+                    let kz = self.kzero[h * nt + tile];
+                    let q_sum = sum4(q);
+                    let base = (h * self.cap + t0) * d;
+                    let rows = &self.kq[base..base + n * d];
+                    for (j, o) in out[..n].iter_mut().enumerate() {
+                        *o = (ks * dot_i8(q, &rows[j * d..(j + 1) * d]) + kz * q_sum) * scale;
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// Weighted-value accumulation over one KV tile for head `h`:
+    /// `out += w[j] * val(h, t0 + j)` for every tile position below
+    /// `upto` whose weight exceeds the shared `1e-9` skip threshold.
+    /// Returns the tile's position count `n` (reads `w[..n]`).  Per-tile
+    /// dequantization params resolved once; row accumulation matches
+    /// [`KvCache::add_val`] bitwise.
+    pub fn attend_tile(
+        &self,
+        h: usize,
+        tile: usize,
+        upto: usize,
+        w: &[f32],
+        out: &mut [f32],
+    ) -> usize {
+        let ps = self.page_size;
+        let d = self.d;
+        let t0 = tile * ps;
+        let hi = upto.min(self.len);
+        if t0 >= hi {
+            return 0;
+        }
+        let n = (hi - t0).min(ps);
+        match self.dtype {
+            KvDtype::F32 => {
+                let base = (h * self.cap + t0) * d;
+                let rows = &self.v[base..base + n * d];
+                for (j, &wj) in w[..n].iter().enumerate() {
+                    if wj > 1e-9 {
+                        crate::tensor::axpy(out, wj, &rows[j * d..(j + 1) * d]);
+                    }
+                }
+            }
+            KvDtype::Int8 => {
+                if t0 >= self.staged_from() {
+                    let base = h * ps * d;
+                    let rows = &self.v[base..base + n * d];
+                    for (j, &wj) in w[..n].iter().enumerate() {
+                        if wj > 1e-9 {
+                            crate::tensor::axpy(out, wj, &rows[j * d..(j + 1) * d]);
+                        }
+                    }
+                } else {
+                    let nt = self.cap.div_ceil(ps);
+                    let vs = self.vscale[h * nt + tile];
+                    let vz = self.vzero[h * nt + tile];
+                    let base = (h * self.cap + t0) * d;
+                    let rows = &self.vq[base..base + n * d];
+                    for (j, &wj) in w[..n].iter().enumerate() {
+                        if wj > 1e-9 {
+                            axpy_q8(out, wj, &rows[j * d..(j + 1) * d], vs, vz);
+                        }
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// [`KvCache::dot_key`] with the query's element sum precomputed (the
+    /// int8 zero-point term, hoistable per query row).  Bitwise-equal to
+    /// `dot_key` when `q_sum == tensor::sum4(q)` — the sparse kernels use
+    /// this to amortize the sum over arbitrary (non-tile-run) index sets.
+    #[inline]
+    pub fn dot_key_with_sum(&self, h: usize, pos: usize, q: &[f32], q_sum: f32) -> f32 {
+        match self.dtype {
+            KvDtype::F32 => dot(q, self.key(h, pos)),
+            KvDtype::Int8 => {
+                if pos >= self.staged_from() {
+                    dot(q, self.key(h, pos))
+                } else {
+                    let tile = pos / self.page_size;
+                    let nt = self.cap.div_ceil(self.page_size);
+                    let o = (h * self.cap + pos) * self.d;
+                    self.kscale[h * nt + tile] * dot_i8(q, &self.kq[o..o + self.d])
+                        + self.kzero[h * nt + tile] * q_sum
+                }
+            }
+        }
+    }
+
     /// (min, max) key summary of `page` for head `h`.
     pub fn page_summary(&self, h: usize, page: usize) -> (&[f32], &[f32]) {
         let pb = ((h * self.cap.div_ceil(self.page_size)) + page) * 2 * self.d;
@@ -372,6 +512,192 @@ impl CostTracker {
     }
 }
 
+// ---------------------------------------------------------------------------
+// scratch arena
+// ---------------------------------------------------------------------------
+
+/// Per-KV-head index sets in one flat buffer (`idx`) with head offsets
+/// (`offs`) — the allocation-free replacement for `Vec<Vec<u32>>`
+/// selections.  Build with [`IndexSet::push`] + [`IndexSet::close_head`]
+/// (or [`IndexSet::extend_head`]); buffers keep their capacity across
+/// [`IndexSet::clear`], so steady-state reuse never allocates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexSet {
+    idx: Vec<u32>,
+    /// head h spans `idx[offs[h]..offs[h+1]]`; `offs[0] == 0` always.
+    offs: Vec<u32>,
+}
+
+impl Default for IndexSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IndexSet {
+    pub fn new() -> Self {
+        Self { idx: Vec::new(), offs: vec![0] }
+    }
+
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.offs.truncate(1);
+    }
+
+    /// Append one position to the head currently being built.
+    #[inline]
+    pub fn push(&mut self, p: u32) {
+        self.idx.push(p);
+    }
+
+    /// Seal the head under construction (positions pushed since the last
+    /// close).
+    pub fn close_head(&mut self) {
+        self.offs.push(self.idx.len() as u32);
+    }
+
+    /// Append one whole head from a slice.
+    pub fn extend_head(&mut self, xs: &[u32]) {
+        self.idx.extend_from_slice(xs);
+        self.offs.push(self.idx.len() as u32);
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.offs.len() - 1
+    }
+
+    #[inline]
+    pub fn head(&self, h: usize) -> &[u32] {
+        &self.idx[self.offs[h] as usize..self.offs[h + 1] as usize]
+    }
+
+    /// Total positions across all heads.
+    pub fn total(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Overwrite with `o`'s contents, reusing this set's buffers.
+    pub fn copy_from(&mut self, o: &IndexSet) {
+        self.idx.clear();
+        self.idx.extend_from_slice(&o.idx);
+        self.offs.clear();
+        self.offs.extend_from_slice(&o.offs);
+    }
+
+    /// Pre-size for `n_heads` heads of up to `per_head` positions each
+    /// (the zero-allocation tests warm capacity through this).
+    pub fn reserve(&mut self, n_heads: usize, per_head: usize) {
+        self.idx.reserve(n_heads * per_head);
+        self.offs.reserve(n_heads + 1);
+    }
+
+    /// Convenience for tests/benches: build from nested per-head vecs.
+    pub fn from_nested(v: &[Vec<u32>]) -> Self {
+        let mut s = Self::new();
+        for h in v {
+            s.extend_head(h);
+        }
+        s
+    }
+
+    /// Convenience for tests: explode back into nested per-head vecs.
+    pub fn to_nested(&self) -> Vec<Vec<u32>> {
+        (0..self.n_heads()).map(|h| self.head(h).to_vec()).collect()
+    }
+}
+
+/// Reusable score/pooled planes and small staging buffers for the
+/// attention kernels.  Kernels resize-on-demand but never shrink, so the
+/// steady-state decode loop performs no heap allocations through these.
+#[derive(Debug, Clone, Default)]
+pub struct ScorePlanes {
+    /// flat `[n_q, len]` per-query-head score planes (also the single-row
+    /// staging buffer for kernels that score one row at a time)
+    pub scores: Vec<f32>,
+    /// flat `[pooled_heads, pooled_len]` pooled (per-KV-head) planes
+    pub pooled: Vec<f32>,
+    pooled_heads: usize,
+    pooled_len: usize,
+    /// quickselect partition staging ([`crate::tensor::topk_unordered_into`])
+    pairs: Vec<(f32, u32)>,
+    /// causally-kept index staging (prefill sparse tiles)
+    kept: Vec<u32>,
+    /// tile-own-coverage staging (prefill sparse tiles)
+    own: Vec<bool>,
+}
+
+impl ScorePlanes {
+    #[inline]
+    fn ensure_scores(&mut self, n: usize) {
+        if self.scores.len() < n {
+            self.scores.resize(n, 0.0);
+        }
+    }
+
+    #[inline]
+    fn ensure_pooled(&mut self, n: usize) {
+        if self.pooled.len() < n {
+            self.pooled.resize(n, 0.0);
+        }
+    }
+
+    /// Heads held by the most recent pooled-score kernel call.
+    pub fn pooled_heads(&self) -> usize {
+        self.pooled_heads
+    }
+
+    /// Plane length of the most recent pooled-score kernel call.
+    pub fn pooled_len(&self) -> usize {
+        self.pooled_len
+    }
+
+    /// Head `h`'s pooled distribution from the most recent pooled call.
+    pub fn pooled_head(&self, h: usize) -> &[f32] {
+        &self.pooled[h * self.pooled_len..(h + 1) * self.pooled_len]
+    }
+
+    /// Warm capacity for a model with `n_q`/`n_kv` heads and contexts up
+    /// to `len` (zero-allocation tests call this once before measuring).
+    pub fn reserve(&mut self, n_q: usize, n_kv: usize, len: usize) {
+        self.ensure_scores(n_q * len);
+        self.ensure_pooled(n_kv * len);
+        self.pairs.reserve(len);
+        self.kept.reserve(len);
+        if self.own.len() < len {
+            self.own.resize(len, false);
+        }
+    }
+}
+
+/// Per-sequence attention scratch arena: the current layer's sparse
+/// selection (`sel`, written by [`crate::sparse::SparsePolicy`]
+/// implementations) plus the kernel score planes.  Owned by
+/// [`crate::model::SeqState`] and threaded through the policy trait and
+/// the forward pass so the steady-state decode loop allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct AttnScratch {
+    pub sel: IndexSet,
+    pub planes: ScorePlanes,
+}
+
+impl AttnScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Warm every buffer to its steady-state capacity for a model with
+    /// `n_q`/`n_kv` heads, contexts up to `len`, Top-k up to `k` — the
+    /// zero-allocation tests call this once before measuring.
+    pub fn reserve(&mut self, n_q: usize, n_kv: usize, len: usize, k: usize) {
+        self.planes.reserve(n_q, n_kv, len);
+        self.sel.reserve(n_kv, k.max(1));
+    }
+}
+
 /// Scale for all scores: 1/sqrt(d).
 #[inline]
 fn scale(d: usize) -> f32 {
@@ -382,114 +708,216 @@ fn scale(d: usize) -> f32 {
 // decode attention
 // ---------------------------------------------------------------------------
 
-/// Dense GQA decode attention.  `q` is `[n_q * d]` head-major, `out` too.
-/// Attends to `cache.len` keys.
-pub fn decode_dense(q: &[f32], cache: &KvCache, g: usize, out: &mut [f32], cost: &mut CostTracker) {
-    let (d, len, n_kv) = (cache.d, cache.len, cache.n_kv);
+/// Dense decode attention for ONE KV head, clamped to the first `upto`
+/// positions: the group's `g` query rows (`q` is the full `[n_q * d]`
+/// row) attend over tiles via [`KvCache::score_tile`] /
+/// [`KvCache::attend_tile`], writing the head's `[g * d]` output rows
+/// into `out`.  This is the parallel engine's work-item granularity —
+/// each `(sequence, head)` item is self-contained (own softmax, own
+/// output rows), so sharding across workers is bitwise-order-free.
+pub fn decode_dense_head(
+    q: &[f32],
+    h: usize,
+    upto: usize,
+    cache: &KvCache,
+    g: usize,
+    out: &mut [f32],
+    planes: &mut ScorePlanes,
+    cost: &mut CostTracker,
+) {
+    let d = cache.d;
+    let len = upto.min(cache.len);
     let sc = scale(d);
-    let mut s = vec![0.0f32; len];
-    for h in 0..n_kv {
-        for qi in 0..g {
-            let hq = h * g + qi;
-            let qrow = &q[hq * d..(hq + 1) * d];
-            for p in 0..len {
-                s[p] = cache.dot_key(h, p, qrow) * sc;
-            }
-            softmax(&mut s);
-            let orow = &mut out[hq * d..(hq + 1) * d];
-            orow.fill(0.0);
-            for p in 0..len {
-                let w = s[p];
-                if w > 1e-9 {
-                    cache.add_val(h, p, w, orow);
-                }
-            }
+    planes.ensure_scores(len);
+    for qi in 0..g {
+        let hq = h * g + qi;
+        let qrow = &q[hq * d..(hq + 1) * d];
+        let s = &mut planes.scores;
+        let (mut t0, mut tile) = (0usize, 0usize);
+        while t0 < len {
+            t0 += cache.score_tile(h, tile, len, qrow, sc, &mut s[t0..]);
+            tile += 1;
+        }
+        softmax(&mut s[..len]);
+        let orow = &mut out[qi * d..(qi + 1) * d];
+        orow.fill(0.0);
+        let (mut t0, mut tile) = (0usize, 0usize);
+        while t0 < len {
+            t0 += cache.attend_tile(h, tile, len, &s[t0..len], orow);
+            tile += 1;
         }
     }
-    cost.score_key_reads += (n_kv * g * len) as u64;
-    cost.attend_kv_reads += (n_kv * g * len) as u64;
+    cost.score_key_reads += (g * len) as u64;
+    cost.attend_kv_reads += (g * len) as u64;
     if cache.is_quantized() {
-        cost.dequant_rows += (n_kv * g * len) as u64;
+        cost.dequant_rows += (g * len) as u64;
     }
 }
 
-/// Per-query-head post-softmax distributions for one decode query:
-/// `[n_q][len]`.
-pub fn decode_head_scores(q: &[f32], cache: &KvCache, g: usize, cost: &mut CostTracker) -> Vec<Vec<f32>> {
+/// Dense GQA decode attention.  `q` is `[n_q * d]` head-major, `out` too.
+/// Attends to `cache.len` keys.  Tile-major: per tile the storage mode
+/// and quantization params resolve once, then the inner loops run over
+/// contiguous rows — bitwise-equal to the seed row-at-a-time kernel
+/// ([`reference::decode_dense`]).
+pub fn decode_dense(
+    q: &[f32],
+    cache: &KvCache,
+    g: usize,
+    out: &mut [f32],
+    planes: &mut ScorePlanes,
+    cost: &mut CostTracker,
+) {
+    let gd = g * cache.d;
+    for h in 0..cache.n_kv {
+        decode_dense_head(q, h, cache.len, cache, g, &mut out[h * gd..(h + 1) * gd], planes, cost);
+    }
+}
+
+/// Per-query-head post-softmax distributions for one decode query,
+/// written as flat `[n_q, len]` planes into `planes.scores`.
+pub fn decode_head_scores(
+    q: &[f32],
+    cache: &KvCache,
+    g: usize,
+    planes: &mut ScorePlanes,
+    cost: &mut CostTracker,
+) {
     let (d, len, n_kv) = (cache.d, cache.len, cache.n_kv);
+    let n_q = n_kv * g;
     let sc = scale(d);
-    let mut all = Vec::with_capacity(n_kv * g);
+    planes.ensure_scores(n_q * len);
     for h in 0..n_kv {
         for qi in 0..g {
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
-            let mut s = vec![0.0f32; len];
-            for p in 0..len {
-                s[p] = cache.dot_key(h, p, qrow) * sc;
+            let s = &mut planes.scores[hq * len..(hq + 1) * len];
+            let (mut t0, mut tile) = (0usize, 0usize);
+            while t0 < len {
+                t0 += cache.score_tile(h, tile, len, qrow, sc, &mut s[t0..]);
+                tile += 1;
             }
-            softmax(&mut s);
-            all.push(s);
+            softmax(s);
         }
     }
     cost.score_key_reads += (n_kv * g * len) as u64;
-    all
+}
+
+/// Mean-pool the `[n_q, len]` head planes into `[n_kv, len]` pooled
+/// planes (groups of `g` consecutive rows), same accumulation order as
+/// the seed `pool_groups`.
+fn pool_groups_into(planes: &mut ScorePlanes, n_kv: usize, g: usize, len: usize) {
+    let inv = 1.0 / g as f32;
+    planes.ensure_pooled(n_kv * len);
+    let ScorePlanes { scores, pooled, pooled_heads, pooled_len, .. } = planes;
+    for h in 0..n_kv {
+        let prow = &mut pooled[h * len..(h + 1) * len];
+        prow.fill(0.0);
+        for qi in 0..g {
+            let srow = &scores[(h * g + qi) * len..(h * g + qi + 1) * len];
+            for (pi, &x) in prow.iter_mut().zip(srow.iter()) {
+                *pi += x * inv;
+            }
+        }
+    }
+    *pooled_heads = n_kv;
+    *pooled_len = len;
 }
 
 /// GQA post-softmax pooling (paper Sec. 3.4, decode): mean of the group's
-/// distributions, per KV head: `[n_kv][len]`.
-pub fn decode_pooled_scores(q: &[f32], cache: &KvCache, g: usize, cost: &mut CostTracker) -> Vec<Vec<f32>> {
-    let per_head = decode_head_scores(q, cache, g, cost);
-    pool_groups(&per_head, g)
+/// distributions per KV head, left in `planes` as `[n_kv, len]` pooled
+/// planes (read via [`ScorePlanes::pooled_head`], consumed by
+/// [`select_topk`]).
+pub fn decode_pooled_scores(
+    q: &[f32],
+    cache: &KvCache,
+    g: usize,
+    planes: &mut ScorePlanes,
+    cost: &mut CostTracker,
+) {
+    decode_head_scores(q, cache, g, planes, cost);
+    pool_groups_into(planes, cache.n_kv, g, cache.len);
 }
 
 /// Pooled scores clamped to the first `upto` cache entries (used for
-/// calibration probes at prefill positions).
+/// calibration probes at prefill positions).  Results land in `planes`
+/// as `[n_kv, len]` pooled planes.
 pub fn decode_pooled_scores_upto(
     q: &[f32],
     upto: usize,
     cache: &KvCache,
     g: usize,
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
-) -> Vec<Vec<f32>> {
+) {
     let (d, n_kv) = (cache.d, cache.n_kv);
     let len = upto.min(cache.len);
     let sc = scale(d);
     let inv = 1.0 / g as f32;
-    let mut pooled = vec![vec![0.0f32; len]; n_kv];
-    let mut s = vec![0.0f32; len];
+    planes.ensure_scores(len);
+    planes.ensure_pooled(n_kv * len);
+    let ScorePlanes { scores, pooled, pooled_heads, pooled_len, .. } = planes;
     for h in 0..n_kv {
+        let prow = &mut pooled[h * len..(h + 1) * len];
+        prow.fill(0.0);
         for qi in 0..g {
             let hq = h * g + qi;
             let qrow = &q[hq * d..(hq + 1) * d];
-            for p in 0..len {
-                s[p] = cache.dot_key(h, p, qrow) * sc;
+            let (mut t0, mut tile) = (0usize, 0usize);
+            while t0 < len {
+                t0 += cache.score_tile(h, tile, len, qrow, sc, &mut scores[t0..]);
+                tile += 1;
             }
-            softmax(&mut s);
-            for p in 0..len {
-                pooled[h][p] += s[p] * inv;
+            softmax(&mut scores[..len]);
+            for (pi, &x) in prow.iter_mut().zip(scores[..len].iter()) {
+                *pi += x * inv;
             }
         }
     }
+    *pooled_heads = n_kv;
+    *pooled_len = len;
     cost.score_key_reads += (n_kv * g * len) as u64;
-    pooled
 }
 
-/// Mean-pool groups of `g` consecutive distributions.
-pub fn pool_groups(per_head: &[Vec<f32>], g: usize) -> Vec<Vec<f32>> {
-    let n_kv = per_head.len() / g;
-    let len = per_head[0].len();
-    let inv = 1.0 / g as f32;
-    (0..n_kv)
-        .map(|h| {
-            let mut p = vec![0.0f32; len];
-            for qi in 0..g {
-                for (pi, &x) in p.iter_mut().zip(per_head[h * g + qi].iter()) {
-                    *pi += x * inv;
-                }
+/// Sparse decode attention for ONE KV head over an explicit index slice.
+/// Per-query element sums are hoisted ([`KvCache::dot_key_with_sum`]);
+/// index order is preserved so results stay bitwise-equal to the seed
+/// kernel.
+pub fn decode_sparse_head(
+    q: &[f32],
+    h: usize,
+    idx: &[u32],
+    cache: &KvCache,
+    g: usize,
+    out: &mut [f32],
+    planes: &mut ScorePlanes,
+    cost: &mut CostTracker,
+) {
+    let d = cache.d;
+    let sc = scale(d);
+    let m = idx.len();
+    planes.ensure_scores(m);
+    for qi in 0..g {
+        let hq = h * g + qi;
+        let qrow = &q[hq * d..(hq + 1) * d];
+        let q_sum = sum4(qrow);
+        let s = &mut planes.scores;
+        for (j, &p) in idx.iter().enumerate() {
+            s[j] = cache.dot_key_with_sum(h, p as usize, qrow, q_sum) * sc;
+        }
+        softmax(&mut s[..m]);
+        let orow = &mut out[qi * d..(qi + 1) * d];
+        orow.fill(0.0);
+        for (j, &p) in idx.iter().enumerate() {
+            if s[j] > 1e-9 {
+                cache.add_val(h, p as usize, s[j], orow);
             }
-            p
-        })
-        .collect()
+        }
+    }
+    cost.score_key_reads += (g * m) as u64;
+    cost.attend_kv_reads += (g * m) as u64;
+    if cache.is_quantized() {
+        cost.dequant_rows += (g * m) as u64;
+    }
 }
 
 /// Sparse decode attention over per-KV-head index sets.
@@ -497,36 +925,15 @@ pub fn decode_sparse(
     q: &[f32],
     cache: &KvCache,
     g: usize,
-    idx: &[Vec<u32>],
+    sel: &IndexSet,
     out: &mut [f32],
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
 ) {
-    let d = cache.d;
-    let sc = scale(d);
-    let mut total = 0u64;
-    for (h, hidx) in idx.iter().enumerate() {
-        let mut s = vec![0.0f32; hidx.len()];
-        for qi in 0..g {
-            let hq = h * g + qi;
-            let qrow = &q[hq * d..(hq + 1) * d];
-            for (j, &p) in hidx.iter().enumerate() {
-                s[j] = cache.dot_key(h, p as usize, qrow) * sc;
-            }
-            softmax(&mut s);
-            let orow = &mut out[hq * d..(hq + 1) * d];
-            orow.fill(0.0);
-            for (j, &p) in hidx.iter().enumerate() {
-                if s[j] > 1e-9 {
-                    cache.add_val(h, p as usize, s[j], orow);
-                }
-            }
-        }
-        total += (g * hidx.len()) as u64;
-    }
-    cost.score_key_reads += total;
-    cost.attend_kv_reads += total;
-    if cache.is_quantized() {
-        cost.dequant_rows += total;
+    let gd = g * cache.d;
+    for h in 0..sel.n_heads() {
+        let out_h = &mut out[h * gd..(h + 1) * gd];
+        decode_sparse_head(q, h, sel.head(h), cache, g, out_h, planes, cost);
     }
 }
 
@@ -545,6 +952,7 @@ pub fn prefill_dense_tile(
     cache: &KvCache,
     g: usize,
     out: &mut [f32],
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
 ) {
     let d = cache.d;
@@ -557,6 +965,7 @@ pub fn prefill_dense_tile(
             cache,
             g,
             &mut out[r * n_q * d..(r + 1) * n_q * d],
+            planes,
             cost,
         );
     }
@@ -569,33 +978,12 @@ pub fn decode_dense_upto(
     cache: &KvCache,
     g: usize,
     out: &mut [f32],
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
 ) {
-    let (d, n_kv) = (cache.d, cache.n_kv);
-    let len = upto.min(cache.len);
-    let sc = scale(d);
-    let mut s = vec![0.0f32; len];
-    for h in 0..n_kv {
-        for qi in 0..g {
-            let hq = h * g + qi;
-            let qrow = &q[hq * d..(hq + 1) * d];
-            for p in 0..len {
-                s[p] = cache.dot_key(h, p, qrow) * sc;
-            }
-            softmax(&mut s);
-            let orow = &mut out[hq * d..(hq + 1) * d];
-            orow.fill(0.0);
-            for p in 0..len {
-                if s[p] > 1e-9 {
-                    cache.add_val(h, p, s[p], orow);
-                }
-            }
-        }
-    }
-    cost.score_key_reads += (n_kv * g * len) as u64;
-    cost.attend_kv_reads += (n_kv * g * len) as u64;
-    if cache.is_quantized() {
-        cost.dequant_rows += (n_kv * g * len) as u64;
+    let gd = g * cache.d;
+    for h in 0..cache.n_kv {
+        decode_dense_head(q, h, upto, cache, g, &mut out[h * gd..(h + 1) * gd], planes, cost);
     }
 }
 
@@ -608,8 +996,9 @@ pub fn prefill_pooled_scores(
     start: usize,
     cache: &KvCache,
     g: usize,
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
-) -> Vec<Vec<f32>> {
+) {
     let (d, n_kv) = (cache.d, cache.n_kv);
     let n_q = n_kv * g;
     let tile = qs.len() / (n_q * d);
@@ -620,26 +1009,32 @@ pub fn prefill_pooled_scores(
     // per (head, group) query — NOT tile * kv_len (Fig. 8 / Table 3 cost
     // ratios were overcounting the anchor pass before this was fixed)
     let row_reads: u64 = (0..tile).map(|r| (start + r + 1).min(kv_len) as u64).sum();
-    let mut pooled = vec![vec![0.0f32; kv_len]; n_kv];
-    let mut s = vec![0.0f32; kv_len];
+    planes.ensure_scores(kv_len);
+    planes.ensure_pooled(n_kv * kv_len);
+    let ScorePlanes { scores, pooled, pooled_heads, pooled_len, .. } = planes;
     for h in 0..n_kv {
+        let prow = &mut pooled[h * kv_len..(h + 1) * kv_len];
+        prow.fill(0.0);
         for r in 0..tile {
             let upto = (start + r + 1).min(kv_len);
             for qi in 0..g {
                 let hq = h * g + qi;
                 let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
-                for p in 0..upto {
-                    s[p] = cache.dot_key(h, p, qrow) * sc;
+                let (mut t0, mut ti) = (0usize, 0usize);
+                while t0 < upto {
+                    t0 += cache.score_tile(h, ti, upto, qrow, sc, &mut scores[t0..]);
+                    ti += 1;
                 }
-                softmax(&mut s[..upto]);
-                for p in 0..upto {
-                    pooled[h][p] += s[p] * inv;
+                softmax(&mut scores[..upto]);
+                for (pi, &x) in prow[..upto].iter_mut().zip(scores[..upto].iter()) {
+                    *pi += x * inv;
                 }
             }
         }
         cost.score_key_reads += g as u64 * row_reads;
     }
-    pooled
+    *pooled_heads = n_kv;
+    *pooled_len = kv_len;
 }
 
 /// Sparse prefill attention for a tile with tile-shared indices and
@@ -649,8 +1044,9 @@ pub fn prefill_sparse_tile(
     start: usize,
     cache: &KvCache,
     g: usize,
-    idx: &[Vec<u32>],
+    sel: &IndexSet,
     out: &mut [f32],
+    planes: &mut ScorePlanes,
     cost: &mut CostTracker,
 ) {
     let d = cache.d;
@@ -659,12 +1055,14 @@ pub fn prefill_sparse_tile(
     let sc = scale(d);
     for r in 0..tile {
         let qpos = start + r;
-        for (h, hidx) in idx.iter().enumerate() {
-            let mut s = Vec::with_capacity(hidx.len() + r + 1);
-            let mut kept: Vec<u32> = Vec::with_capacity(hidx.len() + r + 1);
+        for h in 0..sel.n_heads() {
+            let hidx = sel.head(h);
+            let ScorePlanes { scores, kept, own, .. } = &mut *planes;
+            kept.clear();
             // which of the tile's own (causally visible) positions the
             // index set already covers: offset j <=> position start + j
-            let mut own = vec![false; r + 1];
+            own.clear();
+            own.resize(r + 1, false);
             for &p in hidx {
                 if (p as usize) <= qpos {
                     kept.push(p);
@@ -681,41 +1079,336 @@ pub fn prefill_sparse_tile(
                     kept.push((start + j) as u32);
                 }
             }
+            let m = kept.len();
+            if scores.len() < m {
+                scores.resize(m, 0.0);
+            }
             for qi in 0..g {
                 let hq = h * g + qi;
                 let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
-                s.clear();
-                for &p in &kept {
-                    s.push(cache.dot_key(h, p as usize, qrow) * sc);
+                let q_sum = sum4(qrow);
+                for (j, &p) in kept.iter().enumerate() {
+                    scores[j] = cache.dot_key_with_sum(h, p as usize, qrow, q_sum) * sc;
                 }
-                softmax(&mut s);
+                softmax(&mut scores[..m]);
                 let orow = &mut out[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
                 orow.fill(0.0);
                 for (j, &p) in kept.iter().enumerate() {
-                    if s[j] > 1e-9 {
-                        cache.add_val(h, p as usize, s[j], orow);
+                    if scores[j] > 1e-9 {
+                        cache.add_val(h, p as usize, scores[j], orow);
                     }
                 }
             }
-            cost.score_key_reads += (g * kept.len()) as u64;
-            cost.attend_kv_reads += (g * kept.len()) as u64;
+            cost.score_key_reads += (g * m) as u64;
+            cost.attend_kv_reads += (g * m) as u64;
             if cache.is_quantized() {
-                cost.dequant_rows += (g * kept.len()) as u64;
+                cost.dequant_rows += (g * m) as u64;
             }
         }
     }
 }
 
-/// Top-k over pooled scores (anchor pass 3).  Uses the O(n) unordered
-/// quickselect — attention is order-invariant over the index set.
-pub fn select_topk(pooled: &[Vec<f32>], k: usize, cost: &mut CostTracker) -> Vec<Vec<u32>> {
-    pooled
-        .iter()
-        .map(|p| {
-            cost.topk_items += p.len() as u64;
-            topk_indices_unordered(p, k.min(p.len()))
-        })
-        .collect()
+/// Top-k over the pooled planes left in `scratch.planes` by the last
+/// pooled-score kernel call (anchor pass 3), written into `scratch.sel`
+/// as one head per pooled plane.  Uses the O(n) unordered quickselect —
+/// attention is order-invariant over the index set — staged in the
+/// arena's partition buffer, so the steady-state call allocates nothing.
+pub fn select_topk(scratch: &mut AttnScratch, k: usize, cost: &mut CostTracker) {
+    let AttnScratch { sel, planes } = scratch;
+    let (hn, len) = (planes.pooled_heads, planes.pooled_len);
+    sel.clear();
+    let ScorePlanes { pooled, pairs, .. } = planes;
+    for h in 0..hn {
+        cost.topk_items += len as u64;
+        topk_unordered_into(&pooled[h * len..(h + 1) * len], k.min(len), pairs, &mut sel.idx);
+        sel.close_head();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// seed kernels (reference implementations)
+// ---------------------------------------------------------------------------
+
+/// The seed row-at-a-time kernels, kept verbatim as the ground truth the
+/// tile-major/arena kernels are bitwise-tested against (and as the
+/// baseline side of the kernel-level benches in
+/// `benches/table3_kernels.rs`).  Every call re-dispatches on the storage
+/// mode per position and heap-allocates its score buffers — exactly the
+/// overheads the tile-major path removes.
+pub mod reference {
+    use super::{scale, CostTracker, KvCache};
+    use crate::tensor::{softmax, topk_indices_unordered};
+
+    /// Seed dense GQA decode attention.
+    pub fn decode_dense(
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        out: &mut [f32],
+        cost: &mut CostTracker,
+    ) {
+        decode_dense_upto(q, cache.len, cache, g, out, cost);
+    }
+
+    /// Seed dense decode attention clamped to the first `upto` entries.
+    pub fn decode_dense_upto(
+        q: &[f32],
+        upto: usize,
+        cache: &KvCache,
+        g: usize,
+        out: &mut [f32],
+        cost: &mut CostTracker,
+    ) {
+        let (d, n_kv) = (cache.d, cache.n_kv);
+        let len = upto.min(cache.len);
+        let sc = scale(d);
+        let mut s = vec![0.0f32; len];
+        for h in 0..n_kv {
+            for qi in 0..g {
+                let hq = h * g + qi;
+                let qrow = &q[hq * d..(hq + 1) * d];
+                for p in 0..len {
+                    s[p] = cache.dot_key(h, p, qrow) * sc;
+                }
+                softmax(&mut s);
+                let orow = &mut out[hq * d..(hq + 1) * d];
+                orow.fill(0.0);
+                for p in 0..len {
+                    if s[p] > 1e-9 {
+                        cache.add_val(h, p, s[p], orow);
+                    }
+                }
+            }
+        }
+        cost.score_key_reads += (n_kv * g * len) as u64;
+        cost.attend_kv_reads += (n_kv * g * len) as u64;
+        if cache.is_quantized() {
+            cost.dequant_rows += (n_kv * g * len) as u64;
+        }
+    }
+
+    /// Seed per-query-head post-softmax distributions: `[n_q][len]`.
+    pub fn decode_head_scores(
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Vec<Vec<f32>> {
+        let (d, len, n_kv) = (cache.d, cache.len, cache.n_kv);
+        let sc = scale(d);
+        let mut all = Vec::with_capacity(n_kv * g);
+        for h in 0..n_kv {
+            for qi in 0..g {
+                let hq = h * g + qi;
+                let qrow = &q[hq * d..(hq + 1) * d];
+                let mut s = vec![0.0f32; len];
+                for p in 0..len {
+                    s[p] = cache.dot_key(h, p, qrow) * sc;
+                }
+                softmax(&mut s);
+                all.push(s);
+            }
+        }
+        cost.score_key_reads += (n_kv * g * len) as u64;
+        all
+    }
+
+    /// Seed mean-pool of groups of `g` consecutive distributions.
+    pub fn pool_groups(per_head: &[Vec<f32>], g: usize) -> Vec<Vec<f32>> {
+        let n_kv = per_head.len() / g;
+        let len = per_head[0].len();
+        let inv = 1.0 / g as f32;
+        (0..n_kv)
+            .map(|h| {
+                let mut p = vec![0.0f32; len];
+                for qi in 0..g {
+                    for (pi, &x) in p.iter_mut().zip(per_head[h * g + qi].iter()) {
+                        *pi += x * inv;
+                    }
+                }
+                p
+            })
+            .collect()
+    }
+
+    /// Seed GQA pooled scores: `[n_kv][len]`.
+    pub fn decode_pooled_scores(
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Vec<Vec<f32>> {
+        let per_head = decode_head_scores(q, cache, g, cost);
+        pool_groups(&per_head, g)
+    }
+
+    /// Seed sparse decode attention over nested per-KV-head index sets.
+    pub fn decode_sparse(
+        q: &[f32],
+        cache: &KvCache,
+        g: usize,
+        idx: &[Vec<u32>],
+        out: &mut [f32],
+        cost: &mut CostTracker,
+    ) {
+        let d = cache.d;
+        let sc = scale(d);
+        let mut total = 0u64;
+        for (h, hidx) in idx.iter().enumerate() {
+            let mut s = vec![0.0f32; hidx.len()];
+            for qi in 0..g {
+                let hq = h * g + qi;
+                let qrow = &q[hq * d..(hq + 1) * d];
+                for (j, &p) in hidx.iter().enumerate() {
+                    s[j] = cache.dot_key(h, p as usize, qrow) * sc;
+                }
+                softmax(&mut s);
+                let orow = &mut out[hq * d..(hq + 1) * d];
+                orow.fill(0.0);
+                for (j, &p) in hidx.iter().enumerate() {
+                    if s[j] > 1e-9 {
+                        cache.add_val(h, p as usize, s[j], orow);
+                    }
+                }
+            }
+            total += (g * hidx.len()) as u64;
+        }
+        cost.score_key_reads += total;
+        cost.attend_kv_reads += total;
+        if cache.is_quantized() {
+            cost.dequant_rows += total;
+        }
+    }
+
+    /// Seed dense causal prefill for a tile of queries.
+    pub fn prefill_dense_tile(
+        qs: &[f32],
+        start: usize,
+        cache: &KvCache,
+        g: usize,
+        out: &mut [f32],
+        cost: &mut CostTracker,
+    ) {
+        let d = cache.d;
+        let n_q = cache.n_kv * g;
+        let tile = qs.len() / (n_q * d);
+        for r in 0..tile {
+            decode_dense_upto(
+                &qs[r * n_q * d..(r + 1) * n_q * d],
+                start + r + 1,
+                cache,
+                g,
+                &mut out[r * n_q * d..(r + 1) * n_q * d],
+                cost,
+            );
+        }
+    }
+
+    /// Seed tile-level pooled prefill scores: `[n_kv][kv_len]`.
+    pub fn prefill_pooled_scores(
+        qs: &[f32],
+        start: usize,
+        cache: &KvCache,
+        g: usize,
+        cost: &mut CostTracker,
+    ) -> Vec<Vec<f32>> {
+        let (d, n_kv) = (cache.d, cache.n_kv);
+        let n_q = n_kv * g;
+        let tile = qs.len() / (n_q * d);
+        let kv_len = (start + tile).min(cache.len);
+        let sc = scale(d);
+        let inv = 1.0 / (tile * g) as f32;
+        let row_reads: u64 = (0..tile).map(|r| (start + r + 1).min(kv_len) as u64).sum();
+        let mut pooled = vec![vec![0.0f32; kv_len]; n_kv];
+        let mut s = vec![0.0f32; kv_len];
+        for h in 0..n_kv {
+            for r in 0..tile {
+                let upto = (start + r + 1).min(kv_len);
+                for qi in 0..g {
+                    let hq = h * g + qi;
+                    let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
+                    for p in 0..upto {
+                        s[p] = cache.dot_key(h, p, qrow) * sc;
+                    }
+                    softmax(&mut s[..upto]);
+                    for p in 0..upto {
+                        pooled[h][p] += s[p] * inv;
+                    }
+                }
+            }
+            cost.score_key_reads += g as u64 * row_reads;
+        }
+        pooled
+    }
+
+    /// Seed sparse prefill for a tile with tile-shared nested indices.
+    pub fn prefill_sparse_tile(
+        qs: &[f32],
+        start: usize,
+        cache: &KvCache,
+        g: usize,
+        idx: &[Vec<u32>],
+        out: &mut [f32],
+        cost: &mut CostTracker,
+    ) {
+        let d = cache.d;
+        let n_q = cache.n_kv * g;
+        let tile = qs.len() / (n_q * d);
+        let sc = scale(d);
+        for r in 0..tile {
+            let qpos = start + r;
+            for (h, hidx) in idx.iter().enumerate() {
+                let mut s = Vec::with_capacity(hidx.len() + r + 1);
+                let mut kept: Vec<u32> = Vec::with_capacity(hidx.len() + r + 1);
+                let mut own = vec![false; r + 1];
+                for &p in hidx {
+                    if (p as usize) <= qpos {
+                        kept.push(p);
+                        if (p as usize) >= start {
+                            own[p as usize - start] = true;
+                        }
+                    }
+                }
+                for (j, seen) in own.iter().enumerate() {
+                    if !seen {
+                        kept.push((start + j) as u32);
+                    }
+                }
+                for qi in 0..g {
+                    let hq = h * g + qi;
+                    let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
+                    s.clear();
+                    for &p in &kept {
+                        s.push(cache.dot_key(h, p as usize, qrow) * sc);
+                    }
+                    softmax(&mut s);
+                    let orow = &mut out[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
+                    orow.fill(0.0);
+                    for (j, &p) in kept.iter().enumerate() {
+                        if s[j] > 1e-9 {
+                            cache.add_val(h, p as usize, s[j], orow);
+                        }
+                    }
+                }
+                cost.score_key_reads += (g * kept.len()) as u64;
+                cost.attend_kv_reads += (g * kept.len()) as u64;
+                if cache.is_quantized() {
+                    cost.dequant_rows += (g * kept.len()) as u64;
+                }
+            }
+        }
+    }
+
+    /// Seed Top-k over nested pooled scores.
+    pub fn select_topk(pooled: &[Vec<f32>], k: usize, cost: &mut CostTracker) -> Vec<Vec<u32>> {
+        pooled
+            .iter()
+            .map(|p| {
+                cost.topk_items += p.len() as u64;
+                topk_indices_unordered(p, k.min(p.len()))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -744,7 +1437,8 @@ mod tests {
         let (q, cache) = setup(2, 2, 16, 64, 1);
         let mut out = vec![0.0; 4 * 16];
         let mut c = CostTracker::default();
-        decode_dense(&q, &cache, 2, &mut out, &mut c);
+        let mut planes = ScorePlanes::default();
+        decode_dense(&q, &cache, 2, &mut out, &mut planes, &mut c);
         // bounded by value hull per kv head
         for h in 0..2 {
             let mut vmax = f32::NEG_INFINITY;
@@ -770,9 +1464,10 @@ mod tests {
         let mut dense = vec![0.0; 4 * 16];
         let mut sparse = vec![0.0; 4 * 16];
         let mut c = CostTracker::default();
-        decode_dense(&q, &cache, 2, &mut dense, &mut c);
-        let idx: Vec<Vec<u32>> = vec![(0..64).collect(), (0..64).collect()];
-        decode_sparse(&q, &cache, 2, &idx, &mut sparse, &mut c);
+        let mut planes = ScorePlanes::default();
+        decode_dense(&q, &cache, 2, &mut dense, &mut planes, &mut c);
+        let sel = IndexSet::from_nested(&[(0..64).collect(), (0..64).collect()]);
+        decode_sparse(&q, &cache, 2, &sel, &mut sparse, &mut planes, &mut c);
         for (a, b) in dense.iter().zip(&sparse) {
             assert!((a - b).abs() < 1e-5);
         }
@@ -782,13 +1477,31 @@ mod tests {
     fn pooled_scores_are_distributions() {
         let (q, cache) = setup(2, 2, 16, 64, 3);
         let mut c = CostTracker::default();
-        let pooled = decode_pooled_scores(&q, &cache, 2, &mut c);
-        assert_eq!(pooled.len(), 2);
-        for p in &pooled {
-            assert_eq!(p.len(), 64);
-            let sum: f32 = p.iter().sum();
+        let mut planes = ScorePlanes::default();
+        decode_pooled_scores(&q, &cache, 2, &mut planes, &mut c);
+        assert_eq!(planes.pooled_heads(), 2);
+        assert_eq!(planes.pooled_len(), 64);
+        for h in 0..2 {
+            let sum: f32 = planes.pooled_head(h).iter().sum();
             assert!((sum - 1.0).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn index_set_round_trips_nested() {
+        let nested = vec![vec![3u32, 1, 7], vec![], vec![9u32]];
+        let sel = IndexSet::from_nested(&nested);
+        assert_eq!(sel.n_heads(), 3);
+        assert_eq!(sel.total(), 4);
+        assert_eq!(sel.head(0), &[3, 1, 7]);
+        assert!(sel.head(1).is_empty());
+        assert_eq!(sel.to_nested(), nested);
+        let mut other = IndexSet::new();
+        other.copy_from(&sel);
+        assert_eq!(other, sel);
+        other.clear();
+        assert_eq!(other.n_heads(), 0);
+        assert!(other.is_empty());
     }
 
     #[test]
@@ -815,13 +1528,15 @@ mod tests {
             cache.push(&k, &v);
         }
         let mut c = CostTracker::default();
-        let pooled = decode_pooled_scores(&q, &cache, g, &mut c);
-        let idx = select_topk(&pooled, 16, &mut c);
-        assert!(idx.iter().all(|hi| hi.contains(&77)));
+        let mut scratch = AttnScratch::new();
+        decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut c);
+        select_topk(&mut scratch, 16, &mut c);
+        assert!((0..scratch.sel.n_heads()).all(|h| scratch.sel.head(h).contains(&77)));
         let mut dense = vec![0.0; n_kv * g * d];
         let mut sparse = vec![0.0; n_kv * g * d];
-        decode_dense(&q, &cache, g, &mut dense, &mut c);
-        decode_sparse(&q, &cache, g, &idx, &mut sparse, &mut c);
+        let AttnScratch { sel, planes } = &mut scratch;
+        decode_dense(&q, &cache, g, &mut dense, planes, &mut c);
+        decode_sparse(&q, &cache, g, sel, &mut sparse, planes, &mut c);
         let cos = crate::tensor::cosine_sim(&dense, &sparse);
         assert!(cos > 0.9, "cos {cos}");
     }
@@ -842,11 +1557,13 @@ mod tests {
             cache.push(&k, &v);
         }
         let mut c = CostTracker::default();
+        let mut planes = ScorePlanes::default();
         let mut tile_out = vec![0.0; len * n_q * d];
-        prefill_dense_tile(&qs, 0, &cache, g, &mut tile_out, &mut c);
+        prefill_dense_tile(&qs, 0, &cache, g, &mut tile_out, &mut planes, &mut c);
         for t in 0..len {
             let mut want = vec![0.0; n_q * d];
-            decode_dense_upto(&qs[t * n_q * d..(t + 1) * n_q * d], t + 1, &cache, g, &mut want, &mut c);
+            let q_t = &qs[t * n_q * d..(t + 1) * n_q * d];
+            decode_dense_upto(q_t, t + 1, &cache, g, &mut want, &mut planes, &mut c);
             for (a, b) in tile_out[t * n_q * d..(t + 1) * n_q * d].iter().zip(&want) {
                 assert!((a - b).abs() < 1e-5);
             }
@@ -869,10 +1586,11 @@ mod tests {
         let mut qs = vec![0.0; tile * n_q * d];
         r.fill_normal(&mut qs, 1.0);
         let mut c = CostTracker::default();
-        let pooled = prefill_pooled_scores(&qs, 32, &cache, g, &mut c);
-        for p in &pooled {
-            assert_eq!(p.len(), 48);
-            let sum: f32 = p.iter().sum();
+        let mut planes = ScorePlanes::default();
+        prefill_pooled_scores(&qs, 32, &cache, g, &mut planes, &mut c);
+        assert_eq!(planes.pooled_len(), 48);
+        for h in 0..planes.pooled_heads() {
+            let sum: f32 = planes.pooled_head(h).iter().sum();
             assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
         }
     }
@@ -893,10 +1611,11 @@ mod tests {
         let mut qs = vec![0.0; tile * n_q * d];
         r.fill_normal(&mut qs, 1.0);
         // indices include every position; query 0 may only use position 0
-        let idx = vec![(0..8u32).collect::<Vec<_>>()];
+        let sel = IndexSet::from_nested(&[(0..8u32).collect::<Vec<_>>()]);
         let mut out = vec![0.0; tile * n_q * d];
         let mut c = CostTracker::default();
-        prefill_sparse_tile(&qs, 0, &cache, g, &idx, &mut out, &mut c);
+        let mut planes = ScorePlanes::default();
+        prefill_sparse_tile(&qs, 0, &cache, g, &sel, &mut out, &mut planes, &mut c);
         for hq in 0..n_q {
             for i in 0..d {
                 assert!((out[hq * d + i] - cache.val(0, 0)[i]).abs() < 1e-5);
@@ -923,22 +1642,24 @@ mod tests {
         let mut qs = vec![0.0; tile * n_q * d];
         r.fill_normal(&mut qs, 1.0);
         // anchor indices all at the end of the tile (future for early rows)
-        let idx = vec![vec![12u32, 13, 14, 15]];
+        let sel = IndexSet::from_nested(&[vec![12u32, 13, 14, 15]]);
         let mut out = vec![0.0; tile * n_q * d];
         let mut c = CostTracker::default();
-        prefill_sparse_tile(&qs, start, &cache, g, &idx, &mut out, &mut c);
+        let mut planes = ScorePlanes::default();
+        prefill_sparse_tile(&qs, start, &cache, g, &sel, &mut out, &mut planes, &mut c);
         for row in 0..tile {
             let qpos = start + row;
             // expected: attention over the union {idx <= qpos} u {start..=qpos},
             // which here is exactly the tile's own visible range
-            let expect_idx: Vec<Vec<u32>> = vec![(start as u32..=qpos as u32).collect()];
+            let expect = IndexSet::from_nested(&[(start as u32..=qpos as u32).collect()]);
             let mut want = vec![0.0; n_q * d];
             decode_sparse(
                 &qs[row * n_q * d..(row + 1) * n_q * d],
                 &cache,
                 g,
-                &expect_idx,
+                &expect,
                 &mut want,
+                &mut planes,
                 &mut CostTracker::default(),
             );
             for (a, b) in out[row * n_q * d..(row + 1) * n_q * d].iter().zip(&want) {
@@ -964,11 +1685,12 @@ mod tests {
         }
         let mut qs = vec![0.0; tile * n_q * d];
         r.fill_normal(&mut qs, 1.0);
+        let mut planes = ScorePlanes::default();
         let mut c_pool = CostTracker::default();
-        let _ = prefill_pooled_scores(&qs, start, &cache, g, &mut c_pool);
+        prefill_pooled_scores(&qs, start, &cache, g, &mut planes, &mut c_pool);
         let mut c_dense = CostTracker::default();
         let mut out = vec![0.0; tile * n_q * d];
-        prefill_dense_tile(&qs, start, &cache, g, &mut out, &mut c_dense);
+        prefill_dense_tile(&qs, start, &cache, g, &mut out, &mut planes, &mut c_dense);
         assert_eq!(c_pool.score_key_reads, c_dense.score_key_reads);
         // triangular sum, explicitly: sum_r min(start + r + 1, kv_len)
         let want: u64 = (0..tile).map(|r| (start + r + 1).min(48) as u64).sum();
@@ -1027,10 +1749,11 @@ mod tests {
         let (cf, cq) = paired_caches(n_kv, d, len, 42);
         let mut of = vec![0.0; n_kv * g * d];
         let mut oq = vec![0.0; n_kv * g * d];
+        let mut planes = ScorePlanes::default();
         let mut c = CostTracker::default();
-        decode_dense(&q, &cf, g, &mut of, &mut c);
+        decode_dense(&q, &cf, g, &mut of, &mut planes, &mut c);
         let mut c8 = CostTracker::default();
-        decode_dense(&q, &cq, g, &mut oq, &mut c8);
+        decode_dense(&q, &cq, g, &mut oq, &mut planes, &mut c8);
         let cos = crate::tensor::cosine_sim(&of, &oq);
         assert!(cos > 0.999, "cos {cos}");
         assert!(c8.dequant_rows > 0, "dense fallback must dequantize");
@@ -1045,12 +1768,14 @@ mod tests {
         r.fill_normal(&mut q, 1.0);
         let (cf, cq) = paired_caches(n_kv, d, len, 44);
         let mut c = CostTracker::default();
-        let pf = decode_pooled_scores(&q, &cf, g, &mut c);
+        let mut pf = ScorePlanes::default();
+        decode_pooled_scores(&q, &cf, g, &mut pf, &mut c);
         let mut c8 = CostTracker::default();
-        let pq = decode_pooled_scores(&q, &cq, g, &mut c8);
+        let mut pq = ScorePlanes::default();
+        decode_pooled_scores(&q, &cq, g, &mut pq, &mut c8);
         assert_eq!(c8.dequant_rows, 0, "scoring is fused over int8 — no dequant");
-        for (a, b) in pf.iter().zip(&pq) {
-            for (x, y) in a.iter().zip(b) {
+        for h in 0..n_kv {
+            for (x, y) in pf.pooled_head(h).iter().zip(pq.pooled_head(h)) {
                 assert!((x - y).abs() < 5e-3, "{x} vs {y}");
             }
         }
@@ -1143,5 +1868,162 @@ mod tests {
                 assert_eq!(amax, bmax, "page {page} max");
             }
         }
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    fn assert_cost_eq(a: &CostTracker, b: &CostTracker, what: &str) {
+        assert_eq!(a.score_key_reads, b.score_key_reads, "{what}: score_key_reads");
+        assert_eq!(a.attend_kv_reads, b.attend_kv_reads, "{what}: attend_kv_reads");
+        assert_eq!(a.topk_items, b.topk_items, "{what}: topk_items");
+        assert_eq!(a.dequant_rows, b.dequant_rows, "{what}: dequant_rows");
+    }
+
+    /// The acceptance invariant for the tile-major rework: on random
+    /// inputs — both storage modes, including a partial staging tail and
+    /// odd (non-tile-multiple) lengths — every rewritten kernel produces
+    /// BITWISE the same outputs, pooled scores, Top-k selections, and
+    /// cost accounting as the seed row-at-a-time kernels in
+    /// [`reference`].
+    #[test]
+    fn tile_kernels_bitwise_equal_seed_kernels() {
+        let mut r = Rng::new(0x71E5);
+        for case in 0..6 {
+            let (n_kv, g, d) = (2usize, 2usize, 16usize);
+            let n_q = n_kv * g;
+            let len = 30 + r.below(80); // spans partial tiles + staging tails
+            let int8 = case % 2 == 1;
+            let mut q = vec![0.0; n_q * d];
+            r.fill_normal(&mut q, 1.0);
+            let mut cache = if int8 {
+                KvCache::with_opts(n_kv, d, len + 8, 16, crate::config::KvDtype::Int8)
+            } else {
+                KvCache::new(n_kv, d, len + 8)
+            };
+            for _ in 0..len {
+                let mut k = vec![0.0; n_kv * d];
+                let mut v = vec![0.0; n_kv * d];
+                r.fill_normal(&mut k, 0.5);
+                r.fill_normal(&mut v, 1.0);
+                cache.push(&k, &v);
+            }
+            let mut scratch = AttnScratch::new();
+            let tag = if int8 { "int8" } else { "f32" };
+
+            // dense decode
+            let mut out_new = vec![0.0; n_q * d];
+            let mut out_ref = vec![0.0; n_q * d];
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            decode_dense(&q, &cache, g, &mut out_new, &mut scratch.planes, &mut c_new);
+            reference::decode_dense(&q, &cache, g, &mut out_ref, &mut c_ref);
+            assert_bits_eq(&out_new, &out_ref, &format!("decode_dense/{tag}"));
+            assert_cost_eq(&c_new, &c_ref, &format!("decode_dense/{tag}"));
+
+            // pooled scores + top-k selection
+            let k_sel = 1 + r.below(len);
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut c_new);
+            let pooled_ref = reference::decode_pooled_scores(&q, &cache, g, &mut c_ref);
+            for h in 0..n_kv {
+                let tagh = format!("pooled/{tag}/h{h}");
+                assert_bits_eq(scratch.planes.pooled_head(h), &pooled_ref[h], &tagh);
+            }
+            select_topk(&mut scratch, k_sel, &mut c_new);
+            let sel_ref = reference::select_topk(&pooled_ref, k_sel, &mut c_ref);
+            assert_eq!(scratch.sel.to_nested(), sel_ref, "select_topk/{tag}");
+            assert_cost_eq(&c_new, &c_ref, &format!("pooled+topk/{tag}"));
+
+            // sparse decode over the selected set (same order)
+            let mut out_new = vec![0.0; n_q * d];
+            let mut out_ref = vec![0.0; n_q * d];
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            {
+                let AttnScratch { sel, planes } = &mut scratch;
+                decode_sparse(&q, &cache, g, sel, &mut out_new, planes, &mut c_new);
+            }
+            reference::decode_sparse(&q, &cache, g, &sel_ref, &mut out_ref, &mut c_ref);
+            assert_bits_eq(&out_new, &out_ref, &format!("decode_sparse/{tag}"));
+            assert_cost_eq(&c_new, &c_ref, &format!("decode_sparse/{tag}"));
+
+            // prefill: dense tile, pooled scores, sparse tile
+            let tile = 8 + r.below(8);
+            let start = len - tile;
+            let mut qs = vec![0.0; tile * n_q * d];
+            r.fill_normal(&mut qs, 1.0);
+            let mut out_new = vec![0.0; tile * n_q * d];
+            let mut out_ref = vec![0.0; tile * n_q * d];
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            let planes = &mut scratch.planes;
+            prefill_dense_tile(&qs, start, &cache, g, &mut out_new, planes, &mut c_new);
+            reference::prefill_dense_tile(&qs, start, &cache, g, &mut out_ref, &mut c_ref);
+            assert_bits_eq(&out_new, &out_ref, &format!("prefill_dense/{tag}"));
+            assert_cost_eq(&c_new, &c_ref, &format!("prefill_dense/{tag}"));
+
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            prefill_pooled_scores(&qs, start, &cache, g, &mut scratch.planes, &mut c_new);
+            let ppool_ref = reference::prefill_pooled_scores(&qs, start, &cache, g, &mut c_ref);
+            for h in 0..n_kv {
+                let tagh = format!("prefill_pooled/{tag}/h{h}");
+                assert_bits_eq(scratch.planes.pooled_head(h), &ppool_ref[h], &tagh);
+            }
+            assert_cost_eq(&c_new, &c_ref, &format!("prefill_pooled/{tag}"));
+
+            select_topk(&mut scratch, k_sel, &mut CostTracker::default());
+            let psel_ref = reference::select_topk(&ppool_ref, k_sel, &mut CostTracker::default());
+            let mut out_new = vec![0.0; tile * n_q * d];
+            let mut out_ref = vec![0.0; tile * n_q * d];
+            let mut c_new = CostTracker::default();
+            let mut c_ref = CostTracker::default();
+            {
+                let AttnScratch { sel, planes } = &mut scratch;
+                prefill_sparse_tile(&qs, start, &cache, g, sel, &mut out_new, planes, &mut c_new);
+            }
+            reference::prefill_sparse_tile(
+                &qs, start, &cache, g, &psel_ref, &mut out_ref, &mut c_ref,
+            );
+            assert_bits_eq(&out_new, &out_ref, &format!("prefill_sparse/{tag}"));
+            assert_cost_eq(&c_new, &c_ref, &format!("prefill_sparse/{tag}"));
+        }
+    }
+
+    /// Head-granular kernels (the parallel tick's work-item granularity)
+    /// compose bitwise into the full-row kernels.
+    #[test]
+    fn head_kernels_compose_bitwise() {
+        let (q, cache) = setup(2, 2, 16, 50, 17);
+        let (n_kv, g, d) = (2usize, 2usize, 16usize);
+        let gd = g * d;
+        let mut full = vec![0.0; n_kv * gd];
+        let mut per_head = vec![0.0; n_kv * gd];
+        let mut planes = ScorePlanes::default();
+        let mut c = CostTracker::default();
+        decode_dense(&q, &cache, g, &mut full, &mut planes, &mut c);
+        let mut c2 = CostTracker::default();
+        for h in 0..n_kv {
+            let out_h = &mut per_head[h * gd..(h + 1) * gd];
+            decode_dense_head(&q, h, cache.len, &cache, g, out_h, &mut planes, &mut c2);
+        }
+        assert_bits_eq(&full, &per_head, "dense head composition");
+        assert_cost_eq(&c, &c2, "dense head composition");
+
+        let sel = IndexSet::from_nested(&[vec![3, 9, 14, 40], vec![0, 7, 21]]);
+        let mut full = vec![0.0; n_kv * gd];
+        let mut per_head = vec![0.0; n_kv * gd];
+        decode_sparse(&q, &cache, g, &sel, &mut full, &mut planes, &mut c);
+        for h in 0..n_kv {
+            let out_h = &mut per_head[h * gd..(h + 1) * gd];
+            decode_sparse_head(&q, h, sel.head(h), &cache, g, out_h, &mut planes, &mut c);
+        }
+        assert_bits_eq(&full, &per_head, "sparse head composition");
     }
 }

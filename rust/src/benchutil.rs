@@ -50,6 +50,20 @@ pub fn header() {
     println!("|---|---|---|---|---|");
 }
 
+/// Perf-trajectory artifact (repo-root `BENCH_<pr>.json`): a stable
+/// wrapper around one bench run's machine-readable scenario metrics, so
+/// the per-PR performance trajectory can be diffed across the repo's
+/// history.  The `scenarios` value is the same object the bench writes
+/// to `results/coordinator_bench.json` (scenario -> key metrics) — one
+/// schema, two consumers (the CI regression gate and the trajectory).
+pub fn trajectory(pr: u64, scenarios: Json) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str("kascade-bench-trajectory-v1")),
+        ("pr", Json::num(pr as f64)),
+        ("scenarios", scenarios),
+    ])
+}
+
 /// One metric's comparison against the checked-in baseline.
 #[derive(Debug, Clone)]
 pub struct GateCheck {
@@ -183,5 +197,20 @@ mod tests {
     fn gate_errors_on_empty_baseline() {
         let empty = Json::obj(vec![("metrics", Json::obj(vec![]))]);
         assert!(gate_against_baseline(&results(2.0, 0.8), &empty).is_err());
+    }
+
+    #[test]
+    fn trajectory_wraps_scenarios_verbatim() {
+        let t = trajectory(5, results(2.0, 0.8));
+        assert_eq!(t.get("pr").and_then(|x| x.as_f64()), Some(5.0));
+        assert_eq!(
+            t.get("schema").and_then(|x| x.as_str()),
+            Some("kascade-bench-trajectory-v1")
+        );
+        let sc = t.get("scenarios").unwrap();
+        assert_eq!(sc.get("a").and_then(|a| a.get("ratio")).and_then(|x| x.as_f64()), Some(2.0));
+        // round-trips through the serializer the gate reads
+        let parsed = Json::parse(&t.to_string()).unwrap();
+        assert_eq!(parsed.get("pr").and_then(|x| x.as_f64()), Some(5.0));
     }
 }

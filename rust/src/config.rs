@@ -306,6 +306,15 @@ pub struct ServeConfig {
     /// never decode a single token is rejected up front instead of
     /// livelocking admission).
     pub max_prompt_tokens: Option<usize>,
+    /// Worker threads for the engine's parallel decode tick.  `> 1`
+    /// spawns a persistent [`crate::pool::WorkerPool`] per engine and
+    /// shards each tick's batched decode across sequences (policy phase)
+    /// and `(sequence, KV head)` work items (attention phase).  Output
+    /// streams are **bitwise identical** to `num_threads = 1` — every
+    /// work item is self-contained and reductions fold in fixed order
+    /// (fuzz-tested in `tests/parallel_tick.rs`).  Default 1 (serial,
+    /// and the only mode with the zero-allocation-per-token guarantee).
+    pub num_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -323,6 +332,7 @@ impl Default for ServeConfig {
             batched_decode: true,
             kv_dtype: KvDtype::F32,
             max_prompt_tokens: None,
+            num_threads: 1,
         }
     }
 }

@@ -40,6 +40,11 @@ pub struct ServeMetrics {
     /// quantized KV value rows read through the dequantizing attend path
     /// (accumulated from finished sequences; 0 in pure-f32 serving)
     pub dequant_rows: u64,
+    /// wall time of each full engine tick (sweep + schedule + execute +
+    /// retire), microseconds
+    pub tick_us: Welford,
+    /// worker threads serving the parallel decode tick (1 = serial)
+    pub threads: usize,
     /// requests torn down by a client `cancel()`
     pub cancelled: u64,
     /// requests torn down by deadline expiry
@@ -80,6 +85,8 @@ impl ServeMetrics {
             kv_bytes_resident: Welford::new(),
             peak_kv_bytes: 0,
             dequant_rows: 0,
+            tick_us: Welford::new(),
+            threads: 1,
             cancelled: 0,
             deadline_missed: 0,
             streamed_ttft_us: Arc::new(Mutex::new(LatencyHist::new())),
@@ -129,6 +136,7 @@ impl ServeMetrics {
              prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
              decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s  \
              kv_bytes peak={}  dequant_rows={}  \
+             tick mean={:.0}us max={:.0}us threads={}  \
              cancelled={} deadline_miss={} streamed_ttft p50={:.1}ms",
             self.requests_done,
             self.tokens_out,
@@ -148,6 +156,9 @@ impl ServeMetrics {
             self.decode_tok_s(),
             self.peak_kv_bytes,
             self.dequant_rows,
+            self.tick_us.mean(),
+            self.tick_us.max(),
+            self.threads,
             self.cancelled,
             self.deadline_missed,
             self.streamed_ttft_percentile(50.0) / 1e3,
@@ -169,8 +180,11 @@ mod tests {
         m.cancelled = 2;
         m.deadline_missed = 1;
         m.streamed_ttft_us.lock().unwrap().add_us(2000.0);
+        m.tick_us.add(123.0);
+        m.threads = 4;
         let r = m.report();
         assert!(r.contains("requests=1"));
+        assert!(r.contains("threads=4"));
         assert!(r.contains("tokens_out=10"));
         assert!(r.contains("cancelled=2"));
         assert!(r.contains("deadline_miss=1"));

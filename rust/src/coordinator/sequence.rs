@@ -73,7 +73,11 @@ pub struct KvStats {
 /// Borrowed view into a batch-capable backend (see
 /// [`SeqBackend::batch_parts`]).  The engine groups sequences whose
 /// `model` Arcs are identical and runs them through one
-/// [`crate::model::Model::decode_batch`] call per tick.
+/// [`crate::model::Model::decode_batch`] call per tick — staged in the
+/// engine's persistent [`crate::model::BatchScratch`] and, with
+/// `num_threads > 1`, sharded across the engine's worker pool (the
+/// per-sequence [`crate::attention::AttnScratch`] inside `st` carries
+/// the policy's selection between the policy and attention phases).
 pub struct BatchParts<'a> {
     pub model: &'a Arc<Model>,
     pub st: &'a mut SeqState,

@@ -1,7 +1,7 @@
 //! Table regenerators (Tables 1-3).
 
 use super::common::{category_tasks, dense_prefill, run_task, EvalCtx, StrategyKind};
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, IndexSet, KvCache};
 use crate::config::TopKRule;
 use crate::kascade::LayerRole;
 use crate::stats::Timer;
@@ -129,27 +129,32 @@ fn time_decode_op(
     let d = cache.d;
     let mut out = vec![0.0f32; n_q * d];
     let mut cost = CostTracker::default();
+    let mut scratch = AttnScratch::new();
     // fixed index set for reuse timing (cost is shape-, not value-dependent)
-    let idx: Vec<Vec<u32>> = (0..cache.n_kv)
-        .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % cache.len as u32).collect())
-        .collect();
+    let fixed = IndexSet::from_nested(
+        &(0..cache.n_kv)
+            .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % cache.len as u32).collect())
+            .collect::<Vec<Vec<u32>>>(),
+    );
     let t = Timer::start();
     for _ in 0..reps {
         match role {
-            None => attention::decode_dense(q, cache, g, &mut out, &mut cost),
+            None => attention::decode_dense(q, cache, g, &mut out, &mut scratch.planes, &mut cost),
             Some(LayerRole::Anchor0) => {
                 // dense output + pooled scores + top-k
-                attention::decode_dense(q, cache, g, &mut out, &mut cost);
-                let pooled = attention::decode_pooled_scores(q, cache, g, &mut cost);
-                let _ = attention::select_topk(&pooled, k, &mut cost);
+                attention::decode_dense(q, cache, g, &mut out, &mut scratch.planes, &mut cost);
+                attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, &mut cost);
+                attention::select_topk(&mut scratch, k, &mut cost);
             }
             Some(LayerRole::Anchor) => {
-                let pooled = attention::decode_pooled_scores(q, cache, g, &mut cost);
-                let idx = attention::select_topk(&pooled, k, &mut cost);
-                attention::decode_sparse(q, cache, g, &idx, &mut out, &mut cost);
+                attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, &mut cost);
+                attention::select_topk(&mut scratch, k, &mut cost);
+                let AttnScratch { sel, planes } = &mut scratch;
+                attention::decode_sparse(q, cache, g, sel, &mut out, planes, &mut cost);
             }
             Some(LayerRole::Reuse { .. }) => {
-                attention::decode_sparse(q, cache, g, &idx, &mut out, &mut cost);
+                let planes = &mut scratch.planes;
+                attention::decode_sparse(q, cache, g, &fixed, &mut out, planes, &mut cost);
             }
         }
     }
@@ -169,24 +174,33 @@ fn time_prefill_tile(
     let tile = qs.len() / (n_q * d);
     let mut out = vec![0.0f32; tile * n_q * d];
     let mut cost = CostTracker::default();
-    let idx: Vec<Vec<u32>> = (0..cache.n_kv)
-        .map(|h| (0..k as u32).map(|i| (i * 13 + h as u32) % (start + 1) as u32).collect())
-        .collect();
+    let mut scratch = AttnScratch::new();
+    let fixed = IndexSet::from_nested(
+        &(0..cache.n_kv)
+            .map(|h| (0..k as u32).map(|i| (i * 13 + h as u32) % (start + 1) as u32).collect())
+            .collect::<Vec<Vec<u32>>>(),
+    );
     let t = Timer::start();
     match role {
-        None => attention::prefill_dense_tile(qs, start, cache, g, &mut out, &mut cost),
+        None => {
+            let planes = &mut scratch.planes;
+            attention::prefill_dense_tile(qs, start, cache, g, &mut out, planes, &mut cost)
+        }
         Some(LayerRole::Anchor0) => {
-            attention::prefill_dense_tile(qs, start, cache, g, &mut out, &mut cost);
-            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, &mut cost);
-            let _ = attention::select_topk(&pooled, k, &mut cost);
+            let planes = &mut scratch.planes;
+            attention::prefill_dense_tile(qs, start, cache, g, &mut out, planes, &mut cost);
+            attention::prefill_pooled_scores(qs, start, cache, g, &mut scratch.planes, &mut cost);
+            attention::select_topk(&mut scratch, k, &mut cost);
         }
         Some(LayerRole::Anchor) => {
-            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, &mut cost);
-            let idx = attention::select_topk(&pooled, k, &mut cost);
-            attention::prefill_sparse_tile(qs, start, cache, g, &idx, &mut out, &mut cost);
+            attention::prefill_pooled_scores(qs, start, cache, g, &mut scratch.planes, &mut cost);
+            attention::select_topk(&mut scratch, k, &mut cost);
+            let AttnScratch { sel, planes } = &mut scratch;
+            attention::prefill_sparse_tile(qs, start, cache, g, sel, &mut out, planes, &mut cost);
         }
         Some(LayerRole::Reuse { .. }) => {
-            attention::prefill_sparse_tile(qs, start, cache, g, &idx, &mut out, &mut cost);
+            let planes = &mut scratch.planes;
+            attention::prefill_sparse_tile(qs, start, cache, g, &fixed, &mut out, planes, &mut cost);
         }
     }
     t.us()

@@ -46,6 +46,7 @@ pub mod eval;
 pub mod jsonutil;
 pub mod kascade;
 pub mod model;
+pub mod pool;
 pub mod runtime;
 pub mod proptest_lite;
 pub mod server;

@@ -66,7 +66,7 @@ fn usage() -> ! {
          commands:\n\
            eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
            calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
-           serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--deadline-ms MS]\n\
+           serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--threads N] [--deadline-ms MS]\n\
            export-weights [--out PATH] [--seed S]\n\
            pjrt-smoke [--artifacts DIR]"
     );
@@ -146,9 +146,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             Box::new(NativeBackend::new(model.clone(), cap, policy))
         })
     };
+    let num_threads: usize = args.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(1);
     let mut engine = Engine::new(
         ServeConfig {
             num_blocks: (cap / 16 + 2) * 32,
+            num_threads,
             ..ServeConfig::default()
         },
         factory,

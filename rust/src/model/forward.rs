@@ -3,9 +3,10 @@
 //! distributions + importance samples) for the Kascade offline pipeline.
 
 use super::weights::Weights;
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, IndexSet, KvCache, ScorePlanes};
 use crate::config::ModelConfig;
 use crate::kascade::similarity::{CalibrationCapture, ProbeCapture};
+use crate::pool::{ScopedJob, WorkerPool};
 use crate::sparse::{Selection, SparsePolicy};
 use crate::tensor::{self, matmul_t, matvec_t, rmsnorm, rope};
 
@@ -23,6 +24,10 @@ pub struct SeqState {
     pub caches: Vec<KvCache>,
     pub pos: usize,
     pub cost: CostTracker,
+    /// Attention scratch arena: the policy's current selection plus the
+    /// kernel score planes.  Buffers keep their capacity across steps, so
+    /// the steady-state decode loop allocates nothing through here.
+    pub scratch: AttnScratch,
 }
 
 /// One sequence's slot in a step-batched decode call
@@ -41,6 +46,112 @@ pub struct CaptureRequest {
     pub probe_positions: Vec<usize>,
 }
 
+/// Caller-owned staging for [`Model::decode_batch`]: projection/MLP
+/// planes, per-sequence selections, per-(sequence, head) cost shards,
+/// per-worker score planes, and the output logits plane.  Buffers are
+/// resized (never shrunk in capacity) per call, so a steady-state engine
+/// reuses one `BatchScratch` with zero allocations per token.
+#[derive(Default)]
+pub struct BatchScratch {
+    xs: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    delta: Vec<f32>,
+    a: Vec<f32>,
+    bb: Vec<f32>,
+    logits: Vec<f32>,
+    vocab: usize,
+    sels: Vec<Selection>,
+    head_costs: Vec<CostTracker>,
+    job_planes: Vec<ScorePlanes>,
+}
+
+impl BatchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Batch-row `i`'s next-token logits from the most recent
+    /// [`Model::decode_batch`] call.
+    pub fn logits_row(&self, i: usize) -> &[f32] {
+        &self.logits[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    /// Size every plane for a batch of `b` rows (exact lengths — the
+    /// batched mat-muls assert them) and `threads` worker slots.
+    fn ensure(&mut self, cfg: &ModelConfig, b: usize, threads: usize) {
+        let dm = cfg.d_model;
+        let nqd = cfg.n_q_heads * cfg.d_head;
+        let nkd = cfg.n_kv_heads * cfg.d_head;
+        self.h.resize(b * dm, 0.0);
+        self.q.resize(b * nqd, 0.0);
+        self.k.resize(b * nkd, 0.0);
+        self.v.resize(b * nkd, 0.0);
+        self.attn.resize(b * nqd, 0.0);
+        self.delta.resize(b * dm, 0.0);
+        self.a.resize(b * cfg.d_ff, 0.0);
+        self.bb.resize(b * cfg.d_ff, 0.0);
+        self.logits.resize(b * cfg.vocab, 0.0);
+        self.sels.clear();
+        self.sels.resize(b, Selection::Dense);
+        if self.head_costs.len() < b * cfg.n_kv_heads {
+            self.head_costs.resize(b * cfg.n_kv_heads, CostTracker::default());
+        }
+        while self.job_planes.len() < threads {
+            self.job_planes.push(ScorePlanes::default());
+        }
+    }
+
+    /// Warm capacity for the zero-allocation tests: `b` rows, contexts up
+    /// to `len`.
+    pub fn reserve(&mut self, cfg: &ModelConfig, b: usize, len: usize) {
+        self.ensure(cfg, b, 1);
+        self.xs.reserve(b * cfg.d_model);
+        for p in &mut self.job_planes {
+            p.reserve(cfg.n_q_heads, cfg.n_kv_heads, len);
+        }
+    }
+}
+
+/// One `(sequence, KV head)` attention work item of the parallel decode
+/// phase: everything it touches is either shared-immutable (cache, query
+/// row, selection) or exclusively its own (output rows, cost shard), so
+/// work items schedule on any worker in any order without affecting
+/// results.
+struct HeadItem<'a> {
+    cache: &'a KvCache,
+    qrow: &'a [f32],
+    /// `None` = dense attention over the full cache.
+    sel: Option<&'a IndexSet>,
+    h: usize,
+    out: &'a mut [f32],
+    cost: &'a mut CostTracker,
+}
+
+/// Policy phase of one batched-decode layer for one sequence: append the
+/// freshly projected K/V row to the layer cache, then ask the sequence's
+/// policy for its selection (written into the sequence's own scratch).
+#[allow(clippy::too_many_arguments)]
+fn policy_phase(
+    r: &mut DecodeReq,
+    i: usize,
+    layer: usize,
+    g: usize,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nqd: usize,
+    nkd: usize,
+) -> Selection {
+    let st = &mut *r.st;
+    st.caches[layer].push(&k[i * nkd..(i + 1) * nkd], &v[i * nkd..(i + 1) * nkd]);
+    let cache = &st.caches[layer];
+    r.policy.decode(layer, &q[i * nqd..(i + 1) * nqd], cache, g, &mut st.scratch, &mut st.cost)
+}
+
 impl Model {
     pub fn new(cfg: ModelConfig, w: Weights) -> Self {
         Self { cfg, w }
@@ -57,7 +168,7 @@ impl Model {
         let caches = (0..self.cfg.n_layers)
             .map(|_| KvCache::with_opts(self.cfg.n_kv_heads, self.cfg.d_head, cap, 16, dtype))
             .collect();
-        SeqState { caches, pos: 0, cost: CostTracker::default() }
+        SeqState { caches, pos: 0, cost: CostTracker::default(), scratch: AttnScratch::new() }
     }
 
     /// KV bytes resident across all layers of `st`.
@@ -141,7 +252,8 @@ impl Model {
     ) -> (Vec<f32>, Option<CalibrationCapture>) {
         let cfg = &self.cfg;
         let t_total = tokens.len();
-        let base = st.pos;
+        let SeqState { caches, pos, cost, scratch } = st;
+        let base = *pos;
         let nqd = cfg.n_q_heads * cfg.d_head;
         // hidden states for the whole chunk
         let mut xs: Vec<f32> = Vec::with_capacity(t_total * cfg.d_model);
@@ -170,10 +282,10 @@ impl Model {
                 let x = &xs[t * cfg.d_model..(t + 1) * cfg.d_model];
                 let q = &mut qbuf[t * nqd..(t + 1) * nqd];
                 self.qkv_row(layer, x, base + t, q, &mut k, &mut v);
-                st.caches[layer].push(&k, &v);
+                caches[layer].push(&k, &v);
             }
             // attention per Q-tile
-            let cache = &st.caches[layer];
+            let cache = &caches[layer];
             let mut t0 = 0;
             while t0 < t_total {
                 let tlen = PREFILL_TILE.min(t_total - t0);
@@ -191,8 +303,10 @@ impl Model {
                     qs,
                     cache,
                     cfg.group(),
-                    &mut st.cost,
+                    scratch,
+                    cost,
                 );
+                let AttnScratch { sel: selset, planes } = scratch;
                 match sel {
                     Selection::Dense => attention::prefill_dense_tile(
                         qs,
@@ -200,16 +314,18 @@ impl Model {
                         cache,
                         cfg.group(),
                         out,
-                        &mut st.cost,
+                        planes,
+                        cost,
                     ),
-                    Selection::Sparse(idx) => attention::prefill_sparse_tile(
+                    Selection::Sparse => attention::prefill_sparse_tile(
                         qs,
                         base + t0,
                         cache,
                         cfg.group(),
-                        &idx,
+                        selset,
                         out,
-                        &mut st.cost,
+                        planes,
+                        cost,
                     ),
                 }
                 t0 += tlen;
@@ -222,14 +338,17 @@ impl Model {
                     }
                     let t = pp - base;
                     let q = &qbuf[t * nqd..(t + 1) * nqd];
-                    let pooled = attention::decode_pooled_scores_upto(
+                    attention::decode_pooled_scores_upto(
                         q,
                         pp + 1,
                         cache,
                         cfg.group(),
-                        &mut st.cost,
+                        &mut scratch.planes,
+                        cost,
                     );
-                    probes[pi].dists[layer] = pooled;
+                    probes[pi].dists[layer] = (0..scratch.planes.pooled_heads())
+                        .map(|h| scratch.planes.pooled_head(h).to_vec())
+                        .collect();
                     // importance: 1 - cos(x, x + wo * attn_out)
                     let x = &xs[t * cfg.d_model..(t + 1) * cfg.d_model];
                     let lw = &self.w.layers[layer];
@@ -251,7 +370,7 @@ impl Model {
                 self.post_row(layer, x, &attn[t * nqd..(t + 1) * nqd]);
             }
         }
-        st.pos += t_total;
+        *pos += t_total;
         let last = &xs[(t_total - 1) * cfg.d_model..t_total * cfg.d_model];
         let cap_out = capture.map(|_| CalibrationCapture {
             n_layers: cfg.n_layers,
@@ -273,6 +392,7 @@ impl Model {
             xs.extend_from_slice(self.w.embedding(t as usize, cfg.d_model));
         }
         let mut cost = CostTracker::default();
+        let mut planes = ScorePlanes::default();
         let mut qbuf = vec![0.0f32; t_total * nqd];
         let mut attn = vec![0.0f32; t_total * nqd];
         let mut k = vec![0.0; cfg.n_kv_heads * cfg.d_head];
@@ -288,7 +408,8 @@ impl Model {
             if l == layer {
                 return (qbuf, cache);
             }
-            attention::prefill_dense_tile(&qbuf, 0, &cache, cfg.group(), &mut attn, &mut cost);
+            let g = cfg.group();
+            attention::prefill_dense_tile(&qbuf, 0, &cache, g, &mut attn, &mut planes, &mut cost);
             for t in 0..t_total {
                 let x = unsafe {
                     std::slice::from_raw_parts_mut(
@@ -316,66 +437,99 @@ impl Model {
         let mut k = vec![0.0; cfg.n_kv_heads * cfg.d_head];
         let mut v = vec![0.0; cfg.n_kv_heads * cfg.d_head];
         let mut attn = vec![0.0; nqd];
+        let SeqState { caches, pos, cost, scratch } = st;
         for layer in 0..cfg.n_layers {
-            self.qkv_row(layer, &x, st.pos, &mut q, &mut k, &mut v);
-            st.caches[layer].push(&k, &v);
-            let cache = &st.caches[layer];
-            let sel = policy.decode(layer, &q, cache, cfg.group(), &mut st.cost);
+            self.qkv_row(layer, &x, *pos, &mut q, &mut k, &mut v);
+            caches[layer].push(&k, &v);
+            let cache = &caches[layer];
+            let sel = policy.decode(layer, &q, cache, cfg.group(), scratch, cost);
+            let AttnScratch { sel: selset, planes } = scratch;
             match sel {
                 Selection::Dense => {
-                    attention::decode_dense(&q, cache, cfg.group(), &mut attn, &mut st.cost)
+                    attention::decode_dense(&q, cache, cfg.group(), &mut attn, planes, cost)
                 }
-                Selection::Sparse(idx) => {
-                    attention::decode_sparse(&q, cache, cfg.group(), &idx, &mut attn, &mut st.cost)
+                Selection::Sparse => {
+                    let g = cfg.group();
+                    attention::decode_sparse(&q, cache, g, selset, &mut attn, planes, cost)
                 }
             }
             self.post_row(layer, &mut x, &attn);
         }
-        st.pos += 1;
+        *pos += 1;
         self.logits(&x)
     }
 
     /// One step-batched decode pass over `reqs` concurrent sequences,
     /// processed **layer-major over the batch**: per layer, one pass over
     /// each weight matrix serves every sequence's projection / MLP row
-    /// (via [`matmul_t`]), then attention runs per-sequence so each
-    /// sequence's [`KvCache`] and [`SparsePolicy`] (Kascade anchor /
-    /// reuse decisions) stay fully independent.
+    /// (via [`matmul_t`]); then, per layer, the per-sequence work splits
+    /// into a *policy phase* (KV append + [`SparsePolicy::decode`],
+    /// sharded across sequences) and an *attention phase* (one work item
+    /// per `(sequence, KV head)`, each writing its own disjoint output
+    /// rows) — both optionally fanned out over `pool`.
     ///
     /// Per-row accumulation order is identical to [`Model::decode_step`],
-    /// so the returned logits are **bitwise equal** to running the
-    /// sequences one at a time — the batch only amortizes weight reads,
-    /// the dominant memory-bandwidth cost at small contexts.
-    pub fn decode_batch(&self, reqs: &mut [DecodeReq]) -> Vec<Vec<f32>> {
+    /// and each parallel work item is fully self-contained (no
+    /// cross-thread reduction; cost shards fold back on the caller in
+    /// fixed order), so the logits in `scratch` are **bitwise equal** to
+    /// running the sequences one at a time at any thread count.
+    ///
+    /// All staging lives in the caller's [`BatchScratch`], and each
+    /// sequence's score planes live in its own [`SeqState::scratch`]:
+    /// with `pool == None` the steady-state call performs **zero heap
+    /// allocations** (asserted by `tests/alloc_steady_state.rs`).  The
+    /// parallel path allocates only the per-layer job boxes.
+    /// Read row `i`'s logits via [`BatchScratch::logits_row`].
+    pub fn decode_batch(
+        &self,
+        reqs: &mut [DecodeReq],
+        scratch: &mut BatchScratch,
+        pool: Option<&WorkerPool>,
+    ) {
         let b = reqs.len();
-        if b == 0 {
-            return Vec::new();
-        }
         let cfg = &self.cfg;
+        scratch.vocab = cfg.vocab;
+        if b == 0 {
+            scratch.logits.clear();
+            return;
+        }
         let dm = cfg.d_model;
         let nqd = cfg.n_q_heads * cfg.d_head;
         let nkd = cfg.n_kv_heads * cfg.d_head;
-        let mut xs: Vec<f32> = Vec::with_capacity(b * dm);
+        let n_kv = cfg.n_kv_heads;
+        let g = cfg.group();
+        let gd = g * cfg.d_head;
+        let threads = pool.map(|p| p.size()).unwrap_or(1).max(1);
+        scratch.ensure(cfg, b, threads);
+        let BatchScratch {
+            xs,
+            h,
+            q,
+            k,
+            v,
+            attn,
+            delta,
+            a,
+            bb,
+            logits,
+            sels,
+            head_costs,
+            job_planes,
+            ..
+        } = scratch;
+        xs.clear();
         for r in reqs.iter() {
             xs.extend_from_slice(self.w.embedding(r.token as usize, dm));
         }
-        let mut h = vec![0.0f32; b * dm];
-        let mut q = vec![0.0f32; b * nqd];
-        let mut k = vec![0.0f32; b * nkd];
-        let mut v = vec![0.0f32; b * nkd];
-        let mut attn = vec![0.0f32; b * nqd];
-        let mut delta = vec![0.0f32; b * dm];
-        let mut a = vec![0.0f32; b * cfg.d_ff];
-        let mut bb = vec![0.0f32; b * cfg.d_ff];
         for layer in 0..cfg.n_layers {
             let lw = &self.w.layers[layer];
             // batched QKV projection: one pass over wq/wk/wv for all rows
             for i in 0..b {
                 rmsnorm(&xs[i * dm..(i + 1) * dm], &lw.ln1, &mut h[i * dm..(i + 1) * dm]);
             }
-            matmul_t(&h, &lw.wq, b, dm, nqd, &mut q);
-            matmul_t(&h, &lw.wk, b, dm, nkd, &mut k);
-            matmul_t(&h, &lw.wv, b, dm, nkd, &mut v);
+            matmul_t(h, &lw.wq, b, dm, nqd, q);
+            matmul_t(h, &lw.wk, b, dm, nkd, k);
+            matmul_t(h, &lw.wv, b, dm, nkd, v);
             if cfg.rope {
                 for (i, r) in reqs.iter().enumerate() {
                     let pos = r.st.pos;
@@ -389,38 +543,129 @@ impl Model {
                     }
                 }
             }
-            // per-sequence policy-driven attention (own cache, own policy)
-            for (i, r) in reqs.iter_mut().enumerate() {
-                let st = &mut *r.st;
-                st.caches[layer].push(&k[i * nkd..(i + 1) * nkd], &v[i * nkd..(i + 1) * nkd]);
-                let cache = &st.caches[layer];
-                let qrow = &q[i * nqd..(i + 1) * nqd];
-                let out = &mut attn[i * nqd..(i + 1) * nqd];
-                let sel = r.policy.decode(layer, qrow, cache, cfg.group(), &mut st.cost);
-                match sel {
-                    Selection::Dense => {
-                        attention::decode_dense(qrow, cache, cfg.group(), out, &mut st.cost)
+            // --- policy phase: per-sequence KV append + sparse decision,
+            // sharded across sequences (each touches only its own state)
+            if threads <= 1 || b == 1 {
+                for (i, (r, sel)) in reqs.iter_mut().zip(sels.iter_mut()).enumerate() {
+                    *sel = policy_phase(r, i, layer, g, q, k, v, nqd, nkd);
+                }
+            } else {
+                let chunk = b.div_ceil(threads);
+                let (q2, k2, v2): (&[f32], &[f32], &[f32]) = (&q[..], &k[..], &v[..]);
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(threads);
+                for (ci, (rc, sc)) in
+                    reqs.chunks_mut(chunk).zip(sels.chunks_mut(chunk)).enumerate()
+                {
+                    let base = ci * chunk;
+                    jobs.push(Box::new(move || {
+                        for (j, (r, sel)) in rc.iter_mut().zip(sc.iter_mut()).enumerate() {
+                            *sel = policy_phase(r, base + j, layer, g, q2, k2, v2, nqd, nkd);
+                        }
+                    }));
+                }
+                pool.expect("threads > 1 implies pool").run(jobs);
+            }
+            // --- attention phase: one self-contained work item per
+            // (sequence, KV head), each with disjoint output rows
+            if threads <= 1 {
+                let planes = &mut job_planes[0];
+                for (i, r) in reqs.iter_mut().enumerate() {
+                    let st = &mut *r.st;
+                    let cache = &st.caches[layer];
+                    let qrow = &q[i * nqd..(i + 1) * nqd];
+                    let out = &mut attn[i * nqd..(i + 1) * nqd];
+                    match sels[i] {
+                        Selection::Dense => {
+                            attention::decode_dense(qrow, cache, g, out, planes, &mut st.cost)
+                        }
+                        Selection::Sparse => {
+                            let sel = &st.scratch.sel;
+                            attention::decode_sparse(qrow, cache, g, sel, out, planes, &mut st.cost)
+                        }
                     }
-                    Selection::Sparse(idx) => {
-                        attention::decode_sparse(qrow, cache, cfg.group(), &idx, out, &mut st.cost)
+                }
+            } else {
+                for c in head_costs[..b * n_kv].iter_mut() {
+                    *c = CostTracker::default();
+                }
+                let mut items: Vec<HeadItem<'_>> = Vec::with_capacity(b * n_kv);
+                {
+                    let mut outs = attn[..b * nqd].chunks_mut(gd);
+                    let mut costs = head_costs[..b * n_kv].iter_mut();
+                    for (i, r) in reqs.iter().enumerate() {
+                        let st: &SeqState = &*r.st;
+                        let cache = &st.caches[layer];
+                        let qrow = &q[i * nqd..(i + 1) * nqd];
+                        let sel = match sels[i] {
+                            Selection::Dense => None,
+                            Selection::Sparse => Some(&st.scratch.sel),
+                        };
+                        for hh in 0..n_kv {
+                            items.push(HeadItem {
+                                cache,
+                                qrow,
+                                sel,
+                                h: hh,
+                                out: outs.next().expect("attn sized b*nqd"),
+                                cost: costs.next().expect("head_costs sized b*n_kv"),
+                            });
+                        }
+                    }
+                }
+                let per = items.len().div_ceil(threads);
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(threads);
+                for (chunk, planes) in items.chunks_mut(per).zip(job_planes.iter_mut()) {
+                    jobs.push(Box::new(move || {
+                        for it in chunk.iter_mut() {
+                            match it.sel {
+                                None => attention::decode_dense_head(
+                                    it.qrow,
+                                    it.h,
+                                    it.cache.len,
+                                    it.cache,
+                                    g,
+                                    it.out,
+                                    planes,
+                                    it.cost,
+                                ),
+                                Some(s) => attention::decode_sparse_head(
+                                    it.qrow,
+                                    it.h,
+                                    s.head(it.h),
+                                    it.cache,
+                                    g,
+                                    it.out,
+                                    planes,
+                                    it.cost,
+                                ),
+                            }
+                        }
+                    }));
+                }
+                pool.expect("threads > 1 implies pool").run(jobs);
+                drop(items);
+                // fold the per-(sequence, head) cost shards back, fixed order
+                for (i, r) in reqs.iter_mut().enumerate() {
+                    for hh in 0..n_kv {
+                        r.st.cost.merge(&head_costs[i * n_kv + hh]);
                     }
                 }
             }
             // batched residual write + SwiGLU MLP
-            matmul_t(&attn, &lw.wo, b, nqd, dm, &mut delta);
+            matmul_t(attn, &lw.wo, b, nqd, dm, delta);
             for (xi, di) in xs.iter_mut().zip(delta.iter()) {
                 *xi += di;
             }
             for i in 0..b {
                 rmsnorm(&xs[i * dm..(i + 1) * dm], &lw.ln2, &mut h[i * dm..(i + 1) * dm]);
             }
-            matmul_t(&h, &lw.w1, b, dm, cfg.d_ff, &mut a);
-            matmul_t(&h, &lw.w3, b, dm, cfg.d_ff, &mut bb);
+            matmul_t(h, &lw.w1, b, dm, cfg.d_ff, a);
+            matmul_t(h, &lw.w3, b, dm, cfg.d_ff, bb);
             for (ai, bi) in a.iter_mut().zip(bb.iter()) {
                 let s = *ai / (1.0 + (-*ai).exp()); // silu
                 *ai = s * bi;
             }
-            matmul_t(&a, &lw.w2, b, cfg.d_ff, dm, &mut delta);
+            matmul_t(a, &lw.w2, b, cfg.d_ff, dm, delta);
             for (xi, di) in xs.iter_mut().zip(delta.iter()) {
                 *xi += di;
             }
@@ -428,13 +673,11 @@ impl Model {
         for r in reqs.iter_mut() {
             r.st.pos += 1;
         }
-        // batched unembedding
+        // batched unembedding into the scratch's logits plane
         for i in 0..b {
             rmsnorm(&xs[i * dm..(i + 1) * dm], &self.w.lnf, &mut h[i * dm..(i + 1) * dm]);
         }
-        let mut logits = vec![0.0f32; b * cfg.vocab];
-        matmul_t(&h, &self.w.w_u, b, dm, cfg.vocab, &mut logits);
-        (0..b).map(|i| logits[i * cfg.vocab..(i + 1) * cfg.vocab].to_vec()).collect()
+        matmul_t(h, &self.w.w_u, b, dm, cfg.vocab, logits);
     }
 
     /// Greedy decode until `stop(token)` or `max_new` tokens.
@@ -591,6 +834,7 @@ mod tests {
 
         let m = random_model(11);
         let mut r = Rng::new(12);
+        let mut scratch = BatchScratch::new();
         for bsz in [1usize, 2, 5, 8] {
             // per-sequence prompts of different lengths, mixed policies
             let mut seq_sts = Vec::new();
@@ -642,14 +886,99 @@ mod tests {
                     .zip(last_toks.iter())
                     .map(|((st, pol), &token)| DecodeReq { token, st, policy: pol.as_mut() })
                     .collect();
-                let bat_logits = m.decode_batch(&mut reqs);
+                m.decode_batch(&mut reqs, &mut scratch, None);
                 drop(reqs);
                 for i in 0..bsz {
-                    for (a, b) in seq_logits[i].iter().zip(&bat_logits[i]) {
+                    let row = scratch.logits_row(i);
+                    for (a, b) in seq_logits[i].iter().zip(row) {
                         assert_eq!(a.to_bits(), b.to_bits(), "bsz={bsz} seq={i}");
                     }
-                    last_toks[i] = tensor::argmax(&bat_logits[i]) as u32;
+                    last_toks[i] = tensor::argmax(row) as u32;
                 }
+            }
+        }
+    }
+
+    /// Parallel decode_batch (worker pool, sequence + KV-head sharding)
+    /// must be bitwise-identical to the serial path: every work item is
+    /// self-contained and cost shards fold back in fixed order.
+    #[test]
+    fn decode_batch_parallel_bitwise_equals_serial() {
+        use crate::config::TopKRule;
+        use crate::kascade::KascadePlan;
+        use crate::pool::WorkerPool;
+        use crate::sparse::KascadePolicy;
+
+        let m = random_model(31);
+        let mut r = Rng::new(32);
+        for threads in [2usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let bsz = 5usize;
+            let mk_pol = |i: usize| -> Box<dyn crate::sparse::SparsePolicy> {
+                if i % 2 == 0 {
+                    Box::new(DensePolicy)
+                } else {
+                    Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+                        2,
+                        2,
+                        vec![0],
+                        TopKRule::new(0.5, 4),
+                    )))
+                }
+            };
+            let mut ser_sts = Vec::new();
+            let mut ser_pols: Vec<Box<dyn crate::sparse::SparsePolicy>> = Vec::new();
+            let mut par_sts = Vec::new();
+            let mut par_pols: Vec<Box<dyn crate::sparse::SparsePolicy>> = Vec::new();
+            let mut toks = Vec::new();
+            for i in 0..bsz {
+                let plen = 6 + r.below(20);
+                let prompt: Vec<u32> = (0..plen).map(|_| r.below(64) as u32).collect();
+                let mut st_a = m.new_state(96);
+                let mut pol_a = mk_pol(i);
+                m.prefill(&prompt, &mut st_a, pol_a.as_mut(), None);
+                let mut st_b = m.new_state(96);
+                let mut pol_b = mk_pol(i);
+                m.prefill(&prompt, &mut st_b, pol_b.as_mut(), None);
+                ser_sts.push(st_a);
+                ser_pols.push(pol_a);
+                par_sts.push(st_b);
+                par_pols.push(pol_b);
+                toks.push(r.below(64) as u32);
+            }
+            let mut ser_scr = BatchScratch::new();
+            let mut par_scr = BatchScratch::new();
+            for _step in 0..5 {
+                let mut ser_reqs: Vec<DecodeReq> = ser_sts
+                    .iter_mut()
+                    .zip(ser_pols.iter_mut())
+                    .zip(toks.iter())
+                    .map(|((st, pol), &token)| DecodeReq { token, st, policy: pol.as_mut() })
+                    .collect();
+                m.decode_batch(&mut ser_reqs, &mut ser_scr, None);
+                drop(ser_reqs);
+                let mut par_reqs: Vec<DecodeReq> = par_sts
+                    .iter_mut()
+                    .zip(par_pols.iter_mut())
+                    .zip(toks.iter())
+                    .map(|((st, pol), &token)| DecodeReq { token, st, policy: pol.as_mut() })
+                    .collect();
+                m.decode_batch(&mut par_reqs, &mut par_scr, Some(&pool));
+                drop(par_reqs);
+                for i in 0..bsz {
+                    let (a, b) = (ser_scr.logits_row(i), par_scr.logits_row(i));
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "threads={threads} seq={i}");
+                    }
+                    toks[i] = tensor::argmax(a) as u32;
+                }
+            }
+            // cost accounting identical too (shards merged in fixed order)
+            for (a, b) in ser_sts.iter().zip(&par_sts) {
+                assert_eq!(a.cost.score_key_reads, b.cost.score_key_reads);
+                assert_eq!(a.cost.attend_kv_reads, b.cost.attend_kv_reads);
+                assert_eq!(a.cost.topk_items, b.cost.topk_items);
+                assert_eq!(a.pos, b.pos);
             }
         }
     }

@@ -8,6 +8,6 @@ pub mod forward;
 pub mod synth;
 pub mod weights;
 
-pub use forward::{CaptureRequest, DecodeReq, Model, SeqState, PREFILL_TILE};
+pub use forward::{BatchScratch, CaptureRequest, DecodeReq, Model, SeqState, PREFILL_TILE};
 pub use synth::{SynthSpec, VocabLayout};
 pub use weights::{LayerWeights, Weights};

@@ -1,0 +1,188 @@
+//! Persistent worker pool behind the deterministic parallel engine tick.
+//!
+//! std::thread + channels only (no external crates): `threads` workers
+//! pull boxed jobs off one shared channel and run them.  [`WorkerPool::run`]
+//! is a *scoped* batch submit — it blocks until every job of the batch has
+//! finished, which is what makes handing the jobs borrowed data sound (the
+//! borrows cannot outlive the call; see the safety note in `run`).
+//!
+//! Determinism: the pool imposes no ordering of its own.  Callers obtain
+//! bitwise-reproducible results by handing each job a *disjoint* output
+//! slot (no cross-job reduction) and folding any shared accounting back
+//! on the caller thread in a fixed order — exactly how
+//! [`crate::model::Model::decode_batch`] shards its per-(sequence, KV-head)
+//! attention work.  See `docs/perf.md`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A batch job borrowing data from the submitting scope ([`WorkerPool::run`]).
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` persistent workers (min 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("kascade-worker-{i}"))
+                    .spawn(move || loop {
+                        // the textbook shared-receiver pattern: hold the
+                        // lock only across the blocking recv
+                        let job = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match job {
+                            // a panicking job must not kill the worker:
+                            // the DoneGuard reports it to the submitter
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run a batch of jobs to completion on the pool, blocking until the
+    /// last one finishes.  A job that panicked re-panics here, on the
+    /// submitting thread.
+    ///
+    /// Safety of the lifetime erasure below: the jobs may borrow from the
+    /// caller's scope (`'env`).  Each job is wrapped so that a completion
+    /// token is sent on a private channel even if it panics (via the
+    /// `DoneGuard` drop), and this function does not return until it has
+    /// received exactly one token per job — so every borrow handed to a
+    /// worker provably ends before `run` returns, which is the invariant
+    /// `'env: 'static` erasure needs.  (This is the standard scoped-pool
+    /// construction; std::thread::scope cannot be used here because the
+    /// workers are persistent across calls.)
+    pub fn run<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let (done_tx, done_rx) = channel::<bool>();
+        let tx = self.tx.as_ref().expect("worker pool is live");
+        for job in jobs {
+            // lifetime erasure, justified by the completion barrier below
+            let job: Job = unsafe { std::mem::transmute::<ScopedJob<'env>, Job>(job) };
+            let done = done_tx.clone();
+            tx.send(Box::new(move || {
+                let mut guard = DoneGuard { tx: done, ok: false };
+                job();
+                guard.ok = true;
+            }))
+            .expect("worker pool hung up");
+        }
+        let mut ok = true;
+        for _ in 0..n {
+            ok &= done_rx.recv().expect("pool worker died mid-batch");
+        }
+        assert!(ok, "a worker-pool job panicked");
+    }
+}
+
+/// Sends the job's completion token even when the job unwinds.
+struct DoneGuard {
+    tx: Sender<bool>,
+    ok: bool,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(self.ok);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the channel; workers exit their loop
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_to_completion() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0u64; 64];
+        for round in 1..4u64 {
+            let jobs: Vec<ScopedJob<'_>> = out
+                .chunks_mut(7)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let f: ScopedJob<'_> = Box::new(move || {
+                        for (j, x) in chunk.iter_mut().enumerate() {
+                            *x += round * (i * 100 + j) as u64;
+                        }
+                    });
+                    f
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        // 1x + 2x + 3x = 6x of the per-slot constant
+        for (i, &x) in out.iter().enumerate() {
+            let slot = ((i / 7) * 100 + i % 7) as u64;
+            assert_eq!(x, 6 * slot, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_and_pool_drops_clean() {
+        let pool = WorkerPool::new(2);
+        pool.run(Vec::new());
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (0..8)
+            .map(|_| {
+                let f: ScopedJob<'_> = Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                f
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+        drop(pool); // joins workers without hanging
+    }
+
+    #[test]
+    #[should_panic(expected = "worker-pool job panicked")]
+    fn job_panic_surfaces_on_the_submitter() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<ScopedJob<'_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("boom")),
+            Box::new(|| {}),
+        ];
+        pool.run(jobs);
+    }
+}

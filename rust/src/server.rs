@@ -16,8 +16,9 @@ use crate::coordinator::{
     handle_pair, Router, Scheduler, SeqBackend, SeqPhase, Sequence, ServeMetrics, Session,
     WorkItem,
 };
-use crate::model::{DecodeReq, Model};
-use crate::stats::LatencyHist;
+use crate::model::{BatchScratch, DecodeReq, Model};
+use crate::pool::WorkerPool;
+use crate::stats::{LatencyHist, Timer};
 
 /// The session API, re-exported so front-end callers can pull everything
 /// from one module.
@@ -59,18 +60,30 @@ pub struct Engine {
     /// the tick loop compacts those away once they outnumber live
     /// entries, keeping the queue O(live snapshots)
     snapshot_order: VecDeque<u64>,
+    /// persistent staging for the step-batched decode pass — reused every
+    /// tick so the steady-state decode loop allocates nothing
+    batch_scratch: BatchScratch,
+    /// persistent workers for the parallel tick
+    /// ([`ServeConfig::num_threads`] > 1); `None` = serial
+    pool: Option<WorkerPool>,
 }
 
 impl Engine {
     pub fn new(cfg: ServeConfig, factory: LocalBackendFactory) -> Self {
+        let threads = cfg.num_threads.max(1);
+        let pool = (threads > 1).then(|| WorkerPool::new(threads));
+        let mut metrics = ServeMetrics::new();
+        metrics.threads = threads;
         Self {
             sched: Scheduler::new(cfg),
             seqs: HashMap::new(),
-            metrics: ServeMetrics::new(),
+            metrics,
             factory,
             next_id: 0,
             snapshots: HashMap::new(),
             snapshot_order: VecDeque::new(),
+            batch_scratch: BatchScratch::new(),
+            pool,
         }
     }
 
@@ -129,6 +142,7 @@ impl Engine {
     /// execute it, retire finished.  Returns the number of work items
     /// executed.
     pub fn tick(&mut self) -> usize {
+        let tick_timer = Timer::start();
         self.sweep_sessions();
         let batch = {
             let seqs = &self.seqs;
@@ -212,6 +226,7 @@ impl Engine {
             .sum();
         self.metrics.sample_kv_bytes(kv_bytes);
         self.retire();
+        self.metrics.tick_us.add(tick_timer.us());
         n
     }
 
@@ -278,6 +293,8 @@ impl Engine {
         let t0 = Instant::now();
         let use_batch = self.sched.cfg.batched_decode;
         let metrics = &mut self.metrics;
+        let scratch = &mut self.batch_scratch;
+        let pool = self.pool.as_ref();
         let idset: HashSet<u64> = ids.iter().copied().collect();
         let mut by_id: HashMap<u64, &mut Sequence> = self
             .seqs
@@ -335,11 +352,11 @@ impl Engine {
                 let parts = s.backend.batch_parts().expect("probed batchable");
                 reqs.push(DecodeReq { token, st: parts.st, policy: parts.policy });
             }
-            let logits = model.decode_batch(&mut reqs);
+            model.decode_batch(&mut reqs, scratch, pool);
             drop(reqs);
             metrics.decode_batch.add_us(group.len() as f64);
-            for (s, l) in group.iter_mut().zip(logits.iter()) {
-                s.apply_decoded_logits(l);
+            for (j, s) in group.iter_mut().enumerate() {
+                s.apply_decoded_logits(scratch.logits_row(j));
                 tokens_done += 1;
             }
         }

@@ -1,33 +1,65 @@
 //! Serve-time Kascade policy: anchor layers extract Top-k, reuse layers
 //! consume the indices after head remapping (Secs. 3.2-3.5).
+//!
+//! All index state lives in flat [`IndexSet`]s whose buffers are reused
+//! across steps: anchor refreshes copy the scratch selection into the
+//! per-layer slot in place, reuse layers remap straight into the scratch
+//! — the steady-state decode path allocates nothing.
 
 use super::{Selection, SparsePolicy};
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, IndexSet, KvCache};
 use crate::kascade::{KascadePlan, LayerRole};
 
 /// Head-aware Kascade (the paper's default).
 pub struct KascadePolicy {
     pub plan: KascadePlan,
-    /// Last Top-k index sets per anchor layer (decode path).
-    decode_idx: Vec<Option<Vec<Vec<u32>>>>,
+    /// Last Top-k index sets per anchor layer (decode path); valid only
+    /// where `decode_has` is set (buffers are retained across dense
+    /// fallbacks so re-going sparse never reallocates).
+    decode_idx: Vec<IndexSet>,
+    decode_has: Vec<bool>,
     /// Per anchor layer, per **absolute** Q-tile index sets (prefill
     /// path).  Tiles are keyed by `start / PREFILL_TILE` so state stays
     /// consistent across chunked-prefill calls; an anchor that falls back
     /// to dense clears its slot (empty = no indices for this tile).
-    prefill_idx: Vec<Vec<Vec<Vec<u32>>>>,
+    prefill_idx: Vec<Vec<IndexSet>>,
 }
 
 impl KascadePolicy {
     pub fn new(plan: KascadePlan) -> Self {
         let n = plan.n_layers;
-        Self { plan, decode_idx: vec![None; n], prefill_idx: vec![Vec::new(); n] }
+        Self {
+            plan,
+            decode_idx: (0..n).map(|_| IndexSet::new()).collect(),
+            decode_has: vec![false; n],
+            prefill_idx: (0..n).map(|_| Vec::new()).collect(),
+        }
     }
 
-    fn remap(&self, layer: usize, anchor_idx: &[Vec<u32>]) -> Vec<Vec<u32>> {
-        self.plan.head_map[layer]
-            .iter()
-            .map(|&ha| anchor_idx[ha].clone())
-            .collect()
+    /// Head-remap `src`'s per-head sets into `sel` (layer's head h reads
+    /// the anchor's head `head_map[layer][h]`).
+    fn remap_into(head_map: &[usize], src: &IndexSet, sel: &mut IndexSet) {
+        sel.clear();
+        for &ha in head_map {
+            sel.extend_head(src.head(ha));
+        }
+    }
+
+    /// Grow `slot` to cover `tile` and return its entry.
+    fn slot_mut(slot: &mut Vec<IndexSet>, tile: usize) -> &mut IndexSet {
+        while slot.len() <= tile {
+            slot.push(IndexSet::new());
+        }
+        &mut slot[tile]
+    }
+
+    #[cfg(test)]
+    pub(crate) fn decode_set(&self, layer: usize) -> Option<&IndexSet> {
+        if self.decode_has[layer] {
+            Some(&self.decode_idx[layer])
+        } else {
+            None
+        }
     }
 }
 
@@ -37,7 +69,7 @@ impl SparsePolicy for KascadePolicy {
     }
 
     fn reset(&mut self) {
-        self.decode_idx.iter_mut().for_each(|s| *s = None);
+        self.decode_has.iter_mut().for_each(|s| *s = false);
         self.prefill_idx.iter_mut().for_each(|s| s.clear());
     }
 
@@ -47,6 +79,7 @@ impl SparsePolicy for KascadePolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         let k = self.plan.topk.k(cache.len);
@@ -54,27 +87,38 @@ impl SparsePolicy for KascadePolicy {
             LayerRole::Anchor0 => {
                 // dense output; still extract fresh indices for the segment
                 if k < cache.len {
-                    let pooled = attention::decode_pooled_scores(q, cache, g, cost);
-                    self.decode_idx[layer] = Some(attention::select_topk(&pooled, k, cost));
+                    attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+                    attention::select_topk(scratch, k, cost);
+                    self.decode_idx[layer].copy_from(&scratch.sel);
+                    self.decode_has[layer] = true;
                 } else {
-                    self.decode_idx[layer] = None;
+                    self.decode_has[layer] = false;
                 }
                 Selection::Dense
             }
             LayerRole::Anchor => {
                 if k >= cache.len {
-                    self.decode_idx[layer] = None;
+                    self.decode_has[layer] = false;
                     return Selection::Dense;
                 }
-                let pooled = attention::decode_pooled_scores(q, cache, g, cost);
-                let idx = attention::select_topk(&pooled, k, cost);
-                self.decode_idx[layer] = Some(idx.clone());
-                Selection::Sparse(idx)
+                attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+                attention::select_topk(scratch, k, cost);
+                self.decode_idx[layer].copy_from(&scratch.sel);
+                self.decode_has[layer] = true;
+                Selection::Sparse
             }
-            LayerRole::Reuse { anchor } => match &self.decode_idx[anchor] {
-                Some(idx) => Selection::Sparse(self.remap(layer, idx)),
-                None => Selection::Dense, // anchor ran dense (short context)
-            },
+            LayerRole::Reuse { anchor } => {
+                if self.decode_has[anchor] {
+                    Self::remap_into(
+                        &self.plan.head_map[layer],
+                        &self.decode_idx[anchor],
+                        &mut scratch.sel,
+                    );
+                    Selection::Sparse
+                } else {
+                    Selection::Dense // anchor ran dense (short context)
+                }
+            }
         }
     }
 
@@ -86,47 +130,44 @@ impl SparsePolicy for KascadePolicy {
         qs: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         let n_q = cache.n_kv * g;
         let tile_len = qs.len() / (n_q * cache.d);
         let kv_len = start + tile_len;
         let k = self.plan.topk.k(kv_len);
-        // always write the slot: a dense fallback (None) must CLEAR any
+        // always write the slot: a dense fallback must CLEAR any
         // previously stored tile so a reuse layer can never go sparse with
         // indices its anchor did not produce for this query range
-        let store = |slot: &mut Vec<Vec<Vec<u32>>>, tile: usize, idx: Option<Vec<Vec<u32>>>| {
-            while slot.len() <= tile {
-                slot.push(Vec::new());
-            }
-            slot[tile] = idx.unwrap_or_default();
-        };
         match self.plan.role(layer) {
             LayerRole::Anchor0 => {
                 if k < kv_len {
-                    let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
-                    let idx = attention::select_topk(&pooled, k, cost);
-                    store(&mut self.prefill_idx[layer], tile, Some(idx));
+                    let planes = &mut scratch.planes;
+                    attention::prefill_pooled_scores(qs, start, cache, g, planes, cost);
+                    attention::select_topk(scratch, k, cost);
+                    Self::slot_mut(&mut self.prefill_idx[layer], tile).copy_from(&scratch.sel);
                 } else {
-                    store(&mut self.prefill_idx[layer], tile, None);
+                    Self::slot_mut(&mut self.prefill_idx[layer], tile).clear();
                 }
                 Selection::Dense
             }
             LayerRole::Anchor => {
                 if k >= kv_len {
-                    store(&mut self.prefill_idx[layer], tile, None);
+                    Self::slot_mut(&mut self.prefill_idx[layer], tile).clear();
                     return Selection::Dense;
                 }
-                let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
-                let idx = attention::select_topk(&pooled, k, cost);
-                store(&mut self.prefill_idx[layer], tile, Some(idx.clone()));
-                Selection::Sparse(idx)
+                let planes = &mut scratch.planes;
+                attention::prefill_pooled_scores(qs, start, cache, g, planes, cost);
+                attention::select_topk(scratch, k, cost);
+                Self::slot_mut(&mut self.prefill_idx[layer], tile).copy_from(&scratch.sel);
+                Selection::Sparse
             }
             LayerRole::Reuse { anchor } => {
                 let slot = &self.prefill_idx[anchor];
                 if tile < slot.len() && !slot[tile].is_empty() {
-                    let idx = self.remap(layer, &slot[tile]);
-                    Selection::Sparse(idx)
+                    Self::remap_into(&self.plan.head_map[layer], &slot[tile], &mut scratch.sel);
+                    Selection::Sparse
                 } else {
                     Selection::Dense
                 }
@@ -149,28 +190,14 @@ pub struct KascadeAllPooledPolicy {
     pub plan: KascadePlan,
     decode_idx: Vec<Option<Vec<u32>>>,
     prefill_idx: Vec<Vec<Vec<u32>>>,
+    /// reused all-heads pooled distribution
+    all: Vec<f32>,
 }
 
 impl KascadeAllPooledPolicy {
     pub fn new(plan: KascadePlan) -> Self {
         let n = plan.n_layers;
-        Self { plan, decode_idx: vec![None; n], prefill_idx: vec![Vec::new(); n] }
-    }
-
-    fn pool_all(pooled: &[Vec<f32>]) -> Vec<f32> {
-        let len = pooled[0].len();
-        let inv = 1.0 / pooled.len() as f32;
-        let mut out = vec![0.0f32; len];
-        for head in pooled {
-            for (o, &x) in out.iter_mut().zip(head.iter()) {
-                *o += x * inv;
-            }
-        }
-        out
-    }
-
-    fn broadcast(&self, idx: &[u32]) -> Vec<Vec<u32>> {
-        vec![idx.to_vec(); self.plan.n_kv_heads]
+        Self { plan, decode_idx: vec![None; n], prefill_idx: vec![Vec::new(); n], all: Vec::new() }
     }
 }
 
@@ -190,18 +217,21 @@ impl SparsePolicy for KascadeAllPooledPolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         let k = self.plan.topk.k(cache.len);
-        let extract = |cost: &mut CostTracker| {
-            let pooled = attention::decode_pooled_scores(q, cache, g, cost);
-            let all = Self::pool_all(&pooled);
-            cost.topk_items += all.len() as u64;
-            crate::tensor::topk_indices(&all, k)
-        };
+        let n_kv = cache.n_kv;
         match self.plan.role(layer) {
             LayerRole::Anchor0 => {
-                self.decode_idx[layer] = (k < cache.len).then(|| extract(cost));
+                self.decode_idx[layer] = if k < cache.len {
+                    attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+                    super::pool_all_into(&scratch.planes, &mut self.all);
+                    cost.topk_items += self.all.len() as u64;
+                    Some(crate::tensor::topk_indices(&self.all, k))
+                } else {
+                    None
+                };
                 Selection::Dense
             }
             LayerRole::Anchor => {
@@ -209,12 +239,19 @@ impl SparsePolicy for KascadeAllPooledPolicy {
                     self.decode_idx[layer] = None;
                     return Selection::Dense;
                 }
-                let idx = extract(cost);
-                self.decode_idx[layer] = Some(idx.clone());
-                Selection::Sparse(self.broadcast(&idx))
+                attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+                super::pool_all_into(&scratch.planes, &mut self.all);
+                cost.topk_items += self.all.len() as u64;
+                let idx = crate::tensor::topk_indices(&self.all, k);
+                super::broadcast_into(&idx, n_kv, &mut scratch.sel);
+                self.decode_idx[layer] = Some(idx);
+                Selection::Sparse
             }
             LayerRole::Reuse { anchor } => match &self.decode_idx[anchor] {
-                Some(idx) => Selection::Sparse(self.broadcast(idx)),
+                Some(idx) => {
+                    super::broadcast_into(idx, n_kv, &mut scratch.sel);
+                    Selection::Sparse
+                }
                 None => Selection::Dense,
             },
         }
@@ -228,18 +265,14 @@ impl SparsePolicy for KascadeAllPooledPolicy {
         qs: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         let n_q = cache.n_kv * g;
+        let n_kv = cache.n_kv;
         let tile_len = qs.len() / (n_q * cache.d);
         let kv_len = start + tile_len;
         let k = self.plan.topk.k(kv_len);
-        let extract = |cost: &mut CostTracker| {
-            let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
-            let all = Self::pool_all(&pooled);
-            cost.topk_items += all.len() as u64;
-            crate::tensor::topk_indices(&all, k)
-        };
         // as in [`KascadePolicy`]: dense fallbacks clear the slot, keyed
         // by absolute tile, so stale indices never leak across chunks
         let store = |slot: &mut Vec<Vec<u32>>, tile: usize, idx: Vec<u32>| {
@@ -251,7 +284,10 @@ impl SparsePolicy for KascadeAllPooledPolicy {
         match self.plan.role(layer) {
             LayerRole::Anchor0 => {
                 if k < kv_len {
-                    let idx = extract(cost);
+                    attention::prefill_pooled_scores(qs, start, cache, g, &mut scratch.planes, cost);
+                    super::pool_all_into(&scratch.planes, &mut self.all);
+                    cost.topk_items += self.all.len() as u64;
+                    let idx = crate::tensor::topk_indices(&self.all, k);
                     store(&mut self.prefill_idx[layer], tile, idx);
                 } else {
                     store(&mut self.prefill_idx[layer], tile, Vec::new());
@@ -263,14 +299,19 @@ impl SparsePolicy for KascadeAllPooledPolicy {
                     store(&mut self.prefill_idx[layer], tile, Vec::new());
                     return Selection::Dense;
                 }
-                let idx = extract(cost);
-                store(&mut self.prefill_idx[layer], tile, idx.clone());
-                Selection::Sparse(self.broadcast(&idx))
+                attention::prefill_pooled_scores(qs, start, cache, g, &mut scratch.planes, cost);
+                super::pool_all_into(&scratch.planes, &mut self.all);
+                cost.topk_items += self.all.len() as u64;
+                let idx = crate::tensor::topk_indices(&self.all, k);
+                super::broadcast_into(&idx, n_kv, &mut scratch.sel);
+                store(&mut self.prefill_idx[layer], tile, idx);
+                Selection::Sparse
             }
             LayerRole::Reuse { anchor } => {
                 let slot = &self.prefill_idx[anchor];
                 if tile < slot.len() && !slot[tile].is_empty() {
-                    Selection::Sparse(self.broadcast(&slot[tile]))
+                    super::broadcast_into(&slot[tile], n_kv, &mut scratch.sel);
+                    Selection::Sparse
                 } else {
                     Selection::Dense
                 }
@@ -321,24 +362,21 @@ mod tests {
         let (q, c) = setup();
         let mut pol = KascadePolicy::new(plan());
         let mut cost = CostTracker::default();
+        let mut scratch = AttnScratch::new();
         // layer 0: dense + extraction
-        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
-        // layer 1 reuses anchor 0
-        let s1 = pol.decode(1, &q, &c, 2, &mut cost);
-        let idx0 = pol.decode_idx[0].clone().unwrap();
-        assert_eq!(s1, Selection::Sparse(idx0.clone()));
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        let idx0 = pol.decode_set(0).unwrap().clone();
+        // layer 1 reuses anchor 0 (identity map)
+        assert_eq!(pol.decode(1, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel, idx0);
         // layer 2 is an anchor: fresh indices
-        let s2 = pol.decode(2, &q, &c, 2, &mut cost);
-        let idx2 = pol.decode_idx[2].clone().unwrap();
-        assert_eq!(s2, Selection::Sparse(idx2.clone()));
+        assert_eq!(pol.decode(2, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        let idx2 = pol.decode_set(2).unwrap().clone();
+        assert_eq!(scratch.sel, idx2);
         // layer 3 reuses anchor 2 with swapped head map
-        match pol.decode(3, &q, &c, 2, &mut cost) {
-            Selection::Sparse(idx) => {
-                assert_eq!(idx[0], idx2[1]);
-                assert_eq!(idx[1], idx2[0]);
-            }
-            _ => panic!(),
-        }
+        assert_eq!(pol.decode(3, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel.head(0), idx2.head(1));
+        assert_eq!(scratch.sel.head(1), idx2.head(0));
     }
 
     #[test]
@@ -346,10 +384,11 @@ mod tests {
         let (q, c) = setup();
         let mut pol = KascadePolicy::new(plan());
         let mut cost = CostTracker::default();
-        pol.decode(2, &q, &c, 2, &mut cost);
+        let mut scratch = AttnScratch::new();
+        pol.decode(2, &q, &c, 2, &mut scratch, &mut cost);
         let after_anchor = cost.score_key_reads;
-        pol.decode(3, &q, &c, 2, &mut cost);
-        pol.decode(4, &q, &c, 2, &mut cost);
+        pol.decode(3, &q, &c, 2, &mut scratch, &mut cost);
+        pol.decode(4, &q, &c, 2, &mut scratch, &mut cost);
         assert_eq!(cost.score_key_reads, after_anchor);
     }
 
@@ -370,8 +409,9 @@ mod tests {
             TopKRule::default(), // min_k 128 > 8
         ));
         let mut cost = CostTracker::default();
-        assert_eq!(pol.decode(2, &q, &c, 2, &mut cost), Selection::Dense);
-        assert_eq!(pol.decode(3, &q, &c, 2, &mut cost), Selection::Dense);
+        let mut scratch = AttnScratch::new();
+        assert_eq!(pol.decode(2, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(3, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
     }
 
     #[test]
@@ -379,11 +419,10 @@ mod tests {
         let (q, c) = setup();
         let mut pol = KascadeAllPooledPolicy::new(plan());
         let mut cost = CostTracker::default();
-        pol.decode(0, &q, &c, 2, &mut cost);
-        match pol.decode(2, &q, &c, 2, &mut cost) {
-            Selection::Sparse(idx) => assert_eq!(idx[0], idx[1]),
-            _ => panic!(),
-        }
+        let mut scratch = AttnScratch::new();
+        pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
+        assert_eq!(pol.decode(2, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel.head(0), scratch.sel.head(1));
     }
 
     #[test]
@@ -391,10 +430,11 @@ mod tests {
         let (q, c) = setup();
         let mut pol = KascadePolicy::new(plan());
         let mut cost = CostTracker::default();
-        pol.decode(0, &q, &c, 2, &mut cost);
-        assert!(pol.decode_idx[0].is_some());
+        let mut scratch = AttnScratch::new();
+        pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
+        assert!(pol.decode_set(0).is_some());
         pol.reset();
-        assert!(pol.decode_idx.iter().all(|s| s.is_none()));
+        assert!((0..8).all(|l| pol.decode_set(l).is_none()));
     }
 
     #[test]
@@ -415,25 +455,30 @@ mod tests {
         r.fill_normal(&mut qs, 1.0);
         let mut pol = KascadePolicy::new(plan());
         let mut cost = CostTracker::default();
+        let mut scratch = AttnScratch::new();
         // anchor layer 2, tile 1 (positions 128..256)
-        let s = pol.prefill_tile(2, 1, 128, &qs, &c, g, &mut cost);
-        let idx = match s {
-            Selection::Sparse(i) => i,
-            _ => panic!("anchor tile should be sparse at 256 ctx / k=25"),
-        };
+        assert_eq!(
+            pol.prefill_tile(2, 1, 128, &qs, &c, g, &mut scratch, &mut cost),
+            Selection::Sparse,
+            "anchor tile should be sparse at 256 ctx / k=25"
+        );
+        let idx = scratch.sel.clone();
         // reuse layer 4, same tile: identical sets (identity map on 4)
-        match pol.prefill_tile(4, 1, 128, &qs, &c, g, &mut cost) {
-            Selection::Sparse(i) => assert_eq!(i, idx),
-            _ => panic!(),
-        }
+        assert_eq!(
+            pol.prefill_tile(4, 1, 128, &qs, &c, g, &mut scratch, &mut cost),
+            Selection::Sparse
+        );
+        assert_eq!(scratch.sel, idx);
         // tile that the anchor never saw -> dense fallback
-        assert_eq!(pol.prefill_tile(4, 3, 384, &qs, &c, g, &mut cost), Selection::Dense);
+        assert_eq!(
+            pol.prefill_tile(4, 3, 384, &qs, &c, g, &mut scratch, &mut cost),
+            Selection::Dense
+        );
     }
 
     /// A dense fallback must CLEAR previously stored indices for the same
-    /// absolute tile — the old `store(..., None)` left them in place, so a
-    /// reuse layer went sparse with indices its anchor never produced for
-    /// that query range.
+    /// absolute tile — otherwise a reuse layer goes sparse with indices
+    /// its anchor never produced for that query range.
     #[test]
     fn prefill_dense_fallback_clears_stale_tile_state() {
         let mut r = Rng::new(6);
@@ -452,10 +497,12 @@ mod tests {
         r.fill_normal(&mut qs_big, 1.0);
         let mut pol = KascadePolicy::new(plan());
         let mut cost = CostTracker::default();
-        match pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut cost) {
-            Selection::Sparse(_) => {}
-            _ => panic!("anchor must be sparse at 128 ctx / k=16"),
-        }
+        let mut scratch = AttnScratch::new();
+        assert_eq!(
+            pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut scratch, &mut cost),
+            Selection::Sparse,
+            "anchor must be sparse at 128 ctx / k=16"
+        );
         // tiny context view over the same tile: k >= kv_len -> dense,
         // which must clear the stored slot
         let mut small = KvCache::new(n_kv, d, 16);
@@ -466,12 +513,12 @@ mod tests {
         let mut qs_small = vec![0.0; 8 * n_q * d];
         r.fill_normal(&mut qs_small, 1.0);
         assert_eq!(
-            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut cost),
+            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut scratch, &mut cost),
             Selection::Dense
         );
         // the reuse layer must NOT consume the stale tile-0 indices
         assert_eq!(
-            pol.prefill_tile(4, 0, 0, &qs_small, &small, g, &mut cost),
+            pol.prefill_tile(4, 0, 0, &qs_small, &small, g, &mut scratch, &mut cost),
             Selection::Dense
         );
     }
@@ -513,23 +560,21 @@ mod tests {
         let (mut pf, mut pq) = (mk(), mk());
         let mut cost_f = CostTracker::default();
         let mut cost_q = CostTracker::default();
-        let sf = pf.decode(2, &q, &cf, g, &mut cost_f);
-        let sq = pq.decode(2, &q, &cq, g, &mut cost_q);
+        let mut scr_f = AttnScratch::new();
+        let mut scr_q = AttnScratch::new();
+        let sf = pf.decode(2, &q, &cf, g, &mut scr_f, &mut cost_f);
+        let sq = pq.decode(2, &q, &cq, g, &mut scr_q, &mut cost_q);
         assert_eq!(cost_q.dequant_rows, 0, "anchor scoring is fused — no dequant");
-        match (sf, sq) {
-            (Selection::Sparse(a), Selection::Sparse(b)) => {
-                for (ha, hb) in a.iter().zip(&b) {
-                    let mut sa = ha.clone();
-                    let mut sb = hb.clone();
-                    sa.sort_unstable();
-                    sb.sort_unstable();
-                    assert_eq!(sa, sb, "int8 Top-k selection diverged from f32");
-                    for &s in &strong {
-                        assert!(sa.contains(&(s as u32)), "planted key {s} missing");
-                    }
-                }
+        assert_eq!((sf, sq), (Selection::Sparse, Selection::Sparse));
+        for h in 0..n_kv {
+            let mut sa = scr_f.sel.head(h).to_vec();
+            let mut sb = scr_q.sel.head(h).to_vec();
+            sa.sort_unstable();
+            sb.sort_unstable();
+            assert_eq!(sa, sb, "int8 Top-k selection diverged from f32");
+            for &s in &strong {
+                assert!(sa.contains(&(s as u32)), "planted key {s} missing");
             }
-            _ => panic!("expected sparse selections"),
         }
     }
 
@@ -550,10 +595,12 @@ mod tests {
         r.fill_normal(&mut qs_big, 1.0);
         let mut pol = KascadeAllPooledPolicy::new(plan());
         let mut cost = CostTracker::default();
-        match pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut cost) {
-            Selection::Sparse(_) => {}
-            _ => panic!("anchor must be sparse"),
-        }
+        let mut scratch = AttnScratch::new();
+        assert_eq!(
+            pol.prefill_tile(2, 0, 0, &qs_big, &big, g, &mut scratch, &mut cost),
+            Selection::Sparse,
+            "anchor must be sparse"
+        );
         let mut small = KvCache::new(n_kv, d, 16);
         let kz = vec![0.0; n_kv * d];
         for _ in 0..8 {
@@ -562,11 +609,11 @@ mod tests {
         let mut qs_small = vec![0.0; 8 * n_q * d];
         r.fill_normal(&mut qs_small, 1.0);
         assert_eq!(
-            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut cost),
+            pol.prefill_tile(2, 0, 0, &qs_small, &small, g, &mut scratch, &mut cost),
             Selection::Dense
         );
         assert_eq!(
-            pol.prefill_tile(3, 0, 0, &qs_small, &small, g, &mut cost),
+            pol.prefill_tile(3, 0, 0, &qs_small, &small, g, &mut scratch, &mut cost),
             Selection::Dense
         );
     }

@@ -5,19 +5,21 @@
 //! paper's head-aware design improves on.
 
 use super::{Selection, SparsePolicy};
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, KvCache};
 use crate::config::TopKRule;
 
 pub struct LessIsMorePolicy {
     pub recompute_layers: Vec<usize>,
     pub rule: TopKRule,
     selected: Vec<Option<Vec<u32>>>,
+    /// reused all-heads pooled distribution
+    all: Vec<f32>,
     n_layers: usize,
 }
 
 impl LessIsMorePolicy {
     pub fn new(n_layers: usize, recompute_layers: Vec<usize>, rule: TopKRule) -> Self {
-        Self { recompute_layers, rule, selected: vec![None; n_layers], n_layers }
+        Self { recompute_layers, rule, selected: vec![None; n_layers], all: Vec::new(), n_layers }
     }
 
     fn source_of(&self, layer: usize) -> Option<usize> {
@@ -40,6 +42,7 @@ impl SparsePolicy for LessIsMorePolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         let k = self.rule.k(cache.len);
@@ -50,22 +53,19 @@ impl SparsePolicy for LessIsMorePolicy {
             return Selection::Dense; // first layer always dense
         }
         if self.recompute_layers.contains(&layer) {
-            let pooled = attention::decode_pooled_scores(q, cache, g, cost);
-            let len = pooled[0].len();
-            let mut all = vec![0.0f32; len];
-            let inv = 1.0 / pooled.len() as f32;
-            for h in &pooled {
-                for (a, &x) in all.iter_mut().zip(h.iter()) {
-                    *a += x * inv;
-                }
-            }
-            cost.topk_items += len as u64;
-            let idx = crate::tensor::topk_indices(&all, k);
-            self.selected[layer] = Some(idx.clone());
-            return Selection::Sparse(vec![idx; cache.n_kv]);
+            attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+            super::pool_all_into(&scratch.planes, &mut self.all);
+            cost.topk_items += self.all.len() as u64;
+            let idx = crate::tensor::topk_indices(&self.all, k);
+            super::broadcast_into(&idx, cache.n_kv, &mut scratch.sel);
+            self.selected[layer] = Some(idx);
+            return Selection::Sparse;
         }
-        match self.source_of(layer).and_then(|f| self.selected[f].clone()) {
-            Some(idx) => Selection::Sparse(vec![idx; cache.n_kv]),
+        match self.source_of(layer).and_then(|f| self.selected[f].as_ref()) {
+            Some(idx) => {
+                super::broadcast_into(idx, cache.n_kv, &mut scratch.sel);
+                Selection::Sparse
+            }
             None => Selection::Dense,
         }
     }
@@ -100,15 +100,18 @@ mod tests {
         }
         let mut pol = LessIsMorePolicy::new(8, vec![2, 5], TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
-        assert_eq!(pol.decode(1, &q, &c, 2, &mut cost), Selection::Dense); // before first recompute
-        let s2 = pol.decode(2, &q, &c, 2, &mut cost);
+        let mut scratch = AttnScratch::new();
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        // before first recompute
+        assert_eq!(pol.decode(1, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(2, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        let s2 = scratch.sel.clone();
         let reads_after_2 = cost.score_key_reads;
-        let s3 = pol.decode(3, &q, &c, 2, &mut cost);
-        assert_eq!(s2, s3);
+        assert_eq!(pol.decode(3, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel, s2);
         assert_eq!(cost.score_key_reads, reads_after_2, "reuse is free");
         // recompute layer always rescoring (unlike OmniKV)
-        pol.decode(5, &q, &c, 2, &mut cost);
+        pol.decode(5, &q, &c, 2, &mut scratch, &mut cost);
         assert!(cost.score_key_reads > reads_after_2);
     }
 }

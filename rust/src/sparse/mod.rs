@@ -7,6 +7,13 @@
 //! need attention scores (anchor layers, oracles) compute them through the
 //! engine's pooled-score helpers so their cost is accounted like any other
 //! attention work.
+//!
+//! Selections flow through the per-sequence [`AttnScratch`] arena rather
+//! than freshly allocated `Vec<Vec<u32>>`s: a policy that goes sparse
+//! writes its per-KV-head indices into `scratch.sel` (an [`IndexSet`]
+//! whose buffers keep their capacity across steps) and returns the
+//! [`Selection::Sparse`] marker — the steady-state decode loop performs
+//! no heap allocations through this path (see `docs/perf.md`).
 
 pub mod kascade_policy;
 pub mod lessismore;
@@ -20,24 +27,27 @@ pub use omnikv::OmniKvPolicy;
 pub use quest::QuestPolicy;
 pub use streaming::StreamingLlmPolicy;
 
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, IndexSet, KvCache};
 use crate::config::TopKRule;
 
-/// Per-layer attention decision.
-#[derive(Debug, Clone, PartialEq)]
+/// Per-layer attention decision.  `Sparse` is a marker: the actual
+/// per-KV-head indices live in the `AttnScratch::sel` the policy was
+/// handed (exactly `cache.n_kv` closed heads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Selection {
     /// Full attention over the whole context.
     Dense,
-    /// Sparse attention over per-KV-head index sets.
-    Sparse(Vec<Vec<u32>>),
+    /// Sparse attention over the index sets written to `scratch.sel`.
+    Sparse,
 }
 
 impl Selection {
-    /// Keys touched per KV head (dense -> `len`).
-    pub fn cost_keys(&self, len: usize, n_kv: usize) -> usize {
+    /// Keys touched per KV head (dense -> `len * n_kv`), given the
+    /// selection's index set.
+    pub fn cost_keys(&self, sel: &IndexSet, len: usize, n_kv: usize) -> usize {
         match self {
             Selection::Dense => len * n_kv,
-            Selection::Sparse(idx) => idx.iter().map(|v| v.len()).sum(),
+            Selection::Sparse => sel.total(),
         }
     }
 }
@@ -50,17 +60,22 @@ pub trait SparsePolicy: Send {
     fn reset(&mut self);
 
     /// Decode-time decision for `layer`.  `q` is `[n_q * d]` head-major.
+    /// On [`Selection::Sparse`] the policy must have filled
+    /// `scratch.sel` with one closed head per KV head; it may also use
+    /// `scratch.planes` freely for score computation.
     fn decode(
         &mut self,
         layer: usize,
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection;
 
     /// Prefill-time decision for Q-tile `tile` of `layer` whose first query
     /// sits at absolute position `start`.  `qs` is `[tile_len, n_q * d]`.
+    /// Same `scratch.sel` contract as [`SparsePolicy::decode`].
     /// Default: dense prefill (what Quest / OmniKV / LessIsMore do — the
     /// paper notes they only optimize decode).
     fn prefill_tile(
@@ -71,6 +86,7 @@ pub trait SparsePolicy: Send {
         _qs: &[f32],
         _cache: &KvCache,
         _g: usize,
+        _scratch: &mut AttnScratch,
         _cost: &mut CostTracker,
     ) -> Selection {
         Selection::Dense
@@ -104,7 +120,15 @@ impl SparsePolicy for DensePolicy {
 
     fn reset(&mut self) {}
 
-    fn decode(&mut self, _: usize, _: &[f32], _: &KvCache, _: usize, _: &mut CostTracker) -> Selection {
+    fn decode(
+        &mut self,
+        _: usize,
+        _: &[f32],
+        _: &KvCache,
+        _: usize,
+        _: &mut AttnScratch,
+        _: &mut CostTracker,
+    ) -> Selection {
         Selection::Dense
     }
 
@@ -141,6 +165,7 @@ impl SparsePolicy for OraclePolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         if layer == 0 && self.layer0_dense {
@@ -150,8 +175,9 @@ impl SparsePolicy for OraclePolicy {
         if k >= cache.len {
             return Selection::Dense;
         }
-        let pooled = attention::decode_pooled_scores(q, cache, g, cost);
-        Selection::Sparse(attention::select_topk(&pooled, k, cost))
+        attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+        attention::select_topk(scratch, k, cost);
+        Selection::Sparse
     }
 
     fn prefill_tile(
@@ -162,6 +188,7 @@ impl SparsePolicy for OraclePolicy {
         qs: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         if layer == 0 && self.layer0_dense {
@@ -174,8 +201,9 @@ impl SparsePolicy for OraclePolicy {
         if k >= kv_len {
             return Selection::Dense;
         }
-        let pooled = attention::prefill_pooled_scores(qs, start, cache, g, cost);
-        Selection::Sparse(attention::select_topk(&pooled, k, cost))
+        attention::prefill_pooled_scores(qs, start, cache, g, &mut scratch.planes, cost);
+        attention::select_topk(scratch, k, cost);
+        Selection::Sparse
     }
 
     fn sparse_prefill(&self) -> bool {
@@ -184,6 +212,30 @@ impl SparsePolicy for OraclePolicy {
 
     fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
         Some(Box::new(OraclePolicy { rule: self.rule, layer0_dense: self.layer0_dense }))
+    }
+}
+
+/// Mean-pool the `[n_kv, len]` pooled planes into one shared
+/// distribution (the "all heads pooled" / filter-layer statistic used by
+/// the OmniKV, LessIsMore and Kascade-ablation baselines), reusing the
+/// caller's buffer.
+pub(crate) fn pool_all_into(planes: &crate::attention::ScorePlanes, all: &mut Vec<f32>) {
+    let (hn, len) = (planes.pooled_heads(), planes.pooled_len());
+    all.clear();
+    all.resize(len, 0.0);
+    let inv = 1.0 / hn as f32;
+    for h in 0..hn {
+        for (o, &x) in all.iter_mut().zip(planes.pooled_head(h)) {
+            *o += x * inv;
+        }
+    }
+}
+
+/// Broadcast one shared index set to every KV head of `sel`.
+pub(crate) fn broadcast_into(idx: &[u32], n_kv: usize, sel: &mut IndexSet) {
+    sel.clear();
+    for _ in 0..n_kv {
+        sel.extend_head(idx);
     }
 }
 
@@ -213,8 +265,9 @@ mod tests {
         let (q, c) = cache_with(64);
         let mut p = DensePolicy;
         let mut cost = CostTracker::default();
+        let mut scratch = AttnScratch::new();
         for l in 0..8 {
-            assert_eq!(p.decode(l, &q, &c, 2, &mut cost), Selection::Dense);
+            assert_eq!(p.decode(l, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
         }
     }
 
@@ -223,13 +276,12 @@ mod tests {
         let (q, c) = cache_with(512);
         let mut p = OraclePolicy::new(TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        assert_eq!(p.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
-        match p.decode(1, &q, &c, 2, &mut cost) {
-            Selection::Sparse(idx) => {
-                assert_eq!(idx.len(), 2);
-                assert!(idx.iter().all(|h| h.len() == 51)); // 10% of 512
-            }
-            _ => panic!("expected sparse"),
+        let mut scratch = AttnScratch::new();
+        assert_eq!(p.decode(0, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        assert_eq!(p.decode(1, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel.n_heads(), 2);
+        for h in 0..2 {
+            assert_eq!(scratch.sel.head(h).len(), 51); // 10% of 512
         }
     }
 
@@ -238,13 +290,15 @@ mod tests {
         let (q, c) = cache_with(64); // min_k = 128 > 64
         let mut p = OraclePolicy::new(TopKRule::default());
         let mut cost = CostTracker::default();
-        assert_eq!(p.decode(3, &q, &c, 2, &mut cost), Selection::Dense);
+        let mut scratch = AttnScratch::new();
+        assert_eq!(p.decode(3, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
     }
 
     #[test]
     fn selection_cost_keys() {
-        assert_eq!(Selection::Dense.cost_keys(100, 4), 400);
-        let s = Selection::Sparse(vec![vec![1, 2], vec![3]]);
-        assert_eq!(s.cost_keys(100, 2), 3);
+        let empty = IndexSet::new();
+        assert_eq!(Selection::Dense.cost_keys(&empty, 100, 4), 400);
+        let s = IndexSet::from_nested(&[vec![1, 2], vec![3]]);
+        assert_eq!(Selection::Sparse.cost_keys(&s, 100, 2), 3);
     }
 }

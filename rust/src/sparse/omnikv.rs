@@ -5,7 +5,7 @@
 //! KV offload, so reselection is deliberately infrequent).  Decode-only.
 
 use super::{Selection, SparsePolicy};
-use crate::attention::{self, CostTracker, KvCache};
+use crate::attention::{self, AttnScratch, CostTracker, KvCache};
 use crate::config::TopKRule;
 
 pub struct OmniKvPolicy {
@@ -14,6 +14,8 @@ pub struct OmniKvPolicy {
     pub refresh_every: usize,
     /// shared index set selected at each filter layer
     selected: Vec<Option<Vec<u32>>>,
+    /// reused all-heads pooled distribution
+    all: Vec<f32>,
     step: usize,
     n_layers: usize,
 }
@@ -25,6 +27,7 @@ impl OmniKvPolicy {
             rule,
             refresh_every: 16,
             selected: vec![None; n_layers],
+            all: Vec::new(),
             step: 0,
             n_layers,
         }
@@ -51,6 +54,7 @@ impl SparsePolicy for OmniKvPolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         if layer == 0 {
@@ -64,25 +68,21 @@ impl SparsePolicy for OmniKvPolicy {
             let stale = self.selected[layer].is_none()
                 || (self.step - 1) % self.refresh_every == 0;
             if stale {
-                let pooled = attention::decode_pooled_scores(q, cache, g, cost);
                 // pool across all heads -> one shared set
-                let len = pooled[0].len();
-                let mut all = vec![0.0f32; len];
-                let inv = 1.0 / pooled.len() as f32;
-                for h in &pooled {
-                    for (a, &x) in all.iter_mut().zip(h.iter()) {
-                        *a += x * inv;
-                    }
-                }
-                cost.topk_items += len as u64;
-                self.selected[layer] = Some(crate::tensor::topk_indices(&all, k));
+                attention::decode_pooled_scores(q, cache, g, &mut scratch.planes, cost);
+                super::pool_all_into(&scratch.planes, &mut self.all);
+                cost.topk_items += self.all.len() as u64;
+                self.selected[layer] = Some(crate::tensor::topk_indices(&self.all, k));
             }
             // filter layers themselves attend densely (they must see the
             // full context to filter it)
             return Selection::Dense;
         }
-        match self.filter_of(layer).and_then(|f| self.selected[f].clone()) {
-            Some(idx) => Selection::Sparse(vec![idx; cache.n_kv]),
+        match self.filter_of(layer).and_then(|f| self.selected[f].as_ref()) {
+            Some(idx) => {
+                super::broadcast_into(idx, cache.n_kv, &mut scratch.sel);
+                Selection::Sparse
+            }
             None => Selection::Dense,
         }
     }
@@ -121,18 +121,15 @@ mod tests {
         let (q, c) = setup();
         let mut pol = OmniKvPolicy::new(8, vec![0, 4], TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        assert_eq!(pol.decode(0, &q, &c, 2, &mut cost), Selection::Dense);
-        let s1 = pol.decode(1, &q, &c, 2, &mut cost);
-        match &s1 {
-            Selection::Sparse(idx) => {
-                assert_eq!(idx[0], idx[1], "shared across heads");
-                assert_eq!(idx[0].len(), 51);
-            }
-            _ => panic!(),
-        }
+        let mut scratch = crate::attention::AttnScratch::new();
+        assert_eq!(pol.decode(0, &q, &c, 2, &mut scratch, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(1, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel.head(0), scratch.sel.head(1), "shared across heads");
+        assert_eq!(scratch.sel.head(0).len(), 51);
+        let sel1 = scratch.sel.clone();
         // layers 1..3 share filter 0's set; layer 5 uses filter 4's
-        let s3 = pol.decode(3, &q, &c, 2, &mut cost);
-        assert_eq!(s1, s3);
+        assert_eq!(pol.decode(3, &q, &c, 2, &mut scratch, &mut cost), Selection::Sparse);
+        assert_eq!(scratch.sel, sel1);
     }
 
     /// OmniKV's filter-layer selection over an int8 cache (fused pooled
@@ -166,20 +163,18 @@ mod tests {
         let mk = || OmniKvPolicy::new(4, vec![0], TopKRule::new(0.1, 16));
         let (mut pf, mut pq) = (mk(), mk());
         let mut cost = CostTracker::default();
-        pf.decode(0, &q, &cf, 2, &mut cost);
-        pq.decode(0, &q, &cq, 2, &mut cost);
-        let sf = pf.decode(1, &q, &cf, 2, &mut cost);
-        let sq = pq.decode(1, &q, &cq, 2, &mut cost);
-        match (sf, sq) {
-            (Selection::Sparse(a), Selection::Sparse(b)) => {
-                let mut sa = a[0].clone();
-                let mut sb = b[0].clone();
-                sa.sort_unstable();
-                sb.sort_unstable();
-                assert_eq!(sa, sb, "filter selection diverged between storage modes");
-            }
-            _ => panic!("expected sparse selections"),
-        }
+        let mut scr_f = crate::attention::AttnScratch::new();
+        let mut scr_q = crate::attention::AttnScratch::new();
+        pf.decode(0, &q, &cf, 2, &mut scr_f, &mut cost);
+        pq.decode(0, &q, &cq, 2, &mut scr_q, &mut cost);
+        let sf = pf.decode(1, &q, &cf, 2, &mut scr_f, &mut cost);
+        let sq = pq.decode(1, &q, &cq, 2, &mut scr_q, &mut cost);
+        assert_eq!((sf, sq), (Selection::Sparse, Selection::Sparse));
+        let mut sa = scr_f.sel.head(0).to_vec();
+        let mut sb = scr_q.sel.head(0).to_vec();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_eq!(sa, sb, "filter selection diverged between storage modes");
     }
 
     #[test]
@@ -188,16 +183,17 @@ mod tests {
         let mut pol = OmniKvPolicy::new(4, vec![0], TopKRule::new(0.1, 16));
         pol.refresh_every = 4;
         let mut cost = CostTracker::default();
-        pol.decode(0, &q, &c, 2, &mut cost);
+        let mut scratch = crate::attention::AttnScratch::new();
+        pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
         let reads1 = cost.score_key_reads;
         assert!(reads1 > 0);
         // steps 2..4: no rescoring
         for _ in 0..3 {
-            pol.decode(0, &q, &c, 2, &mut cost);
+            pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
         }
         assert_eq!(cost.score_key_reads, reads1);
         // step 5: refresh
-        pol.decode(0, &q, &c, 2, &mut cost);
+        pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
         assert!(cost.score_key_reads > reads1);
     }
 }

@@ -7,17 +7,19 @@
 //! as in the original system.
 
 use super::{Selection, SparsePolicy};
-use crate::attention::{CostTracker, KvCache};
+use crate::attention::{AttnScratch, CostTracker, KvCache};
 use crate::config::TopKRule;
 
 pub struct QuestPolicy {
     pub rule: TopKRule,
     pub dense_layers: usize,
+    /// reused per-head page-bound buffer
+    bounds: Vec<f32>,
 }
 
 impl QuestPolicy {
     pub fn new(rule: TopKRule) -> Self {
-        Self { rule, dense_layers: 2 }
+        Self { rule, dense_layers: 2, bounds: Vec::new() }
     }
 
     /// Upper-bound score of page `page` for kv head `h` under the group's
@@ -51,6 +53,7 @@ impl SparsePolicy for QuestPolicy {
         q: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         cost: &mut CostTracker,
     ) -> Selection {
         if layer < self.dense_layers {
@@ -67,27 +70,32 @@ impl SparsePolicy for QuestPolicy {
         if budget_pages >= n_pages {
             return Selection::Dense;
         }
-        let mut idx = Vec::with_capacity(cache.n_kv);
+        let sel = &mut scratch.sel;
+        sel.clear();
         for h in 0..cache.n_kv {
-            let bounds: Vec<f32> = (0..n_pages)
-                .map(|p| Self::page_bound(q, cache, h, g, p))
-                .collect();
+            self.bounds.clear();
+            self.bounds.extend((0..n_pages).map(|p| Self::page_bound(q, cache, h, g, p)));
             cost.score_key_reads += (2 * n_pages * g) as u64; // min+max rows
             cost.topk_items += n_pages as u64;
-            let pages = crate::tensor::topk_indices(&bounds, budget_pages);
-            let mut hidx: Vec<u32> = Vec::with_capacity(budget_pages * ps);
+            let pages = crate::tensor::topk_indices(&self.bounds, budget_pages);
             for &p in &pages {
                 let lo = p as usize * ps;
                 let hi = ((p as usize + 1) * ps).min(len);
-                hidx.extend(lo as u32..hi as u32);
+                for pos in lo as u32..hi as u32 {
+                    sel.push(pos);
+                }
             }
-            idx.push(hidx);
+            sel.close_head();
         }
-        Selection::Sparse(idx)
+        Selection::Sparse
     }
 
     fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
-        Some(Box::new(QuestPolicy { rule: self.rule, dense_layers: self.dense_layers }))
+        Some(Box::new(QuestPolicy {
+            rule: self.rule,
+            dense_layers: self.dense_layers,
+            bounds: Vec::new(),
+        }))
     }
 }
 
@@ -119,13 +127,10 @@ mod tests {
         }
         let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        match pol.decode(2, &q, &cache, g, &mut cost) {
-            Selection::Sparse(idx) => {
-                for h in &idx {
-                    assert!(h.contains(&133), "page of key 133 not selected");
-                }
-            }
-            _ => panic!("expected sparse"),
+        let mut scratch = AttnScratch::new();
+        assert_eq!(pol.decode(2, &q, &cache, g, &mut scratch, &mut cost), Selection::Sparse);
+        for h in 0..n_kv {
+            assert!(scratch.sel.head(h).contains(&133), "page of key 133 not selected");
         }
     }
 
@@ -158,9 +163,12 @@ mod tests {
         }
         let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        let sf = pol.decode(2, &q, &cf, g, &mut cost);
-        let sq = pol.decode(2, &q, &cq, g, &mut cost);
-        assert_eq!(sf, sq, "page selection must not depend on KV storage mode");
+        let mut scr_f = AttnScratch::new();
+        let mut scr_q = AttnScratch::new();
+        let sf = pol.decode(2, &q, &cf, g, &mut scr_f, &mut cost);
+        let sq = pol.decode(2, &q, &cq, g, &mut scr_q, &mut cost);
+        assert_eq!(sf, sq);
+        assert_eq!(scr_f.sel, scr_q.sel, "page selection must not depend on KV storage mode");
     }
 
     #[test]
@@ -175,8 +183,9 @@ mod tests {
         }
         let mut pol = QuestPolicy::new(TopKRule::new(0.1, 16));
         let mut cost = CostTracker::default();
-        assert_eq!(pol.decode(0, &q, &cache, 2, &mut cost), Selection::Dense);
-        assert_eq!(pol.decode(1, &q, &cache, 2, &mut cost), Selection::Dense);
+        let mut scratch = AttnScratch::new();
+        assert_eq!(pol.decode(0, &q, &cache, 2, &mut scratch, &mut cost), Selection::Dense);
+        assert_eq!(pol.decode(1, &q, &cache, 2, &mut scratch, &mut cost), Selection::Dense);
         assert!(!pol.sparse_prefill());
     }
 
@@ -193,19 +202,18 @@ mod tests {
         }
         let mut pol = QuestPolicy::new(TopKRule::new(0.1, 32));
         let mut cost = CostTracker::default();
-        if let Selection::Sparse(idx) = pol.decode(3, &q, &cache, 2, &mut cost) {
-            let ps = cache.page_size();
-            for h in &idx {
-                assert_eq!(h.len() % ps, 0);
-                for chunk in h.chunks(ps) {
-                    for w in chunk.windows(2) {
-                        assert_eq!(w[1], w[0] + 1);
-                    }
-                    assert_eq!(chunk[0] as usize % ps, 0);
+        let mut scratch = AttnScratch::new();
+        assert_eq!(pol.decode(3, &q, &cache, 2, &mut scratch, &mut cost), Selection::Sparse);
+        let ps = cache.page_size();
+        for hi in 0..scratch.sel.n_heads() {
+            let h = scratch.sel.head(hi);
+            assert_eq!(h.len() % ps, 0);
+            for chunk in h.chunks(ps) {
+                for w in chunk.windows(2) {
+                    assert_eq!(w[1], w[0] + 1);
                 }
+                assert_eq!(chunk[0] as usize % ps, 0);
             }
-        } else {
-            panic!();
         }
     }
 }

@@ -3,7 +3,7 @@
 //! Applies to both prefill and decode (it is a fixed pattern).
 
 use super::{Selection, SparsePolicy};
-use crate::attention::{CostTracker, KvCache};
+use crate::attention::{AttnScratch, CostTracker, IndexSet, KvCache};
 
 pub struct StreamingLlmPolicy {
     pub window_frac: f32,
@@ -16,16 +16,24 @@ impl StreamingLlmPolicy {
     }
 
     /// Sinks + trailing window over a context of `len`, as seen from a
-    /// query at position `qpos` (inclusive).
-    fn indices(&self, qpos: usize, n_kv: usize) -> Selection {
+    /// query at position `qpos` (inclusive), written into `sel`.
+    fn indices_into(&self, qpos: usize, n_kv: usize, sel: &mut IndexSet) -> Selection {
         let visible = qpos + 1;
         let window = ((visible as f32 * self.window_frac) as usize).max(1);
         if self.sinks + window >= visible {
             return Selection::Dense;
         }
-        let mut idx: Vec<u32> = (0..self.sinks as u32).collect();
-        idx.extend(((visible - window) as u32)..visible as u32);
-        Selection::Sparse(vec![idx; n_kv])
+        sel.clear();
+        for _ in 0..n_kv {
+            for s in 0..self.sinks as u32 {
+                sel.push(s);
+            }
+            for p in (visible - window) as u32..visible as u32 {
+                sel.push(p);
+            }
+            sel.close_head();
+        }
+        Selection::Sparse
     }
 }
 
@@ -42,9 +50,10 @@ impl SparsePolicy for StreamingLlmPolicy {
         _q: &[f32],
         cache: &KvCache,
         _g: usize,
+        scratch: &mut AttnScratch,
         _cost: &mut CostTracker,
     ) -> Selection {
-        self.indices(cache.len.saturating_sub(1), cache.n_kv)
+        self.indices_into(cache.len.saturating_sub(1), cache.n_kv, &mut scratch.sel)
     }
 
     fn prefill_tile(
@@ -55,13 +64,14 @@ impl SparsePolicy for StreamingLlmPolicy {
         qs: &[f32],
         cache: &KvCache,
         g: usize,
+        scratch: &mut AttnScratch,
         _cost: &mut CostTracker,
     ) -> Selection {
         // one shared set per tile (computed at the tile's last query; the
         // engine clamps per-query causality)
         let n_q = cache.n_kv * g;
         let tile_len = qs.len() / (n_q * cache.d);
-        self.indices(start + tile_len - 1, cache.n_kv)
+        self.indices_into(start + tile_len - 1, cache.n_kv, &mut scratch.sel)
     }
 
     fn sparse_prefill(&self) -> bool {
@@ -77,38 +87,39 @@ impl SparsePolicy for StreamingLlmPolicy {
 mod tests {
     use super::*;
 
+    fn indices(p: &StreamingLlmPolicy, qpos: usize, n_kv: usize) -> (Selection, IndexSet) {
+        let mut sel = IndexSet::new();
+        let s = p.indices_into(qpos, n_kv, &mut sel);
+        (s, sel)
+    }
+
     #[test]
     fn window_plus_sinks() {
         let p = StreamingLlmPolicy::paper_default();
-        match p.indices(999, 2) {
-            Selection::Sparse(idx) => {
-                assert_eq!(idx.len(), 2);
-                let h = &idx[0];
-                assert_eq!(&h[..4], &[0, 1, 2, 3]);
-                assert_eq!(*h.last().unwrap(), 999);
-                assert_eq!(h.len(), 4 + 300);
-            }
-            _ => panic!(),
-        }
+        let (s, sel) = indices(&p, 999, 2);
+        assert_eq!(s, Selection::Sparse);
+        assert_eq!(sel.n_heads(), 2);
+        let h = sel.head(0);
+        assert_eq!(&h[..4], &[0, 1, 2, 3]);
+        assert_eq!(*h.last().unwrap(), 999);
+        assert_eq!(h.len(), 4 + 300);
     }
 
     #[test]
     fn short_context_is_dense() {
         let p = StreamingLlmPolicy::paper_default();
         // visible(4) <= sinks + window(1): everything is covered anyway
-        assert_eq!(p.indices(3, 2), Selection::Dense);
+        assert_eq!(indices(&p, 3, 2).0, Selection::Dense);
     }
 
     #[test]
     fn middle_tokens_are_invisible() {
         let p = StreamingLlmPolicy::paper_default();
-        if let Selection::Sparse(idx) = p.indices(9999, 1) {
-            let h = &idx[0];
-            assert!(!h.contains(&5000));
-            assert!(h.contains(&(10000 - 1)));
-            assert!(h.contains(&0));
-        } else {
-            panic!();
-        }
+        let (s, sel) = indices(&p, 9999, 1);
+        assert_eq!(s, Selection::Sparse);
+        let h = sel.head(0);
+        assert!(!h.contains(&5000));
+        assert!(h.contains(&(10000 - 1)));
+        assert!(h.contains(&0));
     }
 }

@@ -29,9 +29,27 @@ impl Rng {
         (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n) — exactly uniform, not modulo-biased.
+    ///
+    /// Rejection-samples the tiny top-of-range zone where `% n` would
+    /// over-represent small residues (for non-power-of-two `n` the naive
+    /// `next_u64() % n` skews by up to `n / 2^64` per value — invisible
+    /// for tiny `n` but a real distribution defect for workload
+    /// shuffles).  The reject zone has probability `< n / 2^64`, so for
+    /// every practical `n` the first draw is accepted and the emitted
+    /// sequence is unchanged from the biased version — existing seeded
+    /// tests keep their data.
     pub fn below(&mut self, n: usize) -> usize {
-        (self.next_u64() % n as u64) as usize
+        debug_assert!(n > 0, "below(0)");
+        let n64 = n as u64;
+        // 2^64 mod n; accepted draws lie in [0, 2^64 - rem), a multiple of n
+        let rem = (u64::MAX % n64 + 1) % n64;
+        loop {
+            let v = self.next_u64();
+            if rem == 0 || v < u64::MAX - rem + 1 {
+                return (v % n64) as usize;
+            }
+        }
     }
 
     /// Standard normal via Box-Muller.
@@ -238,18 +256,38 @@ pub fn topk_indices(vals: &[f32], k: usize) -> Vec<u32> {
 /// ~5-8x faster than the ordered heap variant at long contexts
 /// (EXPERIMENTS.md §Perf).
 pub fn topk_indices_unordered(vals: &[f32], k: usize) -> Vec<u32> {
+    let mut pairs = Vec::new();
+    let mut out = Vec::new();
+    topk_unordered_into(vals, k, &mut pairs, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`topk_indices_unordered`]: partitions in
+/// the caller's `pairs` staging buffer and APPENDS the selected indices
+/// to `out` (both keep their capacity across calls — this is the Top-k
+/// primitive behind the zero-allocation decode hot loop).  Selects the
+/// exact same index set as the Vec-returning wrapper (same algorithm,
+/// same deterministic pivot sequence).
+pub fn topk_unordered_into(
+    vals: &[f32],
+    k: usize,
+    pairs: &mut Vec<(f32, u32)>,
+    out: &mut Vec<u32>,
+) {
     let n = vals.len();
     let k = k.min(n);
     if k == 0 {
-        return Vec::new();
+        return;
     }
     if k == n {
-        return (0..n as u32).collect();
+        out.extend(0..n as u32);
+        return;
     }
     // Partition (value, index) pairs in place: sequential memory access in
     // the partition loop beats indirecting through an index array by ~2x
     // at long contexts (EXPERIMENTS.md §Perf iteration 2).
-    let mut pairs: Vec<(f32, u32)> = vals.iter().copied().zip(0..n as u32).collect();
+    pairs.clear();
+    pairs.extend(vals.iter().copied().zip(0..n as u32));
     let (mut lo, mut hi) = (0usize, n);
     let mut rng_state = 0x9E3779B97F4A7C15u64 ^ (n as u64);
     while hi - lo > 1 {
@@ -281,8 +319,7 @@ pub fn topk_indices_unordered(vals: &[f32], k: usize) -> Vec<u32> {
             break; // k falls inside the equal-to-pivot run
         }
     }
-    pairs.truncate(k);
-    pairs.into_iter().map(|(_, i)| i).collect()
+    out.extend(pairs[..k].iter().map(|&(_, i)| i));
 }
 
 // ---------------------------------------------------------------------------
@@ -334,6 +371,52 @@ pub fn dequantize_q8(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
     for (o, &c) in out.iter_mut().zip(q.iter()) {
         *o = c as f32 * scale + zero;
     }
+}
+
+/// 4-lane unrolled element sum, accumulation order identical to the `da`
+/// accumulator inside [`qk_dot_q8`] — the tile-major kernels hoist this
+/// per-query sum out of the per-row loop (the int8 zero-point term is
+/// `zero * sum(q)`, constant across a tile) and stay bitwise-equal to
+/// the fused row-at-a-time path.
+#[inline]
+pub fn sum4(a: &[f32]) -> f32 {
+    let mut sa = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let x = &a[i * 4..i * 4 + 4];
+        sa[0] += x[0];
+        sa[1] += x[1];
+        sa[2] += x[2];
+        sa[3] += x[3];
+    }
+    let mut da = sa[0] + sa[1] + sa[2] + sa[3];
+    for &x in &a[chunks * 4..] {
+        da += x;
+    }
+    da
+}
+
+/// f32 x int8 raw dot (`sum a_i * q_i`), accumulation order identical to
+/// the `dq` accumulator inside [`qk_dot_q8`].  Combined with [`sum4`]:
+/// `scale * dot_i8(a, q) + zero * sum4(a)` is bitwise-equal to
+/// `qk_dot_q8(a, q, scale, zero)`.
+#[inline]
+pub fn dot_i8(a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    let mut sq = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 4..i * 4 + 4]);
+        sq[0] += x[0] * c[0] as f32;
+        sq[1] += x[1] * c[1] as f32;
+        sq[2] += x[2] * c[2] as f32;
+        sq[3] += x[3] * c[3] as f32;
+    }
+    let mut dq = sq[0] + sq[1] + sq[2] + sq[3];
+    for i in chunks * 4..a.len() {
+        dq += a[i] * q[i] as f32;
+    }
+    dq
 }
 
 /// Fused f32 x int8 dot product: `dot(a, scale * q + zero)` without
@@ -417,6 +500,49 @@ mod tests {
         for _ in 0..1000 {
             let u = r.uniform();
             assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Rng::new(99);
+        for n in [1usize, 2, 3, 7, 10, 255, 1000] {
+            let draws = 6000;
+            let mut counts = vec![0u32; n.min(16)];
+            for _ in 0..draws {
+                let v = r.below(n);
+                assert!(v < n, "below({n}) returned {v}");
+                if n <= 16 {
+                    counts[v] += 1;
+                }
+            }
+            if n <= 16 && n > 1 {
+                let expect = draws as f64 / n as f64;
+                for (v, &c) in counts.iter().enumerate() {
+                    let dev = (c as f64 - expect).abs() / expect;
+                    assert!(dev < 0.25, "below({n}) bucket {v}: {c} vs {expect:.0}");
+                }
+            }
+        }
+    }
+
+    /// The rejection zone is < n / 2^64 of the draw space, so for small n
+    /// the emitted sequence matches the historical `% n` mapping — seeded
+    /// test data across the repo is unchanged by the bias fix.
+    #[test]
+    fn below_sequence_stable_for_small_n() {
+        for seed in [0u64, 42, 0xDEAD] {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            for _ in 0..512 {
+                let n = 1 + (b.0 as usize % 63).min(62); // arbitrary small n per step
+                let want = {
+                    let mut c = a.clone();
+                    (c.next_u64() % n as u64) as usize
+                };
+                assert_eq!(a.below(n), want);
+                b.next_u64();
+            }
         }
     }
 
@@ -621,6 +747,24 @@ mod quant_tests {
         }
     }
 
+    /// The tile-major kernels recompose `qk_dot_q8` as
+    /// `scale * dot_i8 + zero * sum4` (zero-point term hoisted per tile);
+    /// the split must be bitwise-equal to the fused kernel.
+    #[test]
+    fn split_dot_i8_sum4_bitwise_equals_qk_dot_q8() {
+        let mut r = Rng::new(35);
+        for _ in 0..40 {
+            let n = 1 + r.below(130);
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 0.7).collect();
+            let mut q = vec![0i8; n];
+            let (s, z) = quantize_q8(&src, &mut q);
+            let fused = qk_dot_q8(&a, &q, s, z);
+            let split = s * dot_i8(&a, &q) + z * sum4(&a);
+            assert_eq!(fused.to_bits(), split.to_bits(), "n={n}");
+        }
+    }
+
     #[test]
     fn axpy_q8_matches_dequantized_axpy() {
         let mut r = Rng::new(34);
@@ -663,6 +807,21 @@ mod quickselect_tests {
             va2.sort_by(|x, y| x.partial_cmp(y).unwrap());
             vb.sort_by(|x, y| x.partial_cmp(y).unwrap());
             assert_eq!(va2, vb, "n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_wrapper_and_reuses_buffers() {
+        let mut r = Rng::new(23);
+        let mut pairs = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let n = 5 + r.below(500);
+            let k = 1 + r.below(n);
+            let vals: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            out.clear();
+            topk_unordered_into(&vals, k, &mut pairs, &mut out);
+            assert_eq!(out, topk_indices_unordered(&vals, k), "n={n} k={k}");
         }
     }
 

@@ -20,6 +20,12 @@ use std::sync::Arc;
 
 const VOCAB: usize = 64;
 
+/// Thread-matrix hook: CI re-runs this suite with `KASCADE_TEST_THREADS=4`
+/// so every batched==sequential property also holds on the parallel tick.
+fn test_threads() -> usize {
+    std::env::var("KASCADE_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
 fn random_model(seed: u64) -> Model {
     let cfg = ModelConfig {
         n_layers: 4,
@@ -85,6 +91,7 @@ fn run(
         enable_prefix_cache: true,
         prefix_cache_blocks: 128,
         batched_decode: batched,
+        num_threads: test_threads(),
         ..ServeConfig::default()
     };
     let mut e = Engine::new(cfg, factory(model, cap, kascade));

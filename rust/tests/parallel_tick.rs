@@ -1,0 +1,191 @@
+//! Deterministic parallel tick: an engine running its decode work on a
+//! worker pool (`ServeConfig::num_threads` > 1) must emit **bitwise
+//! identical** token streams to the serial engine, across random
+//! policies (dense / Kascade / Quest), preemption under block pressure,
+//! staggered mid-stream admission, prefix-cache resumes, and mid-stream
+//! cancellation.  Every parallel work item is self-contained (own
+//! softmax, disjoint output rows) and shared accounting folds back in
+//! fixed order — this suite fuzzes that invariant end to end.
+
+use kascade::config::{ModelConfig, ServeConfig, TopKRule};
+use kascade::coordinator::{Completion, Event, NativeBackend, Request, RequestHandle};
+use kascade::kascade::KascadePlan;
+use kascade::model::{Model, Weights};
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{Engine, LocalBackendFactory};
+use kascade::sparse::{DensePolicy, KascadePolicy, QuestPolicy, SparsePolicy};
+use kascade::tensor::Rng;
+use std::sync::Arc;
+
+const VOCAB: usize = 64;
+
+fn random_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        n_layers: 4,
+        d_model: 32,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        d_ff: 64,
+        vocab: VOCAB,
+        rope_theta: 10000.0,
+        rope: true,
+    };
+    let mut w = Weights::zeros(&cfg);
+    let mut r = Rng::new(seed);
+    r.fill_normal(&mut w.w_e, 0.3);
+    for lw in &mut w.layers {
+        r.fill_normal(&mut lw.wq, 0.18);
+        r.fill_normal(&mut lw.wk, 0.18);
+        r.fill_normal(&mut lw.wv, 0.18);
+        r.fill_normal(&mut lw.wo, 0.18);
+        r.fill_normal(&mut lw.w1, 0.18);
+        r.fill_normal(&mut lw.w3, 0.18);
+        r.fill_normal(&mut lw.w2, 0.12);
+    }
+    r.fill_normal(&mut w.w_u, 0.18);
+    Model::new(cfg, w)
+}
+
+/// Policy varies by prompt length so runs at different thread counts
+/// still build identical policies per request.
+fn factory(model: Arc<Model>, cap: usize) -> LocalBackendFactory {
+    Box::new(move |req| {
+        let policy: Box<dyn SparsePolicy> = match req.prompt.len() % 3 {
+            0 => Box::new(DensePolicy),
+            1 => Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+                4,
+                2,
+                vec![0, 2],
+                TopKRule::new(0.25, 8),
+            ))),
+            _ => Box::new(QuestPolicy::new(TopKRule::new(0.25, 8))),
+        };
+        Box::new(NativeBackend::new(model.clone(), cap, policy))
+    })
+}
+
+/// Run an arrival schedule on one engine config; returns completions
+/// (sorted by id) plus the cancelled ids' partial streams.
+#[allow(clippy::type_complexity)]
+fn run(
+    arrivals: &[(Request, usize)],
+    cancel_at: &[(usize, usize)], // (request index, cancel tick)
+    num_threads: usize,
+    tight_blocks: bool,
+    model: Arc<Model>,
+    cap: usize,
+) -> (Vec<Completion>, Vec<(u64, Vec<u32>)>) {
+    let cfg = ServeConfig {
+        block_size: 8,
+        num_blocks: if tight_blocks { 96 } else { 512 },
+        max_running: 8,
+        token_budget: 128,
+        prefill_chunk: 32,
+        queue_cap: 64,
+        workers: 1,
+        enable_prefix_cache: true,
+        prefix_cache_blocks: 64,
+        batched_decode: true,
+        num_threads,
+        ..ServeConfig::default()
+    };
+    let mut e = Engine::new(cfg, factory(model, cap));
+    let mut tick = 0usize;
+    let mut submitted = 0usize;
+    let mut guard = 0usize;
+    let mut handles: Vec<RequestHandle> = Vec::new();
+    let mut done: Vec<Completion> = Vec::new();
+    let mut failed: Vec<(u64, Vec<u32>)> = Vec::new();
+    loop {
+        for (req, at) in arrivals {
+            if *at == tick {
+                handles.push(e.submit(req.clone()).expect("admission rejected request"));
+                submitted += 1;
+            }
+        }
+        for &(ri, at) in cancel_at {
+            if at == tick && ri < handles.len() {
+                handles[ri].cancel();
+            }
+        }
+        if submitted == arrivals.len() && e.idle() {
+            break;
+        }
+        let did = e.tick();
+        guard = if did == 0 { guard + 1 } else { 0 };
+        assert!(guard < 1000, "engine livelock");
+        for h in &mut handles {
+            while let Some(ev) = h.try_next() {
+                match ev {
+                    Event::Done(c) => done.push(c),
+                    Event::Failed(kascade::coordinator::FailReason::Cancelled(c)) => {
+                        failed.push((c.id, c.tokens))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        tick += 1;
+    }
+    done.sort_by_key(|c| c.id);
+    failed.sort_by_key(|&(id, _)| id);
+    (done, failed)
+}
+
+#[test]
+fn thread_counts_emit_bitwise_identical_streams() {
+    let model = Arc::new(random_model(0x7E4D));
+    check("num_threads stream identity", 5, |rng| {
+        let tight_blocks = rng.below(2) == 0;
+        let n_reqs = 3 + rng.below(5);
+        let shared_len = 3 * (8 + 4 * rng.below(3)); // multiple of 3 -> dense leader
+        let shared: Vec<u32> = (0..shared_len).map(|_| rng.below(VOCAB) as u32).collect();
+        let mut arrivals = Vec::new();
+        let mut cap = 0usize;
+        for i in 0..n_reqs {
+            let mut prompt = if rng.below(3) > 0 {
+                shared.clone()
+            } else {
+                (0..9 + rng.below(24)).map(|_| rng.below(VOCAB) as u32).collect()
+            };
+            for _ in 0..rng.below(9) {
+                prompt.push(rng.below(VOCAB) as u32);
+            }
+            let max_new = if i == 0 { 6 + rng.below(10) } else { 1 + rng.below(12) };
+            cap = cap.max(prompt.len() + max_new + 16);
+            let at = rng.below(6);
+            arrivals.push((Request::new(prompt).max_new(max_new), at));
+        }
+        // one deterministic mid-stream cancellation per case
+        let cancels = vec![(rng.below(n_reqs), 3 + rng.below(4))];
+        let (base_done, base_failed) =
+            run(&arrivals, &cancels, 1, tight_blocks, model.clone(), cap);
+        for threads in [2usize, 4] {
+            let (done, failed) =
+                run(&arrivals, &cancels, threads, tight_blocks, model.clone(), cap);
+            prop_assert!(
+                done.len() == base_done.len(),
+                "threads={threads}: {} vs {} completions",
+                done.len(),
+                base_done.len()
+            );
+            for (a, b) in base_done.iter().zip(&done) {
+                prop_assert!(a.id == b.id, "threads={threads}: id {} vs {}", a.id, b.id);
+                prop_assert!(
+                    a.tokens == b.tokens,
+                    "threads={threads}: req {} diverged: {:?} vs {:?}",
+                    a.id,
+                    a.tokens,
+                    b.tokens
+                );
+            }
+            prop_assert!(
+                base_failed == failed,
+                "threads={threads}: cancelled partials diverged"
+            );
+        }
+        Ok(())
+    });
+}

@@ -79,18 +79,20 @@ fn prop_topk_selection_identical_f32_vs_int8() {
         }
         let mut cost_f = CostTracker::default();
         let mut cost_q = CostTracker::default();
-        let pf = attention::decode_pooled_scores(&q, &cf, g, &mut cost_f);
-        let pq = attention::decode_pooled_scores(&q, &cq, g, &mut cost_q);
+        let mut scr_f = attention::AttnScratch::new();
+        let mut scr_q = attention::AttnScratch::new();
+        attention::decode_pooled_scores(&q, &cf, g, &mut scr_f.planes, &mut cost_f);
+        attention::decode_pooled_scores(&q, &cq, g, &mut scr_q.planes, &mut cost_q);
         prop_assert!(
             cost_q.dequant_rows == 0,
             "pooled scoring over int8 must be fused (dequant_rows {})",
             cost_q.dequant_rows
         );
-        let sf = attention::select_topk(&pf, k, &mut cost_f);
-        let sq = attention::select_topk(&pq, k, &mut cost_q);
+        attention::select_topk(&mut scr_f, k, &mut cost_f);
+        attention::select_topk(&mut scr_q, k, &mut cost_q);
         for h in 0..n_kv {
-            let mut a = sf[h].clone();
-            let mut b = sq[h].clone();
+            let mut a = scr_f.sel.head(h).to_vec();
+            let mut b = scr_q.sel.head(h).to_vec();
             a.sort_unstable();
             b.sort_unstable();
             prop_assert!(a == b, "head {h}: f32 {a:?} != int8 {b:?} (len {len}, k {k})");

@@ -25,6 +25,12 @@ use kascade::tensor::Rng;
 use std::sync::Arc;
 use std::time::Duration;
 
+/// Thread-matrix hook: CI re-runs this suite with `KASCADE_TEST_THREADS=4`
+/// so every streaming property also holds on the parallel tick.
+fn test_threads() -> usize {
+    std::env::var("KASCADE_TEST_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
 /// Deterministic backend whose logits depend only on every token it has
 /// consumed — recompute after preemption or prefix-cache resume must
 /// reproduce the continuation exactly.
@@ -109,6 +115,7 @@ fn streamed_tokens_equal_completion_across_preemption_and_resume() {
         prefill_chunk: 32,
         queue_cap: 64,
         workers: 1,
+        num_threads: test_threads(),
         enable_prefix_cache: true,
         prefix_cache_blocks: 4,
         ..ServeConfig::default()
@@ -182,6 +189,7 @@ fn cancellation_at_random_phases_keeps_the_pool_clean() {
             prefill_chunk: 8 + rng.below(48),
             queue_cap: 64,
             workers: 1,
+            num_threads: test_threads(),
             enable_prefix_cache: true,
             prefix_cache_blocks: 4 + rng.below(16),
             ..ServeConfig::default()
@@ -307,6 +315,7 @@ fn seeded_sampling_identical_across_batched_and_sequential() {
             prefill_chunk: 32,
             queue_cap: 16,
             workers: 1,
+            num_threads: test_threads(),
             batched_decode: batched,
             ..ServeConfig::default()
         };
@@ -363,6 +372,7 @@ fn seeded_sampling_survives_preemption() {
             prefill_chunk: 32,
             queue_cap: 64,
             workers: 1,
+            num_threads: test_threads(),
             ..ServeConfig::default()
         };
         let mut e = Engine::new(
@@ -415,6 +425,7 @@ fn priority_request_starts_first() {
         prefill_chunk: 64,
         queue_cap: 8,
         workers: 1,
+        num_threads: test_threads(),
         ..ServeConfig::default()
     };
     let mut e = Engine::new(
@@ -456,6 +467,7 @@ fn server_streams_tokens_and_cancels_mid_flight() {
         prefill_chunk: 32,
         queue_cap: 32,
         workers: 1,
+        num_threads: test_threads(),
         ..ServeConfig::default()
     };
     let mut srv = Server::start(cfg, vec![echo_factory(), echo_factory()]);
