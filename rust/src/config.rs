@@ -315,6 +315,27 @@ pub struct ServeConfig {
     /// (fuzz-tested in `tests/parallel_tick.rs`).  Default 1 (serial,
     /// and the only mode with the zero-allocation-per-token guarantee).
     pub num_threads: usize,
+    /// Decode-tick protection for chunked-prefill interleaving: when any
+    /// sequence is decoding, cap the total prefill tokens a single tick
+    /// may schedule at this value (the cap also applies to the prefill
+    /// work of sequences admitted in that same tick).  This bounds tick
+    /// wall time — and with it TPOT jitter — while a huge (e.g. 128k+
+    /// token) prefill is in flight: the prefill proceeds in small slices
+    /// instead of consuming the whole `token_budget` between decode
+    /// steps.  `None` (the default) keeps the legacy behaviour where a
+    /// running prefill may take up to `prefill_chunk`/`token_budget`
+    /// tokens per tick regardless of live decoders.
+    pub decode_guard_prefill_tokens: Option<usize>,
+    /// Per-tenant fair-share admission, layered on the priority queue.
+    /// When enabled, admission picks — among the highest-priority
+    /// non-recovering waiters — the request whose tenant has consumed
+    /// the fewest admitted prompt tokens, so a tenant flooding the queue
+    /// (10:1 skew and beyond) cannot starve the others.  Priority and
+    /// preemption-recovery ordering still dominate: a recovering victim
+    /// keeps its head-of-queue slot and a strictly higher priority wins
+    /// regardless of tenant debt.  Off by default (pure FCFS within
+    /// priority, exactly the pre-fair-share behaviour).
+    pub fair_share: bool,
 }
 
 impl Default for ServeConfig {
@@ -333,6 +354,8 @@ impl Default for ServeConfig {
             kv_dtype: KvDtype::F32,
             max_prompt_tokens: None,
             num_threads: 1,
+            decode_guard_prefill_tokens: None,
+            fair_share: false,
         }
     }
 }

@@ -45,6 +45,11 @@ pub struct Request {
     /// priority level; preempted sequences keep their head-of-queue
     /// recovery slot).
     pub priority: i32,
+    /// Tenant id for fair-share admission
+    /// (`ServeConfig::fair_share`).  Requests from the same tenant share
+    /// one admitted-token account; with fair-share off this is purely
+    /// informational.  Default 0 (the anonymous tenant).
+    pub tenant: u32,
     pub sampling: SamplingParams,
 }
 
@@ -56,6 +61,7 @@ impl Request {
             stop_token: None,
             deadline_ms: None,
             priority: 0,
+            tenant: 0,
             sampling: SamplingParams::Greedy,
         }
     }
@@ -77,6 +83,11 @@ impl Request {
 
     pub fn priority(mut self, p: i32) -> Self {
         self.priority = p;
+        self
+    }
+
+    pub fn tenant(mut self, t: u32) -> Self {
+        self.tenant = t;
         self
     }
 
@@ -340,17 +351,20 @@ mod tests {
         assert_eq!(r.stop_token, None);
         assert_eq!(r.deadline_ms, None);
         assert_eq!(r.priority, 0);
+        assert_eq!(r.tenant, 0);
         assert_eq!(r.sampling, SamplingParams::Greedy);
         let r = r
             .max_new(5)
             .stop(9)
             .deadline_ms(250.0)
             .priority(3)
+            .tenant(2)
             .sampling(SamplingParams::seeded(7));
         assert_eq!(r.max_new, 5);
         assert_eq!(r.stop_token, Some(9));
         assert_eq!(r.deadline_ms, Some(250.0));
         assert_eq!(r.priority, 3);
+        assert_eq!(r.tenant, 2);
         assert!(matches!(r.sampling, SamplingParams::Seeded { seed: 7, .. }));
     }
 

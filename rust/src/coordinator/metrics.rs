@@ -10,6 +10,13 @@ pub struct ServeMetrics {
     pub started: Instant,
     pub ttft_us: LatencyHist,
     pub tpot_us: Welford,
+    /// per-token inter-arrival latency samples (same values `tpot_us`
+    /// averages, retained for exact p50/p95/p99 — the SLO gate's TPOT)
+    pub tpot_hist: LatencyHist,
+    /// prefill tokens scheduled per engine tick — the quantity
+    /// `ServeConfig::decode_guard_prefill_tokens` bounds; `max()` over a
+    /// run verifies the guard held
+    pub prefill_tokens_per_tick: Welford,
     pub tokens_out: u64,
     pub prompts_in: u64,
     pub requests_done: u64,
@@ -69,6 +76,8 @@ impl ServeMetrics {
             started: Instant::now(),
             ttft_us: LatencyHist::new(),
             tpot_us: Welford::new(),
+            tpot_hist: LatencyHist::new(),
+            prefill_tokens_per_tick: Welford::new(),
             tokens_out: 0,
             prompts_in: 0,
             requests_done: 0,
@@ -96,6 +105,16 @@ impl ServeMetrics {
     /// Handle-observed TTFT percentile (microseconds).
     pub fn streamed_ttft_percentile(&self, p: f64) -> f64 {
         self.streamed_ttft_us.lock().map(|h| h.percentile(p)).unwrap_or(0.0)
+    }
+
+    /// Engine-observed TTFT percentile (microseconds).
+    pub fn ttft_percentile(&self, p: f64) -> f64 {
+        self.ttft_us.percentile(p)
+    }
+
+    /// TPOT percentile (microseconds per output token).
+    pub fn tpot_percentile(&self, p: f64) -> f64 {
+        self.tpot_hist.percentile(p)
     }
 
     /// Record one tick's total resident KV bytes.
@@ -131,7 +150,8 @@ impl ServeMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} tokens_out={} throughput={:.1} tok/s  \
-             ttft p50={:.1}ms p99={:.1}ms  tpot mean={:.2}ms  \
+             ttft p50={:.1}ms p95={:.1}ms p99={:.1}ms  \
+             tpot mean={:.2}ms p95={:.2}ms p99={:.2}ms  \
              batch mean={:.1}  kv_util mean={:.0}%  preemptions={}  \
              prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
              decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s  \
@@ -142,8 +162,11 @@ impl ServeMetrics {
             self.tokens_out,
             self.throughput_tok_s(),
             self.ttft_us.percentile(50.0) / 1e3,
+            self.ttft_us.percentile(95.0) / 1e3,
             self.ttft_us.percentile(99.0) / 1e3,
             self.tpot_us.mean() / 1e3,
+            self.tpot_hist.percentile(95.0) / 1e3,
+            self.tpot_hist.percentile(99.0) / 1e3,
             self.batch_size.mean(),
             self.kv_util.mean() * 100.0,
             self.preemptions,
@@ -182,6 +205,11 @@ mod tests {
         m.streamed_ttft_us.lock().unwrap().add_us(2000.0);
         m.tick_us.add(123.0);
         m.threads = 4;
+        for us in [500.0, 800.0, 900.0] {
+            m.tpot_hist.add_us(us);
+        }
+        assert!((m.tpot_percentile(50.0) - 800.0).abs() < 1e-9);
+        assert!((m.ttft_percentile(50.0) - 1500.0).abs() < 1e-9);
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("threads=4"));

@@ -19,6 +19,19 @@
 //! matched chain hash).  Preemption drops refs, not blocks: a preempted
 //! sequence's indexed blocks park in the cached pool and are typically
 //! re-adopted wholesale when it is re-admitted.
+//!
+//! Two traffic-facing refinements (both off by default):
+//!
+//! * **decode-tick protection** (`decode_guard_prefill_tokens`): when the
+//!   tick schedules any decode, total prefill tokens in the same tick are
+//!   capped, so a 128k-token prefill advances in small slices between
+//!   decode steps instead of absorbing the whole `token_budget` — this
+//!   bounds tick wall time and TPOT jitter under long-context ingest;
+//! * **fair-share admission** (`fair_share`): among the highest-priority
+//!   non-recovering waiters, admit the request whose tenant has the
+//!   smallest admitted-prompt-token account, so one tenant flooding the
+//!   queue cannot starve the rest (priority and preemption recovery
+//!   still dominate).
 
 use super::blocks::BlockManager;
 use super::prefix_cache::{chain_hashes, PrefixIndex};
@@ -47,6 +60,25 @@ pub struct Batch {
     pub budget_used: usize,
 }
 
+impl Batch {
+    /// Total prefill tokens scheduled this tick (the quantity
+    /// `decode_guard_prefill_tokens` bounds when decodes are present).
+    pub fn prefill_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .map(|it| match it {
+                WorkItem::Prefill { tokens, .. } => *tokens,
+                WorkItem::Decode { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Whether any decode was scheduled this tick.
+    pub fn has_decodes(&self) -> bool {
+        self.items.iter().any(|it| matches!(it, WorkItem::Decode { .. }))
+    }
+}
+
 pub struct Scheduler {
     pub cfg: ServeConfig,
     pub blocks: BlockManager,
@@ -64,6 +96,12 @@ pub struct Scheduler {
     /// sequences parked at the queue head for preemption recovery —
     /// they keep their slot regardless of later submits' priorities
     recovering: HashSet<u64>,
+    /// per-sequence tenant id (default 0), for fair-share accounting
+    tenants: HashMap<u64, u32>,
+    /// cumulative admitted prompt tokens per tenant — the fair-share
+    /// "debt" account; admission picks the least-indebted tenant among
+    /// the top-priority waiters
+    tenant_debt: HashMap<u32, u64>,
 }
 
 impl Scheduler {
@@ -94,6 +132,8 @@ impl Scheduler {
             registered: HashMap::new(),
             priorities: HashMap::new(),
             recovering: HashSet::new(),
+            tenants: HashMap::new(),
+            tenant_debt: HashMap::new(),
         }
     }
 
@@ -149,6 +189,18 @@ impl Scheduler {
         self.registered.insert(seq, 0);
     }
 
+    /// Tag `seq` with its tenant for fair-share admission.  Untagged
+    /// sequences belong to tenant 0.  Recorded unconditionally (cheap);
+    /// consulted only when `cfg.fair_share` is set.
+    pub fn set_tenant(&mut self, seq: u64, tenant: u32) {
+        self.tenants.insert(seq, tenant);
+    }
+
+    /// Cumulative admitted prompt tokens charged to `tenant`.
+    pub fn tenant_debt(&self, tenant: u32) -> u64 {
+        self.tenant_debt.get(&tenant).copied().unwrap_or(0)
+    }
+
     pub fn on_finished(&mut self, seq: u64) {
         self.remove(seq);
     }
@@ -167,6 +219,7 @@ impl Scheduler {
         self.registered.remove(&seq);
         self.priorities.remove(&seq);
         self.recovering.remove(&seq);
+        self.tenants.remove(&seq);
     }
 
     /// Register `seq`'s first `boundary / block_size` full prompt blocks
@@ -267,6 +320,15 @@ impl Scheduler {
             }
         }
 
+        // decode-tick protection: when this tick schedules decodes, cap
+        // the total prefill tokens it may also schedule — a huge
+        // in-flight prefill then advances in bounded slices between
+        // decode steps instead of absorbing the whole token budget
+        let mut prefill_cap = match self.cfg.decode_guard_prefill_tokens {
+            Some(cap) if batch.has_decodes() => cap,
+            _ => usize::MAX,
+        };
+
         // 2. running prefills continue (chunked), oldest first
         let prefill_ids: Vec<u64> = self
             .running
@@ -282,7 +344,7 @@ impl Scheduler {
                 continue;
             }
             if let Some((SeqPhase::Prefilling { done }, prompt_len, _)) = lookup(id) {
-                let take = self.cfg.prefill_chunk.min(prompt_len - done).min(budget);
+                let take = self.cfg.prefill_chunk.min(prompt_len - done).min(budget).min(prefill_cap);
                 if take == 0 {
                     continue;
                 }
@@ -293,20 +355,22 @@ impl Scheduler {
                 if self.blocks.extend(id, reserved.max(done + take)) {
                     batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
                     budget -= take;
+                    prefill_cap = prefill_cap.saturating_sub(take);
                 }
             }
         }
 
         // 3. admit new sequences from the waiting queue
-        while budget > 0 && self.running.len() < self.cfg.max_running {
-            let id = match self.waiting.front().copied() {
-                Some(id) => id,
+        while budget > 0 && prefill_cap > 0 && self.running.len() < self.cfg.max_running {
+            let pos = match self.admission_pos() {
+                Some(p) => p,
                 None => break,
             };
+            let id = self.waiting[pos];
             let (phase, prompt_len, _) = match lookup(id) {
                 Some(x) => x,
                 None => {
-                    self.waiting.pop_front();
+                    self.waiting.remove(pos);
                     self.recovering.remove(&id);
                     continue;
                 }
@@ -332,7 +396,7 @@ impl Scheduler {
                     }
                 }
             }
-            let take = self.cfg.prefill_chunk.min(prompt_len - cached).min(budget);
+            let take = self.cfg.prefill_chunk.min(prompt_len - cached).min(budget).min(prefill_cap);
             // reserve blocks for the WHOLE prompt up front (vLLM-style):
             // a sequence that admits can always finish its prefill, so
             // half-prefilled sequences can never deadlock the pool
@@ -343,9 +407,11 @@ impl Scheduler {
                 }
                 break; // no memory: stop admitting (FCFS, no head-of-line skip)
             }
-            self.waiting.pop_front();
+            self.waiting.remove(pos);
             self.recovering.remove(&id);
             self.running.push(id);
+            let tenant = self.tenants.get(&id).copied().unwrap_or(0);
+            *self.tenant_debt.entry(tenant).or_insert(0) += prompt_len as u64;
             if let Some(h) = hit {
                 batch.cache_hits.push((id, cached, h));
                 self.prefix.stats.hits += 1;
@@ -356,10 +422,39 @@ impl Scheduler {
             }
             batch.items.push(WorkItem::Prefill { seq: id, tokens: take });
             budget -= take;
+            prefill_cap = prefill_cap.saturating_sub(take);
         }
 
         batch.budget_used = self.cfg.token_budget - budget;
         batch
+    }
+
+    /// Position in `waiting` of the next admission candidate.
+    ///
+    /// FCFS (`Some(0)`) unless fair-share is on: then, among the leading
+    /// run of equal-top-priority non-recovering waiters, the request
+    /// whose tenant holds the smallest admitted-token account wins (ties
+    /// break toward the earlier submit).  A recovering victim at the
+    /// head always keeps its slot.
+    fn admission_pos(&self) -> Option<usize> {
+        let &front = self.waiting.front()?;
+        if !self.cfg.fair_share || self.recovering.contains(&front) {
+            return Some(0);
+        }
+        let p0 = self.priorities.get(&front).copied().unwrap_or(0);
+        let mut best = 0usize;
+        let mut best_debt = self.tenant_debt(self.tenants.get(&front).copied().unwrap_or(0));
+        for (i, w) in self.waiting.iter().enumerate().skip(1) {
+            if self.recovering.contains(w) || self.priorities.get(w).copied().unwrap_or(0) != p0 {
+                break;
+            }
+            let debt = self.tenant_debt(self.tenants.get(w).copied().unwrap_or(0));
+            if debt < best_debt {
+                best = i;
+                best_debt = debt;
+            }
+        }
+        Some(best)
     }
 
     fn preempt(&mut self, victim: u64, batch: &mut Batch) {
@@ -537,6 +632,89 @@ mod tests {
         s.submit_prio(4, 1);
         assert_eq!(s.waiting.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
         s.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decode_guard_caps_prefill_tokens_when_decoding() {
+        let mut s =
+            Scheduler::new(ServeConfig { decode_guard_prefill_tokens: Some(8), ..cfg() });
+        let mut w = World { phases: HashMap::new() };
+        w.phases.insert(1, (SeqPhase::Decoding, 16, 16));
+        w.phases.insert(2, (SeqPhase::Prefilling { done: 128 }, 500, 128));
+        s.running.push(1);
+        s.running.push(2);
+        s.blocks.extend(1, 16);
+        s.blocks.extend(2, 500);
+        let b = s.tick(w.lookup());
+        assert!(b.items.contains(&WorkItem::Decode { seq: 1 }));
+        assert_eq!(b.prefill_tokens(), 8, "guarded tick slices the prefill: {:?}", b.items);
+        // the guard also withholds admissions once its token budget is spent
+        w.phases.insert(3, (SeqPhase::Waiting, 64, 0));
+        s.submit(3);
+        let b = s.tick(w.lookup());
+        assert_eq!(b.prefill_tokens(), 8);
+        assert!(
+            !b.items.iter().any(|i| matches!(i, WorkItem::Prefill { seq: 3, .. })),
+            "admission must not start a prefill past the guard: {:?}",
+            b.items
+        );
+        // without live decodes the guard is inert: full chunks again
+        s.remove(1);
+        w.phases.remove(&1);
+        let b = s.tick(w.lookup());
+        assert!(b.prefill_tokens() >= 128, "unguarded tick: {:?}", b.items);
+        s.blocks.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fair_share_picks_least_indebted_tenant() {
+        let mut s = Scheduler::new(ServeConfig { fair_share: true, max_running: 1, ..cfg() });
+        let mut w = World { phases: HashMap::new() };
+        for id in 1..=3u64 {
+            w.phases.insert(id, (SeqPhase::Waiting, 32, 0));
+        }
+        s.submit(1);
+        s.set_tenant(1, 7);
+        s.submit(2);
+        s.set_tenant(2, 7);
+        s.submit(3);
+        s.set_tenant(3, 8);
+        // all accounts empty: FCFS tie-break admits 1 (tenant 7)
+        let b = s.tick(w.lookup());
+        assert!(b.items.contains(&WorkItem::Prefill { seq: 1, tokens: 32 }), "{:?}", b.items);
+        assert_eq!(s.tenant_debt(7), 32);
+        w.phases.remove(&1);
+        s.on_finished(1);
+        // tenant 7 now owes 32 tokens: tenant 8's waiter jumps 2
+        let b = s.tick(w.lookup());
+        assert!(
+            b.items.contains(&WorkItem::Prefill { seq: 3, tokens: 32 }),
+            "least-indebted tenant admits first: {:?}",
+            b.items
+        );
+        assert!(s.waiting.contains(&2));
+        assert_eq!(s.tenant_debt(8), 32);
+    }
+
+    /// Fair-share must not override priority: a strictly higher-priority
+    /// waiter from the indebted tenant still admits first.
+    #[test]
+    fn fair_share_defers_to_priority() {
+        let mut s = Scheduler::new(ServeConfig { fair_share: true, max_running: 1, ..cfg() });
+        let mut w = World { phases: HashMap::new() };
+        w.phases.insert(1, (SeqPhase::Waiting, 32, 0));
+        w.phases.insert(2, (SeqPhase::Waiting, 32, 0));
+        s.submit_prio(1, 5);
+        s.set_tenant(1, 7);
+        *s.tenant_debt.entry(7).or_insert(0) += 10_000; // deeply indebted
+        s.submit_prio(2, 0);
+        s.set_tenant(2, 8);
+        let b = s.tick(w.lookup());
+        assert!(
+            b.items.contains(&WorkItem::Prefill { seq: 1, tokens: 32 }),
+            "priority outranks tenant debt: {:?}",
+            b.items
+        );
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //!   calibrate [--anchors M] [--out plan.json]       offline anchor selection
 //!   serve [--requests N] [--policy P]               run the serving demo
 //!                                                   (streaming sessions; --deadline-ms bounds each request)
+//!   traffic [--seed S] [--ticks N] [--rate R]       replay a seeded bursty multi-tenant
+//!                                                   traffic stream through the engine and
+//!                                                   report the TTFT/TPOT percentile surface
 //!   export-weights [--out artifacts/synth_weights]  SynthLM -> PJRT weights
 //!   pjrt-smoke                                      artifact load + parity check
 //!
@@ -67,6 +70,8 @@ fn usage() -> ! {
            eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
            calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
            serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--threads N] [--deadline-ms MS]\n\
+           traffic [--seed S] [--ticks N] [--rate R] [--burst-rate R] [--prompt-cap N]\n\
+                   [--guard TOKENS] [--fair-share] [--threads N]\n\
            export-weights [--out PATH] [--seed S]\n\
            pjrt-smoke [--artifacts DIR]"
     );
@@ -87,6 +92,7 @@ fn main() -> anyhow::Result<()> {
         }
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("traffic") => cmd_traffic(&args),
         Some("export-weights") => cmd_export_weights(&args),
         Some("pjrt-smoke") => cmd_pjrt_smoke(&args),
         _ => usage(),
@@ -185,6 +191,105 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         100.0 * correct as f64 / n_requests as f64,
         correct,
         n_requests
+    );
+    Ok(())
+}
+
+/// Replay a seeded bursty multi-tenant traffic stream (RAG shared-prefix,
+/// agentic multi-turn, long-document summarization) through the engine on
+/// a null-compute backend, and report the TTFT/TPOT percentile surface —
+/// the CLI face of the `slo_traffic` bench scenario, for poking at the
+/// scheduler knobs (`--guard`, `--fair-share`) interactively.
+fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
+    use kascade::coordinator::SeqBackend;
+    use kascade::workload::{TrafficGen, TrafficSpec};
+
+    /// O(1) backend: the harness measures the scheduling surface.
+    struct NullBackend;
+    impl SeqBackend for NullBackend {
+        fn prefill_chunk(&mut self, _tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+            Some(vec![0.0, 1.0])
+        }
+
+        fn decode(&mut self, _token: u32) -> Vec<f32> {
+            vec![0.0, 1.0]
+        }
+    }
+
+    let seed: u64 = args.flag("seed").and_then(|s| s.parse().ok()).unwrap_or(42);
+    let ticks: usize = args.flag("ticks").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rate: f64 = args.flag("rate").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let burst_rate: f64 = args.flag("burst-rate").and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let prompt_cap: usize = args.flag("prompt-cap").and_then(|s| s.parse().ok()).unwrap_or(512);
+    let guard: Option<usize> = args.flag("guard").and_then(|s| s.parse().ok());
+    let fair_share = args.has("fair-share");
+    let num_threads: usize = args.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(1);
+
+    let mut gen = TrafficGen::new(TrafficSpec {
+        seed,
+        base_rate: rate,
+        burst_rate,
+        prompt_cap,
+        ..TrafficSpec::default()
+    });
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 16384,
+        max_running: 16,
+        token_budget: 1024,
+        prefill_chunk: 256,
+        queue_cap: 1024,
+        workers: 1,
+        num_threads,
+        fair_share,
+        decode_guard_prefill_tokens: guard,
+        ..ServeConfig::default()
+    };
+    let mut engine = Engine::new(
+        cfg,
+        Box::new(|_req: &Request| Box::new(NullBackend) as Box<dyn SeqBackend>),
+    );
+    let mut handles = Vec::new();
+    let mut by_class = std::collections::HashMap::<&'static str, usize>::new();
+    let mut rejected = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..ticks {
+        for r in gen.next_tick() {
+            *by_class.entry(r.class.name()).or_insert(0) += 1;
+            match engine.submit(Request::new(r.prompt).max_new(r.max_new).tenant(r.tenant)) {
+                Ok(h) => handles.push(h),
+                Err(_) => rejected += 1,
+            }
+        }
+        engine.tick();
+    }
+    let done = engine.run_to_completion(&mut handles);
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &engine.metrics;
+    println!(
+        "traffic seed={seed} ticks={ticks} rate={rate} burst_rate={burst_rate} \
+         fair_share={fair_share} guard={guard:?}"
+    );
+    let mut classes: Vec<_> = by_class.iter().collect();
+    classes.sort();
+    for (name, n) in classes {
+        println!("  class {name:<8} {n} requests");
+    }
+    println!("  {} completions, {rejected} rejected, wall {wall:.2}s", done.len());
+    println!("  {}", m.report());
+    println!(
+        "  ttft p50={:.2}ms p95={:.2}ms p99={:.2}ms  tpot p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+        m.ttft_percentile(50.0) / 1e3,
+        m.ttft_percentile(95.0) / 1e3,
+        m.ttft_percentile(99.0) / 1e3,
+        m.tpot_percentile(50.0) / 1e3,
+        m.tpot_percentile(95.0) / 1e3,
+        m.tpot_percentile(99.0) / 1e3,
+    );
+    println!(
+        "  prefill tokens/tick mean={:.1} max={:.0}",
+        m.prefill_tokens_per_tick.mean(),
+        m.prefill_tokens_per_tick.max()
     );
     Ok(())
 }

@@ -128,6 +128,7 @@ impl Engine {
             session.send(Event::Failed(FailReason::Rejected(e)));
             return Err(e);
         }
+        self.sched.set_tenant(id, req.tenant);
         let backend = (self.factory)(&req);
         self.metrics.prompts_in += 1;
         self.seqs.insert(id, Sequence::new(req, session, backend));
@@ -200,6 +201,7 @@ impl Engine {
         self.metrics.prefix_misses += batch.cache_misses;
         let n = batch.items.len();
         self.metrics.batch_size.add(n as f64);
+        self.metrics.prefill_tokens_per_tick.add(batch.prefill_tokens() as f64);
         // split the tick: decodes execute first (scheduler order) as one
         // step-batched forward per shared model, then prefill chunks
         let mut decode_ids: Vec<u64> = Vec::new();
@@ -368,6 +370,7 @@ impl Engine {
             let per_tok = dt_us / tokens_done as f64;
             for _ in 0..tokens_done {
                 metrics.tpot_us.add(per_tok);
+                metrics.tpot_hist.add_us(per_tok);
             }
         }
     }

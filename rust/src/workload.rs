@@ -7,6 +7,12 @@
 //!   substitute): the model must iteratively retrieve the next hop during a
 //!   long decode; errors break or lengthen the chain.
 //! * **DevSet** — MuSiQue-substitute prompts for Kascade calibration.
+//!
+//! Plus the production traffic harness (ROADMAP item 5): [`TrafficGen`],
+//! a deterministic seeded generator of bursty/diurnal multi-tenant
+//! serving load (heavy-tailed prompt/output lengths; RAG shared-prefix,
+//! agentic multi-turn and long-document-summarization tenants) that
+//! drives the streaming `Request`/`Event` API in benches and tests.
 
 use crate::model::{SynthSpec, VocabLayout};
 use crate::tensor::Rng;
@@ -273,6 +279,266 @@ impl WorkloadGen {
     }
 }
 
+/// Tenant classes in the production traffic mix, each with its own
+/// request shape (see [`TrafficGen`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TenantClass {
+    /// Many requests over one shared document prefix + short unique
+    /// tails and short answers — the prefix-cache workload.
+    RagSharedPrefix,
+    /// Conversations that grow turn over turn: each request's prompt is
+    /// the session history (sharing a prefix with the previous turn)
+    /// plus fresh user tokens; moderate outputs.
+    AgenticMultiTurn,
+    /// Heavy-tailed long documents with longer summaries — the prefill
+    /// pressure that decode-tick protection exists for.
+    LongDocSumm,
+}
+
+impl TenantClass {
+    pub const ALL: [TenantClass; 3] = [
+        TenantClass::RagSharedPrefix,
+        TenantClass::AgenticMultiTurn,
+        TenantClass::LongDocSumm,
+    ];
+
+    /// Stable tenant id for fair-share admission accounting.
+    pub fn tenant(&self) -> u32 {
+        match self {
+            TenantClass::RagSharedPrefix => 0,
+            TenantClass::AgenticMultiTurn => 1,
+            TenantClass::LongDocSumm => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantClass::RagSharedPrefix => "rag",
+            TenantClass::AgenticMultiTurn => "agentic",
+            TenantClass::LongDocSumm => "summ",
+        }
+    }
+}
+
+/// Knobs of the traffic generator.  Every sample is a pure function of
+/// `seed` and the knobs, so a run is replayable tick for tick.
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    pub seed: u64,
+    /// Mean request arrivals per tick at the diurnal baseline
+    /// (Poisson-distributed per tick).
+    pub base_rate: f64,
+    /// Rate multiplier while a burst episode is active.
+    pub burst_rate: f64,
+    /// Per-tick probability that a burst episode starts.
+    pub burst_prob: f64,
+    /// Burst episode length in ticks.
+    pub burst_ticks: usize,
+    /// Diurnal cycle period in ticks: the arrival rate is modulated by
+    /// `1 + 0.5 sin(2πt / period)` (a 3:1 peak-to-trough swing).
+    pub diurnal_period: usize,
+    /// Heavy-tailed prompt lengths: Pareto(`prompt_alpha`) with scale
+    /// `prompt_min`, truncated at `prompt_cap` (summarization tenants
+    /// scale min/cap by `summ_factor`).
+    pub prompt_min: usize,
+    pub prompt_alpha: f64,
+    pub prompt_cap: usize,
+    /// Heavy-tailed output lengths (same Pareto shape family).
+    pub output_min: usize,
+    pub output_alpha: f64,
+    pub output_cap: usize,
+    /// Relative tenant weights `[rag, agentic, summ]`.
+    pub mix: [u32; 3],
+    /// Shared RAG document length in tokens (identical across all
+    /// RAG requests from one generator).
+    pub shared_prefix_len: usize,
+    /// Prompt length multiplier for the summarization tenant.
+    pub summ_factor: usize,
+    /// Concurrent agentic sessions whose histories grow turn over turn.
+    pub agentic_sessions: usize,
+    /// Token id range for generated prompts.
+    pub vocab: u32,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            base_rate: 1.0,
+            burst_rate: 4.0,
+            burst_prob: 0.05,
+            burst_ticks: 8,
+            diurnal_period: 256,
+            prompt_min: 32,
+            prompt_alpha: 1.2,
+            prompt_cap: 2048,
+            output_min: 4,
+            output_alpha: 1.5,
+            output_cap: 64,
+            mix: [3, 2, 1],
+            shared_prefix_len: 128,
+            summ_factor: 4,
+            agentic_sessions: 4,
+            vocab: 64,
+        }
+    }
+}
+
+/// One generated arrival: feed `prompt`/`max_new`/`tenant` into a
+/// [`crate::coordinator::Request`] at tick `at_tick`.
+#[derive(Debug, Clone)]
+pub struct TrafficRequest {
+    pub at_tick: u64,
+    pub class: TenantClass,
+    pub tenant: u32,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+}
+
+/// Deterministic bursty/diurnal multi-tenant traffic generator.
+///
+/// Arrivals per tick are Poisson at a rate shaped by a sinusoidal
+/// diurnal cycle and random burst episodes; prompt and output lengths
+/// are truncated-Pareto (heavy-tailed — most requests are small, the
+/// tail is what stresses chunked prefill); the tenant mix interleaves
+/// RAG shared-prefix, agentic multi-turn and long-document
+/// summarization request shapes.  Same [`TrafficSpec`] (seed included)
+/// ⇒ bitwise-identical arrival/length/token streams.
+pub struct TrafficGen {
+    pub spec: TrafficSpec,
+    rng: Rng,
+    tick: u64,
+    burst_left: usize,
+    shared_doc: Vec<u32>,
+    agent_hist: Vec<Vec<u32>>,
+}
+
+impl TrafficGen {
+    pub fn new(spec: TrafficSpec) -> Self {
+        let mut rng = Rng::new(spec.seed);
+        let vocab = spec.vocab.max(2);
+        let shared_doc: Vec<u32> =
+            (0..spec.shared_prefix_len).map(|_| rng.below(vocab as usize) as u32).collect();
+        let agent_hist = vec![Vec::new(); spec.agentic_sessions.max(1)];
+        Self { spec, rng, tick: 0, burst_left: 0, shared_doc, agent_hist }
+    }
+
+    /// Uniform draw in [0, 1) off the seeded generator.
+    fn unit(&mut self) -> f64 {
+        self.rng.below(1 << 20) as f64 / (1u64 << 20) as f64
+    }
+
+    /// Poisson(`lambda`) via Knuth's product-of-uniforms (fine for the
+    /// single-digit per-tick rates this harness uses).
+    fn poisson(&mut self, lambda: f64) -> usize {
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.unit();
+            if p <= l || k > 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Truncated Pareto: `min / (1-u)^(1/alpha)`, capped at `cap`.
+    fn pareto(&mut self, min: usize, alpha: f64, cap: usize) -> usize {
+        let u = self.unit().min(1.0 - 1e-12);
+        let x = min as f64 / (1.0 - u).powf(1.0 / alpha);
+        (x as usize).clamp(min.max(1), cap.max(min.max(1)))
+    }
+
+    fn tokens(&mut self, n: usize) -> Vec<u32> {
+        let v = self.spec.vocab.max(2) as usize;
+        (0..n).map(|_| self.rng.below(v) as u32).collect()
+    }
+
+    fn pick_class(&mut self) -> TenantClass {
+        let total: u32 = self.spec.mix.iter().sum::<u32>().max(1);
+        let mut r = self.rng.below(total as usize) as u32;
+        for (i, &w) in self.spec.mix.iter().enumerate() {
+            if r < w {
+                return TenantClass::ALL[i];
+            }
+            r -= w;
+        }
+        TenantClass::ALL[2]
+    }
+
+    /// Effective arrival rate for tick `t` (diurnal × burst shaping).
+    fn rate_at(&self, t: u64) -> f64 {
+        let period = self.spec.diurnal_period.max(1) as f64;
+        let diurnal = 1.0 + 0.5 * (2.0 * std::f64::consts::PI * t as f64 / period).sin();
+        let burst = if self.burst_left > 0 { self.spec.burst_rate } else { 1.0 };
+        self.spec.base_rate * diurnal * burst
+    }
+
+    fn request_for(&mut self, class: TenantClass, at_tick: u64) -> TrafficRequest {
+        let s = self.spec.clone();
+        let (prompt, max_new) = match class {
+            TenantClass::RagSharedPrefix => {
+                let tail = self.pareto(s.prompt_min, s.prompt_alpha, s.prompt_cap);
+                let mut p = self.shared_doc.clone();
+                p.extend(self.tokens(tail));
+                let out = self.pareto(s.output_min, s.output_alpha, s.output_cap);
+                (p, out)
+            }
+            TenantClass::AgenticMultiTurn => {
+                let sess = self.rng.below(self.agent_hist.len());
+                let user = self.pareto(s.prompt_min, s.prompt_alpha, s.prompt_cap);
+                let fresh = self.tokens(user);
+                self.agent_hist[sess].extend(fresh);
+                let prompt = self.agent_hist[sess].clone();
+                let out = self.pareto(s.output_min, s.output_alpha, s.output_cap);
+                // the (placeholder) assistant turn grows the history, so
+                // the next request from this session shares this
+                // request's prompt as a strict prefix
+                let reply = self.tokens(out);
+                self.agent_hist[sess].extend(reply);
+                (prompt, out)
+            }
+            TenantClass::LongDocSumm => {
+                let f = s.summ_factor.max(1);
+                let len = self.pareto(s.prompt_min * f, s.prompt_alpha, s.prompt_cap * f);
+                let out =
+                    self.pareto(s.output_min * 2, s.output_alpha, s.output_cap * 2);
+                (self.tokens(len), out)
+            }
+        };
+        TrafficRequest { at_tick, class, tenant: class.tenant(), prompt, max_new: max_new.max(1) }
+    }
+
+    /// Arrivals for the next tick (advances the generator's clock).
+    pub fn next_tick(&mut self) -> Vec<TrafficRequest> {
+        let t = self.tick;
+        self.tick += 1;
+        if self.burst_left > 0 {
+            self.burst_left -= 1;
+        } else if self.unit() < self.spec.burst_prob {
+            self.burst_left = self.spec.burst_ticks;
+        }
+        let lambda = self.rate_at(t);
+        let n = self.poisson(lambda);
+        (0..n)
+            .map(|_| {
+                let class = self.pick_class();
+                self.request_for(class, t)
+            })
+            .collect()
+    }
+
+    /// All arrivals over `ticks` ticks, in arrival order.
+    pub fn generate(&mut self, ticks: usize) -> Vec<TrafficRequest> {
+        let mut out = Vec::new();
+        for _ in 0..ticks {
+            out.extend(self.next_tick());
+        }
+        out
+    }
+}
+
 /// Grade a decode against a task: full credit iff the expected sequence is
 /// a prefix of the emission; AIME-S additionally requires termination.
 pub fn grade(task: &Task, emitted: &[u32]) -> bool {
@@ -383,5 +649,99 @@ mod tests {
         let b = WorkloadGen::new(&s, 9).longbench(Category::Mqa, 256);
         assert_eq!(a.prompt, b.prompt);
         assert_eq!(a.expect, b.expect);
+    }
+
+    #[test]
+    fn traffic_same_seed_replays_identical_streams() {
+        let spec = TrafficSpec { seed: 41, base_rate: 2.0, ..TrafficSpec::default() };
+        let a = TrafficGen::new(spec.clone()).generate(300);
+        let b = TrafficGen::new(spec.clone()).generate(300);
+        assert!(!a.is_empty(), "300 ticks at rate 2 must produce arrivals");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_tick, y.at_tick);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        // a different seed must actually change the stream
+        let c = TrafficGen::new(TrafficSpec { seed: 42, ..spec }).generate(300);
+        let same = a.len() == c.len()
+            && a.iter().zip(&c).all(|(x, y)| x.prompt == y.prompt && x.at_tick == y.at_tick);
+        assert!(!same, "different seeds produced identical traffic");
+    }
+
+    #[test]
+    fn traffic_shapes_match_tenant_classes() {
+        let spec = TrafficSpec { seed: 11, base_rate: 3.0, ..TrafficSpec::default() };
+        let shared_len = spec.shared_prefix_len;
+        let reqs = TrafficGen::new(spec.clone()).generate(400);
+        let mut seen = std::collections::HashSet::new();
+        let mut rag_prefix: Option<Vec<u32>> = None;
+        for r in &reqs {
+            seen.insert(r.class);
+            assert!(r.max_new >= 1);
+            assert_eq!(r.tenant, r.class.tenant());
+            if r.class == TenantClass::RagSharedPrefix {
+                assert!(r.prompt.len() > shared_len);
+                let p = r.prompt[..shared_len].to_vec();
+                if let Some(ref first) = rag_prefix {
+                    assert_eq!(&p, first, "all RAG requests share one document");
+                } else {
+                    rag_prefix = Some(p);
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3, "the mix must exercise all tenant classes");
+        // heavy tail: the summarization tenant's longest prompt dwarfs
+        // the median RAG tail
+        let max_summ = reqs
+            .iter()
+            .filter(|r| r.class == TenantClass::LongDocSumm)
+            .map(|r| r.prompt.len())
+            .max()
+            .unwrap();
+        assert!(max_summ > 2 * spec.prompt_min * spec.summ_factor, "no heavy tail: {max_summ}");
+    }
+
+    #[test]
+    fn traffic_agentic_turns_share_a_growing_prefix() {
+        // single agentic session: every turn's prompt must extend the
+        // previous turn's prompt (the prefix-cache-friendly shape)
+        let spec = TrafficSpec {
+            seed: 5,
+            base_rate: 2.0,
+            mix: [0, 1, 0],
+            agentic_sessions: 1,
+            ..TrafficSpec::default()
+        };
+        let reqs = TrafficGen::new(spec).generate(100);
+        assert!(reqs.len() >= 3);
+        for w in reqs.windows(2) {
+            let (a, b) = (&w[0].prompt, &w[1].prompt);
+            assert!(b.len() > a.len(), "histories grow turn over turn");
+            assert_eq!(&b[..a.len()], &a[..], "turn extends the previous prompt");
+        }
+    }
+
+    #[test]
+    fn traffic_bursts_and_diurnal_cycle_shape_the_rate() {
+        // burst episodes force arrival clumps well above the baseline
+        let spec = TrafficSpec {
+            seed: 3,
+            base_rate: 0.5,
+            burst_rate: 8.0,
+            burst_prob: 0.02,
+            ..TrafficSpec::default()
+        };
+        let mut g = TrafficGen::new(spec);
+        let mut per_tick = Vec::new();
+        for _ in 0..1000 {
+            per_tick.push(g.next_tick().len());
+        }
+        let max = *per_tick.iter().max().unwrap();
+        let mean = per_tick.iter().sum::<usize>() as f64 / per_tick.len() as f64;
+        assert!(max as f64 > 3.0 * mean.max(0.1), "no bursts: max {max}, mean {mean:.2}");
     }
 }

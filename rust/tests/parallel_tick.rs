@@ -114,6 +114,9 @@ fn run(
             break;
         }
         let did = e.tick();
+        // livelock guard counts consecutive ZERO-WORK ticks, never wall
+        // time — deterministic even when the worker pool is scheduled
+        // erratically on an oversubscribed CI runner
         guard = if did == 0 { guard + 1 } else { 0 };
         assert!(guard < 1000, "engine livelock");
         for h in &mut handles {
