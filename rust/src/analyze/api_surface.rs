@@ -1,0 +1,363 @@
+//! API-surface conformance: extract `pub fn`/`pub struct`/`pub enum`/
+//! `pub trait` declarations into a deterministic JSON document, diff it
+//! against the checked-in `analyze/api_surface.json` (CI fails on
+//! uncommitted drift), and arity-check inter-module call sites of
+//! unambiguous public functions — the mechanized version of the manual
+//! cross-check PRs 2–6 did by hand.
+
+use super::items::{find_word, line_of, match_delim, split_top_commas};
+use super::{Config, FileCtx, Finding};
+use crate::jsonutil::Json;
+use std::collections::BTreeMap;
+
+pub const SCHEMA: &str = "kascade-api-surface-v1";
+
+/// `coordinator/blocks.rs` -> `coordinator::blocks`; `sparse/mod.rs`
+/// -> `sparse`.
+fn module_path(rel: &str) -> String {
+    let p = rel.trim_end_matches(".rs");
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    p.replace('/', "::")
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PubFn {
+    pub name: String,
+    pub assoc: Option<String>,
+    pub arity: usize,
+    pub has_self: bool,
+}
+
+/// Names of `pub <kw>` items (kw = struct/enum/trait) outside tests.
+fn pub_items(f: &FileCtx, kw: &str) -> Vec<String> {
+    let b = f.code.as_bytes();
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while let Some(pos) = find_word(&f.code, kw, at) {
+        at = pos + kw.len();
+        if f.is_test_pos(pos) || !f.code[..pos].ends_with("pub ") {
+            continue;
+        }
+        let mut j = pos + kw.len();
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\n') {
+            j += 1;
+        }
+        let start = j;
+        while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+            j += 1;
+        }
+        if j > start {
+            out.push(f.code[start..j].to_string());
+        }
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn pub_fns(f: &FileCtx) -> Vec<PubFn> {
+    let mut out: Vec<PubFn> = f
+        .fns
+        .iter()
+        .filter(|fun| fun.is_pub && !f.is_test_pos(fun.pos))
+        .map(|fun| PubFn {
+            name: fun.name.clone(),
+            assoc: fun.assoc.clone(),
+            arity: fun.params.len(),
+            has_self: fun.has_self,
+        })
+        .collect();
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Build the surface document for every scanned file.
+pub fn extract(files: &[FileCtx]) -> Json {
+    let mut modules = BTreeMap::new();
+    for f in files {
+        let structs = pub_items(f, "struct");
+        let enums = pub_items(f, "enum");
+        let traits = pub_items(f, "trait");
+        let fns = pub_fns(f);
+        if structs.is_empty() && enums.is_empty() && traits.is_empty() && fns.is_empty() {
+            continue;
+        }
+        let fn_json = fns
+            .iter()
+            .map(|pf| {
+                Json::obj(vec![
+                    ("arity", Json::num(pf.arity as f64)),
+                    (
+                        "assoc",
+                        match &pf.assoc {
+                            Some(a) => Json::str(a.as_str()),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("has_self", Json::Bool(pf.has_self)),
+                    ("name", Json::str(pf.name.as_str())),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let strs = |v: &[String]| Json::arr(v.iter().map(|s| Json::str(s.as_str())));
+        modules.insert(
+            module_path(&f.rel),
+            Json::obj(vec![
+                ("enums", strs(&enums)),
+                ("fns", Json::arr(fn_json)),
+                ("structs", strs(&structs)),
+                ("traits", strs(&traits)),
+            ]),
+        );
+    }
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("modules", Json::Obj(modules)),
+    ])
+}
+
+/// Names whose call sites are never arity-checked: std-prelude
+/// collisions and trait methods implemented many times over — a
+/// token-level scanner cannot resolve the receiver's type, so only
+/// unambiguous repo-unique names are checked.
+const SKIP_NAMES: [&str; 30] = [
+    "new", "default", "len", "get", "push", "pop", "insert", "remove", "clear", "iter", "next",
+    "clone", "from", "into", "drop", "send", "recv", "write", "read", "take", "name", "reset",
+    "parse", "sample", "step", "run", "min", "max", "extend", "path",
+];
+
+/// Arity-check call sites of unambiguous pub fns across every file.
+/// "Unambiguous" counts EVERY definition, private ones included — a
+/// private `fn preempt(victim, batch)` next to a pub
+/// `Sequence::preempt(backend)` makes the name unresolvable for a
+/// token-level scanner.
+fn call_sites(files: &[FileCtx], fns: &[(String, PubFn)]) -> Vec<Finding> {
+    // name -> signature, keeping only names where all definitions
+    // (pub, private, trait) agree
+    let mut sigs: BTreeMap<String, Option<PubFn>> = BTreeMap::new();
+    let mut all_defs = Vec::new();
+    for f in files {
+        for fun in &f.fns {
+            if f.is_test_pos(fun.pos) {
+                continue;
+            }
+            all_defs.push(PubFn {
+                name: fun.name.clone(),
+                assoc: None,
+                arity: fun.params.len(),
+                has_self: fun.has_self,
+            });
+        }
+    }
+    for pf in &all_defs {
+        sigs.entry(pf.name.clone())
+            .and_modify(|cur| {
+                let same = cur
+                    .as_ref()
+                    .map(|c| c.arity == pf.arity && c.has_self == pf.has_self)
+                    .unwrap_or(false);
+                if !same {
+                    *cur = None;
+                }
+            })
+            .or_insert_with(|| Some(pf.clone()));
+    }
+    let pub_names: Vec<&str> = fns.iter().map(|(_, pf)| pf.name.as_str()).collect();
+    let checkable: Vec<&PubFn> = sigs
+        .values()
+        .flatten()
+        .filter(|pf| {
+            pf.name.len() >= 4
+                && !SKIP_NAMES.contains(&pf.name.as_str())
+                && pub_names.contains(&pf.name.as_str())
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    for f in files {
+        for pf in &checkable {
+            let mut at = 0usize;
+            while let Some(pos) = find_word(&f.code, &pf.name, at) {
+                at = pos + pf.name.len();
+                if f.is_test_pos(pos) {
+                    continue;
+                }
+                let before = f.code[..pos].trim_end();
+                let last_word_is = |w: &str| {
+                    before.ends_with(w)
+                        && !before[..before.len() - w.len()]
+                            .ends_with(|c: char| c == '_' || c.is_ascii_alphanumeric())
+                };
+                if last_word_is("fn") || last_word_is("use") {
+                    continue;
+                }
+                let rest = &f.code[pos + pf.name.len()..];
+                if !rest.starts_with('(') {
+                    continue;
+                }
+                let open = pos + pf.name.len();
+                let Some(close) = match_delim(&f.code, open) else { continue };
+                let args_text = &f.code[open + 1..close];
+                if has_top_level_pipe(args_text) {
+                    continue; // closure arguments defeat comma counting
+                }
+                let got = split_top_commas(args_text).len();
+                let is_method = before.ends_with('.');
+                let ok = if is_method {
+                    pf.has_self && got == pf.arity
+                } else if pf.has_self {
+                    // UFCS / `Type::method(&x, ..)` or a same-name local
+                    got == pf.arity || got == pf.arity + 1
+                } else {
+                    got == pf.arity
+                };
+                if !ok {
+                    out.push(Finding {
+                        rule: "api-surface",
+                        file: f.rel.clone(),
+                        line: line_of(&f.code, pos),
+                        msg: format!(
+                            "call to `{}` passes {got} arg(s) but the API surface \
+                             declares arity {} (has_self: {})",
+                            pf.name, pf.arity, pf.has_self
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+fn has_top_level_pipe(text: &str) -> bool {
+    let mut depth = 0i32;
+    for ch in text.chars() {
+        match ch {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            '|' if depth == 0 => return true,
+            _ => {}
+        }
+    }
+    false
+}
+
+/// Full api-surface pass: call-site conformance plus drift against the
+/// committed surface file (or regeneration with `write_api`).
+pub fn check(files: &[FileCtx], config: &Config, write_api: bool) -> std::io::Result<Vec<Finding>> {
+    let all_fns: Vec<(String, PubFn)> = files
+        .iter()
+        .flat_map(|f| pub_fns(f).into_iter().map(move |pf| (f.rel.clone(), pf)))
+        .collect();
+    let mut out = call_sites(files, &all_fns);
+
+    let Some(path) = &config.api_surface_path else {
+        return Ok(out);
+    };
+    let fresh = extract(files);
+    if write_api {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, fresh.to_string() + "\n")?;
+        return Ok(out);
+    }
+    let shown = path.display().to_string();
+    let committed = match Json::from_file(path) {
+        Ok(j) => j,
+        Err(e) => {
+            out.push(Finding {
+                rule: "api-surface",
+                file: shown,
+                line: 0,
+                msg: format!("cannot load committed surface ({e:#}) — run with --write-api"),
+            });
+            return Ok(out);
+        }
+    };
+    if committed != fresh {
+        let empty = BTreeMap::new();
+        let cm = committed.get("modules").and_then(|m| m.as_obj()).unwrap_or(&empty);
+        let fm = fresh.get("modules").and_then(|m| m.as_obj()).unwrap_or(&empty);
+        let mut drifted: Vec<&String> = Vec::new();
+        for k in cm.keys().chain(fm.keys()) {
+            if cm.get(k) != fm.get(k) && !drifted.contains(&k) {
+                drifted.push(k);
+            }
+        }
+        out.push(Finding {
+            rule: "api-surface",
+            file: shown,
+            line: 0,
+            msg: format!(
+                "committed API surface is stale (drift in: {}) — regenerate with \
+                 `cargo run --bin kascade_analyze -- --write-api` and commit",
+                drifted
+                    .iter()
+                    .map(|s| s.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(rel: &str, src: &str) -> FileCtx {
+        FileCtx::parse(rel.into(), src)
+    }
+
+    #[test]
+    fn extracts_modules_types_and_fns() {
+        let f = ctx(
+            "coordinator/blocks.rs",
+            "pub struct BlockManager;\npub enum Kind { A }\n\
+             impl BlockManager {\n    pub fn extend(&mut self, seq: u64, n: usize) -> bool { true }\n}\n\
+             pub fn free_fn(a: usize) {}\n",
+        );
+        let j = extract(&[f]);
+        assert_eq!(j.get("schema").and_then(|s| s.as_str()), Some(SCHEMA));
+        let m = j.path("modules.coordinator::blocks").unwrap();
+        assert_eq!(m.get("structs").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(m.get("enums").unwrap().as_arr().unwrap().len(), 1);
+        let fns = m.get("fns").unwrap().as_arr().unwrap();
+        assert_eq!(fns.len(), 2);
+        let ext = fns.iter().find(|x| x.get("name").unwrap().as_str() == Some("extend")).unwrap();
+        assert_eq!(ext.get("arity").unwrap().as_usize(), Some(2));
+        assert_eq!(ext.get("assoc").unwrap().as_str(), Some("BlockManager"));
+    }
+
+    #[test]
+    fn call_site_arity_mismatch_is_flagged() {
+        let lib = ctx("widgets.rs", "pub fn widgetize(a: usize, b: usize) -> usize { a + b }\n");
+        let good = ctx("ok.rs", "fn f() { let x = widgetize(1, 2); }\n");
+        let bad = ctx("bad.rs", "fn g() { let x = widgetize(1, 2, 3); }\n");
+        let files = vec![lib, good, bad];
+        let fns: Vec<(String, PubFn)> = files
+            .iter()
+            .flat_map(|f| pub_fns(f).into_iter().map(move |pf| (f.rel.clone(), pf)))
+            .collect();
+        let out = call_sites(&files, &fns);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].file, "bad.rs");
+        assert!(out[0].msg.contains("arity 2"));
+    }
+
+    #[test]
+    fn ambiguous_and_stoplisted_names_are_skipped() {
+        let a = ctx("a.rs", "pub fn overloadish(a: usize) {}\n");
+        let b = ctx("b.rs", "pub fn overloadish(a: usize, b: usize) {}\n");
+        let call = ctx("c.rs", "fn f() { overloadish(1, 2, 3); }\n");
+        let files = vec![a, b, call];
+        let fns: Vec<(String, PubFn)> = files
+            .iter()
+            .flat_map(|f| pub_fns(f).into_iter().map(move |pf| (f.rel.clone(), pf)))
+            .collect();
+        assert!(call_sites(&files, &fns).is_empty(), "conflicting sigs are not checkable");
+    }
+}

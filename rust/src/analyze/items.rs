@@ -1,0 +1,366 @@
+//! Structural scanning over the blanked code view: function spans with
+//! parameter lists, `impl`/`trait` block association, `#[cfg(test)]` /
+//! `#[test]` spans, and brace matching.  Deliberately token-level — no
+//! full parser — but strings and comments are already blanked, so brace
+//! and paren matching cannot be confused by literals.
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// 1-indexed line number of byte offset `pos`.
+pub fn line_of(code: &str, pos: usize) -> usize {
+    1 + code.as_bytes()[..pos].iter().filter(|&&b| b == b'\n').count()
+}
+
+/// Find the matching close delimiter for the open delimiter at `open`
+/// (which must be `(`, `[`, or `{`).  Returns the index of the closer,
+/// or `None` if the file ends first.  Only the matching delimiter kind
+/// is tracked against its partner; all three kinds nest.
+pub fn match_delim(code: &str, open: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let (o, c) = match b[open] {
+        b'(' => (b'(', b')'),
+        b'[' => (b'[', b']'),
+        b'{' => (b'{', b'}'),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (i, &byte) in b.iter().enumerate().skip(open) {
+        if byte == o {
+            depth += 1;
+        } else if byte == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// Next occurrence of `needle` as a whole word (not embedded in a wider
+/// identifier) at or after `from`.
+pub fn find_word(code: &str, needle: &str, from: usize) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut at = from;
+    while let Some(rel) = code[at..].find(needle) {
+        let pos = at + rel;
+        let before_ok = pos == 0 || !is_ident_byte(b[pos - 1]);
+        let end = pos + needle.len();
+        let after_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        at = pos + 1;
+    }
+    None
+}
+
+/// Split `text` on top-level commas (tracking `()`, `[]`, `{}`, `<>`
+/// nesting).  `<>` tracking is heuristic (comparison operators inside
+/// argument lists can skew it) but parameter lists never contain bare
+/// comparisons, which is the only place this is used with angles.
+pub fn split_top_commas(text: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut angle = 0i32;
+    let mut cur = String::new();
+    for ch in text.chars() {
+        match ch {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            '<' => angle += 1,
+            '>' => angle = (angle - 1).max(0),
+            ',' if depth == 0 && angle == 0 => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(ch);
+    }
+    let last = cur.trim().to_string();
+    if !last.is_empty() {
+        parts.push(last);
+    }
+    parts
+}
+
+/// A `fn` item found in the code view.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// byte offset of the `fn` keyword in the code view
+    pub pos: usize,
+    pub line: usize,
+    pub is_pub: bool,
+    pub has_self: bool,
+    /// non-`self` parameter names (pattern text before the `:`)
+    pub params: Vec<String>,
+    /// byte span of the body in the code view (`{`..=`}`), `None` for
+    /// trait-method declarations without a default body
+    pub body: Option<(usize, usize)>,
+    /// enclosing `impl Type` / `trait Type` name, if any
+    pub assoc: Option<String>,
+}
+
+/// An `impl`/`trait` block span with the associated type name.
+#[derive(Debug, Clone)]
+pub struct AssocBlock {
+    pub name: String,
+    pub span: (usize, usize),
+}
+
+/// Last path segment of a type expression, generics stripped:
+/// `attention::KvCache<'a, T>` -> `KvCache`.
+fn type_name(text: &str) -> String {
+    let no_gen = match text.find('<') {
+        Some(i) => &text[..i],
+        None => text,
+    };
+    let seg = no_gen.rsplit("::").next().unwrap_or(no_gen);
+    seg.trim().trim_start_matches('&').trim().to_string()
+}
+
+/// Scan `impl` and `trait` block spans.
+pub fn assoc_blocks(code: &str) -> Vec<AssocBlock> {
+    let mut out = Vec::new();
+    for kw in ["impl", "trait"] {
+        let mut at = 0usize;
+        while let Some(pos) = find_word(code, kw, at) {
+            at = pos + kw.len();
+            let Some(open_rel) = code[at..].find('{') else { continue };
+            let open = at + open_rel;
+            let header = &code[at..open];
+            // `impl<T> Foo for Bar<T>` — the implemented-on type is after
+            // `for`; otherwise the whole header is the type
+            // `trait Policy: Send` — the name stops at the supertrait
+            // list (`impl` headers keep their `::` paths intact)
+            let header = match kw {
+                "trait" => header.split(':').next().unwrap_or(header),
+                _ => header,
+            };
+            let ty = match find_word(header, "for", 0) {
+                Some(f) if kw == "impl" => type_name(&header[f + 3..]),
+                _ => type_name(header),
+            };
+            if ty.is_empty() || !ty.bytes().all(is_ident_byte) {
+                continue;
+            }
+            let Some(close) = match_delim(code, open) else { continue };
+            out.push(AssocBlock { name: ty, span: (open, close) });
+            // do NOT skip past the block: trait fns with default bodies
+            // live inside and must still be found by the fn scan below
+        }
+    }
+    out
+}
+
+/// Byte spans of test-only code: the item following `#[cfg(test)]` or
+/// `#[test]` (scan to its first `{`, then brace-match).
+pub fn test_spans(code: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for marker in ["#[cfg(test)]", "#[test]"] {
+        let mut at = 0usize;
+        while let Some(rel) = code[at..].find(marker) {
+            let pos = at + rel;
+            at = pos + marker.len();
+            if let Some(open_rel) = code[at..].find('{') {
+                let open = at + open_rel;
+                if let Some(close) = match_delim(code, open) {
+                    spans.push((pos, close));
+                }
+            }
+        }
+    }
+    spans
+}
+
+pub fn in_spans(spans: &[(usize, usize)], pos: usize) -> bool {
+    spans.iter().any(|&(a, b)| pos >= a && pos <= b)
+}
+
+/// Scan every `fn` item.  `blocks` associates methods with their
+/// `impl`/`trait` type.
+pub fn fn_items(code: &str, blocks: &[AssocBlock]) -> Vec<FnItem> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while let Some(pos) = find_word(code, "fn", at) {
+        at = pos + 2;
+        // name
+        let mut j = at;
+        while j < b.len() && (b[j] == b' ' || b[j] == b'\n') {
+            j += 1;
+        }
+        let name_start = j;
+        while j < b.len() && is_ident_byte(b[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue;
+        }
+        let name = code[name_start..j].to_string();
+        // generics between name and params
+        let mut k = j;
+        while k < b.len() && (b[k] == b' ' || b[k] == b'\n') {
+            k += 1;
+        }
+        if k < b.len() && b[k] == b'<' {
+            let mut depth = 0i32;
+            while k < b.len() {
+                match b[k] {
+                    b'<' => depth += 1,
+                    b'>' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            k += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        while k < b.len() && (b[k] == b' ' || b[k] == b'\n') {
+            k += 1;
+        }
+        if k >= b.len() || b[k] != b'(' {
+            continue;
+        }
+        let Some(close) = match_delim(code, k) else { continue };
+        let mut has_self = false;
+        let mut params = Vec::new();
+        for part in split_top_commas(&code[k + 1..close]) {
+            let pat = part.split(':').next().unwrap_or("").trim();
+            let pat = pat.trim_start_matches('&').trim();
+            let pat = pat.strip_prefix("mut ").unwrap_or(pat).trim();
+            if pat == "self" || pat.ends_with(" self") {
+                has_self = true;
+            } else if !pat.is_empty() {
+                params.push(pat.to_string());
+            }
+        }
+        // body: first `{` before any `;` (a `;` first means a bodyless
+        // trait-method declaration)
+        let mut m = close + 1;
+        let mut body = None;
+        while m < b.len() {
+            if b[m] == b';' {
+                break;
+            }
+            if b[m] == b'{' {
+                if let Some(end) = match_delim(code, m) {
+                    body = Some((m, end));
+                }
+                break;
+            }
+            m += 1;
+        }
+        // visibility: look back from `fn` for `pub` on the same item
+        // (allowing `pub(crate) unsafe const` prefixes)
+        let lead_start = pos.saturating_sub(48);
+        let lead = &code[lead_start..pos];
+        let tail = lead.rsplit(['\n', ';', '}', '{']).next().unwrap_or(lead);
+        // plain `pub` only — `pub(crate)`/`pub(super)` are not public API
+        let is_pub = match find_word(tail, "pub", 0) {
+            Some(p) => !tail[p + 3..].trim_start().starts_with('('),
+            None => false,
+        };
+        // innermost enclosing impl/trait block
+        let assoc = blocks
+            .iter()
+            .filter(|blk| pos > blk.span.0 && pos < blk.span.1)
+            .min_by_key(|blk| blk.span.1 - blk.span.0)
+            .map(|blk| blk.name.clone());
+        out.push(FnItem {
+            name,
+            pos,
+            line: line_of(code, pos),
+            is_pub,
+            has_self,
+            params,
+            body,
+            assoc,
+        });
+        at = match body {
+            Some((open, _)) => open + 1,
+            None => close + 1,
+        };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::lexer::strip;
+
+    const SRC: &str = r#"
+pub struct Foo;
+
+impl Foo {
+    pub fn method(&self, a: usize, b: &[f32]) -> usize {
+        a + b.len()
+    }
+    fn private_helper(x: u32) -> u32 { x }
+}
+
+pub trait Policy {
+    fn decode(&mut self, q: &[f32]) -> usize;
+    fn name(&self) -> String {
+        String::new()
+    }
+}
+
+pub fn free_fn<T: Clone>(items: &mut Vec<T>, n: usize) {}
+
+#[cfg(test)]
+mod tests {
+    fn test_only_helper(z: usize) -> usize { z }
+}
+"#;
+
+    #[test]
+    fn finds_fns_with_assoc_params_and_visibility() {
+        let code = strip(SRC).code;
+        let blocks = assoc_blocks(&code);
+        let fns = fn_items(&code, &blocks);
+        let method = fns.iter().find(|f| f.name == "method").unwrap();
+        assert!(method.is_pub && method.has_self);
+        assert_eq!(method.params, vec!["a", "b"]);
+        assert_eq!(method.assoc.as_deref(), Some("Foo"));
+        let helper = fns.iter().find(|f| f.name == "private_helper").unwrap();
+        assert!(!helper.is_pub && !helper.has_self);
+        let decode = fns.iter().find(|f| f.name == "decode").unwrap();
+        assert_eq!(decode.assoc.as_deref(), Some("Policy"));
+        assert!(decode.body.is_none(), "bodyless trait method");
+        let name = fns.iter().find(|f| f.name == "name").unwrap();
+        assert!(name.body.is_some(), "default trait body found");
+        let free = fns.iter().find(|f| f.name == "free_fn").unwrap();
+        assert!(free.is_pub && !free.has_self);
+        assert_eq!(free.params, vec!["items", "n"]);
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mod() {
+        let code = strip(SRC).code;
+        let spans = test_spans(&code);
+        assert!(!spans.is_empty());
+        let pos = code.find("test_only_helper").unwrap();
+        assert!(in_spans(&spans, pos));
+        let pos2 = code.find("free_fn").unwrap();
+        assert!(!in_spans(&spans, pos2));
+    }
+
+    #[test]
+    fn comma_splitting_tracks_nesting() {
+        let parts = split_top_commas("a: HashMap<u64, Vec<f32>>, b: (u32, u32), c: usize");
+        assert_eq!(parts.len(), 3);
+        assert!(parts[0].starts_with("a:"));
+        assert!(parts[1].starts_with("b:"));
+    }
+}

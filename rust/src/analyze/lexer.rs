@@ -1,0 +1,271 @@
+//! Token-level "code view" of a Rust source file: same byte length as
+//! the original, with the contents of comments, string literals, and
+//! char literals blanked to spaces (newlines preserved).  Rule passes
+//! run over this view so `"Instant::now"` inside a string or a comment
+//! can never trip a lint, while byte offsets and line numbers still map
+//! 1:1 onto the original file.
+//!
+//! Comments are additionally collected verbatim (with their line
+//! numbers) because the `// analyze:` directive grammar lives in them.
+
+/// One comment's text (`//` line or `/* */` block, delimiters included)
+/// plus the 1-indexed line it starts on.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Output of [`strip`].
+pub struct Stripped {
+    /// Same byte length as the input; comment/string/char contents are
+    /// spaces, newlines are kept so line numbers line up.
+    pub code: String,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Blank every byte of `out[a..b]` except newlines.
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    for byte in out[a..b].iter_mut() {
+        if *byte != b'\n' {
+            *byte = b' ';
+        }
+    }
+}
+
+/// Scan past a `\`-escape inside a string/char literal starting at the
+/// backslash; returns the index just past the escape.
+fn skip_escape(b: &[u8], i: usize) -> usize {
+    // i points at the backslash
+    if i + 1 >= b.len() {
+        return i + 1;
+    }
+    match b[i + 1] {
+        b'u' => {
+            // \u{...}
+            let mut j = i + 2;
+            if b.get(j) == Some(&b'{') {
+                while j < b.len() && b[j] != b'}' {
+                    j += 1;
+                }
+                j + 1
+            } else {
+                j
+            }
+        }
+        _ => i + 2,
+    }
+}
+
+/// Build the code view.  Handles line comments, nested block comments,
+/// strings, raw strings (`r"`, `r#"`, `br##"`, ...), byte strings, and
+/// the char-literal-vs-lifetime ambiguity.
+pub fn strip(src: &str) -> Stripped {
+    let b = src.as_bytes();
+    let mut out = b.to_vec();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // comments -----------------------------------------------------
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: src[start..i].to_string() });
+            blank(&mut out, start, i);
+            continue;
+        }
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: src[start..i].to_string() });
+            blank(&mut out, start, i);
+            continue;
+        }
+        // raw / byte strings -------------------------------------------
+        let prev_ident = i > 0 && is_ident_byte(b[i - 1]);
+        if !prev_ident && (c == b'r' || c == b'b') {
+            // r"..."  r#"..."#  br"..."  b"..."  (any # count)
+            let mut j = i + 1;
+            if c == b'b' && j < b.len() && b[j] == b'r' {
+                j += 1;
+            }
+            let raw = j > i + 1 || c == b'r';
+            if raw {
+                let mut hashes = 0usize;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < b.len() && b[j] == b'"' {
+                    // scan for closing quote + `hashes` #s
+                    let mut k = j + 1;
+                    'raw: while k < b.len() {
+                        if b[k] == b'"' {
+                            let mut h = 0usize;
+                            while k + 1 + h < b.len() && h < hashes && b[k + 1 + h] == b'#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                k += 1 + hashes;
+                                break 'raw;
+                            }
+                        }
+                        k += 1;
+                    }
+                    for idx in i..k.min(b.len()) {
+                        if b[idx] == b'\n' {
+                            line += 1;
+                        }
+                    }
+                    blank(&mut out, i, k.min(b.len()));
+                    i = k.min(b.len());
+                    continue;
+                }
+            }
+            if c == b'b' && i + 1 < b.len() && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+                // fall through to the string/char scanners below, one
+                // byte in, after blanking the prefix
+                out[i] = b' ';
+                i += 1;
+                continue;
+            }
+        }
+        // plain strings ------------------------------------------------
+        if c == b'"' {
+            let start = i;
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' {
+                    i = skip_escape(b, i);
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            blank(&mut out, start, i);
+            continue;
+        }
+        // char literal vs lifetime -------------------------------------
+        if c == b'\'' {
+            let mut j = i + 1;
+            let mut is_char = false;
+            if j < b.len() {
+                if b[j] == b'\\' {
+                    j = skip_escape(b, j);
+                    is_char = j < b.len() && b[j] == b'\'';
+                    if is_char {
+                        j += 1;
+                    }
+                } else if b[j] < 0x80 {
+                    // 'x' only when a closing quote follows exactly one char
+                    if j + 1 < b.len() && b[j + 1] == b'\'' {
+                        is_char = true;
+                        j += 2;
+                    }
+                } else {
+                    // multibyte char literal
+                    let ch_len = src[j..].chars().next().map(|ch| ch.len_utf8()).unwrap_or(1);
+                    if j + ch_len < b.len() && b[j + ch_len] == b'\'' {
+                        is_char = true;
+                        j += ch_len + 1;
+                    }
+                }
+            }
+            if is_char {
+                blank(&mut out, i, j);
+                i = j;
+            } else {
+                // a lifetime — leave it (harmless to every rule)
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+    // the blanking above only wrote ASCII spaces over existing bytes, so
+    // the buffer can only be invalid UTF-8 if we clipped a multibyte
+    // char; blanked regions replace whole chars, so this cannot fail
+    let code = String::from_utf8_lossy(&out).into_owned();
+    Stripped { code, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanks_comments_and_strings_preserving_length_and_lines() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\nlet b = 1;\n";
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(!s.code.contains("Instant"));
+        assert_eq!(s.code.matches('\n').count(), src.matches('\n').count());
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].line, 1);
+        assert!(s.comments[0].text.contains("Instant::now"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings() {
+        let src = "/* outer /* inner */ still */ fn f() {}\nlet r = r#\"a \" b\"#;\n";
+        let s = strip(src);
+        assert!(!s.code.contains("outer"));
+        assert!(!s.code.contains("still"));
+        assert!(s.code.contains("fn f()"));
+        assert!(!s.code.contains("a \" b"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\''; let d = 'x'; '§' }";
+        let s = strip(src);
+        assert_eq!(s.code.len(), src.len());
+        assert!(s.code.contains("'a str"), "lifetimes kept: {}", s.code);
+        assert!(!s.code.contains("'x'"), "char literal blanked: {}", s.code);
+        assert!(!s.code.contains('§'), "multibyte char blanked");
+    }
+
+    #[test]
+    fn byte_strings_and_escapes() {
+        let src = "let a = b\"bytes\"; let b = \"esc \\\" quote\"; let u = '\\u{1F600}';";
+        let s = strip(src);
+        assert!(!s.code.contains("bytes"));
+        assert!(!s.code.contains("quote"));
+        assert!(!s.code.contains("1F600"));
+        assert!(s.code.contains("let b ="));
+    }
+}

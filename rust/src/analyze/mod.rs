@@ -1,0 +1,323 @@
+//! `kascade-analyze`: a dependency-free, token-level static analyzer
+//! over the repo's own sources.  It mechanizes the manual "static
+//! cross-check" debt sweep with four rule families:
+//!
+//! * `determinism`    — wall-clock reads, thread-local RNG, and
+//!   `HashMap`/`HashSet` iteration inside the attention/kvcache/sparse/
+//!   pool/scheduler tick paths (PR 5's bitwise-identical parallel tick
+//!   makes iteration order a correctness bug, not a style nit)
+//! * `hot-path-alloc` — allocation tokens inside functions marked with
+//!   a `// analyze: hot-path` directive, making the zero steady-state
+//!   allocation guarantee of `tests/alloc_steady_state.rs` statically
+//!   visible
+//! * `api-surface`    — `pub fn`/`pub struct` signatures extracted into
+//!   the checked-in `analyze/api_surface.json`, plus call-site arity
+//!   cross-checks; CI fails on uncommitted drift
+//! * `panic-path`     — `unwrap`/`expect`/unguarded caller-index
+//!   indexing in the `server.rs`/`coordinator/` request paths
+//!
+//! Audited sites are annotated in source with
+//! `// analyze: allow(<rule>) — <reason>`; an annotation without a
+//! reason is itself a finding (`allow-grammar`).  See `docs/analysis.md`
+//! for the full catalog.
+
+pub mod api_surface;
+pub mod items;
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub const RULE_NAMES: [&str; 5] =
+    ["determinism", "hot-path-alloc", "api-surface", "panic-path", "allow-grammar"];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    /// non-fatal notes (e.g. an allow annotation that no finding used)
+    pub warnings: Vec<String>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// What to analyze and how.  Scope entries are paths relative to
+/// `root`: entries ending in `/` match the whole subtree, anything else
+/// matches that file exactly.
+pub struct Config {
+    /// directory scanned recursively for `.rs` files
+    pub root: PathBuf,
+    pub determinism_scope: Vec<String>,
+    pub panic_scope: Vec<String>,
+    /// repo-wide floor on `// analyze: hot-path` markers, so the
+    /// allocation rule cannot be silenced by deleting its markers
+    pub min_hot_path_markers: usize,
+    /// committed API-surface JSON to diff against (`None` = skip drift)
+    pub api_surface_path: Option<PathBuf>,
+}
+
+impl Config {
+    /// The repo's own configuration: `root` is `rust/src`, the surface
+    /// file lives at `rust/analyze/api_surface.json`.
+    pub fn kascade(rust_dir: &Path) -> Config {
+        Config {
+            root: rust_dir.join("src"),
+            determinism_scope: vec![
+                "attention.rs".into(),
+                "sparse/".into(),
+                "pool.rs".into(),
+                "server.rs".into(),
+                "coordinator/scheduler.rs".into(),
+                "coordinator/sequence.rs".into(),
+                "model/forward.rs".into(),
+            ],
+            panic_scope: vec!["server.rs".into(), "coordinator/".into()],
+            min_hot_path_markers: 4,
+            api_surface_path: Some(rust_dir.join("analyze/api_surface.json")),
+        }
+    }
+
+    /// Everything in scope, no surface file, no marker floor — the
+    /// fixture-corpus configuration used by `tests/analyze.rs`.
+    pub fn bare(root: PathBuf) -> Config {
+        Config {
+            root,
+            determinism_scope: vec!["".into()],
+            panic_scope: vec!["".into()],
+            min_hot_path_markers: 0,
+            api_surface_path: None,
+        }
+    }
+}
+
+pub fn in_scope(rel: &str, scope: &[String]) -> bool {
+    scope.iter().any(|s| {
+        if s.is_empty() {
+            true
+        } else if s.ends_with('/') {
+            rel.starts_with(s.as_str())
+        } else {
+            rel == s
+        }
+    })
+}
+
+/// A parsed `// analyze: allow(<rule>) — <reason>` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    /// the source line the annotation suppresses (same line for a
+    /// trailing comment, the next code-bearing line for a full-line one)
+    pub target: usize,
+}
+
+/// One fully-scanned source file, shared by every rule pass.
+pub struct FileCtx {
+    pub rel: String,
+    pub code: String,
+    pub tests: Vec<(usize, usize)>,
+    pub fns: Vec<items::FnItem>,
+    pub allows: Vec<Allow>,
+    /// lines carrying a `// analyze: hot-path` marker
+    pub hot_lines: Vec<usize>,
+    /// malformed directives: (line, what's wrong)
+    pub malformed: Vec<(usize, String)>,
+}
+
+impl FileCtx {
+    pub fn parse(rel: String, src: &str) -> FileCtx {
+        let stripped = lexer::strip(src);
+        let code = stripped.code;
+        let tests = items::test_spans(&code);
+        let blocks = items::assoc_blocks(&code);
+        let fns = items::fn_items(&code, &blocks);
+        let line_has_code: Vec<bool> =
+            code.lines().map(|l| !l.trim().is_empty()).collect();
+        let mut allows = Vec::new();
+        let mut hot_lines = Vec::new();
+        let mut malformed = Vec::new();
+        for c in &stripped.comments {
+            let body = c.text.trim_start_matches('/').trim_start_matches('!').trim();
+            let Some(rest) = body.strip_prefix("analyze:") else { continue };
+            let rest = rest.trim();
+            if rest == "hot-path" {
+                hot_lines.push(c.line);
+            } else if let Some(tail) = rest.strip_prefix("allow(") {
+                match parse_allow(tail) {
+                    Ok((rule, reason)) => {
+                        let own_line_has_code = line_has_code
+                            .get(c.line - 1)
+                            .is_some_and(|&has| has);
+                        let target = if own_line_has_code {
+                            c.line
+                        } else {
+                            next_code_line(&line_has_code, c.line)
+                        };
+                        allows.push(Allow { line: c.line, rule, reason, target });
+                    }
+                    Err(why) => malformed.push((c.line, why)),
+                }
+            } else {
+                malformed.push((c.line, format!("unrecognized directive '{rest}'")));
+            }
+        }
+        FileCtx { rel, code, tests, fns, allows, hot_lines, malformed }
+    }
+
+    pub fn is_test_pos(&self, pos: usize) -> bool {
+        items::in_spans(&self.tests, pos)
+    }
+}
+
+/// Parse `<rule>) — <reason>` (the part after `allow(`).
+fn parse_allow(tail: &str) -> Result<(String, String), String> {
+    let Some(close) = tail.find(')') else {
+        return Err("unterminated allow(...)".into());
+    };
+    let rule = tail[..close].trim().to_string();
+    if !RULE_NAMES.contains(&rule.as_str()) {
+        return Err(format!("unknown rule '{rule}' in allow(...)"));
+    }
+    let after = tail[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix('—')
+        .or_else(|| after.strip_prefix('-'))
+        .map(str::trim)
+        .unwrap_or("");
+    if reason.is_empty() {
+        return Err(format!("allow({rule}) carries no reason — write `allow({rule}) — <why>`"));
+    }
+    Ok((rule, reason.to_string()))
+}
+
+/// First code-bearing line after `line` (1-indexed), skipping blank and
+/// comment-only lines, bounded so a stray annotation cannot suppress a
+/// finding pages away.
+fn next_code_line(line_has_code: &[bool], line: usize) -> usize {
+    for l in line + 1..(line + 5).min(line_has_code.len() + 1) {
+        if line_has_code[l - 1] {
+            return l;
+        }
+    }
+    line + 1
+}
+
+/// Recursively collect `.rs` files under `root`, as (rel, contents),
+/// sorted by path for deterministic reports.
+fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .unwrap_or(&path)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((rel, std::fs::read_to_string(&path)?));
+            }
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Run every rule over `config.root`, apply allow annotations, and
+/// return the report.  `write_api` regenerates the surface file instead
+/// of diffing against it.
+pub fn run(config: &Config, write_api: bool) -> std::io::Result<Report> {
+    let sources = collect_sources(&config.root)?;
+    let files: Vec<FileCtx> =
+        sources.into_iter().map(|(rel, src)| FileCtx::parse(rel, &src)).collect();
+
+    let mut raw: Vec<Finding> = Vec::new();
+    for f in &files {
+        if in_scope(&f.rel, &config.determinism_scope) {
+            raw.extend(rules::determinism(f));
+        }
+        raw.extend(rules::hot_path_alloc(f));
+        if in_scope(&f.rel, &config.panic_scope) {
+            raw.extend(rules::panic_path(f));
+        }
+    }
+    raw.extend(api_surface::check(&files, config, write_api)?);
+
+    let mut report = Report { files_scanned: files.len(), ..Report::default() };
+
+    // allow application: a finding is suppressed by a matching-rule
+    // annotation targeting its line; unused annotations are warnings
+    for f in &files {
+        let mut used = vec![false; f.allows.len()];
+        raw.retain(|fd| {
+            if fd.file != f.rel {
+                return true;
+            }
+            for (i, a) in f.allows.iter().enumerate() {
+                if a.rule == fd.rule && (a.target == fd.line || a.line == fd.line) {
+                    used[i] = true;
+                    return false;
+                }
+            }
+            true
+        });
+        for (i, a) in f.allows.iter().enumerate() {
+            if !used[i] {
+                report.warnings.push(format!(
+                    "{}:{}: allow({}) matched no finding — stale annotation?",
+                    f.rel, a.line, a.rule
+                ));
+            }
+        }
+        for (line, why) in &f.malformed {
+            raw.push(Finding {
+                rule: "allow-grammar",
+                file: f.rel.clone(),
+                line: *line,
+                msg: why.clone(),
+            });
+        }
+    }
+
+    // marker floor: deleting hot-path markers must not pass silently
+    let markers: usize = files.iter().map(|f| f.hot_lines.len()).sum();
+    if markers < config.min_hot_path_markers {
+        raw.push(Finding {
+            rule: "hot-path-alloc",
+            file: String::new(),
+            line: 0,
+            msg: format!(
+                "only {markers} `analyze: hot-path` markers found (floor {}) — \
+                 markers must not be removed to silence the rule",
+                config.min_hot_path_markers
+            ),
+        });
+    }
+
+    raw.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report.findings = raw;
+    Ok(report)
+}

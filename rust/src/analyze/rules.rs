@@ -1,0 +1,370 @@
+//! The determinism, hot-path-allocation, and panic-path rule passes.
+//! Each takes one scanned [`FileCtx`] and returns raw findings; allow
+//! annotations are applied by the caller ([`crate::analyze::run`]).
+
+use super::items::{find_word, line_of};
+use super::{FileCtx, Finding};
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// The identifier ending just before byte `idx` (trailing spaces
+/// skipped), e.g. `ident_before("let seqs =", 9)` -> `seqs`.
+fn ident_before(code: &str, idx: usize) -> Option<String> {
+    let b = code.as_bytes();
+    let mut end = idx;
+    while end > 0 && (b[end - 1] == b' ' || b[end - 1] == b'\n') {
+        end -= 1;
+    }
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        None
+    } else {
+        Some(code[start..end].to_string())
+    }
+}
+
+// ---------------------------------------------------------------------
+// determinism
+// ---------------------------------------------------------------------
+
+/// Tokens that read ambient nondeterminism.  Wall-clock reads are only
+/// legitimate at audited metrics/deadline sites (annotated in source).
+const TIME_RNG_TOKENS: [&str; 5] =
+    ["Instant::now", "SystemTime", "thread_rng", "from_entropy", "random_state"];
+
+const MAP_ITER_SUFFIXES: [&str; 8] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Identifiers in this file declared (or initialized) as
+/// `HashMap`/`HashSet`: `name: HashMap<..>` fields/params and
+/// `let [mut] name = HashMap::new()` bindings.
+fn hash_container_names(code: &str) -> Vec<String> {
+    let b = code.as_bytes();
+    let mut names = Vec::new();
+    for ty in ["HashMap", "HashSet"] {
+        let mut at = 0usize;
+        while let Some(pos) = find_word(code, ty, at) {
+            at = pos + ty.len();
+            let mut k = pos;
+            while k > 0 && b[k - 1] == b' ' {
+                k -= 1;
+            }
+            let name = if k > 0 && b[k - 1] == b':' && (k < 2 || b[k - 2] != b':') {
+                // `name: HashMap<..>` — field or parameter
+                ident_before(code, k - 1)
+            } else if k > 0 && b[k - 1] == b'=' {
+                // `let [mut] name = HashMap::new()`
+                ident_before(code, k - 1)
+            } else {
+                None
+            };
+            if let Some(n) = name {
+                if n != "mut" && !names.contains(&n) {
+                    names.push(n);
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Is the word occurrence at `pos` the sequence of a `for .. in [&
+/// mut][self.]name` loop header?
+fn is_for_in_target(code: &str, pos: usize) -> bool {
+    let b = code.as_bytes();
+    let mut k = pos;
+    if k >= 5 && &code[k - 5..k] == "self." {
+        k -= 5;
+    }
+    while k > 0 && (b[k - 1] == b'&' || b[k - 1] == b' ') {
+        k -= 1;
+    }
+    if k >= 4 && &code[k - 4..k] == "mut " {
+        k -= 4;
+    }
+    while k > 0 && (b[k - 1] == b'&' || b[k - 1] == b' ') {
+        k -= 1;
+    }
+    if k < 2 || &code[k - 2..k] != "in" {
+        return false;
+    }
+    if k >= 3 && is_ident_byte(b[k - 3]) {
+        return false;
+    }
+    // require a `for` earlier on the same line
+    let line_start = code[..k].rfind('\n').map(|p| p + 1).unwrap_or(0);
+    find_word(&code[line_start..k], "for", 0).is_some()
+}
+
+pub fn determinism(f: &FileCtx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for tok in TIME_RNG_TOKENS {
+        let mut at = 0usize;
+        while let Some(pos) = find_word(&f.code, tok, at) {
+            at = pos + tok.len();
+            if f.is_test_pos(pos) {
+                continue;
+            }
+            out.push(Finding {
+                rule: "determinism",
+                file: f.rel.clone(),
+                line: line_of(&f.code, pos),
+                msg: format!(
+                    "`{tok}` in a determinism-scoped path — engine ticks must be \
+                     replayable; annotate audited metrics/deadline sites"
+                ),
+            });
+        }
+    }
+    for name in hash_container_names(&f.code) {
+        let mut at = 0usize;
+        while let Some(pos) = find_word(&f.code, &name, at) {
+            at = pos + name.len();
+            if f.is_test_pos(pos) {
+                continue;
+            }
+            // skip whitespace so a rustfmt-broken chain
+            // (`self.seqs\n    .iter()`) cannot evade the rule
+            let rest = f.code[pos + name.len()..].trim_start();
+            let iterated = MAP_ITER_SUFFIXES.iter().any(|s| rest.starts_with(s))
+                || is_for_in_target(&f.code, pos);
+            if iterated {
+                out.push(Finding {
+                    rule: "determinism",
+                    file: f.rel.clone(),
+                    line: line_of(&f.code, pos),
+                    msg: format!(
+                        "iteration over hash container `{name}` — order is \
+                         nondeterministic; sort keys or use an ordered container"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// hot-path-alloc
+// ---------------------------------------------------------------------
+
+const ALLOC_TOKENS: [&str; 11] = [
+    "Vec::new",
+    "String::new",
+    "Box::new",
+    "vec!",
+    "format!",
+    ".push(",
+    ".to_vec()",
+    ".clone()",
+    ".collect()",
+    ".collect::",
+    ".to_string()",
+];
+
+pub fn hot_path_alloc(f: &FileCtx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for &marker_line in &f.hot_lines {
+        // the marked fn is the first one starting within a few lines
+        // below the marker (attributes may sit between)
+        let marked = f
+            .fns
+            .iter()
+            .filter(|fun| fun.line > marker_line && fun.line <= marker_line + 6)
+            .min_by_key(|fun| fun.line);
+        let Some(fun) = marked else {
+            out.push(Finding {
+                rule: "hot-path-alloc",
+                file: f.rel.clone(),
+                line: marker_line,
+                msg: "`analyze: hot-path` marker is not followed by a fn".into(),
+            });
+            continue;
+        };
+        let Some((body_start, body_end)) = fun.body else {
+            continue;
+        };
+        let body = &f.code[body_start..body_end];
+        for tok in ALLOC_TOKENS {
+            let mut at = 0usize;
+            while let Some(rel_pos) = body[at..].find(tok) {
+                let pos = body_start + at + rel_pos;
+                at += rel_pos + tok.len();
+                if f.is_test_pos(pos) {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: "hot-path-alloc",
+                    file: f.rel.clone(),
+                    line: line_of(&f.code, pos),
+                    msg: format!(
+                        "`{tok}` inside hot-path fn `{}` — the decode loop must not \
+                         allocate per token (tests/alloc_steady_state.rs)",
+                        fun.name
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// panic-path
+// ---------------------------------------------------------------------
+
+/// Does the fn body contain a bounds guard mentioning `param`: a
+/// comparison (`p <`, `>= p`, ...), a checked `.get(p)`, or a clamp?
+fn param_guarded(body: &str, param: &str) -> bool {
+    let mut at = 0usize;
+    while let Some(pos) = find_word(body, param, at) {
+        at = pos + param.len();
+        let before = body[..pos].trim_end();
+        let after = body[pos + param.len()..].trim_start();
+        if after.starts_with('<') || after.starts_with('>') {
+            return true;
+        }
+        let cmp_before = before.ends_with('<')
+            || before.ends_with('>')
+            || before.ends_with("<=")
+            || before.ends_with(">=");
+        if cmp_before {
+            return true;
+        }
+        if before.ends_with(".get(") || before.ends_with(".get_mut(") {
+            return true;
+        }
+        if after.starts_with(".min(") || after.starts_with(".clamp(") {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn panic_path(f: &FileCtx) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for tok in [".unwrap()", ".expect("] {
+        let mut at = 0usize;
+        while let Some(rel_pos) = f.code[at..].find(tok) {
+            let pos = at + rel_pos;
+            at = pos + tok.len();
+            if f.is_test_pos(pos) {
+                continue;
+            }
+            let what = tok.trim_end_matches(['(', ')']);
+            out.push(Finding {
+                rule: "panic-path",
+                file: f.rel.clone(),
+                line: line_of(&f.code, pos),
+                msg: format!(
+                    "`{what}()` on a request path — a poisoned request must fail the \
+                     request, not the worker; handle or annotate the audited invariant"
+                ),
+            });
+        }
+    }
+    // caller-provided index used without a bounds guard
+    for fun in &f.fns {
+        let Some((body_start, body_end)) = fun.body else { continue };
+        if f.is_test_pos(fun.pos) {
+            continue;
+        }
+        let body = &f.code[body_start..body_end];
+        for param in &fun.params {
+            if param.is_empty() || !param.bytes().all(is_ident_byte) {
+                continue;
+            }
+            let mut at = 0usize;
+            let mut indexed_at = None;
+            while let Some(pos) = find_word(body, param, at) {
+                at = pos + param.len();
+                let before_ok = pos > 0 && body.as_bytes()[pos - 1] == b'[';
+                let rest = &body[pos + param.len()..];
+                let after_ok = rest.starts_with(']') || rest.starts_with(" as ");
+                if before_ok && after_ok {
+                    indexed_at = Some(body_start + pos);
+                    break;
+                }
+            }
+            if let Some(pos) = indexed_at {
+                if !param_guarded(body, param) {
+                    out.push(Finding {
+                        rule: "panic-path",
+                        file: f.rel.clone(),
+                        line: line_of(&f.code, pos),
+                        msg: format!(
+                            "`{}` indexes with caller-provided `{param}` and no bounds \
+                             guard — out-of-range input panics the worker",
+                            fun.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(src: &str) -> FileCtx {
+        FileCtx::parse("test.rs".into(), src)
+    }
+
+    #[test]
+    fn determinism_flags_clock_and_map_iteration() {
+        let src = "fn tick(seqs: HashMap<u64, u32>) {\n\
+                   let t = Instant::now();\n\
+                   for (k, v) in &seqs {}\n\
+                   let ks = seqs.keys();\n\
+                   }\n";
+        let fs = determinism(&ctx(src));
+        assert_eq!(fs.iter().filter(|f| f.msg.contains("Instant::now")).count(), 1);
+        assert_eq!(fs.iter().filter(|f| f.msg.contains("`seqs`")).count(), 2);
+    }
+
+    #[test]
+    fn determinism_ignores_tests_and_ordered_access() {
+        let src = "fn ok(seqs: HashMap<u64, u32>) { let v = seqs.get(&1); }\n\
+                   #[cfg(test)]\nmod tests {\n fn t() { let x = Instant::now(); }\n}\n";
+        assert!(determinism(&ctx(src)).is_empty());
+    }
+
+    #[test]
+    fn hot_path_flags_alloc_tokens_only_in_marked_fns() {
+        let src = "// analyze: hot-path\n\
+                   fn kernel(out: &mut Vec<f32>) { out.push(1.0); }\n\
+                   fn setup(out: &mut Vec<f32>) { out.push(1.0); }\n";
+        let fs = hot_path_alloc(&ctx(src));
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("kernel"));
+        assert_eq!(fs[0].line, 2);
+    }
+
+    #[test]
+    fn panic_path_flags_unwrap_and_unguarded_param_index() {
+        let src = "pub fn stop(&mut self, w: usize) { self.txs[w].take().unwrap(); }\n\
+                   pub fn ok(&mut self, w: usize) {\n\
+                   if w < self.txs.len() { let _ = &self.txs[w]; }\n\
+                   }\n";
+        let fs = panic_path(&ctx(src));
+        assert_eq!(fs.iter().filter(|f| f.msg.contains(".unwrap()")).count(), 1);
+        assert_eq!(fs.iter().filter(|f| f.msg.contains("bounds")).count(), 1, "{fs:?}");
+        assert!(fs.iter().all(|f| !f.msg.contains("`ok`")));
+    }
+}

@@ -715,6 +715,7 @@ fn scale(d: usize) -> f32 {
 /// into `out`.  This is the parallel engine's work-item granularity —
 /// each `(sequence, head)` item is self-contained (own softmax, own
 /// output rows), so sharding across workers is bitwise-order-free.
+// analyze: hot-path
 pub fn decode_dense_head(
     q: &[f32],
     h: usize,
@@ -759,6 +760,7 @@ pub fn decode_dense_head(
 /// and quantization params resolve once, then the inner loops run over
 /// contiguous rows — bitwise-equal to the seed row-at-a-time kernel
 /// ([`reference::decode_dense`]).
+// analyze: hot-path
 pub fn decode_dense(
     q: &[f32],
     cache: &KvCache,
@@ -882,6 +884,7 @@ pub fn decode_pooled_scores_upto(
 /// Per-query element sums are hoisted ([`KvCache::dot_key_with_sum`]);
 /// index order is preserved so results stay bitwise-equal to the seed
 /// kernel.
+// analyze: hot-path
 pub fn decode_sparse_head(
     q: &[f32],
     h: usize,
@@ -921,6 +924,7 @@ pub fn decode_sparse_head(
 }
 
 /// Sparse decode attention over per-KV-head index sets.
+// analyze: hot-path
 pub fn decode_sparse(
     q: &[f32],
     cache: &KvCache,
@@ -1039,6 +1043,7 @@ pub fn prefill_pooled_scores(
 
 /// Sparse prefill attention for a tile with tile-shared indices and
 /// per-query causal clamping (paper Sec. 3.4 / 4.1 rolling Top-k).
+// analyze: hot-path
 pub fn prefill_sparse_tile(
     qs: &[f32],
     start: usize,
@@ -1065,6 +1070,7 @@ pub fn prefill_sparse_tile(
             own.resize(r + 1, false);
             for &p in hidx {
                 if (p as usize) <= qpos {
+                    // analyze: allow(hot-path-alloc) — arena scratch vec; capacity persists across tiles
                     kept.push(p);
                     if (p as usize) >= start {
                         own[p as usize - start] = true;
@@ -1076,6 +1082,7 @@ pub fn prefill_sparse_tile(
             // anchor's indices all land in this query's causal future
             for (j, seen) in own.iter().enumerate() {
                 if !seen {
+                    // analyze: allow(hot-path-alloc) — arena scratch vec; capacity persists across tiles
                     kept.push((start + j) as u32);
                 }
             }

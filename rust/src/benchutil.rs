@@ -89,15 +89,6 @@ impl GateCheck {
     }
 }
 
-/// Resolve a dotted path (`"a.b.c"`) through nested JSON objects.
-fn resolve<'a>(j: &'a Json, path: &str) -> Option<&'a Json> {
-    let mut cur = j;
-    for part in path.split('.') {
-        cur = cur.get(part)?;
-    }
-    Some(cur)
-}
-
 /// Bench-regression gate: every metric listed in `baseline.metrics`
 /// (dotted paths into `results`, higher-is-better) must be at least
 /// `baseline * (1 - tolerance)`, with `tolerance` read from the
@@ -122,7 +113,8 @@ pub fn gate_against_baseline(results: &Json, baseline: &Json) -> Result<Vec<Gate
         let base = v
             .as_f64()
             .ok_or_else(|| format!("baseline metric '{path}' is not a number"))?;
-        let cur = resolve(results, path)
+        let cur = results
+            .path(path)
             .and_then(|x| x.as_f64())
             .ok_or_else(|| format!("results missing metric '{path}'"))?;
         let floor = base * (1.0 - tol);
@@ -191,6 +183,18 @@ mod tests {
         let partial = Json::obj(vec![("a", Json::obj(vec![("ratio", Json::num(2.0))]))]);
         let err = gate_against_baseline(&partial, &baseline(0.10)).unwrap_err();
         assert!(err.contains("b.frac"), "{err}");
+    }
+
+    #[test]
+    fn gate_resolves_deep_dotted_paths() {
+        let base = Json::obj(vec![(
+            "metrics",
+            Json::obj(vec![("slo.ttft.p95_ms", Json::num(10.0))]),
+        )]);
+        let res = Json::parse(r#"{"slo":{"ttft":{"p95_ms":9.5}}}"#).unwrap();
+        let checks = gate_against_baseline(&res, &base).unwrap();
+        assert_eq!(checks.len(), 1);
+        assert!(checks[0].ok);
     }
 
     #[test]

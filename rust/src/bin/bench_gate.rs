@@ -11,14 +11,12 @@ use kascade::benchutil::gate_against_baseline;
 use kascade::jsonutil::Json;
 
 fn load(path: &str) -> Json {
-    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
-        eprintln!("bench-gate: cannot read {path}: {e}");
-        std::process::exit(2);
-    });
-    match Json::parse(&text) {
+    // Json::from_file wraps both the I/O and parse failure with the
+    // offending path, so one message covers both exit-2 cases.
+    match Json::from_file(std::path::Path::new(path)) {
         Ok(j) => j,
         Err(e) => {
-            eprintln!("bench-gate: cannot parse {path}: {e}");
+            eprintln!("bench-gate: {e:#}");
             std::process::exit(2);
         }
     }

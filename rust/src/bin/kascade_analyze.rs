@@ -1,0 +1,65 @@
+//! In-repo invariant analyzer (see `docs/analysis.md`).
+//!
+//!   kascade_analyze [--root <rust-dir>] [--write-api]
+//!
+//! Scans `<rust-dir>/src` with the four rule families (determinism,
+//! hot-path-alloc, api-surface, panic-path).  `--write-api` regenerates
+//! `<rust-dir>/analyze/api_surface.json` instead of diffing against it.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 bad input / I/O error.
+
+use kascade::analyze::{run, Config};
+use std::path::PathBuf;
+
+fn main() {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut write_api = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--write-api" => write_api = true,
+            "--root" => match args.next() {
+                Some(r) => root = PathBuf::from(r),
+                None => {
+                    eprintln!("kascade-analyze: --root needs a directory");
+                    std::process::exit(2);
+                }
+            },
+            other => {
+                eprintln!("kascade-analyze: unknown argument '{other}'");
+                std::process::exit(2);
+            }
+        }
+    }
+    let config = Config::kascade(&root);
+    let report = match run(&config, write_api) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("kascade-analyze: {e}");
+            std::process::exit(2);
+        }
+    };
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    for f in &report.findings {
+        println!("{}", f.render());
+    }
+    if write_api {
+        println!(
+            "kascade-analyze: wrote {} (scanned {} files)",
+            config.api_surface_path.as_deref().map(|p| p.display().to_string()).unwrap_or_default(),
+            report.files_scanned
+        );
+    }
+    if report.clean() {
+        println!(
+            "kascade-analyze: clean — {} files, 0 findings, {} warning(s)",
+            report.files_scanned,
+            report.warnings.len()
+        );
+    } else {
+        eprintln!("kascade-analyze: {} finding(s)", report.findings.len());
+        std::process::exit(1);
+    }
+}

@@ -113,6 +113,7 @@ impl SeqBackend for PjrtBackend {
         let logits = self
             .model
             .prefill(&self.buffered, &mut self.st, self.plan.as_deref())
+            // analyze: allow(panic-path) — PJRT artifact mismatch is a startup config error
             .expect("pjrt prefill");
         Some(logits)
     }
@@ -120,6 +121,7 @@ impl SeqBackend for PjrtBackend {
     fn decode(&mut self, token: u32) -> Vec<f32> {
         self.model
             .decode_step(token, &mut self.st, self.plan.as_deref())
+            // analyze: allow(panic-path) — PJRT artifact mismatch is a startup config error
             .expect("pjrt decode")
     }
 }

@@ -96,9 +96,10 @@ impl BlockManager {
         self.dtype = dtype;
     }
 
-    /// The storage mode block `b` was allocated under.
+    /// The storage mode block `b` was allocated under.  An id outside
+    /// the arena reports the current default mode.
     pub fn block_dtype_of(&self, b: u32) -> KvDtype {
-        self.block_dtype[b as usize]
+        self.block_dtype.get(b as usize).copied().unwrap_or(self.dtype)
     }
 
     /// Whether block `i` holds live content: referenced by a sequence,
@@ -106,6 +107,7 @@ impl BlockManager {
     /// `drop_ref` un-indexes any block it frees).
     #[inline]
     fn is_live(&self, i: usize) -> bool {
+        // analyze: allow(panic-path) — private helper; callers iterate 0..num_blocks
         self.refc[i] > 0 || self.indexed[i]
     }
 
@@ -205,7 +207,7 @@ impl BlockManager {
         if self.indexed[i] && self.cache_cap > 0 {
             self.lru.push_back(b);
             while self.lru.len() > self.cache_cap {
-                let ev = self.lru.pop_front().unwrap();
+                let Some(ev) = self.lru.pop_front() else { break };
                 self.indexed[ev as usize] = false;
                 self.evicted.push(ev);
                 self.free.push(ev);
@@ -230,8 +232,10 @@ impl BlockManager {
         }
         if cow {
             let tail_idx = self.tokens_of(seq) / self.block_size;
+            // analyze: allow(panic-path) — `need <= available()` verified above covers this alloc
             let fresh = self.alloc_one().expect("capacity checked above");
             self.refc[fresh as usize] = 1;
+            // analyze: allow(panic-path) — cow_needed() true implies `seq` owns a tail block
             let bs = self.owned.get_mut(&seq).expect("cow implies ownership");
             let old = bs[tail_idx];
             bs[tail_idx] = fresh;
@@ -240,6 +244,7 @@ impl BlockManager {
         }
         let extra = self.extra_blocks_needed(seq, new_tokens);
         for _ in 0..extra {
+            // analyze: allow(panic-path) — `need <= available()` verified above covers this alloc
             let b = self.alloc_one().expect("capacity checked above");
             self.refc[b as usize] = 1;
             self.owned.entry(seq).or_default().push(b);
@@ -312,6 +317,8 @@ impl BlockManager {
     /// Mark an owned block as registered in the prefix index, making it
     /// shareable now and cacheable after its last ref drops.
     pub fn mark_indexed(&mut self, b: u32) {
+        // analyze: allow(panic-path) — block ids come from this manager's own allocator;
+        // an out-of-arena id is a logic bug worth the panic
         debug_assert!(self.refc[b as usize] > 0, "indexing unowned block {b}");
         self.indexed[b as usize] = true;
     }
@@ -319,7 +326,7 @@ impl BlockManager {
     /// Whether a prefix-index entry pointing at `b` is still backed by
     /// live content (in use or parked in the cached pool).
     pub fn is_adoptable(&self, b: u32) -> bool {
-        self.indexed[b as usize]
+        self.indexed.get(b as usize).copied().unwrap_or(false)
     }
 
     /// `j`-th block of `seq`'s table.

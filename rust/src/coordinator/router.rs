@@ -23,12 +23,16 @@ impl Router {
     }
 
     /// Stop routing to `worker` (its thread died or was shut down).
+    /// Unknown ids are ignored.
     pub fn mark_dead(&mut self, worker: usize) {
-        self.dead[worker] = true;
+        if let Some(d) = self.dead.get_mut(worker) {
+            *d = true;
+        }
     }
 
+    /// Unknown worker ids count as dead: never route to them.
     pub fn is_dead(&self, worker: usize) -> bool {
-        self.dead[worker]
+        self.dead.get(worker).copied().unwrap_or(true)
     }
 
     pub fn alive_workers(&self) -> usize {
@@ -74,11 +78,13 @@ impl Router {
     }
 
     pub fn release(&mut self, worker: usize) {
-        self.loads[worker] = self.loads[worker].saturating_sub(1);
+        if let Some(l) = self.loads.get_mut(worker) {
+            *l = l.saturating_sub(1);
+        }
     }
 
     pub fn load(&self, worker: usize) -> usize {
-        self.loads[worker]
+        self.loads.get(worker).copied().unwrap_or(0)
     }
 }
 

@@ -220,6 +220,7 @@ impl Sequence {
         let last = done + take >= self.req.prompt.len();
         let logits = self.backend.prefill_chunk(&self.req.prompt[done..done + take], last);
         if last {
+            // analyze: allow(panic-path) — SeqBackend contract: `last == true` implies Some
             self.pending_logits = Some(logits.expect("backend must return logits on final chunk"));
             self.phase = SeqPhase::Decoding;
         } else {
@@ -234,6 +235,7 @@ impl Sequence {
         let logits = match self.pending_logits.take() {
             Some(l) => l,
             None => {
+                // analyze: allow(panic-path) — Decoding phase implies a prior emit or buffered logits
                 let last = *self.emitted.last().expect("decode without pending logits");
                 self.backend.decode(last)
             }
@@ -248,6 +250,7 @@ impl Sequence {
         if self.pending_logits.is_some() {
             None
         } else {
+            // analyze: allow(panic-path) — Decoding phase implies a prior emit or buffered logits
             Some(*self.emitted.last().expect("decode without pending logits"))
         }
     }
@@ -264,12 +267,14 @@ impl Sequence {
         let pos = self.emitted_total();
         let tok = self.req.sampling.sample(logits, pos);
         if self.first_token_at.is_none() {
+            // analyze: allow(determinism) — TTFT metric timestamp; token choice is seed-keyed
             self.first_token_at = Some(Instant::now());
         }
         self.emitted.push(tok);
         self.session.send(Event::Token { pos, tok });
         if self.should_stop(tok) {
             self.phase = SeqPhase::Finished;
+            // analyze: allow(determinism) — completion timestamp for metrics only
             self.finished_at = Some(Instant::now());
         }
         tok

@@ -91,6 +91,26 @@ impl Json {
             .collect()
     }
 
+    /// Walk a dotted path (`"decode.tokens_per_s"`) through nested
+    /// objects.  The shared lookup helper for every JSON consumer in the
+    /// repo (bench gate, trajectory records, the analyzer's API surface)
+    /// — one implementation, one set of edge cases.
+    pub fn path(&self, dotted: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    /// Read and parse a JSON file, wrapping both I/O and parse errors
+    /// with the offending path so callers can report one coherent error.
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+    }
+
     // --- writer --------------------------------------------------------
 
     pub fn to_string(&self) -> String {
@@ -386,5 +406,32 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::Str("héllo → 世界".into());
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn dotted_path_walks_and_misses() {
+        let j = Json::parse(r#"{"a":{"b":{"c":3}},"flat":1}"#).unwrap();
+        assert_eq!(j.path("a.b.c").unwrap().as_usize(), Some(3));
+        assert_eq!(j.path("flat").unwrap().as_usize(), Some(1));
+        assert!(j.path("a.b.missing").is_none());
+        assert!(j.path("a.b.c.deeper").is_none(), "scalar has no children");
+        assert!(j.path("nope").is_none());
+    }
+
+    #[test]
+    fn from_file_reports_path_on_missing_and_malformed() {
+        let missing = Json::from_file(std::path::Path::new("/nonexistent/kascade.json"));
+        let msg = format!("{:#}", missing.unwrap_err());
+        assert!(msg.contains("/nonexistent/kascade.json"), "error names the file: {msg}");
+
+        let dir = std::env::temp_dir().join("kascade_jsonutil_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("malformed.json");
+        std::fs::write(&bad, "{\"results\": [1, 2,}").unwrap();
+        let err = Json::from_file(&bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("malformed.json"), "error names the file: {msg}");
+        assert!(msg.contains("byte"), "parse error keeps its position: {msg}");
+        std::fs::remove_file(&bad).ok();
     }
 }

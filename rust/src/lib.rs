@@ -38,6 +38,7 @@
 //! interaction (KV blocks are shared, per-sequence Top-k index state is
 //! not).
 
+pub mod analyze;
 pub mod attention;
 pub mod benchutil;
 pub mod config;

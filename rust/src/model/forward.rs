@@ -134,6 +134,7 @@ struct HeadItem<'a> {
 /// Policy phase of one batched-decode layer for one sequence: append the
 /// freshly projected K/V row to the layer cache, then ask the sequence's
 /// policy for its selection (written into the sequence's own scratch).
+// analyze: hot-path
 #[allow(clippy::too_many_arguments)]
 fn policy_phase(
     r: &mut DecodeReq,
@@ -147,6 +148,7 @@ fn policy_phase(
     nkd: usize,
 ) -> Selection {
     let st = &mut *r.st;
+    // analyze: allow(hot-path-alloc) — KvCache::push appends into preallocated pages (cap from new_state)
     st.caches[layer].push(&k[i * nkd..(i + 1) * nkd], &v[i * nkd..(i + 1) * nkd]);
     let cache = &st.caches[layer];
     r.policy.decode(layer, &q[i * nqd..(i + 1) * nqd], cache, g, &mut st.scratch, &mut st.cost)
@@ -480,6 +482,7 @@ impl Model {
     /// allocations** (asserted by `tests/alloc_steady_state.rs`).  The
     /// parallel path allocates only the per-layer job boxes.
     /// Read row `i`'s logits via [`BatchScratch::logits_row`].
+    // analyze: hot-path
     pub fn decode_batch(
         &self,
         reqs: &mut [DecodeReq],
@@ -557,6 +560,7 @@ impl Model {
                     reqs.chunks_mut(chunk).zip(sels.chunks_mut(chunk)).enumerate()
                 {
                     let base = ci * chunk;
+                    // analyze: allow(hot-path-alloc) — per-layer job boxes, bounded by thread count
                     jobs.push(Box::new(move || {
                         for (j, (r, sel)) in rc.iter_mut().zip(sc.iter_mut()).enumerate() {
                             *sel = policy_phase(r, base + j, layer, g, q2, k2, v2, nqd, nkd);
@@ -601,6 +605,7 @@ impl Model {
                             Selection::Sparse => Some(&st.scratch.sel),
                         };
                         for hh in 0..n_kv {
+                            // analyze: allow(hot-path-alloc) — work-item list into with_capacity(b*n_kv)
                             items.push(HeadItem {
                                 cache,
                                 qrow,
@@ -615,6 +620,7 @@ impl Model {
                 let per = items.len().div_ceil(threads);
                 let mut jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(threads);
                 for (chunk, planes) in items.chunks_mut(per).zip(job_planes.iter_mut()) {
+                    // analyze: allow(hot-path-alloc) — per-layer job boxes, bounded by thread count
                     jobs.push(Box::new(move || {
                         for it in chunk.iter_mut() {
                             match it.sel {

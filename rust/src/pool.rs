@@ -185,4 +185,33 @@ mod tests {
         ];
         pool.run(jobs);
     }
+
+    /// A panicked batch must not poison the pool: the workers survive
+    /// (the panic is caught per job), a later batch runs normally, and
+    /// `Drop` still joins every worker without hanging.
+    #[test]
+    fn pool_survives_a_panicked_batch_and_shuts_down_clean() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.size(), 2);
+        let unwound = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<ScopedJob<'_>> =
+                vec![Box::new(|| panic!("boom")), Box::new(|| {}), Box::new(|| panic!("boom"))];
+            pool.run(jobs);
+        }));
+        assert!(unwound.is_err(), "run must re-panic on the submitter");
+        // every worker is still alive and pulling jobs
+        assert_eq!(pool.size(), 2);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (0..16)
+            .map(|_| {
+                let f: ScopedJob<'_> = Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                f
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 16);
+        drop(pool); // channel closes, both workers join
+    }
 }

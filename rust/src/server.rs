@@ -222,6 +222,7 @@ impl Engine {
         self.metrics.kv_util.add(self.sched.blocks.utilization());
         self.metrics.kv_cached.add(self.sched.blocks.cached() as f64);
         let kv_bytes: usize = self
+            // analyze: allow(determinism) — order-insensitive integer sum
             .seqs
             .values()
             .filter_map(|s| s.backend.kv_stats().map(|k| k.bytes))
@@ -240,8 +241,10 @@ impl Engine {
     /// the top of every tick — a mid-stream `cancel()` reclaims all
     /// blocks within one tick.
     fn sweep_sessions(&mut self) {
+        // analyze: allow(determinism) — deadline sweep samples the tick clock once
         let now = Instant::now();
         let mut ended: Vec<(u64, bool)> = Vec::new(); // (id, deadline?)
+        // analyze: allow(determinism) — pure filter; `ended` is sorted before teardown
         for (&id, s) in &self.seqs {
             if s.cancel_requested() {
                 ended.push((id, false));
@@ -249,9 +252,12 @@ impl Engine {
                 ended.push((id, true));
             }
         }
+        // teardown in id order: block release order must not depend on
+        // hash iteration order (bitwise-deterministic ticks)
+        ended.sort_unstable();
         for (id, deadline) in ended {
             self.sched.remove(id);
-            let s = self.seqs.remove(&id).unwrap();
+            let Some(s) = self.seqs.remove(&id) else { continue };
             if let Some(ks) = s.backend.kv_stats() {
                 self.metrics.dequant_rows += ks.dequant_rows;
             }
@@ -292,6 +298,7 @@ impl Engine {
         if ids.is_empty() {
             return;
         }
+        // analyze: allow(determinism) — decode-latency metric; never branches scheduling
         let t0 = Instant::now();
         let use_batch = self.sched.cfg.batched_decode;
         let metrics = &mut self.metrics;
@@ -299,6 +306,7 @@ impl Engine {
         let pool = self.pool.as_ref();
         let idset: HashSet<u64> = ids.iter().copied().collect();
         let mut by_id: HashMap<u64, &mut Sequence> = self
+            // analyze: allow(determinism) — collected into a map; `ids` drives visit order
             .seqs
             .iter_mut()
             .filter(|(id, _)| idset.contains(id))
@@ -345,12 +353,15 @@ impl Engine {
                 continue;
             }
             let model: Arc<Model> = {
+                // analyze: allow(panic-path) — probed batchable in the partition pass above
                 let parts = group[0].backend.batch_parts().expect("probed batchable");
                 parts.model.clone()
             };
             let mut reqs: Vec<DecodeReq> = Vec::with_capacity(group.len());
             for s in group.iter_mut() {
+                // analyze: allow(panic-path) — decode_input() probed Some for every grouped seq
                 let token = s.decode_input().expect("probed: logits not buffered");
+                // analyze: allow(panic-path) — probed batchable in the partition pass above
                 let parts = s.backend.batch_parts().expect("probed batchable");
                 reqs.push(DecodeReq { token, st: parts.st, policy: parts.policy });
             }
@@ -420,15 +431,18 @@ impl Engine {
     }
 
     fn retire(&mut self) {
-        let done_ids: Vec<u64> = self
+        let mut done_ids: Vec<u64> = self
+            // analyze: allow(determinism) — pure filter; ids sorted before teardown
             .seqs
             .iter()
             .filter(|(_, s)| s.is_finished())
             .map(|(&id, _)| id)
             .collect();
+        // retire in id order so event emission and block release are replayable
+        done_ids.sort_unstable();
         for id in done_ids {
             self.sched.on_finished(id);
-            let s = self.seqs.remove(&id).unwrap();
+            let Some(s) = self.seqs.remove(&id) else { continue };
             if let Some(ks) = s.backend.kv_stats() {
                 self.metrics.dequant_rows += ks.dequant_rows;
             }
@@ -438,6 +452,7 @@ impl Engine {
                     .add_us(t.duration_since(s.arrived).as_secs_f64() * 1e6);
             }
             self.metrics.requests_done += 1;
+            // analyze: allow(determinism) — completion timestamp for metrics only
             let end = s.finished_at.unwrap_or_else(Instant::now);
             let c = Self::completion_of(id, &s, end);
             s.send_event(Event::Done(c));
@@ -472,11 +487,14 @@ impl Engine {
     /// [`Server::stop_worker`], so stopping a worker never blocks on an
     /// unbounded in-flight request.
     pub fn cancel_all(&mut self) {
+        // analyze: allow(determinism) — teardown timestamp for partial completions
         let now = Instant::now();
-        let ids: Vec<u64> = self.seqs.keys().copied().collect();
+        // analyze: allow(determinism) — key snapshot; sorted before teardown
+        let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
         for id in ids {
             self.sched.remove(id);
-            let s = self.seqs.remove(&id).unwrap();
+            let Some(s) = self.seqs.remove(&id) else { continue };
             if let Some(ks) = s.backend.kv_stats() {
                 self.metrics.dequant_rows += ks.dequant_rows;
             }
@@ -497,6 +515,7 @@ impl Engine {
                 self.snapshots.len()
             ));
         }
+        // analyze: allow(determinism) — read-only audit; any visit order gives the same verdict
         for h in self.snapshots.keys() {
             if !self.sched.prefix.is_resumable(*h) {
                 return Err(format!("orphaned snapshot {h:#x}: not resumable in the index"));
@@ -622,6 +641,9 @@ impl Server {
     /// to the next alive worker).  For a graceful full drain use
     /// [`Server::shutdown`].
     pub fn stop_worker(&mut self, w: usize) {
+        if w >= self.txs.len() {
+            return; // unknown worker id — nothing to stop
+        }
         let _ = self.txs[w].send(Msg::Abort);
         self.router.mark_dead(w);
         self.reap(w);
@@ -640,7 +662,8 @@ impl Server {
     }
 
     fn reap(&mut self, w: usize) {
-        if let Some(h) = self.handles[w].take() {
+        let Some(slot) = self.handles.get_mut(w) else { return };
+        if let Some(h) = slot.take() {
             if let Ok(m) = h.join() {
                 self.reaped.push(m);
             }

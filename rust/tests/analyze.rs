@@ -1,0 +1,51 @@
+//! The analyzer's own fixture corpus (`tests/analyze_fixtures/`): every
+//! rule family must fire on its planted violation and stay silent on
+//! the matching false-positive trap — plus a live run proving the
+//! repo's own sources are clean (docs/analysis.md).
+
+use kascade::analyze::{run, Config, Report};
+use std::path::PathBuf;
+
+fn fixture_report() -> Report {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/analyze_fixtures");
+    run(&Config::bare(root), false).expect("fixture corpus must be readable")
+}
+
+#[test]
+fn every_rule_fires_on_its_fixture() {
+    let r = fixture_report();
+    let count = |rule: &str, file: &str| {
+        r.findings.iter().filter(|f| f.rule == rule && f.file == file).count()
+    };
+    assert_eq!(count("determinism", "determinism.rs"), 2, "{:#?}", r.findings);
+    assert_eq!(count("hot-path-alloc", "hot_alloc.rs"), 1, "{:#?}", r.findings);
+    assert_eq!(count("panic-path", "panic.rs"), 2, "{:#?}", r.findings);
+    assert_eq!(count("panic-path", "allow_grammar.rs"), 1, "{:#?}", r.findings);
+    assert_eq!(count("allow-grammar", "allow_grammar.rs"), 1, "{:#?}", r.findings);
+    assert_eq!(count("api-surface", "api_arity.rs"), 1, "{:#?}", r.findings);
+    assert_eq!(r.findings.len(), 8, "no extra findings: {:#?}", r.findings);
+}
+
+#[test]
+fn traps_stay_silent_and_reasoned_allows_are_consumed() {
+    let r = fixture_report();
+    // the reasoned allow in allow_grammar.rs was used -> no stale warning
+    assert!(r.warnings.is_empty(), "{:?}", r.warnings);
+    // no trap fn is ever named in a finding
+    let traps = ["keyed_lookup", "setup_accumulate", "slot_checked", "fire_audited", "goodcall"];
+    for f in &r.findings {
+        for trap in traps {
+            assert!(!f.msg.contains(trap), "trap {trap} flagged: {f:?}");
+        }
+    }
+}
+
+/// `make analyze` in test form: the shipped sources carry no findings
+/// and no stale allow annotations.
+#[test]
+fn the_repo_itself_is_clean() {
+    let rust_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let r = run(&Config::kascade(&rust_dir), false).expect("repo sources must be readable");
+    assert!(r.findings.is_empty(), "repo findings: {:#?}", r.findings);
+    assert!(r.warnings.is_empty(), "stale allows: {:?}", r.warnings);
+}

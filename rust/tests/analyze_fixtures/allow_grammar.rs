@@ -1,0 +1,20 @@
+//! Fixture: `allow-grammar` rule (tests/analyze.rs).  A reasonless
+//! annotation is itself a finding and suppresses nothing; a reasoned
+//! one suppresses its target and produces no stale-allow warning.
+
+pub struct Latch {
+    armed: Option<u32>,
+    primed: Option<u32>,
+}
+
+impl Latch {
+    pub fn fire_unaudited(&mut self) -> u32 {
+        // analyze: allow(panic-path)
+        self.armed.take().unwrap() // violations: reasonless allow + live unwrap
+    }
+
+    pub fn fire_audited(&mut self) -> u32 {
+        // analyze: allow(panic-path) — fixture: audited invariant, primed is always Some
+        self.primed.take().unwrap() // trap: a reasoned allow suppresses
+    }
+}

@@ -1,0 +1,14 @@
+//! Fixture: `api-surface` call-site rule (tests/analyze.rs).  One
+//! arity-mismatched call fires; the correct-arity call stays silent.
+
+pub fn transmogrify(level: u32, gain: u32) -> u32 {
+    level + gain
+}
+
+pub fn miscall() -> u32 {
+    transmogrify(1, 2, 3) // violation: arity mismatch
+}
+
+pub fn goodcall() -> u32 {
+    transmogrify(4, 5) // trap: correct arity
+}

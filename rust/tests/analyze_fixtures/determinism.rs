@@ -1,0 +1,29 @@
+//! Fixture: `determinism` rule (tests/analyze.rs).  One planted clock
+//! read, one hash-iteration, plus two false-positive traps.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn tick_clock() -> Instant {
+    Instant::now() // violation: ambient clock read
+}
+
+pub fn count_all(seqs: HashMap<u64, u32>) -> usize {
+    let mut n = 0;
+    for (_k, v) in &seqs {
+        n += *v as usize;
+    }
+    n
+}
+
+pub fn keyed_lookup(seqs: &HashMap<u64, u32>) -> Option<u32> {
+    seqs.get(&1).copied() // trap: keyed access is deterministic
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn clock_in_tests_is_exempt() {
+        let _ = std::time::Instant::now(); // trap: test spans are exempt
+    }
+}

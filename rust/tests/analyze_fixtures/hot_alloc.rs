@@ -1,0 +1,11 @@
+//! Fixture: `hot-path-alloc` rule (tests/analyze.rs).  The marked fn
+//! must be flagged, the identical unmarked fn must not.
+
+// analyze: hot-path
+pub fn kernel_accumulate(out: &mut Vec<f32>) {
+    out.push(1.0); // violation: allocation token in a marked fn
+}
+
+pub fn setup_accumulate(out: &mut Vec<f32>) {
+    out.push(2.0); // trap: unmarked fns may allocate freely
+}

@@ -1,0 +1,38 @@
+//! Fixture: `panic-path` rule (tests/analyze.rs).  Unguarded caller
+//! index + unwrap fire; a bounds-guarded index and test-span unwraps
+//! stay silent.
+
+pub struct Mailbox {
+    slots: Vec<u32>,
+    pending: Option<u32>,
+}
+
+impl Mailbox {
+    pub fn slot_of(&self, w: usize) -> u32 {
+        self.slots[w] // violation: caller-provided index, no guard
+    }
+
+    pub fn take_pending(&mut self) -> u32 {
+        self.pending.take().unwrap() // violation: panic on a request path
+    }
+
+    pub fn slot_checked(&self, w: usize) -> u32 {
+        if w < self.slots.len() {
+            self.slots[w] // trap: bounds-guarded
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_in_tests_is_exempt() {
+        let mb = Mailbox { slots: vec![7], pending: Some(1) };
+        let _ = mb.pending;
+        assert_eq!(mb.slots.first().copied().unwrap(), 7); // trap
+    }
+}
