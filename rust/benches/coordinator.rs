@@ -2,38 +2,43 @@
 //! churn, router throughput, the step-batched decode engine, the
 //! prefix-cache RAG scenario, the streaming-session scenario
 //! (handle-observed TTFT fidelity + cancellation block-reclaim latency),
-//! and the SLO-gated `slo_traffic` scenario (seeded bursty multi-tenant
-//! traffic with a 128k-token chunked prefill interleaving live decodes)
-//! — the L3 overheads and wins that frame the paper's serving numbers.
+//! the SLO-gated `slo_traffic` scenario (seeded bursty multi-tenant
+//! traffic with a 128k-token chunked prefill interleaving live decodes),
+//! and the `long_context_tiered` scenario (512Ki-token Kascade decode
+//! with the reuse layers' KV under a 25% hot-tile budget spilling to a
+//! file-backed tile store — docs/kv-tiers.md) — the L3 overheads and
+//! wins that frame the paper's serving numbers.
 //!
 //! Run: `cargo bench --bench coordinator` (all scenarios), or a single
 //! scenario with `cargo bench --bench coordinator -- --scenario <name>`
 //! where `<name>` is one of `micro`, `prefix_cache`,
 //! `step_batched_decode`, `quantized_kv`, `streaming`, `parallel_tick`,
-//! `slo_traffic`.
+//! `slo_traffic`, `long_context_tiered`.
 //!
 //! Writes machine-readable results for the scenarios that ran to
 //! `results/coordinator_bench.json` (the CI regression gate needs the
 //! full run — a single-scenario pass writes a partial record) and the
-//! repo-root perf-trajectory artifact `BENCH_6.json`.
+//! repo-root perf-trajectory artifact `BENCH_8.json`.
 
 use kascade::benchutil::{bench, header};
-use kascade::config::{KvDtype, ServeConfig, TopKRule};
+use kascade::config::{KvDtype, ModelConfig, ServeConfig, TopKRule};
 use kascade::coordinator::{
     BlockManager, Completion, Event, NativeBackend, Request, Router, SeqBackend, SeqPhase,
     Sequence, Session,
 };
 use kascade::jsonutil::Json;
 use kascade::kascade::KascadePlan;
-use kascade::model::SynthSpec;
+use kascade::model::{Model, SeqState, SynthSpec, Weights};
 use kascade::server::Engine;
-use kascade::sparse::{DensePolicy, KascadePolicy};
+use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
+use kascade::tensor::{argmax, Rng};
+use kascade::tilestore::{shared_store, FileTileStore, TierParams, TierStats};
 use kascade::workload::{TrafficGen, TrafficSpec, WorkloadGen};
 use std::cell::Cell;
 use std::rc::Rc;
 use std::sync::Arc;
 
-const SCENARIOS: [&str; 7] = [
+const SCENARIOS: [&str; 8] = [
     "micro",
     "prefix_cache",
     "step_batched_decode",
@@ -41,6 +46,7 @@ const SCENARIOS: [&str; 7] = [
     "streaming",
     "parallel_tick",
     "slo_traffic",
+    "long_context_tiered",
 ];
 
 struct NullBackend;
@@ -807,6 +813,180 @@ fn main() {
         ));
     }
 
+    if run("long_context_tiered") {
+        // tiered KV at long context (docs/kv-tiers.md): a 512Ki-token
+        // Kascade context decoded with the reuse layers' KV under a 25%
+        // hot-tile budget, cold tiles spilled to a file-backed store.
+        // The context is seeded by direct K/V pushes — the identity
+        // property only needs identical cache CONTENTS, and a full 512k
+        // prefill is O(T^2) attention this scenario does not measure.
+        // Gates: peak resident KV bytes of the tiered layers stay under
+        // the computed tier budget, and the tiered greedy stream is
+        // IDENTICAL to the all-resident int8 run.
+        const T: usize = 512 * 1024;
+        const PS: usize = 16; // quantization-tile positions (new_state default)
+        const NKV: usize = 2;
+        const DH: usize = 8;
+        const STEPS: usize = 32;
+        let n_tiles = T / PS;
+        let budget = n_tiles / 4; // 25% of the seeded context's tiles
+        let lcfg = ModelConfig {
+            n_layers: 4,
+            d_model: 32,
+            n_q_heads: 4,
+            n_kv_heads: NKV,
+            d_head: DH,
+            d_ff: 64,
+            vocab: 64,
+            rope_theta: 10000.0,
+            rope: true,
+        };
+        let mut w = Weights::zeros(&lcfg);
+        let mut wr = Rng::new(0x10C7);
+        wr.fill_normal(&mut w.w_e, 0.3);
+        for lw in &mut w.layers {
+            wr.fill_normal(&mut lw.wq, 0.18);
+            wr.fill_normal(&mut lw.wk, 0.18);
+            wr.fill_normal(&mut lw.wv, 0.18);
+            wr.fill_normal(&mut lw.wo, 0.18);
+            wr.fill_normal(&mut lw.w1, 0.18);
+            wr.fill_normal(&mut lw.w3, 0.18);
+            wr.fill_normal(&mut lw.w2, 0.12);
+        }
+        wr.fill_normal(&mut w.w_u, 0.18);
+        let tmodel = Model::new(lcfg, w);
+        let mk_tplan = || -> Box<dyn SparsePolicy> {
+            Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+                4,
+                NKV,
+                vec![0, 2],
+                TopKRule::new(0.005, 64),
+            )))
+        };
+        let fill = |st: &mut SeqState| {
+            let mut k = vec![0.0f32; NKV * DH];
+            let mut v = vec![0.0f32; NKV * DH];
+            for layer in 0..4 {
+                let mut r = Rng::new(0xF111_0000 + layer as u64);
+                for _ in 0..T {
+                    r.fill_normal(&mut k, 0.5);
+                    r.fill_normal(&mut v, 0.5);
+                    st.caches[layer].push(&k, &v);
+                }
+            }
+            st.pos = T;
+        };
+        std::fs::create_dir_all("results").expect("results dir");
+        let spill_path = "results/tier_spill.kvsp";
+        let _ = std::fs::remove_file(spill_path);
+        let store = shared_store(FileTileStore::open(spill_path).expect("open spill store"));
+        let mut pol_t = mk_tplan();
+        let mut pol_f = mk_tplan();
+        let cap = T + STEPS + PS;
+        let mut st_t = tmodel.new_state_tiered(cap, pol_t.as_ref(), TierParams::new(budget), &store);
+        let mut st_f = tmodel.new_state_with_dtype(cap, KvDtype::Int8);
+        let t0 = std::time::Instant::now();
+        fill(&mut st_t);
+        fill(&mut st_f);
+        let fill_s = t0.elapsed().as_secs_f64();
+        // greedy decode; samples the tiered layers' resident bytes every
+        // step so demand-promotion overshoot cannot hide from the gate
+        let decode = |m: &Model,
+                      st: &mut SeqState,
+                      pol: &mut Box<dyn SparsePolicy>,
+                      peak: &mut usize|
+         -> (Vec<u32>, f64) {
+            let mut toks = Vec::new();
+            let mut tok = 1u32;
+            let t0 = std::time::Instant::now();
+            for _ in 0..STEPS {
+                let l = m.decode_step(tok, st, pol.as_mut());
+                tok = argmax(&l) as u32;
+                toks.push(tok);
+                let b: usize =
+                    st.caches.iter().filter(|c| c.is_tiered()).map(|c| c.kv_bytes()).sum();
+                *peak = (*peak).max(b);
+            }
+            (toks, STEPS as f64 / t0.elapsed().as_secs_f64())
+        };
+        let mut peak_tiered: usize =
+            st_t.caches.iter().filter(|c| c.is_tiered()).map(|c| c.kv_bytes()).sum();
+        let mut unused = 0usize;
+        let (toks_f, tok_s_f) = decode(&tmodel, &mut st_f, &mut pol_f, &mut unused);
+        let (toks_t, tok_s_t) = decode(&tmodel, &mut st_t, &mut pol_t, &mut peak_tiered);
+        assert_eq!(
+            toks_t, toks_f,
+            "tiered decode must be bitwise-identical to all-resident int8"
+        );
+        // computed byte budget for the two tiered reuse layers: hot arena
+        // at the slot budget + f32 staging tail + per-tile affine params
+        // + warm int4 shadows at the warm budget (= hot budget)
+        let td = PS * DH;
+        let tiles_max = (T + STEPS) / PS;
+        let budget_bytes_per_layer = budget * 2 * NKV * td // int8 K+V hot slots
+            + PS * NKV * DH * 2 * 4                        // f32 staging tail
+            + tiles_max * NKV * 16                         // per-tile (scale, zero) x K,V
+            + budget * (NKV * td + NKV * 16);              // warm shadows + affines
+        let budget_bytes = 2 * budget_bytes_per_layer;
+        assert!(
+            peak_tiered <= budget_bytes,
+            "tiered layers peaked at {peak_tiered} resident KV bytes, over the {budget_bytes} budget"
+        );
+        for l in [1usize, 3] {
+            assert!(
+                st_t.caches[l].hot_tiles() <= budget,
+                "layer {l} holds {} hot tiles over the {budget} budget",
+                st_t.caches[l].hot_tiles()
+            );
+        }
+        let mut tstats = TierStats::default();
+        for c in &mut st_t.caches {
+            tstats.merge(&c.take_tier_stats());
+        }
+        let ensured = tstats.prefetch_hits + tstats.prefetch_misses;
+        let hit_rate = tstats.prefetch_hits as f64 / (ensured as f64).max(1.0);
+        let flat_reuse: usize = [1usize, 3].iter().map(|&l| st_f.caches[l].kv_bytes()).sum();
+        let savings = flat_reuse as f64 / (peak_tiered as f64).max(1.0);
+        let tok_s_ratio = tok_s_t / tok_s_f.max(1e-9);
+        let spill_bytes = store.lock().expect("store lock").payload_bytes();
+        assert!(
+            savings >= 1.8,
+            "25% hot budget must cut reuse-layer resident bytes >= 1.8x (got {savings:.2}x)"
+        );
+        println!("\nlong-context tiered KV (512Ki-token Kascade decode, 25% hot budget):");
+        println!(
+            "  reuse-layer KV bytes: all-resident {flat_reuse}  tiered peak {peak_tiered} \
+             (budget {budget_bytes}) — {savings:.2}x smaller, outputs identical"
+        );
+        println!(
+            "  decode all-resident {tok_s_f:.1} tok/s  tiered {tok_s_t:.1} tok/s  \
+             ratio {tok_s_ratio:.2}x  prefetch hit rate {:.0}%  spill file {spill_bytes} B  \
+             (context seeded in {fill_s:.1}s)",
+            hit_rate * 100.0
+        );
+        record.push((
+            "long_context_tiered",
+            Json::obj(vec![
+                ("context_tokens", Json::num(T as f64)),
+                ("decode_steps", Json::num(STEPS as f64)),
+                ("hot_tile_budget", Json::num(budget as f64)),
+                ("peak_resident_kv_bytes", Json::num(peak_tiered as f64)),
+                ("budget_kv_bytes", Json::num(budget_bytes as f64)),
+                ("all_resident_kv_bytes", Json::num(flat_reuse as f64)),
+                ("resident_savings", Json::num(savings)),
+                ("peak_under_budget", Json::num(1.0)),
+                ("outputs_identical", Json::num(1.0)),
+                ("decode_tok_s_resident", Json::num(tok_s_f)),
+                ("decode_tok_s_tiered", Json::num(tok_s_t)),
+                ("decode_tok_s_ratio", Json::num(tok_s_ratio)),
+                ("prefetch_hit_rate", Json::num(hit_rate)),
+                ("tiles_promoted", Json::num(tstats.tiles_promoted as f64)),
+                ("tiles_demoted", Json::num(tstats.tiles_demoted as f64)),
+                ("spill_file_bytes", Json::num(spill_bytes as f64)),
+            ]),
+        ));
+    }
+
     // machine-readable record for the scenarios that ran
     std::fs::create_dir_all("results").expect("results dir");
     let record = Json::obj(record);
@@ -816,9 +996,9 @@ fn main() {
     // repo-root perf-trajectory artifact for this PR (schema shared with
     // benchutil::trajectory / the CI gate) — the bench runs with the
     // package root (rust/) as cwd, so the repo root is one level up
-    std::fs::write("../BENCH_6.json", kascade::benchutil::trajectory(6, record).to_string())
+    std::fs::write("../BENCH_8.json", kascade::benchutil::trajectory(8, record).to_string())
         .expect("write trajectory json");
-    println!("  wrote ../BENCH_6.json (perf trajectory, PR 6)");
+    println!("  wrote ../BENCH_8.json (perf trajectory, PR 8)");
 
     let _ = Sequence::new(Request::new(vec![]), Session::detached(), Box::new(NullBackend));
 }

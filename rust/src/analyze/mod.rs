@@ -14,7 +14,9 @@
 //!   the checked-in `analyze/api_surface.json`, plus call-site arity
 //!   cross-checks; CI fails on uncommitted drift
 //! * `panic-path`     — `unwrap`/`expect`/unguarded caller-index
-//!   indexing in the `server.rs`/`coordinator/` request paths
+//!   indexing in the `server.rs`/`coordinator/` request paths and the
+//!   `tilestore.rs` spill layer (I/O must surface as `TileStoreError`,
+//!   never panic the worker)
 //!
 //! Audited sites are annotated in source with
 //! `// analyze: allow(<rule>) — <reason>`; an annotation without a
@@ -89,7 +91,13 @@ impl Config {
                 "coordinator/sequence.rs".into(),
                 "model/forward.rs".into(),
             ],
-            panic_scope: vec!["server.rs".into(), "coordinator/".into()],
+            panic_scope: vec![
+                "server.rs".into(),
+                "coordinator/".into(),
+                // the KV spill layer: tier I/O must come back as typed
+                // TileStoreError values, never unwrap/expect a request away
+                "tilestore.rs".into(),
+            ],
             min_hot_path_markers: 4,
             api_surface_path: Some(rust_dir.join("analyze/api_surface.json")),
         }

@@ -10,9 +10,12 @@
 
 use crate::config::KvDtype;
 use crate::tensor::{
-    axpy_q8, dequantize_q8, dot, dot_i8, qk_dot_q8, quantize_q8, softmax, sum4,
-    topk_unordered_into,
+    axpy_q8, dequantize_q4, dequantize_q8, dot, dot_i8, qk_dot_q8, quantize_q4, quantize_q8,
+    softmax, sum4, topk_unordered_into,
 };
+use crate::tilestore::{SharedTileStore, TierParams, TierStats, TileKey, TileStoreError};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Per-layer KV cache: contiguous `[n_kv, cap, d]` storage plus per-page
 /// min/max key summaries (used by the Quest baseline).
@@ -55,6 +58,159 @@ pub struct KvCache {
     /// of the keys in the page: `[n_kv, n_pages, 2, d]`.
     page_size: usize,
     pages: Vec<f32>,
+    /// Tiered mode (`docs/kv-tiers.md`): hot/warm/cold residency state
+    /// for completed tiles.  `None` = every tile resident (flat modes).
+    /// When tiered, `kq`/`vq` become a slot *arena* (`[hot_slots, n_kv,
+    /// page_size, d]`) instead of the full `[n_kv, cap, d]` planes;
+    /// scales/zeros and page summaries stay fully resident (tiny).
+    tier: Option<Box<TierState>>,
+}
+
+/// Sentinel for "no arena slot" / "free slot".
+const NO_SLOT: u32 = u32::MAX;
+
+/// Residency tier of one completed tile (diagnostics/tests; the staging
+/// tail is always resident and reports `None`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileTier {
+    /// Exact int8 codes resident in the hot arena — the only tier the
+    /// compute kernels ever read.
+    Hot,
+    /// Demoted: exact payload spilled to the [`crate::tilestore`] store,
+    /// plus a packed-int4 RAM shadow (approximate, diagnostics only).
+    Warm,
+    /// Demoted with the int4 shadow dropped: spill record only.
+    Cold,
+}
+
+/// Warm shadow of one demoted tile: packed int4 codes for K and V plus
+/// per-head affine params (`[ks, kz, vs, vz]` per head).
+struct WarmTile {
+    k4: Vec<u8>,
+    v4: Vec<u8>,
+    affine: Vec<f32>,
+}
+
+/// Tier bookkeeping for one tiered [`KvCache`].  All per-tile vectors
+/// are indexed by completed-tile id and grow as tiles complete.
+struct TierState {
+    cfg: TierParams,
+    store: SharedTileStore,
+    layer: u32,
+    /// Owner id new spill records are keyed under; refreshed on clone
+    /// and truncate so post-divergence tiles never collide with records
+    /// an ancestor sequence wrote (see [`TileKey`]).
+    self_owner: u32,
+    /// Per tile: the owner its spill record is keyed by (stamped at
+    /// completion; inherited unchanged across forks).
+    tile_owner: Vec<u32>,
+    /// Per tile: arena slot when hot, [`NO_SLOT`] otherwise.
+    slot_of: Vec<u32>,
+    /// Per slot: resident tile, [`NO_SLOT`] when free.
+    tile_of: Vec<u32>,
+    free_slots: Vec<u32>,
+    hot_count: usize,
+    /// LRU stamps (logical clock) + lazy min-heap of demotion candidates
+    /// (stale entries are skipped at pop; ties cannot happen — stamps
+    /// are unique).
+    stamp: Vec<u64>,
+    clock: u64,
+    lru: BinaryHeap<Reverse<(u64, u32)>>,
+    /// Per tile: epoch of the last `ensure_hot_*` call that needed it —
+    /// tiles needed in the current epoch are never demotion victims.
+    visited: Vec<u64>,
+    epoch: u64,
+    /// Warm shadows + demotion order for warm→cold aging.
+    warm: Vec<Option<Box<WarmTile>>>,
+    warm_order: VecDeque<u32>,
+    warm_count: usize,
+    stats: TierStats,
+    /// Reusable spill-payload / dequantize scratch.
+    payload: Vec<u8>,
+    scratch: Vec<f32>,
+}
+
+impl TierState {
+    /// Bump the LRU stamp of `tile` (most-recently-needed).
+    fn touch(&mut self, tile: usize) {
+        self.clock += 1;
+        self.stamp[tile] = self.clock;
+        self.lru.push(Reverse((self.clock, tile as u32)));
+        // lazy heap: compact when stale entries dominate
+        if self.lru.len() > 4 * self.stamp.len() + 64 {
+            let stamp = &self.stamp;
+            let slot_of = &self.slot_of;
+            let mut fresh = BinaryHeap::with_capacity(self.hot_count + 1);
+            for (t, &s) in stamp.iter().enumerate() {
+                if slot_of[t] != NO_SLOT {
+                    fresh.push(Reverse((s, t as u32)));
+                }
+            }
+            self.lru = fresh;
+        }
+    }
+
+    /// Grow the per-tile bookkeeping to cover `tile`.
+    fn grow_to(&mut self, tile: usize) {
+        if self.slot_of.len() <= tile {
+            self.slot_of.resize(tile + 1, NO_SLOT);
+            self.tile_owner.resize(tile + 1, 0);
+            self.stamp.resize(tile + 1, 0);
+            self.visited.resize(tile + 1, 0);
+            self.warm.resize_with(tile + 1, || None);
+        }
+    }
+}
+
+impl Clone for TierState {
+    fn clone(&self) -> Self {
+        // A cloned cache (prefix fork / snapshot) diverges from here on:
+        // refresh the owner so tiles completed AFTER the clone spill
+        // under fresh keys, while inherited tiles keep `tile_owner` and
+        // share their ancestor's immutable records.
+        let self_owner = match self.store.lock() {
+            Ok(mut s) => s.alloc_owner(),
+            // a poisoned store mutex means a worker already panicked
+            // mid-spill; this cache is unusable
+            Err(_) => panic!("tile store mutex poisoned during cache clone"),
+        };
+        Self {
+            cfg: self.cfg,
+            store: self.store.clone(),
+            layer: self.layer,
+            self_owner,
+            tile_owner: self.tile_owner.clone(),
+            slot_of: self.slot_of.clone(),
+            tile_of: self.tile_of.clone(),
+            free_slots: self.free_slots.clone(),
+            hot_count: self.hot_count,
+            stamp: self.stamp.clone(),
+            clock: self.clock,
+            lru: self.lru.clone(),
+            visited: self.visited.clone(),
+            epoch: self.epoch,
+            warm: self
+                .warm
+                .iter()
+                .map(|w| {
+                    w.as_ref().map(|b| {
+                        Box::new(WarmTile {
+                            k4: b.k4.clone(),
+                            v4: b.v4.clone(),
+                            affine: b.affine.clone(),
+                        })
+                    })
+                })
+                .collect(),
+            warm_order: self.warm_order.clone(),
+            warm_count: self.warm_count,
+            // counters are per-cache telemetry, not state: a fork starts
+            // its own tallies rather than double-reporting its parent's
+            stats: TierStats::default(),
+            payload: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
 }
 
 impl KvCache {
@@ -88,7 +244,58 @@ impl KvCache {
             vzero: vec![0.0; s_len],
             page_size,
             pages: vec![0.0; n_kv * n_pages * 2 * d],
+            tier: None,
         }
+    }
+
+    /// Tiered int8 cache (`docs/kv-tiers.md`): completed tiles live in a
+    /// hot slot arena bounded by `cfg.hot_tile_budget` and demote
+    /// through warm (int4 shadow) to cold (spill record in `store`).
+    /// `layer` keys this cache's spill records.  Requires an even head
+    /// dim (int4 packing) and the usual Int8 tile geometry.
+    pub fn with_tiers(
+        n_kv: usize,
+        d: usize,
+        cap: usize,
+        page_size: usize,
+        layer: usize,
+        cfg: TierParams,
+        store: SharedTileStore,
+    ) -> Self {
+        assert!(d % 2 == 0, "tiered KV needs an even head dim (int4 packing), got {d}");
+        let mut me = Self::with_opts(n_kv, d, cap, page_size, KvDtype::Int8);
+        // the flat quantized planes become an on-demand slot arena
+        me.kq = Vec::new();
+        me.vq = Vec::new();
+        let self_owner = match store.lock() {
+            Ok(mut s) => s.alloc_owner(),
+            // poisoned store mutex: a worker already panicked mid-spill;
+            // construction cannot proceed
+            Err(_) => panic!("tile store mutex poisoned during cache construction"),
+        };
+        me.tier = Some(Box::new(TierState {
+            cfg,
+            store,
+            layer: layer as u32,
+            self_owner,
+            tile_owner: Vec::new(),
+            slot_of: Vec::new(),
+            tile_of: Vec::new(),
+            free_slots: Vec::new(),
+            hot_count: 0,
+            stamp: Vec::new(),
+            clock: 0,
+            lru: BinaryHeap::new(),
+            visited: Vec::new(),
+            epoch: 0,
+            warm: Vec::new(),
+            warm_order: VecDeque::new(),
+            warm_count: 0,
+            stats: TierStats::default(),
+            payload: Vec::new(),
+            scratch: Vec::new(),
+        }));
+        me
     }
 
     pub fn page_size(&self) -> usize {
@@ -115,6 +322,439 @@ impl KvCache {
         (self.len / self.page_size) * self.page_size
     }
 
+    /// Base offset of `(head, completed tile)`'s int8 rows in `kq`/`vq`.
+    /// Flat mode: the contiguous `[n_kv, cap, d]` layout.  Tiered mode:
+    /// the tile's hot arena slot — asserting residency, because reading
+    /// a demoted tile's codes would be silent corruption (the ensure /
+    /// tick-boundary promotion paths uphold this invariant).
+    #[inline]
+    fn q_base(&self, h: usize, tile: usize) -> usize {
+        match &self.tier {
+            None => (h * self.cap + tile * self.page_size) * self.d,
+            Some(t) => {
+                let slot = t.slot_of[tile];
+                assert!(
+                    slot != NO_SLOT,
+                    "quantized read of non-hot tile {tile} (layer {})",
+                    t.layer
+                );
+                (slot as usize * self.n_kv + h) * self.page_size * self.d
+            }
+        }
+    }
+
+    /// Number of completed (quantized) tiles.
+    #[inline]
+    fn completed_tiles(&self) -> usize {
+        self.len / self.page_size
+    }
+
+    /// Whether this cache runs the hot/warm/cold tier machinery.
+    #[inline]
+    pub fn is_tiered(&self) -> bool {
+        self.tier.is_some()
+    }
+
+    /// Tiles currently resident in the hot arena (tiered mode; 0 flat).
+    pub fn hot_tiles(&self) -> usize {
+        self.tier.as_ref().map_or(0, |t| t.hot_count)
+    }
+
+    /// Residency tier of a completed tile — `None` for flat caches, the
+    /// staging tail, or out-of-range tiles.  Diagnostics/tests.
+    pub fn tile_tier(&self, tile: usize) -> Option<TileTier> {
+        let t = self.tier.as_ref()?;
+        if tile >= self.completed_tiles() {
+            return None;
+        }
+        if t.slot_of.get(tile).copied().unwrap_or(NO_SLOT) != NO_SLOT {
+            Some(TileTier::Hot)
+        } else if t.warm.get(tile).is_some_and(|w| w.is_some()) {
+            Some(TileTier::Warm)
+        } else {
+            Some(TileTier::Cold)
+        }
+    }
+
+    /// Drain this cache's promotion/demotion counters.
+    pub fn take_tier_stats(&mut self) -> TierStats {
+        self.tier.as_mut().map(|t| std::mem::take(&mut t.stats)).unwrap_or_default()
+    }
+
+    /// Register a freshly completed tile in the hot arena: claim a slot
+    /// (possibly demoting the LRU tile), stamp the current spill owner,
+    /// and mark it most-recently used.
+    fn tier_complete_tile(&mut self, tile: usize) {
+        let slot = self.tier_alloc_slot();
+        let Some(t) = self.tier.as_mut() else {
+            return;
+        };
+        t.grow_to(tile);
+        t.tile_owner[tile] = t.self_owner;
+        t.slot_of[tile] = slot;
+        t.tile_of[slot as usize] = tile as u32;
+        t.hot_count += 1;
+        t.touch(tile);
+    }
+
+    /// Grab a free hot-arena slot: reuse a freed one, demote the LRU
+    /// tile when at budget, or grow the arena (demand promotions may
+    /// overshoot the budget; planned maintenance trims back).
+    fn tier_alloc_slot(&mut self) -> u32 {
+        if let Some(s) = self.tier.as_mut().and_then(|t| t.free_slots.pop()) {
+            return s;
+        }
+        let at_budget =
+            self.tier.as_ref().is_some_and(|t| t.hot_count >= t.cfg.hot_tile_budget);
+        if at_budget && self.tier_demote_lru() {
+            if let Some(s) = self.tier.as_mut().and_then(|t| t.free_slots.pop()) {
+                return s;
+            }
+        }
+        // grow the arena by one slot
+        let slot_elems = self.n_kv * self.page_size * self.d;
+        let slot = (self.kq.len() / slot_elems.max(1)) as u32;
+        self.kq.resize(self.kq.len() + slot_elems, 0);
+        self.vq.resize(self.vq.len() + slot_elems, 0);
+        if let Some(t) = self.tier.as_mut() {
+            t.tile_of.push(NO_SLOT);
+        }
+        slot
+    }
+
+    /// Demote the least-recently-needed hot tile, skipping tiles needed
+    /// in the current ensure epoch.  False when nothing is demotable.
+    fn tier_demote_lru(&mut self) -> bool {
+        let Some(t) = self.tier.as_mut() else {
+            return false;
+        };
+        let mut protected: Vec<Reverse<(u64, u32)>> = Vec::new();
+        let victim = loop {
+            let Some(Reverse((s, tile))) = t.lru.pop() else {
+                break None;
+            };
+            let ti = tile as usize;
+            // stale entry (restamped, demoted, or truncated away)?
+            if ti >= t.slot_of.len() || t.slot_of[ti] == NO_SLOT || t.stamp[ti] != s {
+                continue;
+            }
+            if t.visited[ti] == t.epoch && t.epoch != 0 {
+                protected.push(Reverse((s, tile)));
+                continue;
+            }
+            break Some(ti);
+        };
+        for p in protected {
+            t.lru.push(p);
+        }
+        match victim {
+            Some(tile) => self.tier_demote_tile(tile),
+            None => false,
+        }
+    }
+
+    /// Demote one hot tile: spill its exact int8 payload (write-once),
+    /// build the warm int4 shadow, free the slot.  False if not hot.
+    fn tier_demote_tile(&mut self, tile: usize) -> bool {
+        let ps = self.page_size;
+        let d = self.d;
+        let n_kv = self.n_kv;
+        let td = ps * d;
+        let nt = self.cap.div_ceil(ps);
+        let Some(t) = self.tier.as_mut() else {
+            return false;
+        };
+        let slot = match t.slot_of.get(tile) {
+            Some(&s) if s != NO_SLOT => s as usize,
+            _ => return false,
+        };
+        let key = TileKey { owner: t.tile_owner[tile], layer: t.layer, tile: tile as u32 };
+        {
+            let mut store = match t.store.lock() {
+                Ok(g) => g,
+                // poisoned store mutex: a worker already panicked
+                // mid-spill; state is lost
+                Err(_) => panic!("tile store mutex poisoned during demotion"),
+            };
+            if !store.contains(key) {
+                t.payload.clear();
+                t.payload.reserve(2 * n_kv * td);
+                for h in 0..n_kv {
+                    let base = (slot * n_kv + h) * td;
+                    t.payload.extend(self.kq[base..base + td].iter().map(|&c| c as u8));
+                }
+                for h in 0..n_kv {
+                    let base = (slot * n_kv + h) * td;
+                    t.payload.extend(self.vq[base..base + td].iter().map(|&c| c as u8));
+                }
+                if let Err(e) = store.put(key, &t.payload) {
+                    // spill-write failure is
+                    // unrecoverable mid-append: the tile's bytes would be
+                    // lost on slot reuse.  The error is typed
+                    // (TileStoreError) and exercised at the store layer.
+                    panic!("KV tile spill failed for {key}: {e}");
+                }
+            }
+        }
+        // warm shadow: int4 codes of the (dequantized) hot payload
+        let mut wt = WarmTile {
+            k4: vec![0u8; n_kv * td / 2],
+            v4: vec![0u8; n_kv * td / 2],
+            affine: vec![0.0f32; n_kv * 4],
+        };
+        if t.scratch.len() < td {
+            t.scratch.resize(td, 0.0);
+        }
+        for h in 0..n_kv {
+            let base = (slot * n_kv + h) * td;
+            let si = h * nt + tile;
+            dequantize_q8(
+                &self.kq[base..base + td],
+                self.kscale[si],
+                self.kzero[si],
+                &mut t.scratch[..td],
+            );
+            let (ks4, kz4) = quantize_q4(&t.scratch[..td], &mut wt.k4[h * td / 2..(h + 1) * td / 2]);
+            dequantize_q8(
+                &self.vq[base..base + td],
+                self.vscale[si],
+                self.vzero[si],
+                &mut t.scratch[..td],
+            );
+            let (vs4, vz4) = quantize_q4(&t.scratch[..td], &mut wt.v4[h * td / 2..(h + 1) * td / 2]);
+            wt.affine[h * 4] = ks4;
+            wt.affine[h * 4 + 1] = kz4;
+            wt.affine[h * 4 + 2] = vs4;
+            wt.affine[h * 4 + 3] = vz4;
+        }
+        if t.warm[tile].replace(Box::new(wt)).is_none() {
+            t.warm_count += 1;
+        }
+        t.warm_order.push_back(tile as u32);
+        // age warm shadows beyond the warm budget down to cold
+        while t.warm_count > t.cfg.warm_tile_budget {
+            let Some(old) = t.warm_order.pop_front() else {
+                break;
+            };
+            let oi = old as usize;
+            // skip entries that re-promoted or re-demoted since queuing
+            if oi < t.warm.len()
+                && t.slot_of[oi] == NO_SLOT
+                && oi != tile
+                && t.warm[oi].take().is_some()
+            {
+                t.warm_count -= 1;
+            }
+        }
+        t.slot_of[tile] = NO_SLOT;
+        t.tile_of[slot] = NO_SLOT;
+        t.free_slots.push(slot as u32);
+        t.hot_count -= 1;
+        t.stats.tiles_demoted += 1;
+        true
+    }
+
+    /// Promote a demoted tile back into the hot arena from its spill
+    /// record — byte-exact by the write-once store contract.  No-op for
+    /// hot tiles.
+    fn tier_promote_tile(&mut self, tile: usize) -> Result<(), TileStoreError> {
+        let (already, in_range) = match self.tier.as_ref() {
+            None => return Ok(()),
+            Some(t) => (
+                t.slot_of.get(tile).copied().unwrap_or(NO_SLOT) != NO_SLOT,
+                tile < t.slot_of.len(),
+            ),
+        };
+        if already {
+            return Ok(());
+        }
+        if !in_range || tile >= self.completed_tiles() {
+            return Err(TileStoreError::Corrupt(format!(
+                "promotion of unknown tile {tile} (completed {})",
+                self.completed_tiles()
+            )));
+        }
+        let slot = self.tier_alloc_slot() as usize;
+        let n_kv = self.n_kv;
+        let td = self.page_size * self.d;
+        let Some(t) = self.tier.as_mut() else {
+            return Ok(());
+        };
+        let key = TileKey { owner: t.tile_owner[tile], layer: t.layer, tile: tile as u32 };
+        {
+            let mut store = t
+                .store
+                .lock()
+                .map_err(|_| TileStoreError::Corrupt("tile store mutex poisoned".into()))?;
+            store.get(key, &mut t.payload)?;
+        }
+        let expect = 2 * n_kv * td;
+        if t.payload.len() != expect {
+            return Err(TileStoreError::Corrupt(format!(
+                "payload for {key} is {} bytes, expected {expect}",
+                t.payload.len()
+            )));
+        }
+        for h in 0..n_kv {
+            let dst = (slot * n_kv + h) * td;
+            let src = h * td;
+            for i in 0..td {
+                self.kq[dst + i] = t.payload[src + i] as i8;
+            }
+            let src = (n_kv + h) * td;
+            for i in 0..td {
+                self.vq[dst + i] = t.payload[src + i] as i8;
+            }
+        }
+        t.slot_of[tile] = slot as u32;
+        t.tile_of[slot] = tile as u32;
+        t.hot_count += 1;
+        t.stats.tiles_promoted += 1;
+        if t.warm[tile].take().is_some() {
+            t.warm_count -= 1;
+        }
+        t.touch(tile);
+        Ok(())
+    }
+
+    /// Promote every completed tile the selection touches (demand path,
+    /// run in the policy phase before the attention kernels read).
+    /// Counts a prefetch hit per already-hot needed tile and a miss per
+    /// demand promotion; needed tiles are protected from same-call
+    /// demotion via the visit epoch.
+    pub fn ensure_hot_for(&mut self, sel: &IndexSet) -> Result<(), TileStoreError> {
+        if self.tier.is_none() {
+            return Ok(());
+        }
+        let ps = self.page_size;
+        let completed = self.completed_tiles();
+        if let Some(t) = self.tier.as_mut() {
+            t.epoch += 1;
+        }
+        for h in 0..sel.n_heads() {
+            for &p in sel.head(h) {
+                let tile = p as usize / ps;
+                if tile >= completed {
+                    continue; // staging tail — always resident
+                }
+                self.tier_need_tile(tile)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Promote every completed tile (dense fallback on a tiered layer).
+    pub fn ensure_all_hot(&mut self) -> Result<(), TileStoreError> {
+        if self.tier.is_none() {
+            return Ok(());
+        }
+        let completed = self.completed_tiles();
+        if let Some(t) = self.tier.as_mut() {
+            t.epoch += 1;
+        }
+        for tile in 0..completed {
+            self.tier_need_tile(tile)?;
+        }
+        Ok(())
+    }
+
+    /// Mark `tile` needed in the current epoch: hit-count or promote.
+    fn tier_need_tile(&mut self, tile: usize) -> Result<(), TileStoreError> {
+        let Some(t) = self.tier.as_mut() else {
+            return Ok(());
+        };
+        if t.visited.get(tile).copied() == Some(t.epoch) {
+            return Ok(());
+        }
+        t.grow_to(tile);
+        t.visited[tile] = t.epoch;
+        if t.slot_of[tile] != NO_SLOT {
+            t.stats.prefetch_hits += 1;
+            t.touch(tile);
+            Ok(())
+        } else {
+            t.stats.prefetch_misses += 1;
+            self.tier_promote_tile(tile)
+        }
+    }
+
+    /// Apply a tick-boundary tile plan: demote first (freeing slots),
+    /// then stage the hinted promotions.  Planned promotions are the
+    /// prefetch — they count in `tiles_promoted` but not as misses.
+    pub fn apply_tile_plan(
+        &mut self,
+        promote: &[u32],
+        demote: &[u32],
+    ) -> Result<(), TileStoreError> {
+        if self.tier.is_none() {
+            return Ok(());
+        }
+        let completed = self.completed_tiles();
+        for &tile in demote {
+            if (tile as usize) < completed {
+                self.tier_demote_tile(tile as usize);
+            }
+        }
+        for &tile in promote {
+            if (tile as usize) < completed {
+                self.tier_promote_tile(tile as usize)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequantize the warm int4 shadow of `pos`'s key row into
+    /// `out[..d]`; false when the tile holds no warm shadow.
+    /// Diagnostics/tests only — compute kernels never read the warm
+    /// tier (it is tolerance-gated, not exact).
+    pub fn warm_key_row(&self, h: usize, pos: usize, out: &mut [f32]) -> bool {
+        let Some(t) = self.tier.as_ref() else {
+            return false;
+        };
+        let ps = self.page_size;
+        let tile = pos / ps;
+        let Some(Some(w)) = t.warm.get(tile) else {
+            return false;
+        };
+        let td = ps * self.d;
+        let half = self.d / 2;
+        let row = h * td / 2 + (pos % ps) * half;
+        dequantize_q4(&w.k4[row..row + half], w.affine[h * 4], w.affine[h * 4 + 1], &mut out[..self.d]);
+        true
+    }
+
+    /// Reset tier bookkeeping for tiles at or beyond completed-tile
+    /// index `keep`, refreshing the spill owner so re-completed tiles
+    /// get fresh keys (their content diverges from the old records).
+    fn tier_truncate(&mut self, keep: usize) {
+        let Some(t) = self.tier.as_mut() else {
+            return;
+        };
+        for tile in keep..t.slot_of.len() {
+            let slot = t.slot_of[tile];
+            if slot != NO_SLOT {
+                t.tile_of[slot as usize] = NO_SLOT;
+                t.free_slots.push(slot);
+                t.hot_count -= 1;
+            }
+            if t.warm[tile].take().is_some() {
+                t.warm_count -= 1;
+            }
+        }
+        t.slot_of.truncate(keep);
+        t.tile_owner.truncate(keep);
+        t.stamp.truncate(keep);
+        t.visited.truncate(keep);
+        t.warm.truncate(keep);
+        t.warm_order.retain(|&x| (x as usize) < keep);
+        t.self_owner = match t.store.lock() {
+            Ok(mut s) => s.alloc_owner(),
+            // poisoned store mutex: a worker already panicked mid-spill;
+            // state is lost
+            Err(_) => panic!("tile store mutex poisoned during truncate"),
+        };
+    }
+
     /// KV bytes resident for the `len` stored positions (storage the
     /// tokens actually occupy; excludes unused capacity).  Int8 counts
     /// the quantized tiles, the per-tile scale/zero params, and the f32
@@ -127,7 +767,18 @@ impl KvCache {
                 let full = self.staged_from();
                 let staged = self.len - full;
                 let tiles = full / self.page_size;
-                full * rows + staged * rows * 4 + tiles * self.n_kv * 4 * 4
+                let params = tiles * self.n_kv * 4 * 4;
+                match &self.tier {
+                    None => full * rows + staged * rows * 4 + params,
+                    // tiered: the allocated hot arena (however many slots
+                    // exist), plus the warm int4 shadows + their affine
+                    // params — cold tiles cost nothing resident
+                    Some(t) => {
+                        let td = self.page_size * self.d;
+                        let warm = t.warm_count * (self.n_kv * td + self.n_kv * 16);
+                        self.kq.len() + self.vq.len() + staged * rows * 4 + params + warm
+                    }
+                }
             }
         }
     }
@@ -169,12 +820,19 @@ impl KvCache {
     }
 
     /// Quantize the (full) staging tile into the int8 store (Int8 mode).
+    /// Tiered caches first claim a hot-arena slot for the new tile (which
+    /// may demote the LRU tile at budget) and stamp it with the current
+    /// spill owner — the freshly quantized bytes are the canonical
+    /// payload this tile spills and promotes forever after.
     fn quantize_tile(&mut self, tile: usize) {
+        if self.tier.is_some() {
+            self.tier_complete_tile(tile);
+        }
         let td = self.page_size * self.d;
         let nt = self.cap.div_ceil(self.page_size);
         for h in 0..self.n_kv {
             let src = h * td;
-            let dst = (h * self.cap + tile * self.page_size) * self.d;
+            let dst = self.q_base(h, tile);
             let (ks, kz) = quantize_q8(&self.k[src..src + td], &mut self.kq[dst..dst + td]);
             let (vs, vz) = quantize_q8(&self.v[src..src + td], &mut self.vq[dst..dst + td]);
             self.kscale[h * nt + tile] = ks;
@@ -224,7 +882,7 @@ impl KvCache {
                 } else {
                     let tile = pos / self.page_size;
                     let nt = self.cap.div_ceil(self.page_size);
-                    let o = (h * self.cap + pos) * self.d;
+                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
                     qk_dot_q8(
                         q,
                         &self.kq[o..o + self.d],
@@ -248,7 +906,7 @@ impl KvCache {
                 } else {
                     let tile = pos / self.page_size;
                     let nt = self.cap.div_ceil(self.page_size);
-                    let o = (h * self.cap + pos) * self.d;
+                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
                     axpy_q8(
                         out,
                         w,
@@ -269,8 +927,11 @@ impl KvCache {
             return None;
         }
         let tile = pos / self.page_size;
+        if self.tier.is_some() && self.tile_tier(tile) != Some(TileTier::Hot) {
+            return None; // demoted tiles have no addressable int8 rows
+        }
         let nt = self.cap.div_ceil(self.page_size);
-        let o = (h * self.cap + pos) * self.d;
+        let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
         Some((&self.kq[o..o + self.d], self.kscale[h * nt + tile], self.kzero[h * nt + tile]))
     }
 
@@ -322,7 +983,7 @@ impl KvCache {
                     let ks = self.kscale[h * nt + tile];
                     let kz = self.kzero[h * nt + tile];
                     let q_sum = sum4(q);
-                    let base = (h * self.cap + t0) * d;
+                    let base = self.q_base(h, tile);
                     let rows = &self.kq[base..base + n * d];
                     for (j, o) in out[..n].iter_mut().enumerate() {
                         *o = (ks * dot_i8(q, &rows[j * d..(j + 1) * d]) + kz * q_sum) * scale;
@@ -378,7 +1039,7 @@ impl KvCache {
                     let nt = self.cap.div_ceil(ps);
                     let vs = self.vscale[h * nt + tile];
                     let vz = self.vzero[h * nt + tile];
-                    let base = (h * self.cap + t0) * d;
+                    let base = self.q_base(h, tile);
                     let rows = &self.vq[base..base + n * d];
                     for (j, &wj) in w[..n].iter().enumerate() {
                         if wj > 1e-9 {
@@ -405,7 +1066,7 @@ impl KvCache {
                 } else {
                     let tile = pos / self.page_size;
                     let nt = self.cap.div_ceil(self.page_size);
-                    let o = (h * self.cap + pos) * self.d;
+                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
                     self.kscale[h * nt + tile] * dot_i8(q, &self.kq[o..o + self.d])
                         + self.kzero[h * nt + tile] * q_sum
                 }
@@ -421,6 +1082,9 @@ impl KvCache {
 
     pub fn clear(&mut self) {
         self.len = 0;
+        if self.tier.is_some() {
+            self.tier_truncate(0);
+        }
     }
 
     /// Truncate to the first `n` positions (prefix-cache snapshot forks).
@@ -435,6 +1099,18 @@ impl KvCache {
         assert!(n <= self.len, "truncate {n} beyond len {}", self.len);
         let old_len = self.len;
         self.len = n;
+        if self.tier.is_some() {
+            // engine truncation points are block-aligned and blocks are a
+            // multiple of the tile size, so a mid-tile boundary here is a
+            // caller bug — and honoring it would require reading possibly
+            // non-hot codes back into staging
+            assert!(
+                n % self.page_size == 0,
+                "tiered KV truncate must be tile-aligned (n={n}, tile={})",
+                self.page_size
+            );
+            self.tier_truncate(n / self.page_size);
+        }
         if n == 0 {
             return;
         }

@@ -326,6 +326,21 @@ pub struct ServeConfig {
     /// running prefill may take up to `prefill_chunk`/`token_budget`
     /// tokens per tick regardless of live decoders.
     pub decode_guard_prefill_tokens: Option<usize>,
+    /// Tiered KV storage (`docs/kv-tiers.md`): run the reuse layers of
+    /// sparsity-hinting policies (Kascade) under a bounded hot-tile
+    /// arena, demoting cold tiles through an int4 warm shadow to a
+    /// file-backed spill store and promoting the tiles the anchor
+    /// layers' Top-k selections hint at.  Requires `kv_dtype: Int8`;
+    /// layers that scan every position (anchors, dense baselines) stay
+    /// fully resident, so enabling this under a non-hinting policy is a
+    /// no-op.  Off by default.
+    pub kv_tiers: bool,
+    /// Hot-tile budget per sequence per tiered layer (completed
+    /// quantization tiles of `block_size` tokens each).  Demand
+    /// promotion may transiently overshoot this (correctness first);
+    /// tick-boundary maintenance trims back.  Only meaningful with
+    /// `kv_tiers`.
+    pub hot_tile_budget: usize,
     /// Per-tenant fair-share admission, layered on the priority queue.
     /// When enabled, admission picks — among the highest-priority
     /// non-recovering waiters — the request whose tenant has consumed
@@ -355,6 +370,8 @@ impl Default for ServeConfig {
             max_prompt_tokens: None,
             num_threads: 1,
             decode_guard_prefill_tokens: None,
+            kv_tiers: false,
+            hot_tile_budget: 256,
             fair_share: false,
         }
     }

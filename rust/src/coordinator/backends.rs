@@ -7,6 +7,7 @@ use crate::kascade::KascadePlan;
 use crate::model::{Model, SeqState};
 use crate::runtime::{PjrtModel, PjrtSeqState};
 use crate::sparse::SparsePolicy;
+use crate::tilestore::{SharedTileStore, TierParams, TierStats};
 use std::sync::Arc;
 
 /// Native engine backend: SynthLM forward on the CPU attention engine with
@@ -33,6 +34,20 @@ impl NativeBackend {
         dtype: KvDtype,
     ) -> Self {
         let st = model.new_state_with_dtype(cap, dtype);
+        Self { model, st, policy }
+    }
+
+    /// Backend with tiered int8 KV storage (`docs/kv-tiers.md`): layers
+    /// the policy scans in full stay flat int8; the rest run under
+    /// `tiers`' hot-tile budget against the shared spill `store`.
+    pub fn with_tiers(
+        model: Arc<Model>,
+        cap: usize,
+        policy: Box<dyn SparsePolicy>,
+        tiers: TierParams,
+        store: &SharedTileStore,
+    ) -> Self {
+        let st = model.new_state_tiered(cap, policy.as_ref(), tiers, store);
         Self { model, st, policy }
     }
 }
@@ -62,6 +77,33 @@ impl SeqBackend for NativeBackend {
             bytes: self.model.kv_bytes(&self.st),
             dequant_rows: self.st.cost.dequant_rows,
         })
+    }
+
+    /// `(page_size, completed tiles)` across this sequence's tiered
+    /// layers; `None` when no layer runs tiered (flat or f32 states).
+    fn tile_geometry(&self) -> Option<(usize, usize)> {
+        let c = self.st.caches.iter().find(|c| c.is_tiered())?;
+        Some((c.page_size(), c.len / c.page_size()))
+    }
+
+    /// Apply one tick-boundary tile plan to every tiered layer and drain
+    /// the accumulated tier counters (planned promotions plus any
+    /// policy-phase demand promotions since the last drain).
+    fn apply_tile_plan(&mut self, promote: &[u32], demote: &[u32]) -> TierStats {
+        let mut stats = TierStats::default();
+        for c in &mut self.st.caches {
+            if !c.is_tiered() {
+                continue;
+            }
+            if let Err(e) = c.apply_tile_plan(promote, demote) {
+                // spill-store corruption at the tick boundary has no
+                // recovery path; the error is typed (TileStoreError)
+                // and exercised at the store layer
+                panic!("tiered KV tile plan failed: {e}");
+            }
+            stats.merge(&c.take_tier_stats());
+        }
+        stats
     }
 
     /// Prefix-cache snapshot: clone the KV state truncated to the first

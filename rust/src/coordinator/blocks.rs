@@ -27,7 +27,20 @@
 //! gets a fresh block and drops its ref on the shared one.
 
 use crate::config::KvDtype;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+/// Per-sequence resident-tile ledger for tiered KV storage
+/// (`docs/kv-tiers.md`): which completed KV tiles the manager believes
+/// are hot, with LRU stamps.  The ledger is the *planning* view — the
+/// per-layer caches are the ground truth, and drift (e.g. demand
+/// promotions the planner never saw) self-heals through the caches' own
+/// `ensure_hot_*` backstop.
+#[derive(Debug, Default)]
+struct TileLedger {
+    /// tile id -> LRU stamp (stamps are unique per ledger)
+    resident: BTreeMap<u32, u64>,
+    clock: u64,
+}
 
 #[derive(Debug)]
 pub struct BlockManager {
@@ -61,6 +74,11 @@ pub struct BlockManager {
     pub cow_copies: u64,
     /// high-water mark of in-use blocks
     pub peak_used: usize,
+    /// hot-tile budget per sequence (0 = tiering off; see
+    /// [`BlockManager::plan_tiles`])
+    tile_budget: usize,
+    /// per-sequence resident-tile ledgers (tiered KV only)
+    tiles: HashMap<u64, TileLedger>,
 }
 
 impl BlockManager {
@@ -80,7 +98,68 @@ impl BlockManager {
             cache_cap: 0,
             cow_copies: 0,
             peak_used: 0,
+            tile_budget: 0,
+            tiles: HashMap::new(),
         }
+    }
+
+    /// Enable sparsity-aware KV tiering: per sequence, at most `budget`
+    /// completed tiles are planned hot per layer
+    /// ([`crate::config::ServeConfig::hot_tile_budget`]).
+    pub fn set_tile_budget(&mut self, budget: usize) {
+        self.tile_budget = budget;
+    }
+
+    /// Tick-boundary tile plan for `seq` (`docs/kv-tiers.md`): fold the
+    /// policy's `needed` hint (sorted, deduplicated tile ids) into the
+    /// sequence's resident ledger and emit which tiles to promote (newly
+    /// needed) and demote (LRU beyond the hot budget, never a tile
+    /// needed this round).  Deterministic: ledger iteration is ordered
+    /// and LRU stamps are unique, so identical histories produce
+    /// identical plans.  Tiles at or beyond `n_tiles` (truncated away)
+    /// are forgotten silently.
+    pub fn plan_tiles(
+        &mut self,
+        seq: u64,
+        needed: &[u32],
+        n_tiles: usize,
+        promote: &mut Vec<u32>,
+        demote: &mut Vec<u32>,
+    ) {
+        promote.clear();
+        demote.clear();
+        if self.tile_budget == 0 {
+            return;
+        }
+        let led = self.tiles.entry(seq).or_default();
+        led.resident.retain(|&t, _| (t as usize) < n_tiles);
+        for &t in needed {
+            if (t as usize) >= n_tiles {
+                continue;
+            }
+            led.clock += 1;
+            if led.resident.insert(t, led.clock).is_none() {
+                promote.push(t);
+            }
+        }
+        while led.resident.len() > self.tile_budget {
+            let victim = led
+                .resident
+                .iter()
+                .filter(|(t, _)| needed.binary_search(t).is_err())
+                .min_by_key(|&(&t, &s)| (s, t))
+                .map(|(&t, _)| t);
+            let Some(v) = victim else {
+                break; // every resident tile is needed: keep them all
+            };
+            led.resident.remove(&v);
+            demote.push(v);
+        }
+    }
+
+    /// Planned-resident tile count for `seq` (tests/diagnostics).
+    pub fn planned_tiles(&self, seq: u64) -> usize {
+        self.tiles.get(&seq).map_or(0, |l| l.resident.len())
     }
 
     /// Enable prefix-cache retention: up to `cap` refcount-0 indexed
@@ -264,6 +343,7 @@ impl BlockManager {
             }
         }
         self.tokens.remove(&seq);
+        self.tiles.remove(&seq);
     }
 
     /// Give `seq` shared references to `blocks` — a chain of full,
@@ -582,6 +662,44 @@ mod tests {
         // byte estimate: int8 blocks count a quarter
         let est = bm.kv_bytes_est(1024);
         assert_eq!(est, 1024 / 4);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn tile_plans_respect_budget_and_lru_order() {
+        let mut bm = BlockManager::new(16, 8);
+        let (mut p, mut d) = (Vec::new(), Vec::new());
+        // budget 0: tiering off, plans are empty
+        bm.plan_tiles(1, &[0, 1, 2], 10, &mut p, &mut d);
+        assert!(p.is_empty() && d.is_empty());
+        bm.set_tile_budget(3);
+        // first hint: everything promotes, nothing demotes
+        bm.plan_tiles(1, &[0, 1, 2], 10, &mut p, &mut d);
+        assert_eq!(p, vec![0, 1, 2]);
+        assert!(d.is_empty());
+        assert_eq!(bm.planned_tiles(1), 3);
+        // new tiles displace the least-recently-needed ones
+        bm.plan_tiles(1, &[4, 5], 10, &mut p, &mut d);
+        assert_eq!(p, vec![4, 5]);
+        assert_eq!(d, vec![0, 1], "LRU victims, oldest stamps first");
+        assert_eq!(bm.planned_tiles(1), 3);
+        // re-needing a resident tile refreshes it instead of promoting
+        bm.plan_tiles(1, &[2, 6], 10, &mut p, &mut d);
+        assert_eq!(p, vec![6]);
+        assert_eq!(d, vec![4], "tile 2 was refreshed; 4 is now oldest");
+        // needed tiles are never demoted, even over budget
+        bm.plan_tiles(1, &[2, 5, 6, 7], 10, &mut p, &mut d);
+        assert_eq!(p, vec![7]);
+        assert!(d.is_empty(), "all four resident tiles are needed");
+        assert_eq!(bm.planned_tiles(1), 4, "demand overshoot is allowed");
+        // truncation forgets out-of-range tiles silently
+        bm.plan_tiles(1, &[0], 1, &mut p, &mut d);
+        assert_eq!(p, vec![0]);
+        assert!(d.is_empty());
+        assert_eq!(bm.planned_tiles(1), 1);
+        // release drops the ledger
+        bm.release(1);
+        assert_eq!(bm.planned_tiles(1), 0);
         bm.check_invariants().unwrap();
     }
 

@@ -47,6 +47,16 @@ pub struct ServeMetrics {
     /// quantized KV value rows read through the dequantizing attend path
     /// (accumulated from finished sequences; 0 in pure-f32 serving)
     pub dequant_rows: u64,
+    /// KV tiles promoted hot (tiered KV; planned prefetch + demand)
+    pub tiles_promoted: u64,
+    /// KV tiles demoted out of the hot arena (tiered KV)
+    pub tiles_demoted: u64,
+    /// tiles a policy-phase `ensure` found already hot (tiered KV —
+    /// the tick-boundary prefetch worked)
+    pub prefetch_hits: u64,
+    /// tiles a policy-phase `ensure` had to promote on demand (tiered
+    /// KV — the hint missed or arrived late)
+    pub prefetch_misses: u64,
     /// wall time of each full engine tick (sweep + schedule + execute +
     /// retire), microseconds
     pub tick_us: Welford,
@@ -94,6 +104,10 @@ impl ServeMetrics {
             kv_bytes_resident: Welford::new(),
             peak_kv_bytes: 0,
             dequant_rows: 0,
+            tiles_promoted: 0,
+            tiles_demoted: 0,
+            prefetch_hits: 0,
+            prefetch_misses: 0,
             tick_us: Welford::new(),
             threads: 1,
             cancelled: 0,
@@ -133,6 +147,27 @@ impl ServeMetrics {
         }
     }
 
+    /// Fold one maintenance round's tier counters in
+    /// ([`crate::tilestore::TierStats`], drained per sequence per tick).
+    pub fn add_tier_stats(&mut self, s: &crate::tilestore::TierStats) {
+        self.tiles_promoted += s.tiles_promoted;
+        self.tiles_demoted += s.tiles_demoted;
+        self.prefetch_hits += s.prefetch_hits;
+        self.prefetch_misses += s.prefetch_misses;
+    }
+
+    /// Fraction of policy-phase tile needs the tick-boundary prefetch
+    /// had already staged hot (1.0 = every needed tile was resident;
+    /// 0 when tiering never ran).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.prefetch_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefetch_hits as f64 / total as f64
+        }
+    }
+
     /// Prefix-cache hit rate over admissions (0 when the cache saw none).
     pub fn prefix_hit_rate(&self) -> f64 {
         let total = self.prefix_hits + self.prefix_misses;
@@ -156,6 +191,7 @@ impl ServeMetrics {
              prefix hits={} misses={} saved={} tok  kv_cached mean={:.0}  \
              decode_batch p50={:.0} max={:.0}  decode={:.1} tok/s  \
              kv_bytes peak={}  dequant_rows={}  \
+             tiles promoted={} demoted={} prefetch hits={} misses={}  \
              tick mean={:.0}us max={:.0}us threads={}  \
              cancelled={} deadline_miss={} streamed_ttft p50={:.1}ms",
             self.requests_done,
@@ -179,6 +215,10 @@ impl ServeMetrics {
             self.decode_tok_s(),
             self.peak_kv_bytes,
             self.dequant_rows,
+            self.tiles_promoted,
+            self.tiles_demoted,
+            self.prefetch_hits,
+            self.prefetch_misses,
             self.tick_us.mean(),
             self.tick_us.max(),
             self.threads,
@@ -205,6 +245,12 @@ mod tests {
         m.streamed_ttft_us.lock().unwrap().add_us(2000.0);
         m.tick_us.add(123.0);
         m.threads = 4;
+        m.add_tier_stats(&crate::tilestore::TierStats {
+            tiles_promoted: 5,
+            tiles_demoted: 3,
+            prefetch_hits: 9,
+            prefetch_misses: 1,
+        });
         for us in [500.0, 800.0, 900.0] {
             m.tpot_hist.add_us(us);
         }
@@ -216,6 +262,9 @@ mod tests {
         assert!(r.contains("tokens_out=10"));
         assert!(r.contains("cancelled=2"));
         assert!(r.contains("deadline_miss=1"));
+        assert!(r.contains("tiles promoted=5 demoted=3"));
+        assert!(r.contains("prefetch hits=9 misses=1"));
+        assert!((m.prefetch_hit_rate() - 0.9).abs() < 1e-12);
         assert!((m.streamed_ttft_percentile(50.0) - 2000.0).abs() < 1e-9);
     }
 }

@@ -116,10 +116,19 @@ impl Scheduler {
              quantization tile (got {})",
             cfg.block_size
         );
+        // tiered KV demotes/promotes whole int8 quantization tiles — the
+        // tier machinery has no f32 representation to spill
+        assert!(
+            !cfg.kv_tiers || cfg.kv_dtype == crate::config::KvDtype::Int8,
+            "kv_tiers requires kv_dtype=int8 (tiles spill as int8 payloads)"
+        );
         let mut blocks = BlockManager::new(cfg.block_size, cfg.num_blocks);
         blocks.set_dtype(cfg.kv_dtype);
         if cfg.enable_prefix_cache {
             blocks.set_cache_capacity(cfg.prefix_cache_blocks);
+        }
+        if cfg.kv_tiers {
+            blocks.set_tile_budget(cfg.hot_tile_budget);
         }
         Self {
             cfg,

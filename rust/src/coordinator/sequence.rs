@@ -2,8 +2,10 @@
 //! client-facing request/event types live in [`super::api`].
 
 use super::api::{Event, Request, Session};
+use super::blocks::BlockManager;
 use crate::model::{Model, SeqState};
 use crate::sparse::SparsePolicy;
+use crate::tilestore::TierStats;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -59,6 +61,21 @@ pub trait SeqBackend {
     fn kv_stats(&self) -> Option<KvStats> {
         None
     }
+    /// Tile geometry of this backend's tiered KV caches — `(page_size,
+    /// completed tiles)` — or `None` when the backend runs no tiered
+    /// storage (flat caches, PJRT, test doubles).  `None` disables tier
+    /// maintenance for the sequence.
+    fn tile_geometry(&self) -> Option<(usize, usize)> {
+        None
+    }
+    /// Apply a tick-boundary tile plan (`docs/kv-tiers.md`) to every
+    /// tiered cache and drain the tier counters accumulated since the
+    /// last call (planned work + demand promotions + prefetch hit/miss
+    /// tallies).  Default: no-op with empty stats.
+    fn apply_tile_plan(&mut self, promote: &[u32], demote: &[u32]) -> TierStats {
+        let _ = (promote, demote);
+        TierStats::default()
+    }
 }
 
 /// KV-storage accounting snapshot (see [`SeqBackend::kv_stats`]).
@@ -110,6 +127,12 @@ pub struct Sequence {
     /// `Event::Started` already delivered (survives preemption — a
     /// re-admission is not a second start)
     started_sent: bool,
+    /// scratch buffers for tick-boundary tier maintenance (hint /
+    /// promote / demote tile ids) — retained so steady-state ticks
+    /// reuse capacity instead of allocating
+    tier_hint: Vec<u32>,
+    tier_promote: Vec<u32>,
+    tier_demote: Vec<u32>,
 }
 
 impl Sequence {
@@ -137,7 +160,43 @@ impl Sequence {
             cached_prefix: 0,
             session,
             started_sent: false,
+            tier_hint: Vec::new(),
+            tier_promote: Vec::new(),
+            tier_demote: Vec::new(),
         }
+    }
+
+    /// Tick-boundary KV-tier maintenance (`docs/kv-tiers.md`): collect
+    /// the policy's `needed_tiles` hint, fold it through the
+    /// [`BlockManager`] ledger into a promote/demote plan, apply the
+    /// plan to the backend's tiered caches, and return the drained tier
+    /// counters.  `None` when the backend runs no tiered storage.  The
+    /// engine runs this between ticks — never inside the parallel
+    /// decode pass — so promotion staging cannot perturb the
+    /// bitwise-deterministic tick.
+    pub fn tier_maintenance(
+        &mut self,
+        seq_id: u64,
+        blocks: &mut BlockManager,
+    ) -> Option<TierStats> {
+        let (page_size, n_tiles) = self.backend.tile_geometry()?;
+        let hinted = match self.backend.batch_parts() {
+            Some(parts) => parts.policy.needed_tiles(page_size, &mut self.tier_hint),
+            None => false,
+        };
+        if hinted {
+            blocks.plan_tiles(
+                seq_id,
+                &self.tier_hint,
+                n_tiles,
+                &mut self.tier_promote,
+                &mut self.tier_demote,
+            );
+        } else {
+            self.tier_promote.clear();
+            self.tier_demote.clear();
+        }
+        Some(self.backend.apply_tile_plan(&self.tier_promote, &self.tier_demote))
     }
 
     /// Deliver an event to the client's handle.

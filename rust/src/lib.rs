@@ -54,4 +54,5 @@ pub mod server;
 pub mod sparse;
 pub mod stats;
 pub mod tensor;
+pub mod tilestore;
 pub mod workload;

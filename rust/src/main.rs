@@ -70,6 +70,7 @@ fn usage() -> ! {
            eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
            calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
            serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--threads N] [--deadline-ms MS]\n\
+                 [--kv-tiers] [--hot-tile-budget N] [--spill PATH]\n\
            traffic [--seed S] [--ticks N] [--rate R] [--burst-rate R] [--prompt-cap N]\n\
                    [--guard TOKENS] [--fair-share] [--threads N]\n\
            export-weights [--out PATH] [--seed S]\n\
@@ -142,6 +143,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         None
     };
     let cap = ctx + 64;
+    // tiered KV storage (docs/kv-tiers.md): int8 caches, reuse layers
+    // under a hot-tile budget, cold tiles spilled to an append-only file
+    let kv_tiers = args.has("kv-tiers");
+    let hot_tile_budget: usize =
+        args.flag("hot-tile-budget").and_then(|s| s.parse().ok()).unwrap_or(256);
+    let store: Option<kascade::tilestore::SharedTileStore> = if kv_tiers {
+        let path = args.flag("spill").unwrap_or("results/kv_spill.kvsp").to_string();
+        // each run spills its own working set; a stale file only grows
+        let _ = std::fs::remove_file(&path);
+        Some(kascade::tilestore::shared_store(kascade::tilestore::FileTileStore::open(&path)?))
+    } else {
+        None
+    };
     let factory: BackendFactory = {
         let model = model.clone();
         Box::new(move |_req| {
@@ -149,7 +163,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 Some(p) => Box::new(KascadePolicy::new(p.clone())),
                 None => Box::new(DensePolicy),
             };
-            Box::new(NativeBackend::new(model.clone(), cap, policy))
+            match &store {
+                Some(st) => Box::new(NativeBackend::with_tiers(
+                    model.clone(),
+                    cap,
+                    policy,
+                    kascade::tilestore::TierParams::new(hot_tile_budget),
+                    st,
+                )),
+                None => Box::new(NativeBackend::new(model.clone(), cap, policy)),
+            }
         })
     };
     let num_threads: usize = args.flag("threads").and_then(|s| s.parse().ok()).unwrap_or(1);
@@ -157,6 +180,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ServeConfig {
             num_blocks: (cap / 16 + 2) * 32,
             num_threads,
+            kv_dtype: if kv_tiers {
+                kascade::config::KvDtype::Int8
+            } else {
+                kascade::config::KvDtype::F32
+            },
+            kv_tiers,
+            hot_tile_budget,
             ..ServeConfig::default()
         },
         factory,
@@ -184,7 +214,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             correct += 1;
         }
     }
-    println!("policy={policy} requests={n_requests} ctx={ctx}");
+    println!(
+        "policy={policy} requests={n_requests} ctx={ctx} kv_tiers={kv_tiers}{}",
+        if kv_tiers { format!(" hot_tile_budget={hot_tile_budget}") } else { String::new() }
+    );
     println!("{}", engine.metrics.report());
     println!(
         "wall={secs:.1}s accuracy={:.0}% ({} of {})",

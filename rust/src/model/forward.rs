@@ -9,6 +9,7 @@ use crate::kascade::similarity::{CalibrationCapture, ProbeCapture};
 use crate::pool::{ScopedJob, WorkerPool};
 use crate::sparse::{Selection, SparsePolicy};
 use crate::tensor::{self, matmul_t, matvec_t, rmsnorm, rope};
+use crate::tilestore::{SharedTileStore, TierParams, TileStoreError};
 
 /// Prefill Q-tile (matches the paper's 128-query kernel tile).
 pub const PREFILL_TILE: usize = 128;
@@ -131,9 +132,21 @@ struct HeadItem<'a> {
     cost: &'a mut CostTracker,
 }
 
+/// Unwrap a tier `ensure`: a spill-store fault mid-forward is
+/// unrecoverable — the attention kernels need the tile bytes that were
+/// supposed to come back from the store.
+// (spill-store corruption mid-forward has no recovery path)
+fn tier_ok(r: Result<(), TileStoreError>) {
+    if let Err(e) = r {
+        panic!("tiered KV ensure failed: {e}");
+    }
+}
+
 /// Policy phase of one batched-decode layer for one sequence: append the
-/// freshly projected K/V row to the layer cache, then ask the sequence's
-/// policy for its selection (written into the sequence's own scratch).
+/// freshly projected K/V row to the layer cache, ask the sequence's
+/// policy for its selection (written into the sequence's own scratch),
+/// then — for tiered caches — promote whatever the selection needs that
+/// the tick-boundary prefetch did not stage (counted as prefetch misses).
 // analyze: hot-path
 #[allow(clippy::too_many_arguments)]
 fn policy_phase(
@@ -150,8 +163,24 @@ fn policy_phase(
     let st = &mut *r.st;
     // analyze: allow(hot-path-alloc) — KvCache::push appends into preallocated pages (cap from new_state)
     st.caches[layer].push(&k[i * nkd..(i + 1) * nkd], &v[i * nkd..(i + 1) * nkd]);
-    let cache = &st.caches[layer];
-    r.policy.decode(layer, &q[i * nqd..(i + 1) * nqd], cache, g, &mut st.scratch, &mut st.cost)
+    let sel = r.policy.decode(
+        layer,
+        &q[i * nqd..(i + 1) * nqd],
+        &st.caches[layer],
+        g,
+        &mut st.scratch,
+        &mut st.cost,
+    );
+    if st.caches[layer].is_tiered() {
+        // demand promotion (miss path only) reuses the tier staging
+        // buffers; the ensure calls allocate nothing when the tiles
+        // are already hot, which the steady-state alloc test relies on
+        match sel {
+            Selection::Dense => tier_ok(st.caches[layer].ensure_all_hot()),
+            Selection::Sparse => tier_ok(st.caches[layer].ensure_hot_for(&st.scratch.sel)),
+        }
+    }
+    sel
 }
 
 impl Model {
@@ -169,6 +198,47 @@ impl Model {
     pub fn new_state_with_dtype(&self, cap: usize, dtype: crate::config::KvDtype) -> SeqState {
         let caches = (0..self.cfg.n_layers)
             .map(|_| KvCache::with_opts(self.cfg.n_kv_heads, self.cfg.d_head, cap, 16, dtype))
+            .collect();
+        SeqState { caches, pos: 0, cost: CostTracker::default(), scratch: AttnScratch::new() }
+    }
+
+    /// Per-sequence state with tiered int8 KV storage (`docs/kv-tiers.md`).
+    /// Layers whose `policy` scans every position (anchors, dense
+    /// baselines — [`SparsePolicy::scans_all_positions`]) get flat int8
+    /// caches exactly as [`Model::new_state_with_dtype`]; the remaining
+    /// (reuse) layers run under `tiers`' hot-tile budget, demoting cold
+    /// tiles through an int4 warm shadow into `store` and promoting them
+    /// back when the anchor layers' Top-k hints (or a policy-phase miss)
+    /// need them.
+    pub fn new_state_tiered(
+        &self,
+        cap: usize,
+        policy: &dyn SparsePolicy,
+        tiers: TierParams,
+        store: &SharedTileStore,
+    ) -> SeqState {
+        let caches = (0..self.cfg.n_layers)
+            .map(|layer| {
+                if policy.scans_all_positions(layer) {
+                    KvCache::with_opts(
+                        self.cfg.n_kv_heads,
+                        self.cfg.d_head,
+                        cap,
+                        16,
+                        crate::config::KvDtype::Int8,
+                    )
+                } else {
+                    KvCache::with_tiers(
+                        self.cfg.n_kv_heads,
+                        self.cfg.d_head,
+                        cap,
+                        16,
+                        layer,
+                        tiers,
+                        store.clone(),
+                    )
+                }
+            })
             .collect();
         SeqState { caches, pos: 0, cost: CostTracker::default(), scratch: AttnScratch::new() }
     }
@@ -287,7 +357,6 @@ impl Model {
                 caches[layer].push(&k, &v);
             }
             // attention per Q-tile
-            let cache = &caches[layer];
             let mut t0 = 0;
             while t0 < t_total {
                 let tlen = PREFILL_TILE.min(t_total - t0);
@@ -303,11 +372,18 @@ impl Model {
                     tile_idx,
                     base + t0,
                     qs,
-                    cache,
+                    &caches[layer],
                     cfg.group(),
                     scratch,
                     cost,
                 );
+                if caches[layer].is_tiered() {
+                    match sel {
+                        Selection::Dense => tier_ok(caches[layer].ensure_all_hot()),
+                        Selection::Sparse => tier_ok(caches[layer].ensure_hot_for(&scratch.sel)),
+                    }
+                }
+                let cache = &caches[layer];
                 let AttnScratch { sel: selset, planes } = scratch;
                 match sel {
                     Selection::Dense => attention::prefill_dense_tile(
@@ -334,6 +410,11 @@ impl Model {
             }
             // calibration probes (dense oracle, before residual update)
             if let Some(cap) = capture {
+                if caches[layer].is_tiered() {
+                    // the dense probe oracle scans every position
+                    tier_ok(caches[layer].ensure_all_hot());
+                }
+                let cache = &caches[layer];
                 for (pi, &pp) in cap.probe_positions.iter().enumerate() {
                     if pp < base || pp >= base + t_total {
                         continue;
@@ -443,8 +524,14 @@ impl Model {
         for layer in 0..cfg.n_layers {
             self.qkv_row(layer, &x, *pos, &mut q, &mut k, &mut v);
             caches[layer].push(&k, &v);
+            let sel = policy.decode(layer, &q, &caches[layer], cfg.group(), scratch, cost);
+            if caches[layer].is_tiered() {
+                match sel {
+                    Selection::Dense => tier_ok(caches[layer].ensure_all_hot()),
+                    Selection::Sparse => tier_ok(caches[layer].ensure_hot_for(&scratch.sel)),
+                }
+            }
             let cache = &caches[layer];
-            let sel = policy.decode(layer, &q, cache, cfg.group(), scratch, cost);
             let AttnScratch { sel: selset, planes } = scratch;
             match sel {
                 Selection::Dense => {

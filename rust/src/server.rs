@@ -219,6 +219,22 @@ impl Engine {
             }
             self.register_prefix(seq);
         }
+        // tick-boundary tier maintenance (docs/kv-tiers.md): replan each
+        // tiered sequence's hot set from its policy's latest Top-k hints
+        // and apply promotions/demotions HERE, between ticks, so the
+        // deterministic decode pass never observes a mid-step tier change
+        if self.sched.cfg.kv_tiers {
+            let mut ids: Vec<u64> = self.sched.running.clone();
+            // plan in id order: LRU stamps and spill writes replay exactly
+            ids.sort_unstable();
+            for id in ids {
+                if let Some(s) = self.seqs.get_mut(&id) {
+                    if let Some(stats) = s.tier_maintenance(id, &mut self.sched.blocks) {
+                        self.metrics.add_tier_stats(&stats);
+                    }
+                }
+            }
+        }
         self.metrics.kv_util.add(self.sched.blocks.utilization());
         self.metrics.kv_cached.add(self.sched.blocks.cached() as f64);
         let kv_bytes: usize = self

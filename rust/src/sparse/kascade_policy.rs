@@ -179,6 +179,42 @@ impl SparsePolicy for KascadePolicy {
         true
     }
 
+    /// Anchor layers (and anchor-0) score every stored position when they
+    /// re-extract Top-k, so only reuse layers can run under a bounded hot
+    /// set — their index sets are remapped from cached anchor selections
+    /// and never scan the full context.
+    fn scans_all_positions(&self, layer: usize) -> bool {
+        !matches!(self.plan.role(layer), LayerRole::Reuse { .. })
+    }
+
+    /// The union of every cached anchor-layer Top-k selection, as tile
+    /// ids.  Head remapping permutes *which* head reads *which* set, not
+    /// the positions inside them, so this union is exactly the position
+    /// set any reuse layer can touch until the anchors re-select.
+    fn needed_tiles(&self, page_size: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        let ps = page_size as u32;
+        let mut any = false;
+        for (layer, &has) in self.decode_has.iter().enumerate() {
+            if !has {
+                continue;
+            }
+            any = true;
+            let idx = &self.decode_idx[layer];
+            for h in 0..idx.n_heads() {
+                for &p in idx.head(h) {
+                    out.push(p / ps);
+                }
+            }
+        }
+        if !any {
+            return false;
+        }
+        out.sort_unstable();
+        out.dedup();
+        true
+    }
+
     fn fork_fresh(&self) -> Option<Box<dyn SparsePolicy>> {
         Some(Box::new(KascadePolicy::new(self.plan.clone())))
     }
@@ -576,6 +612,39 @@ mod tests {
                 assert!(sa.contains(&(s as u32)), "planted key {s} missing");
             }
         }
+    }
+
+    /// The tier hint (`needed_tiles`) must be the sorted, deduplicated
+    /// union of every cached anchor selection — and report "no hint"
+    /// before any anchor has extracted indices.
+    #[test]
+    fn needed_tiles_unions_anchor_selections() {
+        let (q, c) = setup();
+        let mut pol = KascadePolicy::new(plan());
+        let mut cost = CostTracker::default();
+        let mut scratch = AttnScratch::new();
+        let mut tiles = Vec::new();
+        assert!(!pol.needed_tiles(16, &mut tiles), "no anchors cached yet");
+        pol.decode(0, &q, &c, 2, &mut scratch, &mut cost);
+        pol.decode(2, &q, &c, 2, &mut scratch, &mut cost);
+        pol.decode(5, &q, &c, 2, &mut scratch, &mut cost);
+        assert!(pol.needed_tiles(16, &mut tiles));
+        assert!(!tiles.is_empty());
+        assert!(tiles.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+        // every cached anchor position maps into the hint
+        for l in [0usize, 2, 5] {
+            let idx = pol.decode_set(l).unwrap();
+            for h in 0..idx.n_heads() {
+                for &p in idx.head(h) {
+                    assert!(tiles.binary_search(&(p / 16)).is_ok());
+                }
+            }
+        }
+        // role split: anchors scan all positions, reuse layers don't
+        assert!(pol.scans_all_positions(0));
+        assert!(pol.scans_all_positions(2));
+        assert!(!pol.scans_all_positions(3));
+        assert!(!pol.scans_all_positions(4));
     }
 
     #[test]

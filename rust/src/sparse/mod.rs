@@ -98,6 +98,28 @@ pub trait SparsePolicy: Send {
         false
     }
 
+    /// Whether `layer`'s decode decision may score *any* stored position
+    /// (dense fallbacks, anchor/estimation passes, page-bound scans).
+    /// KV tiering (`docs/kv-tiers.md`) only bounds the hot set of layers
+    /// where this is `false` — layers whose index sets are computed
+    /// elsewhere (Kascade reuse layers) — so the conservative default
+    /// keeps every cache fully resident.
+    fn scans_all_positions(&self, _layer: usize) -> bool {
+        true
+    }
+
+    /// Write the tiles (position / `page_size`) the policy's upcoming
+    /// sparse layers will touch — sorted, deduplicated — into `out`, and
+    /// return true.  The default (false, `out` untouched) means "no
+    /// hint": the tier planner then leaves residency to demand
+    /// promotion.  Kascade overrides this with the union of its cached
+    /// anchor-layer Top-k selections, which is exactly the set every
+    /// reuse layer scores until the anchors re-select
+    /// (`docs/kv-tiers.md`, "needed_tiles hint protocol").
+    fn needed_tiles(&self, _page_size: usize, _out: &mut Vec<u32>) -> bool {
+        false
+    }
+
     /// Fork a fresh policy with the same configuration but cleared
     /// per-sequence state.  Powers prefix-cache snapshots: KV blocks are
     /// shared across sequences, but Top-k index state (anchor-layer

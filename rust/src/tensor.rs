@@ -373,6 +373,65 @@ pub fn dequantize_q8(q: &[i8], scale: f32, zero: f32, out: &mut [f32]) {
     }
 }
 
+/// Affine int4 quantization of one tile: `x ~= scale * q + zero` with
+/// `q` in `[-7, 7]`, two codes packed per byte (low nibble = even
+/// element, biased by +8 so a nibble is always in `[1, 15]`, with 8
+/// encoding `q = 0`).  Returns `(scale, zero)`.
+///
+/// This is the warm-tier codec of the tiered KV hierarchy
+/// (`docs/kv-tiers.md`): a compressed RAM shadow of a demoted tile,
+/// never the source of truth.  Edge conventions mirror [`quantize_q8`]:
+/// `scale`/`zero` come from the tile's finite min/max so every finite
+/// element round-trips within `scale / 2 = (max - min) / 28`; a
+/// constant tile gets `scale == 0.0` and all-mid codes; non-finite
+/// elements saturate (NaN encodes as the tile midpoint) without
+/// poisoning their neighbors' scale.
+pub fn quantize_q4(src: &[f32], dst: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(src.len() % 2, 0, "int4 packing needs an even element count");
+    debug_assert_eq!(src.len() / 2, dst.len());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in src {
+        if x.is_finite() {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        // empty tile or no finite elements: both nibbles encode q = 0
+        dst.fill(0x88);
+        return (0.0, 0.0);
+    }
+    let zero = 0.5 * (lo + hi);
+    let scale = (hi - lo) / 14.0;
+    if scale <= 0.0 {
+        dst.fill(0x88);
+        return (0.0, zero);
+    }
+    let inv = 1.0 / scale;
+    let code = |x: f32| -> u8 {
+        // NaN: `NaN as i32 == 0`, i.e. the tile midpoint, like quantize_q8
+        let q = ((x - zero) * inv).round().clamp(-7.0, 7.0) as i32;
+        (q + 8) as u8
+    };
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d = code(src[2 * i]) | (code(src[2 * i + 1]) << 4);
+    }
+    (scale, zero)
+}
+
+/// Dequantize packed int4 codes ([`quantize_q4`] layout) with an affine
+/// `(scale, zero)` pair into `out` (`out.len() == 2 * q.len()`).
+pub fn dequantize_q4(q: &[u8], scale: f32, zero: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len() * 2, out.len());
+    for (i, &b) in q.iter().enumerate() {
+        let q0 = (b & 0x0F) as i32 - 8;
+        let q1 = (b >> 4) as i32 - 8;
+        out[2 * i] = q0 as f32 * scale + zero;
+        out[2 * i + 1] = q1 as f32 * scale + zero;
+    }
+}
+
 /// 4-lane unrolled element sum, accumulation order identical to the `da`
 /// accumulator inside [`qk_dot_q8`] — the tile-major kernels hoist this
 /// per-query sum out of the per-row loop (the int8 zero-point term is
@@ -762,6 +821,82 @@ mod quant_tests {
             let fused = qk_dot_q8(&a, &q, s, z);
             let split = s * dot_i8(&a, &q) + z * sum4(&a);
             assert_eq!(fused.to_bits(), split.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn quantize_q4_round_trip_error_bounded() {
+        let mut r = Rng::new(41);
+        for _ in 0..50 {
+            let n = 2 * (1 + r.below(128));
+            let scale_in = 0.1 + r.uniform() * 10.0;
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * scale_in).collect();
+            let mut q = vec![0u8; n / 2];
+            let (s, z) = quantize_q4(&src, &mut q);
+            let mut back = vec![0.0f32; n];
+            dequantize_q4(&q, s, z, &mut back);
+            let lo = src.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let bound = (hi - lo) / 28.0 + 1e-6;
+            for (a, b) in src.iter().zip(&back) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_q4_packing_order_and_edges() {
+        // low nibble = even element
+        let src = vec![-1.0f32, 1.0];
+        let mut q = vec![0u8; 1];
+        let (s, z) = quantize_q4(&src, &mut q);
+        assert_eq!(z, 0.0);
+        assert_eq!(q[0] & 0x0F, (8 - 7) as u8, "min maps to q = -7");
+        assert_eq!(q[0] >> 4, (8 + 7) as u8, "max maps to q = +7");
+        let mut back = vec![0.0f32; 2];
+        dequantize_q4(&q, s, z, &mut back);
+        assert!((back[0] + 1.0).abs() < 1e-6 && (back[1] - 1.0).abs() < 1e-6);
+        // constant tile: scale 0, exact round trip through `zero`
+        let src = vec![2.5f32; 32];
+        let mut q = vec![0u8; 16];
+        let (s, z) = quantize_q4(&src, &mut q);
+        assert_eq!(s, 0.0);
+        assert!(q.iter().all(|&b| b == 0x88));
+        let mut back = vec![0.0f32; 32];
+        dequantize_q4(&q, s, z, &mut back);
+        assert!(back.iter().all(|&x| x == 2.5));
+        // NaN encodes as the tile midpoint without poisoning the scale
+        let src = vec![0.0f32, f32::NAN, 4.0, 2.0];
+        let mut q = vec![0u8; 2];
+        let (s, z) = quantize_q4(&src, &mut q);
+        let mut back = vec![0.0f32; 4];
+        dequantize_q4(&q, s, z, &mut back);
+        assert!((back[1] - 2.0).abs() < 1e-6, "NaN -> midpoint, got {}", back[1]);
+        assert!((back[2] - 4.0).abs() <= s * 0.5 + 1e-6);
+    }
+
+    /// Tolerance gate of the warm tier against the hot int8 path: on the
+    /// same tile, the int4 shadow must stay within the summed half-step
+    /// bounds of the int8 codes it was built from.
+    #[test]
+    fn q4_shadow_within_tolerance_of_q8_path() {
+        let mut r = Rng::new(43);
+        for _ in 0..30 {
+            let n = 2 * (1 + r.below(128));
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 3.0).collect();
+            let mut q8c = vec![0i8; n];
+            let (s8, z8) = quantize_q8(&src, &mut q8c);
+            let mut hot = vec![0.0f32; n];
+            dequantize_q8(&q8c, s8, z8, &mut hot);
+            // warm shadow is built FROM the hot-tier payload, as in KvCache
+            let mut q4c = vec![0u8; n / 2];
+            let (s4, z4) = quantize_q4(&hot, &mut q4c);
+            let mut warm = vec![0.0f32; n];
+            dequantize_q4(&q4c, s4, z4, &mut warm);
+            let bound = 0.5 * s4 + 1e-6;
+            for (a, b) in hot.iter().zip(&warm) {
+                assert!((a - b).abs() <= bound, "{a} vs {b} (bound {bound})");
+            }
         }
     }
 

@@ -1,0 +1,516 @@
+//! Cold-tier spill store for the tiered KV hierarchy (`docs/kv-tiers.md`).
+//!
+//! A demoted KV tile's *exact* hot-tier payload (the per-head int8 codes
+//! for K and V) is serialized once into a [`TileStore`] and never
+//! rewritten — records are write-once and immutable, which is what makes
+//! demote→promote round trips byte-stable and lets prefix forks share
+//! spilled tiles the same way they share quantized blocks (PR 3's
+//! no-requantize guarantee).  Keys carry a fork-unique `owner` id so a
+//! forked sequence's post-boundary tiles can never collide with its
+//! parent's records.
+//!
+//! Two implementations: [`FileTileStore`] (append-only spill file, the
+//! production tier) and [`MemTileStore`] (in-memory test double so tier
+//! tests stay hermetic and deterministic).  All I/O failures surface as
+//! typed [`TileStoreError`]s — this module never unwraps.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Spill-file magic ("KVSP") — first 4 bytes of a [`FileTileStore`] file.
+pub const SPILL_MAGIC: [u8; 4] = *b"KVSP";
+/// Spill-file format version (second 4 bytes, little-endian).
+pub const SPILL_VERSION: u32 = 1;
+
+/// Identifies one spilled tile payload.  `owner` is a fork-unique id
+/// handed out by [`TileStore::alloc_owner`]: a cache clone (prefix fork,
+/// snapshot) and a truncation both refresh their owner so tiles written
+/// *after* the divergence point get fresh keys, while inherited tiles
+/// keep the owner they were first spilled under and stay shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TileKey {
+    pub owner: u32,
+    pub layer: u32,
+    pub tile: u32,
+}
+
+impl fmt::Display for TileKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(owner {}, layer {}, tile {})", self.owner, self.layer, self.tile)
+    }
+}
+
+/// Typed spill-tier failure: I/O, a key that was never stored, or a
+/// malformed spill file.
+#[derive(Debug)]
+pub enum TileStoreError {
+    Io(std::io::Error),
+    Missing(TileKey),
+    Corrupt(String),
+}
+
+impl fmt::Display for TileStoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TileStoreError::Io(e) => write!(f, "tile store I/O error: {e}"),
+            TileStoreError::Missing(k) => write!(f, "tile store has no record for {k}"),
+            TileStoreError::Corrupt(msg) => write!(f, "tile store corrupt: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TileStoreError {}
+
+impl From<std::io::Error> for TileStoreError {
+    fn from(e: std::io::Error) -> Self {
+        TileStoreError::Io(e)
+    }
+}
+
+/// Cold-tier storage of demoted tile payloads.  `Send` so one store can
+/// be shared (behind `Arc<Mutex<..>>`) across the engine's sequences and
+/// the worker pool's policy-phase jobs.
+pub trait TileStore: Send {
+    /// Persist `payload` under `key`.  Records are write-once and
+    /// immutable: if the key already exists the call is a no-op — by the
+    /// byte-stability invariant a re-demoted tile's payload is identical
+    /// to the bytes already stored.
+    fn put(&mut self, key: TileKey, payload: &[u8]) -> Result<(), TileStoreError>;
+
+    /// Read the payload stored under `key` into `out` (replacing its
+    /// contents).  [`TileStoreError::Missing`] if the key was never put.
+    fn get(&mut self, key: TileKey, out: &mut Vec<u8>) -> Result<(), TileStoreError>;
+
+    /// Whether a record exists for `key`.
+    fn contains(&self, key: TileKey) -> bool;
+
+    /// Number of stored records.
+    fn records(&self) -> usize;
+
+    /// Total payload bytes stored (excluding per-record framing).
+    fn payload_bytes(&self) -> usize;
+
+    /// Hand out a fresh, store-unique owner id (see [`TileKey`]).
+    fn alloc_owner(&mut self) -> u32;
+}
+
+/// The shared handle tiered caches hold: one store per engine, shared
+/// across every sequence (and its prefix forks).
+pub type SharedTileStore = Arc<Mutex<Box<dyn TileStore>>>;
+
+/// Wrap a store implementation into the shared handle type.
+pub fn shared_store(store: impl TileStore + 'static) -> SharedTileStore {
+    Arc::new(Mutex::new(Box::new(store)))
+}
+
+/// Promotion/demotion accounting, drained per tick into `ServeMetrics`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TierStats {
+    /// Tiles restored into the hot arena (planned prefetch + demand).
+    pub tiles_promoted: u64,
+    /// Tiles evicted from the hot arena (spilled on first demotion).
+    pub tiles_demoted: u64,
+    /// Needed tiles that were already hot when the kernels asked —
+    /// i.e. the tick-boundary prefetch staged them in time.
+    pub prefetch_hits: u64,
+    /// Needed tiles that had to be demand-promoted inside the policy
+    /// phase because no hint staged them.
+    pub prefetch_misses: u64,
+}
+
+impl TierStats {
+    pub fn merge(&mut self, o: &TierStats) {
+        self.tiles_promoted += o.tiles_promoted;
+        self.tiles_demoted += o.tiles_demoted;
+        self.prefetch_hits += o.prefetch_hits;
+        self.prefetch_misses += o.prefetch_misses;
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == TierStats::default()
+    }
+}
+
+/// Per-cache tier sizing knobs (see `ServeConfig::{kv_tiers,
+/// hot_tile_budget}` and `docs/kv-tiers.md`).
+#[derive(Debug, Clone, Copy)]
+pub struct TierParams {
+    /// Max completed tiles resident in one tiered layer's hot arena.
+    /// Demand promotion may overshoot this transiently (correctness
+    /// first); planned maintenance trims back to it.
+    pub hot_tile_budget: usize,
+    /// Max demoted tiles keeping a packed-int4 warm shadow in RAM;
+    /// older warm tiles drop to cold (spill record only).
+    pub warm_tile_budget: usize,
+}
+
+impl TierParams {
+    pub fn new(hot_tile_budget: usize) -> Self {
+        Self { hot_tile_budget: hot_tile_budget.max(1), warm_tile_budget: hot_tile_budget.max(1) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory test double
+// ---------------------------------------------------------------------------
+
+/// Hermetic in-memory [`TileStore`] for tests: same write-once contract
+/// as the file store, no filesystem.
+#[derive(Default)]
+pub struct MemTileStore {
+    // keyed lookups only — never iterated, so the HashMap cannot leak
+    // nondeterminism into anything observable
+    map: HashMap<TileKey, Vec<u8>>,
+    bytes: usize,
+    next_owner: u32,
+}
+
+impl MemTileStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl TileStore for MemTileStore {
+    fn put(&mut self, key: TileKey, payload: &[u8]) -> Result<(), TileStoreError> {
+        if !self.map.contains_key(&key) {
+            self.bytes += payload.len();
+            self.map.insert(key, payload.to_vec());
+        }
+        Ok(())
+    }
+
+    fn get(&mut self, key: TileKey, out: &mut Vec<u8>) -> Result<(), TileStoreError> {
+        let Some(p) = self.map.get(&key) else {
+            return Err(TileStoreError::Missing(key));
+        };
+        out.clear();
+        out.extend_from_slice(p);
+        Ok(())
+    }
+
+    fn contains(&self, key: TileKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn records(&self) -> usize {
+        self.map.len()
+    }
+
+    fn payload_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn alloc_owner(&mut self) -> u32 {
+        self.next_owner += 1;
+        self.next_owner
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File-backed spill store
+// ---------------------------------------------------------------------------
+
+/// Append-only file-backed [`TileStore`].
+///
+/// On-disk format (all integers little-endian):
+///
+/// ```text
+/// header:  magic "KVSP" (4 bytes) | version u32
+/// record:  owner u32 | layer u32 | tile u32 | payload_len u32 | payload
+/// ```
+///
+/// Records are only ever appended; the in-RAM index maps keys to file
+/// offsets.  Opening an existing file replays the records to rebuild the
+/// index (and the next owner id), erroring with
+/// [`TileStoreError::Corrupt`] on a bad magic/version, a truncated
+/// record, or a duplicate key (write-once means duplicates cannot occur
+/// in a well-formed file).
+pub struct FileTileStore {
+    file: File,
+    path: PathBuf,
+    index: HashMap<TileKey, (u64, u32)>,
+    end: u64,
+    bytes: usize,
+    next_owner: u32,
+}
+
+const REC_HEADER: usize = 16;
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+impl FileTileStore {
+    /// Create (or reopen and replay) the spill file at `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self, TileStoreError> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(false).open(&path)?;
+        let flen = file.metadata()?.len();
+        let mut store = Self {
+            file,
+            path,
+            index: HashMap::new(),
+            end: 0,
+            bytes: 0,
+            next_owner: 0,
+        };
+        if flen == 0 {
+            let mut header = [0u8; 8];
+            header[..4].copy_from_slice(&SPILL_MAGIC);
+            header[4..].copy_from_slice(&SPILL_VERSION.to_le_bytes());
+            store.file.write_all(&header)?;
+            store.end = 8;
+            return Ok(store);
+        }
+        store.replay(flen)?;
+        Ok(store)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Rebuild the index from an existing spill file of length `flen`.
+    fn replay(&mut self, flen: u64) -> Result<(), TileStoreError> {
+        self.file.seek(SeekFrom::Start(0))?;
+        let mut header = [0u8; 8];
+        if flen < 8 {
+            return Err(TileStoreError::Corrupt(format!(
+                "spill file {} shorter than its header",
+                self.path.display()
+            )));
+        }
+        self.file.read_exact(&mut header)?;
+        if header[..4] != SPILL_MAGIC {
+            return Err(TileStoreError::Corrupt(format!(
+                "bad magic in spill file {}",
+                self.path.display()
+            )));
+        }
+        let version = u32le(&header[4..8]);
+        if version != SPILL_VERSION {
+            return Err(TileStoreError::Corrupt(format!(
+                "spill file {} has version {version}, expected {SPILL_VERSION}",
+                self.path.display()
+            )));
+        }
+        let mut off = 8u64;
+        let mut rec = [0u8; REC_HEADER];
+        while off < flen {
+            if off + REC_HEADER as u64 > flen {
+                return Err(TileStoreError::Corrupt(format!(
+                    "truncated record header at offset {off} in {}",
+                    self.path.display()
+                )));
+            }
+            self.file.read_exact(&mut rec)?;
+            let key = TileKey {
+                owner: u32le(&rec[0..4]),
+                layer: u32le(&rec[4..8]),
+                tile: u32le(&rec[8..12]),
+            };
+            let len = u32le(&rec[12..16]);
+            let payload_at = off + REC_HEADER as u64;
+            if payload_at + len as u64 > flen {
+                return Err(TileStoreError::Corrupt(format!(
+                    "truncated payload for {key} at offset {off} in {}",
+                    self.path.display()
+                )));
+            }
+            if self.index.insert(key, (payload_at, len)).is_some() {
+                return Err(TileStoreError::Corrupt(format!(
+                    "duplicate record for {key} in {} (records are write-once)",
+                    self.path.display()
+                )));
+            }
+            self.bytes += len as usize;
+            self.next_owner = self.next_owner.max(key.owner);
+            off = payload_at + len as u64;
+            self.file.seek(SeekFrom::Start(off))?;
+        }
+        self.end = flen;
+        Ok(())
+    }
+}
+
+impl TileStore for FileTileStore {
+    fn put(&mut self, key: TileKey, payload: &[u8]) -> Result<(), TileStoreError> {
+        if self.index.contains_key(&key) {
+            return Ok(());
+        }
+        let len = u32::try_from(payload.len()).map_err(|_| {
+            TileStoreError::Corrupt(format!("tile payload of {} bytes overflows u32", payload.len()))
+        })?;
+        let mut rec = [0u8; REC_HEADER];
+        rec[0..4].copy_from_slice(&key.owner.to_le_bytes());
+        rec[4..8].copy_from_slice(&key.layer.to_le_bytes());
+        rec[8..12].copy_from_slice(&key.tile.to_le_bytes());
+        rec[12..16].copy_from_slice(&len.to_le_bytes());
+        self.file.seek(SeekFrom::Start(self.end))?;
+        self.file.write_all(&rec)?;
+        self.file.write_all(payload)?;
+        self.index.insert(key, (self.end + REC_HEADER as u64, len));
+        self.end += (REC_HEADER + payload.len()) as u64;
+        self.bytes += payload.len();
+        Ok(())
+    }
+
+    fn get(&mut self, key: TileKey, out: &mut Vec<u8>) -> Result<(), TileStoreError> {
+        let Some(&(off, len)) = self.index.get(&key) else {
+            return Err(TileStoreError::Missing(key));
+        };
+        out.clear();
+        out.resize(len as usize, 0);
+        self.file.seek(SeekFrom::Start(off))?;
+        self.file.read_exact(out).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                TileStoreError::Corrupt(format!(
+                    "short read for {key} in {}",
+                    self.path.display()
+                ))
+            } else {
+                TileStoreError::Io(e)
+            }
+        })?;
+        Ok(())
+    }
+
+    fn contains(&self, key: TileKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    fn records(&self) -> usize {
+        self.index.len()
+    }
+
+    fn payload_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn alloc_owner(&mut self) -> u32 {
+        self.next_owner += 1;
+        self.next_owner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(owner: u32, layer: u32, tile: u32) -> TileKey {
+        TileKey { owner, layer, tile }
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kascade_tilestore_{}_{name}", std::process::id()))
+    }
+
+    fn exercise_store(store: &mut dyn TileStore) {
+        let a = key(1, 0, 7);
+        let b = key(1, 2, 7);
+        store.put(a, &[1, 2, 3, 4]).unwrap();
+        store.put(b, &[9, 8]).unwrap();
+        assert!(store.contains(a) && store.contains(b));
+        assert_eq!(store.records(), 2);
+        assert_eq!(store.payload_bytes(), 6);
+        let mut out = Vec::new();
+        store.get(a, &mut out).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        // write-once: a second put under the same key is a no-op
+        store.put(a, &[0xFF; 4]).unwrap();
+        store.get(a, &mut out).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert_eq!(store.records(), 2);
+        // missing key is a typed error
+        match store.get(key(2, 0, 7), &mut out) {
+            Err(TileStoreError::Missing(k)) => assert_eq!(k, key(2, 0, 7)),
+            other => panic!("expected Missing, got {other:?}"),
+        }
+        // owner ids are unique and monotone
+        let o1 = store.alloc_owner();
+        let o2 = store.alloc_owner();
+        assert!(o2 > o1);
+    }
+
+    #[test]
+    fn mem_store_contract() {
+        let mut s = MemTileStore::new();
+        exercise_store(&mut s);
+    }
+
+    #[test]
+    fn file_store_contract_and_reopen_replay() {
+        let path = tmp_path("contract.kvsp");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = FileTileStore::open(&path).unwrap();
+            exercise_store(&mut s);
+            s.put(key(3, 1, 0), &[7; 32]).unwrap();
+        }
+        // reopen: index and owner counter replay from the records
+        let mut s = FileTileStore::open(&path).unwrap();
+        assert_eq!(s.records(), 3);
+        assert_eq!(s.payload_bytes(), 6 + 32);
+        let mut out = Vec::new();
+        s.get(key(1, 0, 7), &mut out).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        s.get(key(3, 1, 0), &mut out).unwrap();
+        assert_eq!(out, vec![7; 32]);
+        assert!(s.alloc_owner() > 3, "owner counter resumes past replayed owners");
+        // appends after a replay still round-trip
+        s.put(key(4, 0, 1), &[5, 6]).unwrap();
+        s.get(key(4, 0, 1), &mut out).unwrap();
+        assert_eq!(out, vec![5, 6]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn file_store_rejects_bad_magic_and_truncation() {
+        let path = tmp_path("corrupt.kvsp");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        match FileTileStore::open(&path) {
+            Err(TileStoreError::Corrupt(msg)) => assert!(msg.contains("magic"), "{msg}"),
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+        let _ = std::fs::remove_file(&path);
+
+        let path = tmp_path("truncated.kvsp");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut s = FileTileStore::open(&path).unwrap();
+            s.put(key(1, 0, 0), &[1; 64]).unwrap();
+        }
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 10]).unwrap();
+        match FileTileStore::open(&path) {
+            Err(TileStoreError::Corrupt(msg)) => assert!(msg.contains("truncated"), "{msg}"),
+            other => panic!("expected Corrupt, got {:?}", other.map(|_| ())),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shared_handle_is_send_and_clonable() {
+        let store = shared_store(MemTileStore::new());
+        let s2 = store.clone();
+        let t = std::thread::spawn(move || {
+            let mut guard = s2.lock().unwrap();
+            guard.put(key(1, 0, 0), &[1, 2]).unwrap();
+        });
+        t.join().unwrap();
+        let mut out = Vec::new();
+        store.lock().unwrap().get(key(1, 0, 0), &mut out).unwrap();
+        assert_eq!(out, vec![1, 2]);
+    }
+}

@@ -1,0 +1,359 @@
+//! Tiered KV storage invariants (docs/kv-tiers.md).
+//!
+//! The load-bearing property is *byte stability*: a hot tile's int8
+//! codes must survive any demote -> spill -> promote round-trip exactly,
+//! including across copy-on-write forks that share spill records — that
+//! is what lets a budget-constrained Kascade decode produce the same
+//! token stream as an all-resident run.  Exercised at three levels:
+//! the bare `KvCache` (property test), a full `Model::decode_step` loop
+//! over a >=128k-token context at a 25% hot budget, and the engine with
+//! its tick-boundary prefetch + `ServeMetrics` tier counters.
+
+use kascade::attention::{KvCache, TileTier};
+use kascade::config::{KvDtype, ModelConfig, ServeConfig, TopKRule};
+use kascade::coordinator::{Completion, NativeBackend, Request, SeqBackend};
+use kascade::kascade::KascadePlan;
+use kascade::model::{Model, SeqState, Weights};
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{Engine, LocalBackendFactory};
+use kascade::sparse::{KascadePolicy, SparsePolicy};
+use kascade::tensor::{argmax, Rng};
+use kascade::tilestore::{shared_store, MemTileStore, TierParams, TierStats};
+use std::sync::Arc;
+
+const N_KV: usize = 2;
+const D: usize = 8;
+const PS: usize = 16;
+
+fn push_random(c: &mut KvCache, r: &mut Rng, n: usize) {
+    let mut k = vec![0.0f32; N_KV * D];
+    let mut v = vec![0.0f32; N_KV * D];
+    for _ in 0..n {
+        r.fill_normal(&mut k, 0.5);
+        r.fill_normal(&mut v, 0.5);
+        c.push(&k, &v);
+    }
+}
+
+/// Every completed key row's exact int8 codes + per-tile affine params.
+/// Only valid while all completed tiles are hot.
+fn snapshot(c: &KvCache, n_pos: usize) -> Vec<(Vec<i8>, f32, f32)> {
+    let mut out = Vec::new();
+    for h in 0..N_KV {
+        for pos in 0..n_pos {
+            let (q, s, z) = c.quantized_key_row(h, pos).expect("snapshot of non-hot row");
+            out.push((q.to_vec(), s, z));
+        }
+    }
+    out
+}
+
+#[test]
+fn demote_promote_round_trips_hot_tile_bytes() {
+    check("tier round-trip is byte-stable", 4, |rng| {
+        let store = shared_store(MemTileStore::new());
+        let mut c = KvCache::with_tiers(N_KV, D, 256, PS, 0, TierParams::new(4), store);
+        let n_tiles = 8usize;
+        let n_pos = n_tiles * PS;
+        // a few staging rows past the last tile boundary: ensures the
+        // tier machinery never touches the f32 staging tail
+        push_random(&mut c, rng, n_pos + 5);
+
+        // completions under a 4-tile budget must have demoted LRU tiles
+        prop_assert!(c.hot_tiles() <= 4, "budget ignored: {} hot tiles", c.hot_tiles());
+        c.ensure_all_hot().map_err(|e| format!("ensure_all_hot: {e}"))?;
+        prop_assert!(c.hot_tiles() == n_tiles, "demand promotion may overshoot the budget");
+        let before = snapshot(&c, n_pos);
+
+        // demote everything; demoting an already-cold tile is a no-op
+        let all: Vec<u32> = (0..n_tiles as u32).collect();
+        c.apply_tile_plan(&[], &all).map_err(|e| format!("demote: {e}"))?;
+        c.apply_tile_plan(&[], &all).map_err(|e| format!("re-demote: {e}"))?;
+        prop_assert!(c.hot_tiles() == 0, "tiles left hot after demote-all");
+        for t in 0..n_tiles {
+            let tier = c.tile_tier(t);
+            prop_assert!(
+                tier == Some(TileTier::Warm) || tier == Some(TileTier::Cold),
+                "tile {t} reports {tier:?} after demotion"
+            );
+            prop_assert!(
+                c.quantized_key_row(0, t * PS).is_none(),
+                "demoted tile {t} still serves quantized rows"
+            );
+        }
+
+        // warm shadows (int4, diagnostics-only) are tolerance-bounded by
+        // the per-tile-head span: |err| <= span/28 per half-step, checked
+        // at 2x slack against the dequantized int8 snapshot
+        let mut out = vec![0.0f32; D];
+        for tile in 0..n_tiles {
+            if c.tile_tier(tile) != Some(TileTier::Warm) {
+                continue;
+            }
+            for h in 0..N_KV {
+                let rows: Vec<Vec<f32>> = (0..PS)
+                    .map(|i| {
+                        let (q, s, z) = &before[h * n_pos + tile * PS + i];
+                        q.iter().map(|&cc| cc as f32 * s + z).collect()
+                    })
+                    .collect();
+                let lo = rows.iter().flatten().cloned().fold(f32::INFINITY, f32::min);
+                let hi = rows.iter().flatten().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let tol = (hi - lo) / 14.0 + 1e-4;
+                for (i, row) in rows.iter().enumerate() {
+                    prop_assert!(
+                        c.warm_key_row(h, tile * PS + i, &mut out),
+                        "Warm tile {tile} has no shadow row"
+                    );
+                    for (a, b) in out.iter().zip(row) {
+                        prop_assert!(
+                            (a - b).abs() <= tol,
+                            "warm shadow drifted: {a} vs {b} (tol {tol})"
+                        );
+                    }
+                }
+            }
+        }
+
+        // promote everything back; promoting a hot tile is a no-op
+        c.apply_tile_plan(&all, &[]).map_err(|e| format!("promote: {e}"))?;
+        c.apply_tile_plan(&all, &[]).map_err(|e| format!("re-promote: {e}"))?;
+        prop_assert!(c.hot_tiles() == n_tiles, "promote-all left tiles cold");
+        let after = snapshot(&c, n_pos);
+        prop_assert!(before == after, "hot tile bytes changed across demote/promote");
+        Ok(())
+    });
+}
+
+/// A CoW fork shares the parent's spill records for inherited tiles and
+/// writes tiles completed after the fork under a fresh owner — a
+/// demoted-then-promoted inherited tile is byte-stable on BOTH sides,
+/// and post-fork completions never collide in the write-once store.
+#[test]
+fn fork_shares_spilled_tiles_and_diverges_after() {
+    let store = shared_store(MemTileStore::new());
+    let mut parent = KvCache::with_tiers(N_KV, D, 128, PS, 3, TierParams::new(2), store);
+    let n_tiles = 4usize;
+    let n_pos = n_tiles * PS;
+    let mut r = Rng::new(0xF02C);
+    push_random(&mut parent, &mut r, n_pos);
+    parent.ensure_all_hot().unwrap();
+    let inherited = snapshot(&parent, n_pos);
+
+    let all: Vec<u32> = (0..n_tiles as u32).collect();
+    parent.apply_tile_plan(&[], &all).unwrap();
+    assert_eq!(parent.hot_tiles(), 0);
+
+    let mut fork = parent.clone();
+    assert!(fork.take_tier_stats().is_zero(), "fork inherited the parent's tier counters");
+
+    // complete one more tile on each side with DIFFERENT rows
+    let mut rp = Rng::new(0xAAAA);
+    let mut rf = Rng::new(0xBBBB);
+    push_random(&mut parent, &mut rp, PS);
+    push_random(&mut fork, &mut rf, PS);
+
+    parent.ensure_all_hot().unwrap();
+    fork.ensure_all_hot().unwrap();
+    assert_eq!(snapshot(&parent, n_pos), inherited, "parent's inherited tiles changed");
+    assert_eq!(snapshot(&fork, n_pos), inherited, "fork's inherited tiles changed");
+
+    let prow = parent.quantized_key_row(0, n_pos).unwrap().0.to_vec();
+    let frow = fork.quantized_key_row(0, n_pos).unwrap().0.to_vec();
+    assert_ne!(prow, frow, "post-fork tiles should hold each side's own rows");
+
+    // the fork's own tile spills under its fresh owner and round-trips
+    let t4 = [n_tiles as u32];
+    fork.apply_tile_plan(&[], &t4).unwrap();
+    assert!(fork.quantized_key_row(0, n_pos).is_none());
+    fork.apply_tile_plan(&t4, &[]).unwrap();
+    assert_eq!(
+        fork.quantized_key_row(0, n_pos).unwrap().0,
+        &frow[..],
+        "fork's post-fork tile not byte-stable"
+    );
+    // ... and the parent's divergent tile 4 survives untouched
+    assert_eq!(parent.quantized_key_row(0, n_pos).unwrap().0, &prow[..]);
+}
+
+fn random_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        n_layers: 4,
+        d_model: 32,
+        n_q_heads: 4,
+        n_kv_heads: N_KV,
+        d_head: D,
+        d_ff: 64,
+        vocab: 64,
+        rope_theta: 10000.0,
+        rope: true,
+    };
+    let mut w = Weights::zeros(&cfg);
+    let mut r = Rng::new(seed);
+    r.fill_normal(&mut w.w_e, 0.3);
+    for lw in &mut w.layers {
+        r.fill_normal(&mut lw.wq, 0.18);
+        r.fill_normal(&mut lw.wk, 0.18);
+        r.fill_normal(&mut lw.wv, 0.18);
+        r.fill_normal(&mut lw.wo, 0.18);
+        r.fill_normal(&mut lw.w1, 0.18);
+        r.fill_normal(&mut lw.w3, 0.18);
+        r.fill_normal(&mut lw.w2, 0.12);
+    }
+    r.fill_normal(&mut w.w_u, 0.18);
+    Model::new(cfg, w)
+}
+
+fn kascade_policy() -> Box<dyn SparsePolicy> {
+    Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+        4,
+        N_KV,
+        vec![0, 2],
+        TopKRule::new(0.01, 64),
+    )))
+}
+
+/// Seed every layer cache with the same synthetic K/V rows (prefilling
+/// 128k tokens through the full forward pass is O(T^2) — the identity
+/// property only needs identical cache CONTENTS, not how they got there).
+fn fill_ctx(st: &mut SeqState, t: usize) {
+    let mut k = vec![0.0f32; N_KV * D];
+    let mut v = vec![0.0f32; N_KV * D];
+    for layer in 0..4 {
+        let mut r = Rng::new(0x5EED_0000 + layer as u64);
+        for _ in 0..t {
+            r.fill_normal(&mut k, 0.5);
+            r.fill_normal(&mut v, 0.5);
+            st.caches[layer].push(&k, &v);
+        }
+    }
+    st.pos = t;
+}
+
+/// Kascade decode over a 128Ki-token context with the reuse layers
+/// capped at a 25% hot-tile budget must be BITWISE identical to the
+/// all-resident int8 run: anchors are tier-exempt (exact selections)
+/// and promoted tiles restore exact bytes, so the logits — and the
+/// greedy token stream — cannot diverge.
+#[test]
+fn tiered_kascade_decode_matches_all_resident_128k() {
+    const T: usize = 128 * 1024;
+    let budget = T / PS / 4; // 25% of the context's completed tiles
+    let m = random_model(0x7E12);
+    let mut pol_a = kascade_policy();
+    let mut pol_b = kascade_policy();
+    let store = shared_store(MemTileStore::new());
+    let mut st_a = m.new_state_with_dtype(T + 32, KvDtype::Int8);
+    let mut st_b = m.new_state_tiered(T + 32, pol_b.as_ref(), TierParams::new(budget), &store);
+    fill_ctx(&mut st_a, T);
+    fill_ctx(&mut st_b, T);
+
+    // anchor layers 0/2 stay flat; reuse layers 1/3 run tiered and must
+    // have spilled down to the budget while the context filled
+    assert!(!st_b.caches[0].is_tiered() && !st_b.caches[2].is_tiered());
+    for l in [1usize, 3] {
+        assert!(st_b.caches[l].is_tiered());
+        assert!(
+            st_b.caches[l].hot_tiles() <= budget,
+            "layer {l}: {} hot tiles over budget {budget}",
+            st_b.caches[l].hot_tiles()
+        );
+    }
+
+    let (mut ta, mut tb) = (1u32, 1u32);
+    for step in 0..8 {
+        let la = m.decode_step(ta, &mut st_a, pol_a.as_mut());
+        let lb = m.decode_step(tb, &mut st_b, pol_b.as_mut());
+        assert!(la == lb, "step {step}: tiered logits diverged from all-resident");
+        ta = argmax(&la) as u32;
+        tb = argmax(&lb) as u32;
+        assert_eq!(ta, tb, "step {step}: token streams diverged");
+    }
+
+    let mut stats = TierStats::default();
+    for c in &mut st_b.caches {
+        stats.merge(&c.take_tier_stats());
+    }
+    assert!(stats.tiles_demoted > 0, "budgeted fill never demoted a tile");
+    assert!(stats.tiles_promoted > 0, "sparse decode never promoted a spilled tile");
+    assert!(stats.prefetch_hits + stats.prefetch_misses > 0, "policy phase never ensured tiles");
+}
+
+fn tier_engine_run(model: Arc<Model>, tiered: bool) -> (Vec<Completion>, Engine) {
+    let cap = 512usize;
+    let policy = || -> Box<dyn SparsePolicy> {
+        Box::new(KascadePolicy::new(KascadePlan::from_anchors(
+            4,
+            N_KV,
+            vec![0, 2],
+            TopKRule::new(0.25, 8),
+        )))
+    };
+    let factory: LocalBackendFactory = if tiered {
+        let store = shared_store(MemTileStore::new());
+        Box::new(move |_req: &Request| {
+            Box::new(NativeBackend::with_tiers(
+                model.clone(),
+                cap,
+                policy(),
+                TierParams::new(6),
+                &store,
+            )) as Box<dyn SeqBackend>
+        })
+    } else {
+        Box::new(move |_req: &Request| {
+            Box::new(NativeBackend::with_dtype(model.clone(), cap, policy(), KvDtype::Int8))
+                as Box<dyn SeqBackend>
+        })
+    };
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 256,
+        max_running: 4,
+        token_budget: 128,
+        prefill_chunk: 64,
+        queue_cap: 16,
+        workers: 1,
+        enable_prefix_cache: false,
+        batched_decode: true,
+        kv_dtype: KvDtype::Int8,
+        kv_tiers: tiered,
+        hot_tile_budget: 6,
+        ..ServeConfig::default()
+    };
+    let mut e = Engine::new(cfg, factory);
+    let mut r = Rng::new(0xE1);
+    let p1: Vec<u32> = (0..200).map(|_| r.below(64) as u32).collect();
+    let p2: Vec<u32> = (0..230).map(|_| r.below(64) as u32).collect();
+    let mut handles = vec![
+        e.submit(Request::new(p1).max_new(16)).expect("admission rejected request"),
+        e.submit(Request::new(p2).max_new(16)).expect("admission rejected request"),
+    ];
+    let mut done = e.run_to_completion(&mut handles);
+    done.sort_by_key(|c| c.id);
+    (done, e)
+}
+
+/// End-to-end through the engine: tick-boundary tier maintenance feeds
+/// the `ServeMetrics` counters, the prefetch actually lands hits, and
+/// the tiered token streams match an untiered int8 engine exactly.
+#[test]
+fn engine_tier_metrics_and_stream_identity() {
+    let model = Arc::new(random_model(0xE26E));
+    let (tiered, te) = tier_engine_run(model.clone(), true);
+    let (flat, _) = tier_engine_run(model, false);
+    assert_eq!(tiered.len(), 2);
+    assert_eq!(flat.len(), 2);
+    for (a, b) in tiered.iter().zip(&flat) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} diverged under tiering", a.id);
+    }
+    let m = &te.metrics;
+    assert!(m.tiles_demoted > 0, "hot budget 6 over ~13 tiles must demote");
+    assert!(m.tiles_promoted > 0, "maintenance/demand never promoted");
+    assert!(m.prefetch_misses > 0, "a budget smaller than the working set must miss");
+    assert!(m.prefetch_hits > 0, "the tick-boundary prefetch never landed a hit");
+    let hr = m.prefetch_hit_rate();
+    assert!(hr > 0.0 && hr < 1.0, "hit rate {hr} out of range");
+}
