@@ -9,27 +9,34 @@
 //! file-backed tile store — docs/kv-tiers.md) — the L3 overheads and
 //! wins that frame the paper's serving numbers.
 //!
+//! Two serving-boundary scenarios ride on top: `slo_traffic_server`
+//! (the same seeded traffic through a multi-worker [`Server`]'s channel
+//! boundary) and `gateway` (streamed generations over the loopback HTTP
+//! front end with prefix-affinity routing — docs/gateway.md).
+//!
 //! Run: `cargo bench --bench coordinator` (all scenarios), or a single
 //! scenario with `cargo bench --bench coordinator -- --scenario <name>`
 //! where `<name>` is one of `micro`, `prefix_cache`,
 //! `step_batched_decode`, `quantized_kv`, `streaming`, `parallel_tick`,
-//! `slo_traffic`, `long_context_tiered`.
+//! `slo_traffic`, `long_context_tiered`, `slo_traffic_server`,
+//! `gateway`.
 //!
 //! Writes machine-readable results for the scenarios that ran to
 //! `results/coordinator_bench.json` (the CI regression gate needs the
 //! full run — a single-scenario pass writes a partial record) and the
-//! repo-root perf-trajectory artifact `BENCH_8.json`.
+//! repo-root perf-trajectory artifact `BENCH_9.json`.
 
 use kascade::benchutil::{bench, header};
 use kascade::config::{KvDtype, ModelConfig, ServeConfig, TopKRule};
 use kascade::coordinator::{
     BlockManager, Completion, Event, NativeBackend, Request, Router, SeqBackend, SeqPhase,
-    Sequence, Session,
+    Sequence, ServeMetrics, Session,
 };
+use kascade::gateway::{Gateway, GatewayConfig, GatewayServer, NdjsonStream};
 use kascade::jsonutil::Json;
 use kascade::kascade::KascadePlan;
 use kascade::model::{Model, SeqState, SynthSpec, Weights};
-use kascade::server::Engine;
+use kascade::server::{BackendFactory, Engine, Server};
 use kascade::sparse::{DensePolicy, KascadePolicy, SparsePolicy};
 use kascade::tensor::{argmax, Rng};
 use kascade::tilestore::{shared_store, FileTileStore, TierParams, TierStats};
@@ -38,7 +45,7 @@ use std::cell::Cell;
 use std::rc::Rc;
 use std::sync::Arc;
 
-const SCENARIOS: [&str; 8] = [
+const SCENARIOS: [&str; 10] = [
     "micro",
     "prefix_cache",
     "step_batched_decode",
@@ -47,6 +54,8 @@ const SCENARIOS: [&str; 8] = [
     "parallel_tick",
     "slo_traffic",
     "long_context_tiered",
+    "slo_traffic_server",
+    "gateway",
 ];
 
 struct NullBackend;
@@ -987,6 +996,221 @@ fn main() {
         ));
     }
 
+    if run("slo_traffic_server") {
+        // the SLO traffic harness through the worker boundary
+        // (docs/serving.md): the same seeded bursty multi-tenant stream,
+        // but submitted to a free-running 2-worker `Server` over its
+        // channel boundary instead of ticking an in-process `Engine`, so
+        // the numbers cover the full submit → stream → complete
+        // round-trip.  Tenants pin to workers by session hash the way
+        // the gateway pins agentic flows; the per-worker metrics merge
+        // into one percentile surface via `ServeMetrics::merge` and gate
+        // against the same wall-clock SLOs as `slo_traffic`.
+        const SLO_TTFT_MS: f64 = 500.0;
+        const SLO_TPOT_MS: f64 = 20.0;
+        const ARRIVAL_TICKS: usize = 120;
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 8192,
+            max_running: 16,
+            token_budget: 1024,
+            prefill_chunk: 256,
+            queue_cap: 1024,
+            workers: 2,
+            fair_share: true,
+            decode_guard_prefill_tokens: Some(128),
+            ..ServeConfig::default()
+        };
+        let factory = || -> BackendFactory {
+            Box::new(|_req: &Request| Box::new(NullBackend) as Box<dyn SeqBackend>)
+        };
+        let mut srv = Server::start(cfg, vec![factory(), factory()]);
+        let mut gen = TrafficGen::new(TrafficSpec {
+            seed: 0xB0058,
+            base_rate: 1.0,
+            prompt_cap: 512,
+            ..TrafficSpec::default()
+        });
+        let mut handles = Vec::new();
+        let mut rejected = 0u64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..ARRIVAL_TICKS {
+            for r in gen.next_tick() {
+                let session = Some(u64::from(r.tenant));
+                match srv
+                    .submit(Request::new(r.prompt).max_new(r.max_new).tenant(r.tenant), session)
+                {
+                    Ok(h) => handles.push(h),
+                    Err(_) => rejected += 1,
+                }
+            }
+        }
+        let submitted = handles.len();
+        let mut completions = 0u64;
+        let mut failed = 0u64;
+        for h in &mut handles {
+            match h.wait(std::time::Duration::from_secs(120)) {
+                Ok(_) => completions += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let parts = srv.shutdown();
+        let m = ServeMetrics::merge(&parts);
+        let ttft_p50 = m.ttft_percentile(50.0) / 1e3;
+        let ttft_p95 = m.ttft_percentile(95.0) / 1e3;
+        let tpot_p50 = m.tpot_percentile(50.0) / 1e3;
+        let tpot_p95 = m.tpot_percentile(95.0) / 1e3;
+        let streamed_ttft_p95 = m.streamed_ttft_percentile(95.0) / 1e3;
+        let ttft_p95_headroom = SLO_TTFT_MS / ttft_p95.max(1e-9);
+        let tpot_p95_headroom = SLO_TPOT_MS / tpot_p95.max(1e-9);
+        let req_s = completions as f64 / wall.max(1e-9);
+        println!(
+            "\nslo_traffic_server ({submitted} submitted over 2 workers, {completions} \
+             completions, {rejected} rejected, wall {wall:.2}s):"
+        );
+        println!("  {}", m.report());
+        println!(
+            "  {req_s:.0} req/s  engine ttft p50 {ttft_p50:.2}ms p95 {ttft_p95:.2}ms \
+             (headroom {ttft_p95_headroom:.1}x)  tpot p95 {tpot_p95:.3}ms \
+             (headroom {tpot_p95_headroom:.1}x)  streamed ttft p95 {streamed_ttft_p95:.2}ms"
+        );
+        assert_eq!(failed, 0, "{failed} requests failed crossing the worker boundary");
+        assert!(completions >= 50, "traffic produced only {completions} completions");
+        assert_eq!(m.threads, 2, "merge must account for both workers");
+        assert!(
+            ttft_p95_headroom >= 1.0,
+            "TTFT p95 {ttft_p95:.2}ms breaches the {SLO_TTFT_MS}ms SLO over the worker boundary"
+        );
+        assert!(
+            tpot_p95_headroom >= 1.0,
+            "TPOT p95 {tpot_p95:.3}ms breaches the {SLO_TPOT_MS}ms SLO over the worker boundary"
+        );
+        record.push((
+            "slo_traffic_server",
+            Json::obj(vec![
+                ("workers", Json::num(2.0)),
+                ("arrival_ticks", Json::num(ARRIVAL_TICKS as f64)),
+                ("submitted", Json::num(submitted as f64)),
+                ("completions", Json::Num(completions as f64)),
+                ("rejected", Json::Num(rejected as f64)),
+                ("failed", Json::Num(failed as f64)),
+                ("requests_per_s", Json::num(req_s)),
+                ("slo_ttft_ms", Json::num(SLO_TTFT_MS)),
+                ("slo_tpot_ms", Json::num(SLO_TPOT_MS)),
+                ("ttft_p50_ms", Json::num(ttft_p50)),
+                ("ttft_p95_ms", Json::num(ttft_p95)),
+                ("tpot_p50_ms", Json::num(tpot_p50)),
+                ("tpot_p95_ms", Json::num(tpot_p95)),
+                ("streamed_ttft_p95_ms", Json::num(streamed_ttft_p95)),
+                ("ttft_p95_headroom", Json::num(ttft_p95_headroom)),
+                ("tpot_p95_headroom", Json::num(tpot_p95_headroom)),
+                ("tokens_out", Json::Num(m.tokens_out as f64)),
+                ("wall_s", Json::num(wall)),
+            ]),
+        ));
+    }
+
+    if run("gateway") {
+        // the HTTP front end (docs/gateway.md): streamed generations over
+        // loopback through a 2-replica gateway with prefix-affinity
+        // routing.  Shared-prefix traffic (3 groups, unique tails) lets
+        // the ChainSummary scorer keep each group home after one warm-up
+        // miss, so the scenario measures the full per-request HTTP cost
+        // (connect, POST, NDJSON chunked stream, teardown) and checks the
+        // fleet actually banked prefix hits through the front end.
+        struct ForkNull {
+            tokens: usize,
+        }
+        impl SeqBackend for ForkNull {
+            fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+                self.tokens += tokens.len();
+                Some(vec![0.0, 1.0])
+            }
+            fn decode(&mut self, _token: u32) -> Vec<f32> {
+                self.tokens += 1;
+                vec![0.0, 1.0]
+            }
+            fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+                (tokens <= self.tokens)
+                    .then(|| Box::new(ForkNull { tokens }) as Box<dyn SeqBackend>)
+            }
+        }
+        let replica = || {
+            let cfg = ServeConfig {
+                block_size: 16,
+                num_blocks: 1024,
+                max_running: 16,
+                token_budget: 1024,
+                prefill_chunk: 128,
+                queue_cap: 256,
+                workers: 1,
+                enable_prefix_cache: true,
+                prefix_cache_blocks: 512,
+                ..ServeConfig::default()
+            };
+            let factory: BackendFactory = Box::new(|_req: &Request| {
+                Box::new(ForkNull { tokens: 0 }) as Box<dyn SeqBackend>
+            });
+            Server::start(cfg, vec![factory])
+        };
+        let gw = Gateway::new(GatewayConfig::default());
+        gw.join(replica());
+        gw.join(replica());
+        let server = GatewayServer::bind("127.0.0.1:0", gw).expect("bind loopback");
+        let addr = server.addr().to_string();
+        const REQS: u32 = 64;
+        let groups: Vec<Vec<u32>> =
+            (0u32..3).map(|g| (g * 1000..g * 1000 + 64).collect()).collect();
+        let t0 = std::time::Instant::now();
+        for i in 0..REQS {
+            let mut prompt = groups[(i % 3) as usize].clone();
+            prompt.extend([50_000 + i, 50_100 + i]);
+            let body = Json::obj(vec![
+                ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+                ("max_new", Json::num(8.0)),
+            ]);
+            let mut s = NdjsonStream::post(&addr, "/v1/generate", body.to_string().as_bytes())
+                .expect("post /v1/generate");
+            assert_eq!(s.status, 200, "generate must stream 200");
+            let lines = s.collect_lines().expect("read ndjson stream");
+            assert!(lines.last().expect("stream body").contains("\"done\""));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let req_s = f64::from(REQS) / wall.max(1e-9);
+        let gw = server.gateway();
+        for s in gw.statuses() {
+            gw.drain(s.id);
+        }
+        for s in gw.statuses() {
+            gw.wait_drained(s.id, 10_000);
+        }
+        let fleet = gw.fleet_metrics();
+        let c = gw.counters();
+        assert_eq!(c.generate_failed, 0, "loopback generations must not fail");
+        assert!(fleet.prefix_hits > 0, "affinity routing banked no prefix hits");
+        println!("\ngateway (2 replicas over loopback HTTP, {REQS} streamed generations):");
+        println!(
+            "  {req_s:.0} req/s round-trip  prefix hits {} misses {}  saved prefill tokens {}",
+            fleet.prefix_hits, fleet.prefix_misses, fleet.saved_prefill_tokens
+        );
+        record.push((
+            "gateway",
+            Json::obj(vec![
+                ("replicas", Json::num(2.0)),
+                ("requests", Json::num(f64::from(REQS))),
+                ("wall_s", Json::num(wall)),
+                ("requests_per_s", Json::num(req_s)),
+                ("prefix_hits", Json::Num(fleet.prefix_hits as f64)),
+                ("prefix_misses", Json::Num(fleet.prefix_misses as f64)),
+                ("saved_prefill_tokens", Json::Num(fleet.saved_prefill_tokens as f64)),
+                ("generate_ok", Json::Num(c.generate_ok as f64)),
+                ("generate_failed", Json::Num(c.generate_failed as f64)),
+            ]),
+        ));
+        server.stop();
+    }
+
     // machine-readable record for the scenarios that ran
     std::fs::create_dir_all("results").expect("results dir");
     let record = Json::obj(record);
@@ -996,9 +1220,9 @@ fn main() {
     // repo-root perf-trajectory artifact for this PR (schema shared with
     // benchutil::trajectory / the CI gate) — the bench runs with the
     // package root (rust/) as cwd, so the repo root is one level up
-    std::fs::write("../BENCH_8.json", kascade::benchutil::trajectory(8, record).to_string())
+    std::fs::write("../BENCH_9.json", kascade::benchutil::trajectory(9, record).to_string())
         .expect("write trajectory json");
-    println!("  wrote ../BENCH_8.json (perf trajectory, PR 8)");
+    println!("  wrote ../BENCH_9.json (perf trajectory, PR 9)");
 
     let _ = Sequence::new(Request::new(vec![]), Session::detached(), Box::new(NullBackend));
 }

@@ -121,10 +121,10 @@ pub fn extract(files: &[FileCtx]) -> Json {
 /// collisions and trait methods implemented many times over — a
 /// token-level scanner cannot resolve the receiver's type, so only
 /// unambiguous repo-unique names are checked.
-const SKIP_NAMES: [&str; 30] = [
+const SKIP_NAMES: [&str; 32] = [
     "new", "default", "len", "get", "push", "pop", "insert", "remove", "clear", "iter", "next",
     "clone", "from", "into", "drop", "send", "recv", "write", "read", "take", "name", "reset",
-    "parse", "sample", "step", "run", "min", "max", "extend", "path",
+    "parse", "sample", "step", "run", "min", "max", "extend", "path", "join", "bind",
 ];
 
 /// Arity-check call sites of unambiguous pub fns across every file.

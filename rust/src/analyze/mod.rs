@@ -90,6 +90,10 @@ impl Config {
                 "coordinator/scheduler.rs".into(),
                 "coordinator/sequence.rs".into(),
                 "model/forward.rs".into(),
+                // the gateway routes deterministically given registry
+                // state; its few legitimate wall-clock sites (admin
+                // drain deadline) carry annotated allows with reasons
+                "gateway/".into(),
             ],
             panic_scope: vec![
                 "server.rs".into(),
@@ -97,6 +101,10 @@ impl Config {
                 // the KV spill layer: tier I/O must come back as typed
                 // TileStoreError values, never unwrap/expect a request away
                 "tilestore.rs".into(),
+                // the network front end: peer I/O must surface as typed
+                // HttpError values — a bad peer fails its connection,
+                // never the process
+                "gateway/".into(),
             ],
             min_hot_path_markers: 4,
             api_surface_path: Some(rust_dir.join("analyze/api_surface.json")),

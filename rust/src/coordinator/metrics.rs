@@ -116,6 +116,72 @@ impl ServeMetrics {
         }
     }
 
+    /// Fold every counter / accumulator / histogram of `other` into
+    /// `self` — everything EXCEPT the shared `streamed_ttft_us`
+    /// collector, which needs identity-aware handling (see [`merge`]).
+    ///
+    /// [`merge`]: ServeMetrics::merge
+    pub(crate) fn fold_counters(&mut self, other: &ServeMetrics) {
+        self.started = self.started.min(other.started);
+        self.ttft_us.merge(&other.ttft_us);
+        self.tpot_us.merge(&other.tpot_us);
+        self.tpot_hist.merge(&other.tpot_hist);
+        self.prefill_tokens_per_tick.merge(&other.prefill_tokens_per_tick);
+        self.tokens_out += other.tokens_out;
+        self.prompts_in += other.prompts_in;
+        self.requests_done += other.requests_done;
+        self.preemptions += other.preemptions;
+        self.kv_util.merge(&other.kv_util);
+        self.batch_size.merge(&other.batch_size);
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.saved_prefill_tokens += other.saved_prefill_tokens;
+        self.kv_cached.merge(&other.kv_cached);
+        self.decode_batch.merge(&other.decode_batch);
+        self.decode_tokens += other.decode_tokens;
+        self.decode_time_us += other.decode_time_us;
+        self.kv_bytes_resident.merge(&other.kv_bytes_resident);
+        // workers never share a block pool, so the fleet high-water mark
+        // is bounded by (and reported as) the sum of per-worker peaks
+        self.peak_kv_bytes += other.peak_kv_bytes;
+        self.dequant_rows += other.dequant_rows;
+        self.tiles_promoted += other.tiles_promoted;
+        self.tiles_demoted += other.tiles_demoted;
+        self.prefetch_hits += other.prefetch_hits;
+        self.prefetch_misses += other.prefetch_misses;
+        self.tick_us.merge(&other.tick_us);
+        self.threads += other.threads;
+        self.cancelled += other.cancelled;
+        self.deadline_missed += other.deadline_missed;
+    }
+
+    /// Aggregate per-worker / per-replica metrics into one coherent
+    /// view: counters sum, Welford accumulators and histograms fold
+    /// exactly ([`Welford::merge`], [`LatencyHist::merge`]).  Shared
+    /// streamed-TTFT collectors are deduplicated by `Arc` identity — a
+    /// `Server`'s workers all report the one collector their handles
+    /// feed, so summing it once per worker would multiply every sample
+    /// by the worker count.
+    pub fn merge(parts: &[ServeMetrics]) -> ServeMetrics {
+        let mut out = ServeMetrics::new();
+        out.threads = 0;
+        let mut seen: Vec<*const Mutex<LatencyHist>> = Vec::new();
+        for m in parts {
+            out.fold_counters(m);
+            let collector = Arc::as_ptr(&m.streamed_ttft_us);
+            if seen.contains(&collector) {
+                continue;
+            }
+            seen.push(collector);
+            if let (Ok(src), Ok(mut dst)) =
+                (m.streamed_ttft_us.lock(), out.streamed_ttft_us.lock())
+            {
+                dst.merge(&src);
+            }
+        }
+        out
+    }
+
     /// Handle-observed TTFT percentile (microseconds).
     pub fn streamed_ttft_percentile(&self, p: f64) -> f64 {
         self.streamed_ttft_us.lock().map(|h| h.percentile(p)).unwrap_or(0.0)
@@ -232,6 +298,50 @@ impl ServeMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_folds_counters_and_dedups_shared_streamed_collector() {
+        let mut a = ServeMetrics::new();
+        let mut b = ServeMetrics::new();
+        // workers of one Server share the streamed-TTFT collector
+        b.streamed_ttft_us = a.streamed_ttft_us.clone();
+        let mut c = ServeMetrics::new(); // a second replica: own collector
+        a.tokens_out = 10;
+        b.tokens_out = 5;
+        c.tokens_out = 1;
+        a.prefix_hits = 3;
+        c.prefix_hits = 4;
+        a.threads = 2;
+        b.threads = 2;
+        c.threads = 1;
+        a.peak_kv_bytes = 100;
+        b.peak_kv_bytes = 50;
+        for us in [100.0, 200.0] {
+            a.ttft_us.add_us(us);
+            b.tpot_hist.add_us(us);
+            c.ttft_us.add_us(us * 10.0);
+        }
+        a.tick_us.add(10.0);
+        b.tick_us.add(30.0);
+        a.streamed_ttft_us.lock().unwrap().add_us(1000.0);
+        c.streamed_ttft_us.lock().unwrap().add_us(3000.0);
+        let m = ServeMetrics::merge(&[a, b, c]);
+        assert_eq!(m.tokens_out, 16);
+        assert_eq!(m.prefix_hits, 7);
+        assert_eq!(m.threads, 5);
+        assert_eq!(m.peak_kv_bytes, 150);
+        assert_eq!(m.ttft_us.count(), 4);
+        assert_eq!(m.tpot_hist.count(), 2);
+        assert_eq!(m.tick_us.count(), 2);
+        assert!((m.tick_us.mean() - 20.0).abs() < 1e-9);
+        // the shared collector folds ONCE: 2 samples, not 3
+        assert_eq!(m.streamed_ttft_us.lock().unwrap().count(), 2);
+        assert!((m.streamed_ttft_percentile(100.0) - 3000.0).abs() < 1e-9);
+        // empty merge is a well-formed zero view
+        let z = ServeMetrics::merge(&[]);
+        assert_eq!(z.threads, 0);
+        assert_eq!(z.tokens_out, 0);
+    }
 
     #[test]
     fn report_formats() {

@@ -1,0 +1,170 @@
+//! Prefix-affinity routing: per-replica chain-hash Bloom summaries and
+//! the deterministic replica-selection rule (docs/gateway.md § affinity).
+//!
+//! The gateway hashes each incoming prompt into its block chain
+//! ([`crate::coordinator::prefix_cache::chain_hashes`] — the same
+//! hashes the in-replica prefix cache indexes by) and scores every
+//! replica by how many LEADING blocks of that chain its summary already
+//! holds.  Routing to the deepest-prefix replica converts a long shared
+//! prefill into a snapshot resume on that replica; the summary is a
+//! Bloom filter, so a false positive only costs a misrouted request
+//! (one cache miss), never a wrong answer.
+
+use crate::tensor::splitmix64;
+
+/// Summary width in bits (2^16).  At two probes per hash this holds ~4k
+/// distinct block hashes under ~1% false-positive rate — far beyond the
+/// chain depth a single replica's prefix cache retains.
+const SUMMARY_BITS: usize = 1 << 16;
+
+/// Second-probe tweak so the two probe streams are independent.
+const PROBE_SALT: u64 = 0xA5A5_5A5A_C3C3_3C3C;
+
+/// A Bloom-filter summary of the block chain hashes a replica has been
+/// routed (an over-approximation of what its prefix cache holds).
+#[derive(Debug, Clone)]
+pub struct ChainSummary {
+    bits: Vec<u64>,
+    inserted: u64,
+}
+
+impl Default for ChainSummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ChainSummary {
+    pub fn new() -> Self {
+        Self { bits: vec![0; SUMMARY_BITS / 64], inserted: 0 }
+    }
+
+    fn probes(h: u64) -> [(usize, u64); 2] {
+        let a = splitmix64(h) as usize % SUMMARY_BITS;
+        let b = splitmix64(h ^ PROBE_SALT) as usize % SUMMARY_BITS;
+        [(a / 64, 1u64 << (a % 64)), (b / 64, 1u64 << (b % 64))]
+    }
+
+    pub fn insert(&mut self, h: u64) {
+        for (word, mask) in Self::probes(h) {
+            self.bits[word] |= mask;
+        }
+        self.inserted += 1;
+    }
+
+    pub fn contains(&self, h: u64) -> bool {
+        Self::probes(h).iter().all(|&(word, mask)| self.bits[word] & mask != 0)
+    }
+
+    /// Record a routed prompt's full block chain.
+    pub fn observe_chain(&mut self, chain: &[u64]) {
+        for &h in chain {
+            self.insert(h);
+        }
+    }
+
+    /// Leading blocks of `chain` present in the summary — the affinity
+    /// score (cached-prefix depth in blocks, possibly overestimated by
+    /// Bloom false positives).
+    pub fn score(&self, chain: &[u64]) -> usize {
+        chain.iter().take_while(|&&h| self.contains(h)).count()
+    }
+
+    /// Total hashes inserted (monotone; duplicates count).
+    pub fn inserted(&self) -> u64 {
+        self.inserted
+    }
+
+    pub fn clear(&mut self) {
+        self.bits.iter_mut().for_each(|w| *w = 0);
+        self.inserted = 0;
+    }
+}
+
+/// The routing-time view of one replica, assembled by the registry.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    /// registry slot (stable for the registry's lifetime)
+    pub id: usize,
+    /// accepts new admissions (`Alive`, not `Draining`/`Dead`)
+    pub admitting: bool,
+    /// streams currently open through the gateway
+    pub inflight: usize,
+    /// requests ever routed here — the rotation tie-break, so idle
+    /// ties spread across replicas instead of piling onto slot 0
+    pub routed: u64,
+    /// leading prompt blocks this replica's summary already holds
+    pub score: usize,
+}
+
+/// Deterministic replica selection.  With `affinity` on, the admitting
+/// replica with the deepest summarized prefix wins; score ties (and the
+/// whole decision when `affinity` is off) fall back to least in-flight,
+/// then fewest-ever-routed, then lowest id.  `None` when no replica is
+/// admitting.
+pub fn pick(views: &[ReplicaView], affinity: bool) -> Option<usize> {
+    use std::cmp::Reverse;
+    let mut best: Option<&ReplicaView> = None;
+    for v in views.iter().filter(|v| v.admitting) {
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let (vs, bs) = if affinity { (v.score, b.score) } else { (0, 0) };
+                (vs, Reverse(v.inflight), Reverse(v.routed), Reverse(v.id))
+                    > (bs, Reverse(b.inflight), Reverse(b.routed), Reverse(b.id))
+            }
+        };
+        if better {
+            best = Some(v);
+        }
+    }
+    best.map(|v| v.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::chain_hashes;
+
+    fn view(id: usize, admitting: bool, inflight: usize, routed: u64, score: usize) -> ReplicaView {
+        ReplicaView { id, admitting, inflight, routed, score }
+    }
+
+    #[test]
+    fn summary_scores_leading_prefix_depth() {
+        let prompt: Vec<u32> = (0..64).collect();
+        let chain = chain_hashes(&prompt, 16);
+        assert_eq!(chain.len(), 4);
+        let mut s = ChainSummary::new();
+        assert_eq!(s.score(&chain), 0);
+        s.observe_chain(&chain[..2]);
+        assert_eq!(s.score(&chain), 2);
+        s.observe_chain(&chain);
+        assert_eq!(s.score(&chain), 4);
+        // a divergent prompt shares no blocks
+        let other: Vec<u32> = (1000..1064).collect();
+        assert_eq!(s.score(&chain_hashes(&other, 16)), 0);
+        s.clear();
+        assert_eq!(s.score(&chain), 0);
+        assert_eq!(s.inserted(), 0);
+    }
+
+    #[test]
+    fn pick_prefers_score_then_load_then_rotation() {
+        // deepest summarized prefix wins over lighter load
+        let vs = [view(0, true, 0, 0, 0), view(1, true, 3, 5, 2)];
+        assert_eq!(pick(&vs, true), Some(1));
+        // affinity off: the same state routes by load alone
+        assert_eq!(pick(&vs, false), Some(0));
+        // score tie -> least in-flight
+        let vs = [view(0, true, 2, 0, 1), view(1, true, 1, 9, 1)];
+        assert_eq!(pick(&vs, true), Some(1));
+        // full tie -> fewest-ever-routed rotates across idle replicas
+        let vs = [view(0, true, 0, 4, 0), view(1, true, 0, 3, 0)];
+        assert_eq!(pick(&vs, true), Some(1));
+        // non-admitting replicas are invisible, even with the best score
+        let vs = [view(0, false, 0, 0, 9), view(1, true, 7, 7, 0)];
+        assert_eq!(pick(&vs, true), Some(1));
+        assert_eq!(pick(&[view(0, false, 0, 0, 0)], true), None);
+    }
+}

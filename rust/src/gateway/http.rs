@@ -1,0 +1,509 @@
+//! Hand-rolled HTTP/1.1 primitives for the gateway: request parsing,
+//! fixed and chunked responses, and a minimal blocking client able to
+//! consume NDJSON event streams.  `std::net` only — no crates, matching
+//! the repo's vendored-stub ethos (docs/gateway.md § wire protocol).
+//!
+//! Scope is deliberately narrow: one request per connection
+//! (`Connection: close` both ways), `Content-Length` bodies on requests,
+//! `Content-Length` or `Transfer-Encoding: chunked` on responses.  That
+//! is exactly what the gateway's endpoint contract needs and nothing
+//! more.
+
+use std::fmt;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// Hard cap on the request head (request line + headers).  A hostile or
+/// broken peer must not make the gateway buffer without bound.
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+
+/// Hard cap on request / buffered-response bodies (a 2M-token prompt
+/// serialized as JSON fits comfortably).
+pub const MAX_BODY_BYTES: usize = 32 * 1024 * 1024;
+
+/// Typed HTTP failure: socket I/O and protocol violations surface as
+/// values so a bad peer fails its own connection, never the process.
+#[derive(Debug)]
+pub enum HttpError {
+    /// The underlying socket failed (peer reset, timeout, bind error).
+    Io(std::io::Error),
+    /// The peer sent bytes that do not parse as the HTTP/1.1 subset.
+    Malformed(String),
+    /// The head or body exceeds [`MAX_HEAD_BYTES`] / [`MAX_BODY_BYTES`].
+    TooLarge(&'static str),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "http i/o error: {e}"),
+            HttpError::Malformed(why) => write!(f, "malformed http: {why}"),
+            HttpError::TooLarge(what) => write!(f, "http {what} exceeds size cap"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> Self {
+        HttpError::Io(e)
+    }
+}
+
+/// One parsed request.  Header names are lowercased; the target is
+/// split at `?` into `path` + `query`.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// raw query string, `""` when absent
+    pub query: String,
+    /// (lowercased-name, value) pairs in arrival order
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == want).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one `\n`-terminated line (CR stripped) within `budget` bytes.
+/// `Ok(None)` is clean EOF before any byte.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+) -> Result<Option<String>, HttpError> {
+    let mut raw = Vec::new();
+    let n = r.by_ref().take(*budget as u64 + 1).read_until(b'\n', &mut raw)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > *budget {
+        return Err(HttpError::TooLarge("head"));
+    }
+    *budget -= n;
+    while raw.last() == Some(&b'\n') || raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw)
+        .map(Some)
+        .map_err(|_| HttpError::Malformed("non-UTF-8 header line".into()))
+}
+
+/// Parse one request off the connection.  `Ok(None)` means the peer
+/// closed before sending anything (a normal keepalive-less hangup).
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let Some(request_line) = read_line_capped(r, &mut budget)? else {
+        return Ok(None);
+    };
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => {
+            return Err(HttpError::Malformed(format!("bad request line '{request_line}'")));
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version '{version}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let Some(line) = read_line_capped(r, &mut budget)? else {
+            return Err(HttpError::Malformed("eof inside headers".into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Malformed(format!("bad header line '{line}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = HttpRequest {
+        method: method.to_string(),
+        path,
+        query,
+        headers,
+        body: Vec::new(),
+    };
+    if let Some(len) = req.header("content-length") {
+        let len: usize = len
+            .parse()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{len}'")))?;
+        if len > MAX_BODY_BYTES {
+            return Err(HttpError::TooLarge("body"));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        req.body = body;
+    }
+    Ok(Some(req))
+}
+
+/// Write a complete fixed-length response and flush it.
+pub fn write_response(
+    w: &mut dyn Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// A `Transfer-Encoding: chunked` response in progress: the gateway
+/// writes one chunk per NDJSON event line and flushes each, so the
+/// client observes tokens as the replica decodes them.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    /// Write the status line + headers and switch to chunked framing.
+    pub fn begin(
+        mut w: W,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+    ) -> std::io::Result<ChunkedWriter<W>> {
+        write!(
+            w,
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Emit one chunk (empty input is skipped — a zero-length chunk
+    /// would terminate the stream early).
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream with the zero-length chunk.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// A fully-buffered client response (use [`NdjsonStream`] to consume a
+/// streamed body event by event instead).
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == want).map(|(_, v)| v.as_str())
+    }
+
+    /// Body as UTF-8 text (empty string on invalid UTF-8).
+    pub fn text(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+}
+
+fn write_request_head(
+    w: &mut dyn Write,
+    method: &str,
+    path: &str,
+    body_len: usize,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: gateway\r\nContent-Type: application/json\r\n\
+         Content-Length: {body_len}\r\nConnection: close\r\n\r\n"
+    )
+}
+
+fn read_status_line<R: BufRead>(r: &mut R) -> Result<u16, HttpError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let Some(line) = read_line_capped(r, &mut budget)? else {
+        return Err(HttpError::Malformed("eof before status line".into()));
+    };
+    let mut parts = line.split(' ');
+    match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse()
+            .map_err(|_| HttpError::Malformed(format!("bad status code '{code}'"))),
+        _ => Err(HttpError::Malformed(format!("bad status line '{line}'"))),
+    }
+}
+
+fn read_headers<R: BufRead>(r: &mut R) -> Result<Vec<(String, String)>, HttpError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut headers = Vec::new();
+    loop {
+        let Some(line) = read_line_capped(r, &mut budget)? else {
+            return Err(HttpError::Malformed("eof inside headers".into()));
+        };
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Malformed(format!("bad header line '{line}'")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+fn header_value<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+/// Read one chunk-size line and the chunk it frames.  Returns `false`
+/// once the terminal zero chunk (and its trailer) has been consumed.
+fn read_chunk<R: BufRead>(r: &mut R, into: &mut Vec<u8>) -> Result<bool, HttpError> {
+    let mut budget = 1024;
+    let Some(size_line) = read_line_capped(r, &mut budget)? else {
+        return Err(HttpError::Malformed("eof inside chunked body".into()));
+    };
+    let size_str = size_line.split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_str, 16)
+        .map_err(|_| HttpError::Malformed(format!("bad chunk size '{size_line}'")))?;
+    if size == 0 {
+        // trailer section: lines until the blank terminator
+        let mut tbudget = MAX_HEAD_BYTES;
+        while let Some(line) = read_line_capped(r, &mut tbudget)? {
+            if line.is_empty() {
+                break;
+            }
+        }
+        return Ok(false);
+    }
+    if size > MAX_BODY_BYTES {
+        return Err(HttpError::TooLarge("chunk"));
+    }
+    let start = into.len();
+    into.resize(start + size, 0);
+    r.read_exact(&mut into[start..])?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    Ok(true)
+}
+
+/// One-shot request over a fresh connection; the response body is
+/// buffered in full (chunked bodies are de-framed).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> Result<HttpResponse, HttpError> {
+    let mut stream = TcpStream::connect(addr)?;
+    write_request_head(&mut stream, method, path, body.len())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    let mut r = BufReader::new(stream);
+    let status = read_status_line(&mut r)?;
+    let headers = read_headers(&mut r)?;
+    let mut body = Vec::new();
+    if header_value(&headers, "transfer-encoding").is_some_and(|v| v.contains("chunked")) {
+        while read_chunk(&mut r, &mut body)? {}
+    } else if let Some(len) = header_value(&headers, "content-length") {
+        let len: usize = len
+            .parse()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{len}'")))?;
+        if len > MAX_BODY_BYTES {
+            return Err(HttpError::TooLarge("body"));
+        }
+        body.resize(len, 0);
+        r.read_exact(&mut body)?;
+    } else {
+        r.by_ref().take(MAX_BODY_BYTES as u64).read_to_end(&mut body)?;
+    }
+    Ok(HttpResponse { status, headers, body })
+}
+
+/// A streaming NDJSON consumer: POSTs a request and yields one line
+/// (one event) at a time as the gateway emits chunks, so a test or
+/// traffic driver observes the stream with real backpressure.
+pub struct NdjsonStream {
+    r: BufReader<TcpStream>,
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    chunked: bool,
+    /// identity-framing bytes still owed (`usize::MAX` = until EOF)
+    identity_left: usize,
+    eof: bool,
+    pending: Vec<u8>,
+}
+
+impl NdjsonStream {
+    /// POST `body` to `path` and parse the response head; the body is
+    /// left on the wire to be pulled via [`NdjsonStream::next_line`].
+    pub fn post(addr: &str, path: &str, body: &[u8]) -> Result<NdjsonStream, HttpError> {
+        let mut stream = TcpStream::connect(addr)?;
+        write_request_head(&mut stream, "POST", path, body.len())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        let mut r = BufReader::new(stream);
+        let status = read_status_line(&mut r)?;
+        let headers = read_headers(&mut r)?;
+        let chunked =
+            header_value(&headers, "transfer-encoding").is_some_and(|v| v.contains("chunked"));
+        let identity_left = match header_value(&headers, "content-length") {
+            Some(len) => len
+                .parse()
+                .map_err(|_| HttpError::Malformed(format!("bad content-length '{len}'")))?,
+            None => usize::MAX,
+        };
+        Ok(NdjsonStream {
+            r,
+            status,
+            headers,
+            chunked,
+            identity_left,
+            eof: false,
+            pending: Vec::new(),
+        })
+    }
+
+    fn fill(&mut self) -> Result<(), HttpError> {
+        if self.chunked {
+            if !read_chunk(&mut self.r, &mut self.pending)? {
+                self.eof = true;
+            }
+            return Ok(());
+        }
+        let want = self.identity_left.min(4096);
+        if want == 0 {
+            self.eof = true;
+            return Ok(());
+        }
+        let start = self.pending.len();
+        self.pending.resize(start + want, 0);
+        let n = self.r.read(&mut self.pending[start..])?;
+        self.pending.truncate(start + n);
+        if n == 0 {
+            self.eof = true;
+        } else if self.identity_left != usize::MAX {
+            self.identity_left -= n;
+        }
+        Ok(())
+    }
+
+    /// Next non-empty NDJSON line, or `Ok(None)` when the stream ends.
+    pub fn next_line(&mut self) -> Result<Option<String>, HttpError> {
+        loop {
+            if let Some(i) = self.pending.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.pending.drain(..=i).collect();
+                let text = String::from_utf8(line)
+                    .map_err(|_| HttpError::Malformed("non-UTF-8 ndjson line".into()))?;
+                let trimmed = text.trim();
+                if !trimmed.is_empty() {
+                    return Ok(Some(trimmed.to_string()));
+                }
+                continue;
+            }
+            if self.eof {
+                if self.pending.is_empty() {
+                    return Ok(None);
+                }
+                let line: Vec<u8> = std::mem::take(&mut self.pending);
+                let text = String::from_utf8(line)
+                    .map_err(|_| HttpError::Malformed("non-UTF-8 ndjson line".into()))?;
+                let trimmed = text.trim();
+                if trimmed.is_empty() {
+                    return Ok(None);
+                }
+                return Ok(Some(trimmed.to_string()));
+            }
+            self.fill()?;
+        }
+    }
+
+    /// Drain the remaining lines into a Vec (convenience for tests).
+    pub fn collect_lines(&mut self) -> Result<Vec<String>, HttpError> {
+        let mut out = Vec::new();
+        while let Some(line) = self.next_line()? {
+            out.push(line);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body_and_query() {
+        let raw = b"POST /v1/generate?trace=1 HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let mut r = BufReader::new(Cursor::new(&raw[..]));
+        let req = read_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.query, "trace=1");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn empty_connection_is_none_and_garbage_is_malformed() {
+        let mut r = BufReader::new(Cursor::new(&b""[..]));
+        assert!(read_request(&mut r).unwrap().is_none());
+        let mut r = BufReader::new(Cursor::new(&b"what is this\r\n\r\n"[..]));
+        assert!(matches!(read_request(&mut r), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_not_buffered() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let mut r = BufReader::new(Cursor::new(raw.into_bytes()));
+        assert!(matches!(read_request(&mut r), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn chunked_writer_round_trips_through_chunk_reader() {
+        let mut wire = Vec::new();
+        let mut w = ChunkedWriter::begin(&mut wire, 200, "OK", "application/x-ndjson").unwrap();
+        w.chunk(b"{\"event\":\"started\"}\n").unwrap();
+        w.chunk(b"").unwrap(); // skipped, must not terminate
+        w.chunk(b"{\"event\":\"done\"}\n").unwrap();
+        w.finish().unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        let mut r = BufReader::new(Cursor::new(&wire[body_at..]));
+        let mut body = Vec::new();
+        while read_chunk(&mut r, &mut body).unwrap() {}
+        assert_eq!(
+            String::from_utf8(body).unwrap(),
+            "{\"event\":\"started\"}\n{\"event\":\"done\"}\n"
+        );
+    }
+}

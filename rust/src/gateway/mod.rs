@@ -1,0 +1,618 @@
+//! Network gateway: a dependency-free HTTP/1.1 front end over a
+//! replica registry with prefix-affinity routing (docs/gateway.md).
+//!
+//! * [`http`] — hand-rolled request parsing, chunked streaming
+//!   responses, and a minimal blocking client (`std::net` only).
+//! * [`affinity`] — per-replica chain-hash Bloom summaries and the
+//!   deterministic replica-selection rule.
+//! * [`registry`] — replica lifecycle (Alive/Draining/Dead), graceful
+//!   drain, metrics aggregation, autoscale hooks.
+//!
+//! Endpoint contract (full wire details in docs/gateway.md):
+//!
+//! | endpoint               | behavior                                     |
+//! |------------------------|----------------------------------------------|
+//! | `POST /v1/generate`    | stream `Event`s as NDJSON over chunked HTTP  |
+//! | `GET /healthz`         | fleet admission status (503 when none admit) |
+//! | `GET /metrics`         | gateway counters + merged fleet metrics      |
+//! | `GET /admin/registry`  | replica table                                |
+//! | `POST /admin/drain`    | graceful drain, bounded wait, final health   |
+//! | `POST /admin/kill`     | abort a replica (dead-replica failover path) |
+//! | `POST /admin/join`     | spawn + register a replica (autoscale hook)  |
+
+pub mod affinity;
+pub mod http;
+pub mod registry;
+
+pub use affinity::{pick, ChainSummary, ReplicaView};
+pub use http::{HttpError, HttpRequest, HttpResponse, NdjsonStream};
+pub use registry::{
+    InflightGuard, Registry, ReplicaHealth, ReplicaStatus, ScaleHook, ScalePolicy, ScaleSignal,
+};
+
+use crate::coordinator::{Completion, Event, FailReason, Request, ServeMetrics};
+use crate::jsonutil::Json;
+use crate::server::Server;
+use http::{ChunkedWriter, HttpRequest as Req};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Builds a fresh replica on demand — the actuation half of the
+/// autoscale loop (`POST /admin/join` / a pressure hook calls it).
+pub type ReplicaSpawner = Box<dyn FnMut() -> Server + Send>;
+
+#[derive(Debug, Clone, Copy)]
+pub struct GatewayConfig {
+    /// serving block size the affinity layer hashes prompts with —
+    /// must match the replicas' `ServeConfig::block_size`
+    pub block_size: usize,
+    /// prefix-affinity routing (false = least-loaded only)
+    pub affinity: bool,
+    /// per-event wait while streaming; a stream silent this long is
+    /// cancelled and failed closed instead of pinning the connection
+    pub event_timeout_ms: u64,
+    /// bound on the blocking wait inside `POST /admin/drain`
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 16,
+            affinity: true,
+            event_timeout_ms: 30_000,
+            drain_timeout_ms: 10_000,
+        }
+    }
+}
+
+/// Request-outcome counters owned by the gateway itself (replica-side
+/// serving metrics live in [`ServeMetrics`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GatewayCounters {
+    pub http_requests: u64,
+    pub generate_ok: u64,
+    pub generate_failed: u64,
+    /// admission rejections (queue full / no admitting replica / ...)
+    pub rejected: u64,
+    pub drains: u64,
+    pub kills: u64,
+}
+
+/// The gateway core: registry + routing policy + counters, shared by
+/// every connection-handler thread.  [`GatewayServer`] owns the socket.
+pub struct Gateway {
+    cfg: GatewayConfig,
+    registry: Mutex<Registry>,
+    counters: Mutex<GatewayCounters>,
+    spawner: Mutex<Option<ReplicaSpawner>>,
+}
+
+impl Gateway {
+    pub fn new(cfg: GatewayConfig) -> Self {
+        Self {
+            registry: Mutex::new(Registry::new(cfg.block_size)),
+            counters: Mutex::new(GatewayCounters::default()),
+            spawner: Mutex::new(None),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &GatewayConfig {
+        &self.cfg
+    }
+
+    /// Register a replica; returns its id.
+    pub fn join(&self, server: Server) -> Option<usize> {
+        self.registry.lock().ok().map(|mut reg| reg.join(server))
+    }
+
+    /// Install the replica factory `POST /admin/join` invokes.
+    pub fn set_spawner(&self, spawner: ReplicaSpawner) {
+        if let Ok(mut slot) = self.spawner.lock() {
+            *slot = Some(spawner);
+        }
+    }
+
+    pub fn set_scale_policy(&self, policy: ScalePolicy) {
+        if let Ok(mut reg) = self.registry.lock() {
+            reg.set_scale_policy(policy);
+        }
+    }
+
+    pub fn on_pressure(&self, hook: ScaleHook) {
+        if let Ok(mut reg) = self.registry.lock() {
+            reg.on_pressure(hook);
+        }
+    }
+
+    /// Begin a graceful drain (non-blocking half; see
+    /// [`Gateway::wait_drained`]).
+    pub fn drain(&self, id: usize) -> bool {
+        let started = self.registry.lock().ok().is_some_and(|mut reg| reg.drain(id));
+        if started {
+            self.bump(|c| c.drains += 1);
+        }
+        started
+    }
+
+    /// Abort a replica now (dead-replica failover path).
+    pub fn kill(&self, id: usize) -> bool {
+        let killed = self.registry.lock().ok().is_some_and(|mut reg| reg.kill(id));
+        if killed {
+            self.bump(|c| c.kills += 1);
+        }
+        killed
+    }
+
+    /// Retire any fully-drained replicas (idempotent sweep).
+    pub fn poll_drains(&self) -> Vec<usize> {
+        self.registry.lock().ok().map(|mut reg| reg.poll_drains()).unwrap_or_default()
+    }
+
+    /// Block until replica `id` leaves `Draining` (its in-flight
+    /// streams all closed and its workers shut down), bounded by
+    /// `timeout_ms`.  Returns the final health observed (`None` =
+    /// unknown id or poisoned registry).
+    pub fn wait_drained(&self, id: usize, timeout_ms: u64) -> Option<ReplicaHealth> {
+        // analyze: allow(determinism) — the admin drain wait is bounded by a wall-clock deadline by contract
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        loop {
+            let health = match self.registry.lock() {
+                Ok(mut reg) => {
+                    reg.poll_drains();
+                    reg.health(id)
+                }
+                Err(_) => return None,
+            };
+            match health {
+                Some(ReplicaHealth::Draining) => {}
+                other => return other,
+            }
+            // analyze: allow(determinism) — wall-clock check of the bounded admin-drain deadline
+            if Instant::now() >= deadline {
+                return health;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Merged fleet metrics (see [`Registry::fleet_metrics`]).
+    pub fn fleet_metrics(&self) -> ServeMetrics {
+        self.registry.lock().ok().map(|reg| reg.fleet_metrics()).unwrap_or_default()
+    }
+
+    pub fn statuses(&self) -> Vec<ReplicaStatus> {
+        self.registry.lock().ok().map(|reg| reg.statuses()).unwrap_or_default()
+    }
+
+    pub fn counters(&self) -> GatewayCounters {
+        self.counters.lock().ok().map(|c| *c).unwrap_or_default()
+    }
+
+    /// Feed the autoscale policy one observation of current fleet
+    /// pressure (called per generate and per metrics scrape).
+    pub fn observe_pressure(&self) {
+        if let Ok(mut reg) = self.registry.lock() {
+            let p95 = reg.fleet_metrics().streamed_ttft_percentile(95.0);
+            reg.observe_pressure(p95);
+        }
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut GatewayCounters)) {
+        if let Ok(mut c) = self.counters.lock() {
+            f(&mut c);
+        }
+    }
+
+    // -- connection handling ------------------------------------------
+
+    fn handle_connection(&self, mut stream: TcpStream) {
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let Ok(read_half) = stream.try_clone() else { return };
+        let mut reader = BufReader::new(read_half);
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return,
+            Err(e) => {
+                let status = if matches!(e, HttpError::TooLarge(_)) { 413 } else { 400 };
+                respond_json(&mut stream, status, err_json(&e.to_string()));
+                return;
+            }
+        };
+        self.bump(|c| c.http_requests += 1);
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/v1/generate") => self.handle_generate(&req, &mut stream),
+            ("GET", "/healthz") => self.handle_healthz(&mut stream),
+            ("GET", "/metrics") => self.handle_metrics(&mut stream),
+            ("GET", "/admin/registry") => {
+                respond_json(&mut stream, 200, Json::arr(statuses_json(&self.statuses())));
+            }
+            ("POST", "/admin/drain") => self.handle_drain(&req, &mut stream),
+            ("POST", "/admin/kill") => self.handle_kill(&req, &mut stream),
+            ("POST", "/admin/join") => self.handle_join(&mut stream),
+            _ => respond_json(&mut stream, 404, err_json("no such endpoint")),
+        }
+    }
+
+    fn handle_generate(&self, req: &Req, stream: &mut TcpStream) {
+        let parsed = match parse_generate(&req.body) {
+            Ok(parsed) => parsed,
+            Err(why) => {
+                respond_json(stream, 400, err_json(&why));
+                return;
+            }
+        };
+        let submitted = match self.registry.lock() {
+            Ok(mut reg) => reg.submit(parsed, self.cfg.affinity),
+            Err(_) => {
+                respond_json(stream, 500, err_json("registry poisoned"));
+                return;
+            }
+        };
+        let (replica, mut handle, guard) = match submitted {
+            Ok(triple) => triple,
+            Err(e) => {
+                self.bump(|c| c.rejected += 1);
+                respond_json(stream, 503, err_json(&format!("rejected: {e}")));
+                return;
+            }
+        };
+        let Ok(mut w) = ChunkedWriter::begin(&mut *stream, 200, "OK", "application/x-ndjson")
+        else {
+            handle.cancel();
+            return;
+        };
+        let routed = Json::obj(vec![
+            ("event", Json::str("routed")),
+            ("replica", Json::Num(replica as f64)),
+        ]);
+        let mut ok = w.chunk(format!("{}\n", routed.to_string()).as_bytes()).is_ok();
+        let mut outcome_ok = false;
+        while ok && !handle.is_terminal() {
+            match handle.next_timeout(Duration::from_millis(self.cfg.event_timeout_ms)) {
+                Some(ev) => {
+                    outcome_ok = matches!(ev, Event::Done(_));
+                    let line = format!("{}\n", event_json(&ev).to_string());
+                    ok = w.chunk(line.as_bytes()).is_ok();
+                }
+                None => {
+                    // silent past the event timeout (stalled replica or
+                    // dead worker channel): fail the stream closed
+                    handle.cancel();
+                    let line = "{\"event\":\"failed\",\"reason\":\"stream_interrupted\"}\n";
+                    let _ = w.chunk(line.as_bytes());
+                    break;
+                }
+            }
+        }
+        if !ok {
+            // the client went away mid-stream — release its compute
+            handle.cancel();
+        }
+        let _ = w.finish();
+        drop(guard); // stream closed: the drain logic may proceed
+        self.bump(|c| {
+            if outcome_ok {
+                c.generate_ok += 1;
+            } else {
+                c.generate_failed += 1;
+            }
+        });
+        self.observe_pressure();
+    }
+
+    fn handle_healthz(&self, stream: &mut TcpStream) {
+        let statuses = self.statuses();
+        let admitting =
+            statuses.iter().filter(|s| s.health == ReplicaHealth::Alive).count();
+        let body = Json::obj(vec![
+            ("status", Json::str(if admitting > 0 { "ok" } else { "unavailable" })),
+            ("admitting", Json::Num(admitting as f64)),
+            ("replicas", Json::arr(statuses_json(&statuses))),
+        ]);
+        respond_json(stream, if admitting > 0 { 200 } else { 503 }, body);
+    }
+
+    fn handle_metrics(&self, stream: &mut TcpStream) {
+        self.observe_pressure();
+        let c = self.counters();
+        let fleet = self.fleet_metrics();
+        let body = Json::obj(vec![
+            (
+                "gateway",
+                Json::obj(vec![
+                    ("http_requests", Json::Num(c.http_requests as f64)),
+                    ("generate_ok", Json::Num(c.generate_ok as f64)),
+                    ("generate_failed", Json::Num(c.generate_failed as f64)),
+                    ("rejected", Json::Num(c.rejected as f64)),
+                    ("drains", Json::Num(c.drains as f64)),
+                    ("kills", Json::Num(c.kills as f64)),
+                    ("replicas", Json::arr(statuses_json(&self.statuses()))),
+                ]),
+            ),
+            (
+                "fleet",
+                Json::obj(vec![
+                    ("requests_done", Json::Num(fleet.requests_done as f64)),
+                    ("tokens_out", Json::Num(fleet.tokens_out as f64)),
+                    ("prefix_hits", Json::Num(fleet.prefix_hits as f64)),
+                    ("prefix_misses", Json::Num(fleet.prefix_misses as f64)),
+                    (
+                        "saved_prefill_tokens",
+                        Json::Num(fleet.saved_prefill_tokens as f64),
+                    ),
+                    ("preemptions", Json::Num(fleet.preemptions as f64)),
+                    ("cancelled", Json::Num(fleet.cancelled as f64)),
+                    ("deadline_missed", Json::Num(fleet.deadline_missed as f64)),
+                    ("threads", Json::Num(fleet.threads as f64)),
+                    ("ttft_p95_us", Json::num(fleet.ttft_percentile(95.0))),
+                    ("tpot_p95_us", Json::num(fleet.tpot_percentile(95.0))),
+                    (
+                        "streamed_ttft_p95_us",
+                        Json::num(fleet.streamed_ttft_percentile(95.0)),
+                    ),
+                ]),
+            ),
+        ]);
+        respond_json(stream, 200, body);
+    }
+
+    fn handle_drain(&self, req: &Req, stream: &mut TcpStream) {
+        let Some(id) = parse_replica_id(&req.body) else {
+            respond_json(stream, 400, err_json("body must be {\"replica\": <id>}"));
+            return;
+        };
+        let started = self.drain(id);
+        let final_health = if started {
+            self.wait_drained(id, self.cfg.drain_timeout_ms)
+        } else {
+            self.registry.lock().ok().and_then(|reg| reg.health(id))
+        };
+        let Some(health) = final_health else {
+            respond_json(stream, 404, err_json("no such replica"));
+            return;
+        };
+        let body = Json::obj(vec![
+            ("replica", Json::Num(id as f64)),
+            ("started", Json::Bool(started)),
+            ("health", Json::str(health.name())),
+        ]);
+        respond_json(stream, 200, body);
+    }
+
+    fn handle_kill(&self, req: &Req, stream: &mut TcpStream) {
+        let Some(id) = parse_replica_id(&req.body) else {
+            respond_json(stream, 400, err_json("body must be {\"replica\": <id>}"));
+            return;
+        };
+        let killed = self.kill(id);
+        let health = self.registry.lock().ok().and_then(|reg| reg.health(id));
+        let Some(health) = health else {
+            respond_json(stream, 404, err_json("no such replica"));
+            return;
+        };
+        let body = Json::obj(vec![
+            ("replica", Json::Num(id as f64)),
+            ("killed", Json::Bool(killed)),
+            ("health", Json::str(health.name())),
+        ]);
+        respond_json(stream, 200, body);
+    }
+
+    fn handle_join(&self, stream: &mut TcpStream) {
+        let server = match self.spawner.lock() {
+            Ok(mut slot) => slot.as_mut().map(|spawn| spawn()),
+            Err(_) => None,
+        };
+        let Some(server) = server else {
+            respond_json(stream, 409, err_json("no replica spawner configured"));
+            return;
+        };
+        match self.join(server) {
+            Some(id) => {
+                respond_json(stream, 200, Json::obj(vec![("replica", Json::Num(id as f64))]));
+            }
+            None => respond_json(stream, 500, err_json("registry poisoned")),
+        }
+    }
+}
+
+/// Serialize one session [`Event`] to its NDJSON object.
+pub fn event_json(ev: &Event) -> Json {
+    match ev {
+        Event::Started => Json::obj(vec![("event", Json::str("started"))]),
+        Event::Token { pos, tok } => Json::obj(vec![
+            ("event", Json::str("token")),
+            ("pos", Json::Num(*pos as f64)),
+            ("tok", Json::num(*tok)),
+        ]),
+        Event::Done(c) => Json::obj(vec![
+            ("event", Json::str("done")),
+            ("completion", completion_json(c)),
+        ]),
+        Event::Failed(reason) => {
+            let mut pairs = vec![
+                ("event", Json::str("failed")),
+                ("reason", Json::str(fail_reason_name(reason))),
+            ];
+            if let Some(partial) = reason.partial() {
+                pairs.push(("partial", completion_json(partial)));
+            }
+            Json::obj(pairs)
+        }
+    }
+}
+
+/// Serialize a [`Completion`] (`ttft_ms`/`total_ms` are `null` when the
+/// request never produced a token / never finished).
+pub fn completion_json(c: &Completion) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(c.id as f64)),
+        ("tokens", Json::arr(c.tokens.iter().map(|&t| Json::num(t)))),
+        ("ttft_ms", c.ttft_ms.map_or(Json::Null, Json::num)),
+        ("total_ms", c.total_ms.map_or(Json::Null, Json::num)),
+        ("preemptions", Json::Num(c.preemptions as f64)),
+        ("cached_prefix_tokens", Json::Num(c.cached_prefix_tokens as f64)),
+    ])
+}
+
+fn fail_reason_name(reason: &FailReason) -> &'static str {
+    match reason {
+        FailReason::Rejected(_) => "rejected",
+        FailReason::Cancelled(_) => "cancelled",
+        FailReason::DeadlineExceeded(_) => "deadline_exceeded",
+        FailReason::WorkerDead => "worker_dead",
+        FailReason::TimedOut => "timed_out",
+    }
+}
+
+/// Parse a `POST /v1/generate` body into a typed [`Request`].
+pub fn parse_generate(body: &[u8]) -> Result<Request, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let prompt = j
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing 'prompt' token array".to_string())?;
+    let mut tokens = Vec::with_capacity(prompt.len());
+    for t in prompt {
+        let Some(v) = t.as_f64() else {
+            return Err("non-numeric prompt token".to_string());
+        };
+        tokens.push(v as u32);
+    }
+    let mut req = Request::new(tokens);
+    if let Some(n) = j.get("max_new").and_then(Json::as_usize) {
+        req = req.max_new(n);
+    }
+    if let Some(s) = j.get("stop").and_then(Json::as_f64) {
+        req = req.stop(s as u32);
+    }
+    if let Some(d) = j.get("deadline_ms").and_then(Json::as_f64) {
+        req = req.deadline_ms(d);
+    }
+    if let Some(p) = j.get("priority").and_then(Json::as_f64) {
+        req = req.priority(p as i32);
+    }
+    if let Some(t) = j.get("tenant").and_then(Json::as_f64) {
+        req = req.tenant(t as u32);
+    }
+    Ok(req)
+}
+
+fn parse_replica_id(body: &[u8]) -> Option<usize> {
+    let text = std::str::from_utf8(body).ok()?;
+    Json::parse(text).ok()?.get("replica")?.as_usize()
+}
+
+fn statuses_json(statuses: &[ReplicaStatus]) -> Vec<Json> {
+    statuses
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("id", Json::Num(s.id as f64)),
+                ("health", Json::str(s.health.name())),
+                ("inflight", Json::Num(s.inflight as f64)),
+                ("routed", Json::Num(s.routed as f64)),
+            ])
+        })
+        .collect()
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+fn respond_json(stream: &mut TcpStream, status: u16, body: Json) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let text = format!("{}\n", body.to_string());
+    let _ = http::write_response(stream, status, reason, "application/json", text.as_bytes());
+}
+
+/// A running gateway listener: nonblocking accept loop on its own
+/// thread, one handler thread per connection, cooperative stop.
+pub struct GatewayServer {
+    gateway: Arc<Gateway>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GatewayServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` — port 0 picks an ephemeral
+    /// port, read it back from [`GatewayServer::addr`]) and start
+    /// serving `gateway`.
+    pub fn bind(addr: &str, gateway: Gateway) -> Result<GatewayServer, HttpError> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let gateway = Arc::new(gateway);
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_gateway = gateway.clone();
+        let accept_stop = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(listener, accept_gateway, accept_stop);
+        });
+        Ok(GatewayServer { gateway, addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound socket address (`host:port` via `.to_string()`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn gateway(&self) -> Arc<Gateway> {
+        self.gateway.clone()
+    }
+
+    /// Stop accepting and join the accept loop; in-flight connection
+    /// handlers run their streams to completion first.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.accept_thread.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for GatewayServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, gateway: Arc<Gateway>, stop: Arc<AtomicBool>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let gw = gateway.clone();
+                handlers.push(std::thread::spawn(move || gw.handle_connection(stream)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(_) => break,
+        }
+        handlers.retain(|h| !h.is_finished());
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}

@@ -1,0 +1,401 @@
+//! The replica registry: N in-process [`Server`] replicas behind one
+//! admission surface, with health states, prefix-affinity routing,
+//! graceful drain, and autoscale hooks (docs/gateway.md § registry).
+//!
+//! State machine per replica:
+//!
+//! ```text
+//! join -> Alive -(drain)-> Draining -(in-flight hits 0)-> Dead
+//!           \------------(kill: workers aborted)---------/
+//! ```
+//!
+//! `Alive` admits; `Draining` finishes what it has but admits nothing;
+//! `Dead` keeps only its merged [`ServeMetrics`] for the fleet view.
+
+use super::affinity::{pick, ChainSummary, ReplicaView};
+use crate::coordinator::{chain_hashes, Request, RequestHandle, ServeMetrics, SubmitError};
+use crate::server::Server;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Replica lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// serving and admitting
+    Alive,
+    /// finishing in-flight streams; admits nothing
+    Draining,
+    /// shut down (drain completed or killed); never admits again
+    Dead,
+}
+
+impl ReplicaHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaHealth::Alive => "alive",
+            ReplicaHealth::Draining => "draining",
+            ReplicaHealth::Dead => "dead",
+        }
+    }
+}
+
+/// RAII in-flight marker: the gateway holds one per open stream, and
+/// dropping it (stream finished, failed, or client gone) releases the
+/// count the drain logic waits on.
+pub struct InflightGuard(Arc<AtomicUsize>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+struct Replica {
+    server: Option<Server>,
+    health: ReplicaHealth,
+    summary: ChainSummary,
+    inflight: Arc<AtomicUsize>,
+    routed: u64,
+    /// merged per-worker metrics, captured when the replica retires
+    retired: Option<ServeMetrics>,
+}
+
+/// A snapshot row of the registry table (admin/introspection surface).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaStatus {
+    pub id: usize,
+    pub health: ReplicaHealth,
+    pub inflight: usize,
+    pub routed: u64,
+}
+
+/// One sustained-pressure observation, passed to the autoscale hook.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleSignal {
+    /// replicas currently admitting
+    pub admitting: usize,
+    /// gateway-wide open streams
+    pub inflight: usize,
+    /// fleet handle-observed TTFT p95 (microseconds) at observation
+    pub ttft_p95_us: f64,
+    /// consecutive breaching observations that armed the hook
+    pub sustained: u32,
+}
+
+/// When does pressure count, and how long must it persist.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalePolicy {
+    /// open streams per admitting replica above which an observation
+    /// counts as pressure
+    pub max_inflight_per_replica: usize,
+    /// handle-observed TTFT p95 breach threshold, microseconds
+    /// (0 disables the latency trigger)
+    pub ttft_p95_us: f64,
+    /// consecutive pressure observations before the hook fires
+    pub sustain: u32,
+}
+
+impl Default for ScalePolicy {
+    fn default() -> Self {
+        Self { max_inflight_per_replica: 64, ttft_p95_us: 0.0, sustain: 3 }
+    }
+}
+
+/// Autoscale callback — fired by [`Registry::observe_pressure`] once a
+/// breach persists `ScalePolicy::sustain` observations in a row.
+pub type ScaleHook = Box<dyn FnMut(&ScaleSignal) + Send>;
+
+pub struct Registry {
+    replicas: Vec<Replica>,
+    /// serving block size the affinity layer hashes prompts with —
+    /// must match the replicas' `ServeConfig::block_size`
+    block_size: usize,
+    policy: ScalePolicy,
+    hook: Option<ScaleHook>,
+    breaches: u32,
+}
+
+impl Registry {
+    pub fn new(block_size: usize) -> Self {
+        Self {
+            replicas: Vec::new(),
+            block_size: block_size.max(1),
+            policy: ScalePolicy::default(),
+            hook: None,
+            breaches: 0,
+        }
+    }
+
+    /// Add a replica; returns its stable id.
+    pub fn join(&mut self, server: Server) -> usize {
+        self.replicas.push(Replica {
+            server: Some(server),
+            health: ReplicaHealth::Alive,
+            summary: ChainSummary::new(),
+            inflight: Arc::new(AtomicUsize::new(0)),
+            routed: 0,
+            retired: None,
+        });
+        self.replicas.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn health(&self, id: usize) -> Option<ReplicaHealth> {
+        self.replicas.get(id).map(|r| r.health)
+    }
+
+    /// Replicas currently admitting new work.
+    pub fn admitting(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.health == ReplicaHealth::Alive && r.server.is_some())
+            .count()
+    }
+
+    pub fn inflight(&self, id: usize) -> usize {
+        self.replicas.get(id).map_or(0, |r| r.inflight.load(Ordering::SeqCst))
+    }
+
+    pub fn total_inflight(&self) -> usize {
+        self.replicas.iter().map(|r| r.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    /// One status row per replica, in id order.
+    pub fn statuses(&self) -> Vec<ReplicaStatus> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(id, r)| ReplicaStatus {
+                id,
+                health: r.health,
+                inflight: r.inflight.load(Ordering::SeqCst),
+                routed: r.routed,
+            })
+            .collect()
+    }
+
+    pub fn set_scale_policy(&mut self, policy: ScalePolicy) {
+        self.policy = policy;
+        self.breaches = 0;
+    }
+
+    /// Install the autoscale callback (replaces any previous hook).
+    pub fn on_pressure(&mut self, hook: ScaleHook) {
+        self.hook = Some(hook);
+    }
+
+    /// Pick a replica for `prompt` and record the routing decision in
+    /// its summary.  `None` when no replica admits.
+    pub fn route(&mut self, prompt: &[u32], affinity: bool) -> Option<usize> {
+        let chain = chain_hashes(prompt, self.block_size);
+        let views: Vec<ReplicaView> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(id, r)| ReplicaView {
+                id,
+                admitting: r.health == ReplicaHealth::Alive && r.server.is_some(),
+                inflight: r.inflight.load(Ordering::SeqCst),
+                routed: r.routed,
+                score: r.summary.score(&chain),
+            })
+            .collect();
+        let id = pick(&views, affinity)?;
+        if let Some(r) = self.replicas.get_mut(id) {
+            r.summary.observe_chain(&chain);
+            r.routed += 1;
+        }
+        Some(id)
+    }
+
+    /// Route + submit in one step.  The returned [`InflightGuard`] must
+    /// live exactly as long as the stream: drain completion waits on it.
+    pub fn submit(
+        &mut self,
+        req: Request,
+        affinity: bool,
+    ) -> Result<(usize, RequestHandle, InflightGuard), SubmitError> {
+        let id = self.route(&req.prompt, affinity).ok_or(SubmitError::WorkerDead)?;
+        let Some(r) = self.replicas.get_mut(id) else {
+            return Err(SubmitError::WorkerDead);
+        };
+        let Some(server) = r.server.as_mut() else {
+            return Err(SubmitError::WorkerDead);
+        };
+        let handle = server.submit(req, None)?;
+        r.inflight.fetch_add(1, Ordering::SeqCst);
+        Ok((id, handle, InflightGuard(r.inflight.clone())))
+    }
+
+    /// Begin graceful drain: the replica stops admitting immediately;
+    /// in-flight streams keep running.  `true` if the replica was Alive.
+    pub fn drain(&mut self, id: usize) -> bool {
+        match self.replicas.get_mut(id) {
+            Some(r) if r.health == ReplicaHealth::Alive => {
+                r.health = ReplicaHealth::Draining;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drain every Alive replica (full-fleet retirement).
+    pub fn drain_all(&mut self) {
+        for id in 0..self.replicas.len() {
+            self.drain(id);
+        }
+    }
+
+    /// Retire each Draining replica whose streams have all closed:
+    /// graceful [`Server::shutdown`], per-worker metrics merged and
+    /// retained for the fleet view.  Returns the ids retired this call.
+    pub fn poll_drains(&mut self) -> Vec<usize> {
+        let mut done = Vec::new();
+        for (id, r) in self.replicas.iter_mut().enumerate() {
+            if r.health == ReplicaHealth::Draining && r.inflight.load(Ordering::SeqCst) == 0 {
+                if let Some(server) = r.server.take() {
+                    r.retired = Some(ServeMetrics::merge(&server.shutdown()));
+                }
+                r.health = ReplicaHealth::Dead;
+                done.push(id);
+            }
+        }
+        done
+    }
+
+    /// Declare a replica dead NOW (crash handling): every worker is
+    /// aborted — its in-flight sessions fail with `Cancelled` — and the
+    /// registry routes around the slot from this call on.
+    pub fn kill(&mut self, id: usize) -> bool {
+        let Some(r) = self.replicas.get_mut(id) else {
+            return false;
+        };
+        if r.health == ReplicaHealth::Dead {
+            return false;
+        }
+        if let Some(mut server) = r.server.take() {
+            for w in 0..server.workers() {
+                server.stop_worker(w);
+            }
+            r.retired = Some(ServeMetrics::merge(&server.shutdown()));
+        }
+        r.health = ReplicaHealth::Dead;
+        true
+    }
+
+    /// One fleet-coherent metrics view: retired replicas' merged
+    /// metrics folded together, plus the live replicas' handle-observed
+    /// streamed-TTFT collectors (live engine-side counters only become
+    /// visible once their replica retires).
+    pub fn fleet_metrics(&self) -> ServeMetrics {
+        let mut out = ServeMetrics::merge(&[]);
+        for r in &self.replicas {
+            if let Some(m) = &r.retired {
+                out.fold_counters(m);
+                if let (Ok(src), Ok(mut dst)) =
+                    (m.streamed_ttft_us.lock(), out.streamed_ttft_us.lock())
+                {
+                    dst.merge(&src);
+                }
+            }
+        }
+        for r in &self.replicas {
+            if let Some(s) = &r.server {
+                let live = s.streamed_ttft();
+                if let Ok(mut dst) = out.streamed_ttft_us.lock() {
+                    dst.merge(&live);
+                }
+            }
+        }
+        out
+    }
+
+    /// Record one pressure observation; fires the autoscale hook after
+    /// `ScalePolicy::sustain` consecutive breaches, then re-arms.
+    pub fn observe_pressure(&mut self, ttft_p95_us: f64) {
+        let admitting = self.admitting();
+        let inflight = self.total_inflight();
+        let queue_breach = inflight > self.policy.max_inflight_per_replica * admitting.max(1);
+        let ttft_breach = self.policy.ttft_p95_us > 0.0 && ttft_p95_us > self.policy.ttft_p95_us;
+        if queue_breach || ttft_breach {
+            self.breaches += 1;
+        } else {
+            self.breaches = 0;
+            return;
+        }
+        if self.breaches >= self.policy.sustain {
+            let signal = ScaleSignal {
+                admitting,
+                inflight,
+                ttft_p95_us,
+                sustained: self.breaches,
+            };
+            self.breaches = 0;
+            if let Some(hook) = self.hook.as_mut() {
+                hook(&signal);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // These tests cover the pure policy pieces (pressure hook, empty
+    // registry); routing/drain against real replicas needs worker
+    // threads and lives in tests/gateway.rs.
+
+    #[test]
+    fn pressure_hook_fires_only_on_sustained_breach() {
+        let mut reg = Registry::new(16);
+        reg.set_scale_policy(ScalePolicy {
+            max_inflight_per_replica: 0,
+            ttft_p95_us: 1000.0,
+            sustain: 3,
+        });
+        let fired: Arc<Mutex<Vec<ScaleSignal>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = fired.clone();
+        reg.on_pressure(Box::new(move |s| {
+            if let Ok(mut v) = sink.lock() {
+                v.push(*s);
+            }
+        }));
+        // two breaches, a recovery, then three sustained breaches
+        reg.observe_pressure(5000.0);
+        reg.observe_pressure(5000.0);
+        reg.observe_pressure(10.0); // resets the streak
+        reg.observe_pressure(5000.0);
+        reg.observe_pressure(5000.0);
+        assert!(fired.lock().unwrap().is_empty());
+        reg.observe_pressure(5000.0);
+        let seen = fired.lock().unwrap().clone();
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0].sustained, 3);
+        assert!((seen[0].ttft_p95_us - 5000.0).abs() < 1e-9);
+        // the streak re-arms after firing
+        reg.observe_pressure(5000.0);
+        assert_eq!(fired.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn empty_registry_admits_nothing() {
+        let mut reg = Registry::new(16);
+        assert!(reg.is_empty());
+        assert_eq!(reg.admitting(), 0);
+        assert_eq!(reg.route(&[1, 2, 3], true), None);
+        assert!(!reg.drain(0));
+        assert!(!reg.kill(0));
+        assert!(reg.poll_drains().is_empty());
+        let m = reg.fleet_metrics();
+        assert_eq!(m.requests_done, 0);
+    }
+}

@@ -44,6 +44,7 @@ pub mod benchutil;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod gateway;
 pub mod jsonutil;
 pub mod kascade;
 pub mod model;

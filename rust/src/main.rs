@@ -8,6 +8,10 @@
 //!   traffic [--seed S] [--ticks N] [--rate R]       replay a seeded bursty multi-tenant
 //!                                                   traffic stream through the engine and
 //!                                                   report the TTFT/TPOT percentile surface
+//!   gateway [--replicas N] [--workers N] [--port P]  HTTP front end over a replica registry
+//!                                                   with prefix-affinity routing; --smoke
+//!                                                   runs one bounded loopback generation +
+//!                                                   drain cycle and exits (docs/gateway.md)
 //!   export-weights [--out artifacts/synth_weights]  SynthLM -> PJRT weights
 //!   pjrt-smoke                                      artifact load + parity check
 //!
@@ -73,6 +77,8 @@ fn usage() -> ! {
                  [--kv-tiers] [--hot-tile-budget N] [--spill PATH]\n\
            traffic [--seed S] [--ticks N] [--rate R] [--burst-rate R] [--prompt-cap N]\n\
                    [--guard TOKENS] [--fair-share] [--threads N]\n\
+           gateway [--replicas N] [--workers N] [--port P] [--no-affinity]\n\
+                   [--smoke] [--smoke-timeout-s S]\n\
            export-weights [--out PATH] [--seed S]\n\
            pjrt-smoke [--artifacts DIR]"
     );
@@ -94,6 +100,7 @@ fn main() -> anyhow::Result<()> {
         Some("calibrate") => cmd_calibrate(&args),
         Some("serve") => cmd_serve(&args),
         Some("traffic") => cmd_traffic(&args),
+        Some("gateway") => cmd_gateway(&args),
         Some("export-weights") => cmd_export_weights(&args),
         Some("pjrt-smoke") => cmd_pjrt_smoke(&args),
         _ => usage(),
@@ -324,6 +331,172 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         m.prefill_tokens_per_tick.mean(),
         m.prefill_tokens_per_tick.max()
     );
+    Ok(())
+}
+
+/// Serve the HTTP gateway over N in-process replicas (docs/gateway.md),
+/// on a null-compute backend with prefix-fork support so affinity
+/// routing and prefix-cache resumes are observable without a model.
+/// `--smoke` runs the CI loopback exercise: one streamed generation,
+/// one affinity repeat, one graceful drain cycle — all on an ephemeral
+/// port under a hard watchdog timeout — then exits 0.
+fn cmd_gateway(args: &Args) -> anyhow::Result<()> {
+    use kascade::coordinator::SeqBackend;
+    use kascade::gateway::{http, Gateway, GatewayConfig, GatewayServer, ReplicaHealth};
+    use kascade::jsonutil::Json;
+    use kascade::server::Server;
+
+    /// O(1) backend whose state is its token count; `fork_prefix`
+    /// support makes prefix-cache snapshot resumes (and therefore
+    /// affinity `prefix_hits`) real.
+    struct ForkableNull {
+        tokens: usize,
+    }
+    impl SeqBackend for ForkableNull {
+        fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+            self.tokens += tokens.len();
+            Some(vec![0.0, 1.0])
+        }
+
+        fn decode(&mut self, _token: u32) -> Vec<f32> {
+            self.tokens += 1;
+            vec![0.0, 1.0]
+        }
+
+        fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+            (tokens <= self.tokens)
+                .then(|| Box::new(ForkableNull { tokens }) as Box<dyn SeqBackend>)
+        }
+    }
+
+    let replicas: usize = args.flag("replicas").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let workers: usize = args.flag("workers").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let port: u16 = args.flag("port").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let affinity = !args.has("no-affinity");
+    let smoke = args.has("smoke");
+    let smoke_timeout_s: u64 =
+        args.flag("smoke-timeout-s").and_then(|s| s.parse().ok()).unwrap_or(60);
+
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 1024,
+        max_running: 16,
+        token_budget: 1024,
+        prefill_chunk: 128,
+        queue_cap: 256,
+        enable_prefix_cache: true,
+        prefix_cache_blocks: 512,
+        ..ServeConfig::default()
+    };
+    let make_replica = {
+        let cfg = cfg.clone();
+        move || {
+            let factories: Vec<BackendFactory> = (0..workers.max(1))
+                .map(|_| {
+                    Box::new(|_req: &Request| {
+                        Box::new(ForkableNull { tokens: 0 }) as Box<dyn SeqBackend>
+                    }) as BackendFactory
+                })
+                .collect();
+            Server::start(cfg.clone(), factories)
+        }
+    };
+
+    let gateway = Gateway::new(GatewayConfig {
+        block_size: cfg.block_size,
+        affinity,
+        ..GatewayConfig::default()
+    });
+    for _ in 0..replicas.max(1) {
+        gateway.join(make_replica());
+    }
+    gateway.set_spawner(Box::new(make_replica));
+    let server = GatewayServer::bind(&format!("127.0.0.1:{port}"), gateway)?;
+    let addr = server.addr().to_string();
+    println!(
+        "gateway listening on {addr} ({} replicas x {} workers, affinity={affinity})",
+        replicas.max(1),
+        workers.max(1)
+    );
+
+    if !smoke {
+        println!("endpoints: POST /v1/generate, GET /healthz, GET /metrics, POST /admin/drain");
+        println!("serving until killed (ctrl-c)");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
+    // hard watchdog: a wedged stream/drain must fail the smoke, not hang CI
+    std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_secs(smoke_timeout_s));
+        eprintln!("gateway smoke timed out after {smoke_timeout_s}s");
+        std::process::exit(3);
+    });
+
+    let prompt: Vec<Json> = (0..48u32).map(Json::num).collect();
+    let body = Json::obj(vec![
+        ("prompt", Json::arr(prompt)),
+        ("max_new", Json::num(8u32)),
+    ])
+    .to_string();
+    let run_stream = || -> anyhow::Result<(usize, usize)> {
+        let mut stream = http::NdjsonStream::post(&addr, "/v1/generate", body.as_bytes())?;
+        anyhow::ensure!(stream.status == 200, "generate status {}", stream.status);
+        let lines = stream.collect_lines()?;
+        let routed = lines
+            .first()
+            .and_then(|l| Json::parse(l).ok())
+            .and_then(|j| j.get("replica").and_then(Json::as_usize))
+            .ok_or_else(|| anyhow::anyhow!("missing routed line"))?;
+        anyhow::ensure!(
+            lines.last().is_some_and(|l| l.contains("\"done\"")),
+            "stream did not end in done: {lines:?}"
+        );
+        Ok((routed, lines.len()))
+    };
+    let (first_replica, n_lines) = run_stream()?;
+    let (second_replica, _) = run_stream()?;
+    println!(
+        "smoke: streamed {n_lines} events; routed replica {first_replica} then {second_replica}"
+    );
+    if affinity {
+        anyhow::ensure!(
+            first_replica == second_replica,
+            "affinity failed to pin the shared prefix to one replica"
+        );
+    }
+
+    // one drain cycle: the drained replica retires, the fleet still admits
+    let drain_body = Json::obj(vec![("replica", Json::num(first_replica as u32))]).to_string();
+    let resp = http::request(&addr, "POST", "/admin/drain", drain_body.as_bytes())?;
+    anyhow::ensure!(resp.status == 200, "drain status {}", resp.status);
+    anyhow::ensure!(
+        resp.text().contains("\"dead\""),
+        "drain did not retire the replica: {}",
+        resp.text()
+    );
+    let health = http::request(&addr, "GET", "/healthz", b"")?;
+    anyhow::ensure!(
+        health.status == 200,
+        "fleet stopped admitting after a single-replica drain"
+    );
+    // a post-drain generation must land on a surviving replica
+    let (post_drain_replica, _) = run_stream()?;
+    anyhow::ensure!(post_drain_replica != first_replica, "routed to a dead replica");
+    let metrics = http::request(&addr, "GET", "/metrics", b"")?;
+    anyhow::ensure!(metrics.status == 200, "metrics status {}", metrics.status);
+    println!("smoke: metrics {}", metrics.text().trim());
+
+    let gw = server.gateway();
+    server.stop();
+    for s in gw.statuses() {
+        if s.health != ReplicaHealth::Dead {
+            gw.drain(s.id);
+            gw.wait_drained(s.id, 10_000);
+        }
+    }
+    println!("gateway smoke OK");
     Ok(())
 }
 

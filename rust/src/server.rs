@@ -669,6 +669,13 @@ impl Server {
         self.router.alive_workers()
     }
 
+    /// Total worker slots (alive + dead) — the stable id space
+    /// [`Server::stop_worker`] addresses, used by the gateway registry
+    /// to abort every worker of a replica it declares dead.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
     /// Server-wide handle-observed TTFT histogram.
     pub fn streamed_ttft(&self) -> LatencyHist {
         match self.streamed.lock() {

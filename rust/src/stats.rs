@@ -53,6 +53,26 @@ impl Welford {
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
     }
+
+    /// Fold another accumulator in (Chan et al. parallel combine): the
+    /// result is exactly what one accumulator fed both streams would
+    /// hold, so per-worker metrics can merge into a fleet view.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Fixed-bucket log-scale latency histogram (microseconds).
@@ -93,6 +113,16 @@ impl LatencyHist {
         let i = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[i.min(s.len() - 1)]
     }
+
+    /// Fold another histogram in: bucket counts add, retained samples
+    /// extend, so percentiles over the merged histogram are exact over
+    /// the union of both sample streams.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += *o;
+        }
+        self.samples.extend_from_slice(&other.samples);
+    }
 }
 
 /// Scoped wall-clock timer.
@@ -131,6 +161,43 @@ mod tests {
         assert!((w.var() - 32.0 / 7.0).abs() < 1e-9);
         assert_eq!(w.min(), 2.0);
         assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_stream() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut whole = Welford::new();
+        let (mut a, mut b) = (Welford::new(), Welford::new());
+        for (i, &x) in xs.iter().enumerate() {
+            whole.add(x);
+            if i < 3 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.var() - whole.var()).abs() < 1e-12);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // empty operands on either side are identity
+        let mut empty = Welford::new();
+        empty.merge(&whole);
+        assert!((empty.mean() - whole.mean()).abs() < 1e-12);
+        empty.merge(&Welford::new());
+        assert_eq!(empty.count(), whole.count());
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_stream() {
+        let mut whole = LatencyHist::new();
+        let (mut a, mut b) = (LatencyHist::new(), LatencyHist::new());
+        for i in 1..=100 {
+            whole.add_us(i as f64);
+            if i % 2 == 0 { a.add_us(i as f64) } else { b.add_us(i as f64) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.percentile(50.0) - whole.percentile(50.0)).abs() < 1e-9);
+        assert!((a.percentile(95.0) - whole.percentile(95.0)).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! Gateway end-to-end tests over loopback HTTP:
+//!
+//! * **prefix-affinity routing** — the pure selection rule holds its
+//!   contract under randomized registry states, and a real registry
+//!   pins a shared prefix chain to one replica while spreading
+//!   unrelated chains;
+//! * **graceful drain** — draining a replica with a live stream
+//!   finishes that stream (`done`, never `failed`) before the replica
+//!   retires, and the fleet keeps serving;
+//! * **dead-replica failover** — after `POST /admin/kill`, traffic
+//!   reroutes to the survivor with zero failed generations;
+//! * **the acceptance run** — on identical shared-prefix traffic,
+//!   affinity routing achieves strictly more prefix hits and saved
+//!   prefill tokens than least-loaded-only routing, and a mid-run
+//!   drain with concurrent in-flight streams loses nothing.
+
+use kascade::config::ServeConfig;
+use kascade::coordinator::{chain_hashes, Request, SeqBackend};
+use kascade::gateway::{
+    http, pick, ChainSummary, Gateway, GatewayConfig, GatewayServer, NdjsonStream, Registry,
+    ReplicaHealth, ReplicaView,
+};
+use kascade::jsonutil::Json;
+use kascade::prop_assert;
+use kascade::proptest_lite::check;
+use kascade::server::{BackendFactory, Server};
+use kascade::workload::{TrafficGen, TrafficSpec};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// O(1) backend that supports prefix-cache snapshots, with an optional
+/// per-decode pause so drain tests can observe streams in flight.
+struct ForkableNull {
+    tokens: usize,
+    decode_pause: Duration,
+}
+
+impl ForkableNull {
+    fn factory(decode_pause: Duration) -> BackendFactory {
+        Box::new(move |_req: &Request| {
+            Box::new(ForkableNull { tokens: 0, decode_pause }) as Box<dyn SeqBackend>
+        })
+    }
+}
+
+impl SeqBackend for ForkableNull {
+    fn prefill_chunk(&mut self, tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+        self.tokens += tokens.len();
+        Some(vec![0.0, 1.0])
+    }
+
+    fn decode(&mut self, _token: u32) -> Vec<f32> {
+        if !self.decode_pause.is_zero() {
+            std::thread::sleep(self.decode_pause);
+        }
+        self.tokens += 1;
+        vec![0.0, 1.0]
+    }
+
+    fn fork_prefix(&self, tokens: usize) -> Option<Box<dyn SeqBackend>> {
+        (tokens <= self.tokens).then(|| {
+            Box::new(ForkableNull { tokens, decode_pause: self.decode_pause })
+                as Box<dyn SeqBackend>
+        })
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        block_size: 16,
+        num_blocks: 1024,
+        max_running: 16,
+        token_budget: 1024,
+        prefill_chunk: 128,
+        queue_cap: 256,
+        workers: 1,
+        enable_prefix_cache: true,
+        prefix_cache_blocks: 512,
+        ..ServeConfig::default()
+    }
+}
+
+fn replica(decode_pause: Duration) -> Server {
+    Server::start(serve_cfg(), vec![ForkableNull::factory(decode_pause)])
+}
+
+fn gateway_server(replicas: usize, affinity: bool, decode_pause: Duration) -> GatewayServer {
+    let gw = Gateway::new(GatewayConfig { affinity, ..GatewayConfig::default() });
+    for _ in 0..replicas {
+        gw.join(replica(decode_pause));
+    }
+    GatewayServer::bind("127.0.0.1:0", gw).expect("bind loopback")
+}
+
+fn gen_body(prompt: &[u32], max_new: usize) -> Vec<u8> {
+    Json::obj(vec![
+        ("prompt", Json::arr(prompt.iter().map(|&t| Json::num(t)))),
+        ("max_new", Json::Num(max_new as f64)),
+    ])
+    .to_string()
+    .into_bytes()
+}
+
+fn routed_replica(lines: &[String]) -> usize {
+    let first = lines.first().expect("stream emitted no lines");
+    let j = Json::parse(first).expect("routed line is JSON");
+    assert_eq!(j.get("event").and_then(Json::as_str), Some("routed"));
+    j.get("replica").and_then(Json::as_usize).expect("routed line carries replica id")
+}
+
+/// POST one generation, consume the stream fully; (routed replica, lines).
+fn run_stream(addr: &str, prompt: &[u32], max_new: usize) -> (usize, Vec<String>) {
+    let mut s = NdjsonStream::post(addr, "/v1/generate", &gen_body(prompt, max_new))
+        .expect("post /v1/generate");
+    assert_eq!(s.status, 200, "generate must stream 200");
+    let lines = s.collect_lines().expect("read ndjson stream");
+    (routed_replica(&lines), lines)
+}
+
+fn drain_replica(addr: &str, id: usize) -> String {
+    let body = format!("{{\"replica\":{id}}}");
+    let resp = http::request(addr, "POST", "/admin/drain", body.as_bytes()).expect("drain");
+    assert_eq!(resp.status, 200, "drain {id}: {}", resp.text());
+    resp.text().to_string()
+}
+
+/// Gracefully retire every live replica so worker threads join.
+fn retire_all(gw: &Arc<Gateway>) {
+    for s in gw.statuses() {
+        if s.health != ReplicaHealth::Dead {
+            gw.drain(s.id);
+            gw.wait_drained(s.id, 10_000);
+        }
+    }
+}
+
+/// The pure selection rule holds its contract on randomized states:
+/// deterministic, never picks a non-admitting replica, a strict score
+/// leader wins regardless of load, and with affinity off the pick
+/// minimizes in-flight load.
+#[test]
+fn affinity_pick_contract_property() {
+    check("affinity pick contract", 200, |rng| {
+        let n = 2 + rng.below(4);
+        let views: Vec<ReplicaView> = (0..n)
+            .map(|id| ReplicaView {
+                id,
+                admitting: rng.below(4) != 0, // admitting 3/4 of the time
+                inflight: rng.below(8),
+                routed: rng.below(16) as u64,
+                score: rng.below(5),
+            })
+            .collect();
+        let picked = pick(&views, true);
+        prop_assert!(
+            picked == pick(&views, true),
+            "pick must be deterministic on identical views"
+        );
+        let admitting: Vec<&ReplicaView> = views.iter().filter(|v| v.admitting).collect();
+        match picked {
+            None => prop_assert!(
+                admitting.is_empty(),
+                "pick returned None with {} admitting replicas",
+                admitting.len()
+            ),
+            Some(id) => {
+                let v = &views[id];
+                prop_assert!(v.admitting, "picked a non-admitting replica {id}");
+                let best = admitting.iter().map(|v| v.score).max().unwrap_or(0);
+                prop_assert!(
+                    v.score == best,
+                    "picked score {} but an admitting replica scores {best}",
+                    v.score
+                );
+            }
+        }
+        // least-loaded mode ignores scores entirely
+        if let Some(id) = pick(&views, false) {
+            let min_load = admitting.iter().map(|v| v.inflight).min().unwrap_or(0);
+            prop_assert!(
+                views[id].inflight == min_load,
+                "least-loaded picked inflight {} over minimum {min_load}",
+                views[id].inflight
+            );
+        }
+        Ok(())
+    });
+}
+
+/// A summary scores exactly the *leading* cached run of a chain, so a
+/// replica that saw `[A B]` scores 2 on `[A B C]` but 0 on `[C A B]`.
+#[test]
+fn summary_scores_are_prefix_depths() {
+    let chain = chain_hashes(&(0..64).collect::<Vec<u32>>(), 16);
+    assert_eq!(chain.len(), 4);
+    let mut s = ChainSummary::new();
+    s.observe_chain(&chain[..2]);
+    assert_eq!(s.score(&chain), 2);
+    let rotated = [chain[2], chain[0], chain[1]];
+    assert_eq!(s.score(&rotated), 0, "a non-leading match must not count");
+}
+
+/// Against a real 3-replica registry: requests sharing a prefix chain
+/// pin to one replica, unrelated chains spread, and a full drain
+/// retires every replica.
+#[test]
+fn same_prefix_chain_pins_to_one_replica() {
+    let mut reg = Registry::new(16);
+    for _ in 0..3 {
+        reg.join(replica(Duration::ZERO));
+    }
+    let groups: Vec<Vec<u32>> =
+        (0u32..4).map(|g| (g * 1000..g * 1000 + 64).collect()).collect();
+    // first contact decides each group's home replica
+    let homes: Vec<usize> = groups
+        .iter()
+        .map(|g| reg.route(g, true).expect("3 replicas admit"))
+        .collect();
+    // every revisit — same prefix, varying tails — goes home again
+    for (g, home) in groups.iter().zip(&homes) {
+        for tail in 0u32..6 {
+            let mut prompt = g.clone();
+            prompt.extend([90_000 + tail, 90_100 + tail]);
+            assert_eq!(
+                reg.route(&prompt, true),
+                Some(*home),
+                "a shared prefix must keep routing to its home replica"
+            );
+        }
+    }
+    // four groups over three replicas must use more than one replica
+    let distinct: std::collections::BTreeSet<usize> = homes.iter().copied().collect();
+    assert!(distinct.len() > 1, "unrelated chains all landed on {homes:?}");
+    // full retirement: nothing in flight, so one poll drains the fleet
+    reg.drain_all();
+    let retired = reg.poll_drains();
+    assert_eq!(retired.len(), 3);
+    assert_eq!(reg.admitting(), 0);
+    assert_eq!(reg.route(&groups[0], true), None);
+}
+
+/// Draining the replica that owns a live stream lets the stream finish
+/// (`done`, never `failed`), reports the replica dead, and leaves the
+/// fleet serving from the survivor.
+#[test]
+fn graceful_drain_finishes_inflight_streams_over_loopback() {
+    let server = gateway_server(2, true, Duration::from_millis(2));
+    let addr = server.addr().to_string();
+    let prompt: Vec<u32> = (0..48).collect();
+    // a ~240ms stream (120 tokens, 2ms decode pause) stays in flight
+    // while the drain lands on a second connection
+    let mut s = NdjsonStream::post(&addr, "/v1/generate", &gen_body(&prompt, 120))
+        .expect("post /v1/generate");
+    assert_eq!(s.status, 200);
+    let first = s.next_line().expect("read routed line").expect("routed line");
+    let routed = routed_replica(&[first]);
+    let drain_text = drain_replica(&addr, routed);
+    let dj = Json::parse(&drain_text).expect("drain response is JSON");
+    assert!(matches!(dj.get("started"), Some(Json::Bool(true))));
+    assert_eq!(dj.get("health").and_then(Json::as_str), Some("dead"));
+    // the stream the drain waited on ran to completion
+    let lines = s.collect_lines().expect("finish the drained stream");
+    assert!(lines.iter().all(|l| !l.contains("\"failed\"")), "drain failed a stream: {lines:?}");
+    assert!(lines.last().expect("stream body").contains("\"done\""));
+    // the fleet still serves, from the other replica
+    let hz = http::request(&addr, "GET", "/healthz", b"").expect("healthz");
+    assert_eq!(hz.status, 200);
+    let (rerouted, lines) = run_stream(&addr, &prompt, 4);
+    assert_ne!(rerouted, routed, "a drained replica must not admit");
+    assert!(lines.last().expect("stream body").contains("\"done\""));
+    let gw = server.gateway();
+    assert_eq!(gw.counters().generate_failed, 0);
+    retire_all(&gw);
+    server.stop();
+}
+
+/// `POST /admin/kill` aborts a replica outright; the gateway routes
+/// around the dead slot and later generations still complete.
+#[test]
+fn dead_replica_failover_over_loopback() {
+    let server = gateway_server(2, true, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let prompt: Vec<u32> = (100..148).collect();
+    let (first, lines) = run_stream(&addr, &prompt, 8);
+    assert!(lines.last().expect("stream body").contains("\"done\""));
+    let body = format!("{{\"replica\":{first}}}");
+    let resp = http::request(&addr, "POST", "/admin/kill", body.as_bytes()).expect("kill");
+    assert_eq!(resp.status, 200);
+    assert!(resp.text().contains("\"dead\""));
+    for i in 0..3u32 {
+        let base = 200 + i * 50;
+        let p: Vec<u32> = (base..base + 40).collect();
+        let (r, lines) = run_stream(&addr, &p, 6);
+        assert_ne!(r, first, "traffic must route around the killed replica");
+        assert!(lines.last().expect("stream body").contains("\"done\""));
+    }
+    let hz = http::request(&addr, "GET", "/healthz", b"").expect("healthz");
+    assert_eq!(hz.status, 200, "one admitting replica keeps the fleet healthy");
+    let gw = server.gateway();
+    assert_eq!(gw.counters().kills, 1);
+    retire_all(&gw);
+    server.stop();
+}
+
+/// Drive identical seeded shared-prefix traffic through a 2-replica
+/// gateway and return `(prefix_hits, saved_prefill_tokens,
+/// generate_failed)` from the post-drain fleet metrics.
+///
+/// Three prefix groups over two replicas: least-loaded rotation
+/// necessarily re-misses each group on the second replica it touches,
+/// while affinity keeps every group home after its warm-up miss.
+fn run_prefix_workload(affinity: bool) -> (u64, u64, u64) {
+    let server = gateway_server(2, affinity, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let groups: Vec<Vec<u32>> =
+        (0u32..3).map(|g| (g * 1000..g * 1000 + 64).collect()).collect();
+    let mut completions = 0u64;
+    let mut consume = |prompt: &[u32]| {
+        let (_, lines) = run_stream(&addr, prompt, 4);
+        assert!(lines.last().expect("stream body").contains("\"done\""));
+        completions += 1;
+        // let the handler drop its in-flight guard and bump counters, so
+        // the next route sees the settled registry state
+        std::thread::sleep(Duration::from_millis(3));
+    };
+    // warm-up: each group's first contact seeds one replica's cache
+    for g in &groups {
+        consume(g);
+    }
+    // steady traffic: group prefixes with unique tails, round-robin
+    for i in 0u32..24 {
+        let mut prompt = groups[(i % 3) as usize].clone();
+        prompt.extend([9_000 + i, 9_100 + i, 9_200 + i, 9_300 + i]);
+        consume(&prompt);
+    }
+    drop(consume);
+    // retire both replicas: engine-side counters only reach the fleet
+    // view once their replica drains
+    for id in [0usize, 1] {
+        let text = drain_replica(&addr, id);
+        assert!(text.contains("\"dead\""), "drain must retire replica {id}: {text}");
+    }
+    let m = http::request(&addr, "GET", "/metrics", b"").expect("metrics");
+    assert_eq!(m.status, 200);
+    let j = Json::parse(m.text()).expect("metrics JSON");
+    let num = |section: &str, key: &str| {
+        j.get(section)
+            .and_then(|s| s.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("metrics missing {section}.{key}")) as u64
+    };
+    assert_eq!(num("fleet", "requests_done"), completions);
+    assert_eq!(num("gateway", "generate_ok"), completions);
+    let out = (
+        num("fleet", "prefix_hits"),
+        num("fleet", "saved_prefill_tokens"),
+        num("gateway", "generate_failed"),
+    );
+    server.stop();
+    out
+}
+
+/// The acceptance run: same seeded shared-prefix traffic, two-replica
+/// fleet — affinity routing must beat least-loaded-only routing on
+/// both prefix hits and saved prefill tokens, with zero failures.
+#[test]
+fn affinity_beats_least_loaded_on_shared_prefix_traffic() {
+    let (hits_aff, saved_aff, failed_aff) = run_prefix_workload(true);
+    let (hits_ll, saved_ll, failed_ll) = run_prefix_workload(false);
+    assert_eq!(failed_aff, 0);
+    assert_eq!(failed_ll, 0);
+    assert!(
+        hits_aff > hits_ll,
+        "affinity must strictly beat least-loaded on prefix hits: {hits_aff} vs {hits_ll}"
+    );
+    assert!(
+        saved_aff > saved_ll,
+        "affinity must strictly beat least-loaded on saved prefill \
+         tokens: {saved_aff} vs {saved_ll}"
+    );
+    // affinity pays exactly one warm-up miss per group, then always hits
+    assert_eq!(hits_aff, 24, "every steady request must hit its home replica");
+}
+
+/// Six concurrent streams, then a drain of replica 0 while its streams
+/// are demonstrably in flight: every stream must still end in `done`
+/// and the gateway must count zero failed generations.
+#[test]
+fn mid_run_drain_completes_all_inflight_streams() {
+    let server = gateway_server(2, true, Duration::from_millis(2));
+    let addr = server.addr().to_string();
+    let gw = server.gateway();
+    let clients: Vec<_> = (0u32..6)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let base = 10_000 + i * 100;
+                let prompt: Vec<u32> = (base..base + 40).collect();
+                let mut s = NdjsonStream::post(&addr, "/v1/generate", &gen_body(&prompt, 120))
+                    .expect("post /v1/generate");
+                assert_eq!(s.status, 200);
+                let lines = s.collect_lines().expect("consume stream");
+                (routed_replica(&lines), lines)
+            })
+        })
+        .collect();
+    // wait until streams are observably in flight, then drain under them
+    let mut waited = 0;
+    while gw.statuses().iter().all(|s| s.inflight == 0) {
+        std::thread::sleep(Duration::from_millis(2));
+        waited += 1;
+        assert!(waited < 2000, "no stream ever went in flight");
+    }
+    let text = drain_replica(&addr, 0);
+    assert!(text.contains("\"dead\""), "drain must complete: {text}");
+    let mut on_drained = 0;
+    for c in clients {
+        let (routed, lines) = c.join().expect("client thread");
+        if routed == 0 {
+            on_drained += 1;
+        }
+        let last = lines.last().expect("stream body");
+        assert!(last.contains("\"done\""), "stream must finish cleanly, got {last}");
+        assert!(lines.iter().all(|l| !l.contains("\"failed\"")), "lost a stream: {lines:?}");
+    }
+    assert!(on_drained >= 1, "the drain must have raced at least one in-flight stream");
+    assert_eq!(gw.counters().generate_failed, 0);
+    retire_all(&gw);
+    server.stop();
+}
+
+/// The SLO traffic harness drives the gateway over loopback HTTP: a
+/// seeded [`TrafficGen`] stream (all three tenant classes) runs end to
+/// end, every stream completes, and the post-drain fleet view accounts
+/// for every completion exactly once.
+#[test]
+fn traffic_gen_drives_the_gateway_over_loopback() {
+    let server = gateway_server(2, true, Duration::ZERO);
+    let addr = server.addr().to_string();
+    let mut gen = TrafficGen::new(TrafficSpec {
+        seed: 7,
+        base_rate: 0.5,
+        prompt_cap: 256,
+        ..TrafficSpec::default()
+    });
+    let mut sent = 0u64;
+    for _ in 0..40 {
+        for r in gen.next_tick() {
+            let body = Json::obj(vec![
+                ("prompt", Json::arr(r.prompt.iter().map(|&t| Json::num(t)))),
+                ("max_new", Json::Num(r.max_new.clamp(1, 8) as f64)),
+                ("tenant", Json::Num(r.tenant as f64)),
+            ]);
+            let mut s = NdjsonStream::post(&addr, "/v1/generate", body.to_string().as_bytes())
+                .expect("post traffic request");
+            assert_eq!(s.status, 200);
+            let lines = s.collect_lines().expect("consume stream");
+            assert!(lines.last().expect("stream body").contains("\"done\""));
+            sent += 1;
+        }
+    }
+    assert!(sent >= 10, "the seeded stream produced only {sent} requests");
+    // settle the last handler, then retire the fleet for the full view
+    std::thread::sleep(Duration::from_millis(20));
+    for id in [0usize, 1] {
+        let text = drain_replica(&addr, id);
+        assert!(text.contains("\"dead\""), "drain must retire replica {id}: {text}");
+    }
+    let m = http::request(&addr, "GET", "/metrics", b"").expect("metrics");
+    assert_eq!(m.status, 200);
+    let j = Json::parse(m.text()).expect("metrics JSON");
+    let fleet = |key: &str| {
+        j.get("fleet")
+            .and_then(|f| f.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("metrics missing fleet.{key}")) as u64
+    };
+    assert_eq!(fleet("requests_done"), sent);
+    assert!(fleet("tokens_out") >= sent, "every request emits at least one token");
+    let gw = server.gateway();
+    assert_eq!(gw.counters().generate_ok, sent);
+    assert_eq!(gw.counters().generate_failed, 0);
+    server.stop();
+}

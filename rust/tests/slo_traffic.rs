@@ -8,12 +8,17 @@
 //!   minority tenant's requests do not starve behind the flood;
 //! * **traffic-driven serving** — a seeded [`TrafficGen`] stream runs
 //!   end to end through the engine and the TTFT/TPOT percentile
-//!   surface is populated.
+//!   surface is populated;
+//! * **worker-boundary regressions** — the same decode-guard and
+//!   fair-share properties hold when requests cross a multi-worker
+//!   [`Server`]'s channel boundary instead of ticking an engine
+//!   directly (the gateway serves replicas through this path).
 
 use kascade::config::ServeConfig;
-use kascade::coordinator::{Event, Request, SeqBackend, SeqPhase};
-use kascade::server::Engine;
+use kascade::coordinator::{Event, Request, SeqBackend, SeqPhase, ServeMetrics};
+use kascade::server::{BackendFactory, Engine, Server};
 use kascade::workload::{TrafficGen, TrafficSpec};
+use std::time::Duration;
 
 /// O(1)-per-call backend: the test measures scheduling, not compute.
 struct NullBackend;
@@ -30,6 +35,28 @@ impl SeqBackend for NullBackend {
 
 fn null_engine(cfg: ServeConfig) -> Engine {
     Engine::new(cfg, Box::new(|_req: &Request| Box::new(NullBackend) as Box<dyn SeqBackend>))
+}
+
+/// Null backend with a fixed per-decode pause: bounds the worker's tick
+/// rate so wall-clock test orchestration (submit ordering across the
+/// channel boundary) cannot be outrun by a free-running engine thread.
+struct PausingBackend {
+    pause_us: u64,
+}
+
+impl SeqBackend for PausingBackend {
+    fn prefill_chunk(&mut self, _tokens: &[u32], _last: bool) -> Option<Vec<f32>> {
+        Some(vec![0.0, 1.0])
+    }
+
+    fn decode(&mut self, _token: u32) -> Vec<f32> {
+        std::thread::sleep(Duration::from_micros(self.pause_us));
+        vec![0.0, 1.0]
+    }
+}
+
+fn pausing_factory(pause_us: u64) -> BackendFactory {
+    Box::new(move |_req: &Request| Box::new(PausingBackend { pause_us }) as Box<dyn SeqBackend>)
 }
 
 /// A ≥128k-token prefill interleaves with live decoders: per tick the
@@ -219,4 +246,138 @@ fn traffic_stream_drives_the_engine_end_to_end() {
     assert!(m.tpot_percentile(99.0) >= m.tpot_percentile(95.0));
     assert!(m.prefill_tokens_per_tick.max() > 0.0);
     e.sched.blocks.check_invariants().unwrap();
+}
+
+/// The decode-tick guard survives the worker boundary: a multi-worker
+/// [`Server`] runs a live decoder and a 16k-token prefill pinned to the
+/// same worker via session affinity, and the merged per-worker metrics
+/// show no tick that scheduled more prefill tokens than the guard.
+#[test]
+fn decode_guard_survives_the_worker_boundary() {
+    const GUARD: usize = 64;
+    const BIG: usize = 16_384;
+    let cfg = ServeConfig {
+        block_size: 16,
+        num_blocks: 4096,
+        max_running: 8,
+        token_budget: 512,
+        prefill_chunk: 256,
+        queue_cap: 64,
+        workers: 2,
+        decode_guard_prefill_tokens: Some(GUARD),
+        ..ServeConfig::default()
+    };
+    let mut srv = Server::start(cfg, vec![pausing_factory(50), pausing_factory(50)]);
+    // same session => same worker: decoder and ingest meet in one
+    // engine, after crossing the submit/event channel boundary
+    const SESSION: u64 = 42;
+    let mut dec = srv
+        .submit(Request::new(vec![7; 32]).max_new(1_000_000), Some(SESSION))
+        .expect("submit decoder");
+    // the decoder must demonstrably decode before the ingest arrives
+    let mut saw_token = false;
+    for _ in 0..100 {
+        match dec.next_timeout(Duration::from_millis(100)) {
+            Some(Event::Token { .. }) => {
+                saw_token = true;
+                break;
+            }
+            Some(_) => {}
+            None => {}
+        }
+    }
+    assert!(saw_token, "decoder never produced a token");
+    let mut big = srv
+        .submit(Request::new(vec![9; BIG]).max_new(1), Some(SESSION))
+        .expect("submit 16k ingest");
+    let done = big.wait(Duration::from_secs(120)).expect("guarded ingest completes");
+    assert_eq!(done.tokens.len(), 1);
+    // tear the decoder down and count what it streamed meanwhile
+    dec.cancel();
+    let mut decoded = 0usize;
+    loop {
+        match dec.next_timeout(Duration::from_secs(10)) {
+            Some(Event::Token { .. }) => decoded += 1,
+            Some(Event::Done(_)) | Some(Event::Failed(_)) => break,
+            Some(_) => {}
+            None => panic!("decoder stream went silent after cancel"),
+        }
+    }
+    // a guarded 16k ingest spans >= BIG/GUARD ticks, one decode each
+    assert!(
+        decoded + 10 >= BIG / GUARD,
+        "decoder starved under the ingest: {decoded} tokens for {} guarded ticks",
+        BIG / GUARD
+    );
+    let parts = srv.shutdown();
+    assert_eq!(parts.len(), 2);
+    let merged = ServeMetrics::merge(&parts);
+    assert_eq!(merged.threads, 2, "both workers report into the merged view");
+    let worst = merged.prefill_tokens_per_tick.max();
+    assert!(worst > 0.0);
+    assert!(
+        worst <= GUARD as f64,
+        "a tick scheduled {worst} prefill tokens past the {GUARD}-token guard"
+    );
+}
+
+/// Fair-share admission survives the worker boundary: under the same
+/// 10:1 tenant skew as the engine-level test, tenant B's completion
+/// TTFTs interleave with the flood when fair-share is on, and trail the
+/// entire flood under FCFS — observed via `Server` handles only.
+#[test]
+fn fair_share_survives_the_worker_boundary() {
+    let run = |fair_share: bool| -> (Vec<f64>, Vec<f64>) {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 512,
+            max_running: 2,
+            token_budget: 128,
+            prefill_chunk: 64,
+            queue_cap: 64,
+            workers: 1,
+            fair_share,
+            ..ServeConfig::default()
+        };
+        let mut srv = Server::start(cfg, vec![pausing_factory(100)]);
+        let mut handles = Vec::new();
+        for _ in 0..40 {
+            handles.push(
+                srv.submit(Request::new(vec![1; 32]).max_new(4).tenant(1), None)
+                    .expect("submit flood request"),
+            );
+        }
+        for _ in 0..4 {
+            handles.push(
+                srv.submit(Request::new(vec![2; 32]).max_new(4).tenant(2), None)
+                    .expect("submit minority request"),
+            );
+        }
+        let mut ttft = Vec::new();
+        for h in &mut handles {
+            let c = h.wait(Duration::from_secs(60)).expect("request completes");
+            ttft.push(c.ttft_ms.expect("completion carries ttft"));
+        }
+        srv.shutdown();
+        (ttft[..40].to_vec(), ttft[40..].to_vec())
+    };
+    // FCFS: tenant B queues behind the whole flood
+    let (a, b) = run(false);
+    let mut a_sorted = a;
+    a_sorted.sort_by(f64::total_cmp);
+    let a_median = a_sorted[a_sorted.len() / 2];
+    let b_min = b.iter().copied().fold(f64::INFINITY, f64::min);
+    assert!(
+        b_min > a_median,
+        "FCFS should leave tenant B behind the flood: B min {b_min}ms vs A median {a_median}ms"
+    );
+    // fair-share: B interleaves with the flood instead of trailing it
+    let (a, b) = run(true);
+    let a_max = a.iter().copied().fold(0.0_f64, f64::max);
+    let b_max = b.iter().copied().fold(0.0_f64, f64::max);
+    assert!(
+        b_max < a_max,
+        "fair-share must interleave tenant B with the flood: \
+         B max {b_max}ms vs A max {a_max}ms"
+    );
 }
