@@ -3,7 +3,10 @@
 //! the paper-config weighting (32 layers / 5 anchors) alongside this
 //! model's 16/5 — and, since the tile-major rework, the kernel-level
 //! speedup of the tile-major/arena kernels over the retained seed
-//! row-at-a-time kernels (`attention::reference`), per storage mode.
+//! row-at-a-time kernels (`attention::reference`), per storage mode
+//! (f32 / f16 / int8 / int4), plus the simd-vs-scalar matrix: the same
+//! tile-major kernels at the detected `simd::SimdLevel` against a
+//! forced-scalar run of the identical code path (docs/perf.md § SIMD).
 //!
 //! Run: `cargo bench --bench table3_kernels` (KASCADE_BENCH_FULL=1 for the
 //! full context sweep)
@@ -89,7 +92,7 @@ fn main() {
     println!("| ctx | dtype | op | seed us | tile us | speedup |");
     println!("|---|---|---|---|---|---|");
     for &len in tm_ctxs {
-        for dtype in [KvDtype::F32, KvDtype::Int8] {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8, KvDtype::Int4] {
             let cache = fill_cache(n_kv, d, len, dtype, &mut rng);
             let mut q = vec![0.0f32; n_kv * g * d];
             rng.fill_normal(&mut q, 1.0);
@@ -136,6 +139,64 @@ fn main() {
                     s.mean_us / t.mean_us.max(1e-9)
                 );
             }
+        }
+    }
+
+    // ---- simd vs scalar dispatch ----------------------------------------
+    // Same tile-major kernels, same cache contents: once at the level
+    // `simd::detect` resolved for this host and once forced to the
+    // scalar reference via `KvCache::set_simd_level`.  The f32 rows and
+    // both integer-code rows are bitwise-identical across levels (the
+    // lane structure pins the accumulation order — unit-tested in
+    // `simd::tests`), so the table isolates pure dispatch upside.
+    let detected = kascade::simd::detect();
+    let sv_len = if full { 32768 } else { 8192 };
+    println!("\n# SIMD vs scalar tile kernels (level {}, ctx {sv_len})\n", detected.label());
+    println!("| dtype | op | scalar us | {} us | speedup |", detected.label());
+    println!("|---|---|---|---|---|");
+    for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8, KvDtype::Int4] {
+        let mut cache = fill_cache(n_kv, d, sv_len, dtype, &mut rng);
+        let mut q = vec![0.0f32; n_kv * g * d];
+        rng.fill_normal(&mut q, 1.0);
+        let mut out = vec![0.0f32; n_kv * g * d];
+        let samples = (4_000_000 / sv_len).clamp(3, 30);
+        let mut cost = CostTracker::default();
+        let k = TopKRule::new(0.10, 128).k(sv_len);
+        let sel = IndexSet::from_nested(
+            &(0..n_kv)
+                .map(|h| (0..k as u32).map(|i| (i * 7 + h as u32) % sv_len as u32).collect())
+                .collect::<Vec<Vec<u32>>>(),
+        );
+        let mut cells: Vec<(&str, f64, f64)> = Vec::new();
+        for level in [kascade::simd::SimdLevel::Scalar, detected] {
+            cache.set_simd_level(level);
+            let tag = level.label();
+            let dense = bench(&format!("{tag} dense {}/{sv_len}", dtype.label()), 1, samples, || {
+                attention::decode_dense(&q, &cache, g, &mut out, &mut scratch.planes, &mut cost);
+            });
+            let pool = bench(&format!("{tag} pooled {}/{sv_len}", dtype.label()), 1, samples, || {
+                attention::decode_pooled_scores(&q, &cache, g, &mut scratch.planes, &mut cost);
+            });
+            let sparse = bench(&format!("{tag} sparse {}/{sv_len}", dtype.label()), 1, samples, || {
+                let planes = &mut scratch.planes;
+                attention::decode_sparse(&q, &cache, g, &sel, &mut out, planes, &mut cost);
+            });
+            if cells.is_empty() {
+                cells.push(("dense", dense.mean_us, 0.0));
+                cells.push(("pooled", pool.mean_us, 0.0));
+                cells.push(("sparse", sparse.mean_us, 0.0));
+            } else {
+                cells[0].2 = dense.mean_us;
+                cells[1].2 = pool.mean_us;
+                cells[2].2 = sparse.mean_us;
+            }
+        }
+        for (op, scalar_us, simd_us) in &cells {
+            println!(
+                "| {} | {op} | {scalar_us:.0} | {simd_us:.0} | {:.2}x |",
+                dtype.label(),
+                scalar_us / simd_us.max(1e-9)
+            );
         }
     }
 }

@@ -9,10 +9,8 @@
 //! score FLOPs so experiments can report work ratios alongside wall-clock.
 
 use crate::config::KvDtype;
-use crate::tensor::{
-    axpy_q8, dequantize_q4, dequantize_q8, dot, dot_i8, qk_dot_q8, quantize_q4, quantize_q8,
-    softmax, sum4, topk_unordered_into,
-};
+use crate::simd::{self, SimdLevel};
+use crate::tensor::{dequantize_q4, dequantize_q8, f16_to_f32, f32_to_f16, quantize_q4, quantize_q8};
 use crate::tilestore::{SharedTileStore, TierParams, TierStats, TileKey, TileStoreError};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -20,21 +18,32 @@ use std::collections::{BinaryHeap, VecDeque};
 /// Per-layer KV cache: contiguous `[n_kv, cap, d]` storage plus per-page
 /// min/max key summaries (used by the Quest baseline).
 ///
-/// Two storage modes ([`KvDtype`]):
+/// Four storage modes ([`KvDtype`]):
 ///
 /// * **F32** — plain f32 buffers, the exact baseline.
+/// * **F16** — completed tiles stored as IEEE binary16 bit patterns
+///   (software-converted, f32 accumulation in every kernel); no per-tile
+///   params — the conversion is a pure per-element rounding.
 /// * **Int8** — completed quantization tiles (one tile = `page_size`
 ///   positions, aligned with the paged-KV block size) are stored as int8
 ///   with a per-tile, per-head affine `(scale, zero)` pair for K and for
-///   V; the current partially-filled tail tile lives in a small f32
-///   staging buffer (`[n_kv, page_size, d]`) until it completes, then is
-///   quantized once with its final min/max and never touched again —
-///   which is what lets copy-on-write forks share quantized blocks
-///   byte-for-byte without re-quantizing.
+///   V.
+/// * **Int4** — completed tiles as packed 4-bit codes (two per byte) with
+///   the same per-tile, per-head affine params as Int8; requires an even
+///   head dim.
+///
+/// Every compressed mode shares the staging-tile architecture: the
+/// current partially-filled tail tile lives in a small f32 staging
+/// buffer (`[n_kv, page_size, d]`) until it completes, then is converted
+/// once with its final content and never touched again — which is what
+/// lets copy-on-write forks share completed blocks byte-for-byte without
+/// re-converting.
 ///
 /// Kernels never read raw storage directly: [`KvCache::dot_key`] scores
-/// fused over int8 rows (no dequantized materialization) and
-/// [`KvCache::add_val`] dequantizes value rows on attend.
+/// fused over stored rows (no dequantized materialization) and
+/// [`KvCache::add_val`] converts value rows on attend.  All kernel inner
+/// loops dispatch through [`crate::simd`] at the level stamped once at
+/// construction (`simd` field) — never re-probed per tile.
 #[derive(Clone)]
 pub struct KvCache {
     pub n_kv: usize,
@@ -42,18 +51,30 @@ pub struct KvCache {
     pub cap: usize,
     pub len: usize,
     dtype: KvDtype,
-    /// F32 mode: full `[n_kv, cap, d]` K/V storage.  Int8 mode: the f32
-    /// staging tail, `[n_kv, page_size, d]` (current partial tile only).
+    /// F32 mode: full `[n_kv, cap, d]` K/V storage.  Compressed modes:
+    /// the f32 staging tail, `[n_kv, page_size, d]` (current partial
+    /// tile only).
     k: Vec<f32>,
     v: Vec<f32>,
     /// Int8 mode: quantized completed tiles, `[n_kv, cap, d]`.
     kq: Vec<i8>,
     vq: Vec<i8>,
-    /// Int8 mode: per `(head, tile)` affine params, `[n_kv, n_tiles]`.
+    /// F16 mode: completed tiles as binary16 bits, `[n_kv, cap, d]`.
+    kh: Vec<u16>,
+    vh: Vec<u16>,
+    /// Int4 mode: completed tiles as packed nibbles (low nibble = even
+    /// element), `[n_kv, cap, d/2]`.
+    k4: Vec<u8>,
+    v4: Vec<u8>,
+    /// Int8/Int4 modes: per `(head, tile)` affine params, `[n_kv, n_tiles]`.
     kscale: Vec<f32>,
     kzero: Vec<f32>,
     vscale: Vec<f32>,
     vzero: Vec<f32>,
+    /// Vector level every kernel on this cache dispatches through —
+    /// stamped from [`crate::simd::detect`] at construction; overridable
+    /// only via [`KvCache::set_simd_level`] (benches / property tests).
+    simd: SimdLevel,
     /// page summaries: for each kv head and page, elementwise min and max
     /// of the keys in the page: `[n_kv, n_pages, 2, d]`.
     page_size: usize,
@@ -224,9 +245,16 @@ impl KvCache {
 
     pub fn with_opts(n_kv: usize, d: usize, cap: usize, page_size: usize, dtype: KvDtype) -> Self {
         let n_pages = cap.div_ceil(page_size);
-        let (f32_len, q_len, s_len) = match dtype {
-            KvDtype::F32 => (n_kv * cap * d, 0, 0),
-            KvDtype::Int8 => (n_kv * page_size * d, n_kv * cap * d, n_kv * n_pages),
+        let staging = n_kv * page_size * d;
+        // per-mode plane sizes: (f32, int8, f16, packed-int4, affine params)
+        let (f32_len, q_len, h_len, p_len, s_len) = match dtype {
+            KvDtype::F32 => (n_kv * cap * d, 0, 0, 0, 0),
+            KvDtype::F16 => (staging, 0, n_kv * cap * d, 0, 0),
+            KvDtype::Int8 => (staging, n_kv * cap * d, 0, 0, n_kv * n_pages),
+            KvDtype::Int4 => {
+                assert!(d % 2 == 0, "Int4 KV needs an even head dim (nibble packing), got {d}");
+                (staging, 0, 0, n_kv * cap * d / 2, n_kv * n_pages)
+            }
         };
         Self {
             n_kv,
@@ -238,10 +266,15 @@ impl KvCache {
             v: vec![0.0; f32_len],
             kq: vec![0; q_len],
             vq: vec![0; q_len],
+            kh: vec![0; h_len],
+            vh: vec![0; h_len],
+            k4: vec![0; p_len],
+            v4: vec![0; p_len],
             kscale: vec![0.0; s_len],
             kzero: vec![0.0; s_len],
             vscale: vec![0.0; s_len],
             vzero: vec![0.0; s_len],
+            simd: crate::simd::detect(),
             page_size,
             pages: vec![0.0; n_kv * n_pages * 2 * d],
             tier: None,
@@ -310,16 +343,47 @@ impl KvCache {
         self.dtype
     }
 
+    /// True for the integer-code modes whose attend path dequantizes
+    /// ([`CostTracker::dequant_rows`] accounting).  F16 is a precision
+    /// change, not a quantization — its reads don't count as dequants.
     #[inline]
     pub fn is_quantized(&self) -> bool {
-        self.dtype == KvDtype::Int8
+        matches!(self.dtype, KvDtype::Int8 | KvDtype::Int4)
     }
 
-    /// First position of the f32 staging tail (Int8 mode): positions at
-    /// or beyond this sit in the not-yet-quantized partial tile.
+    /// The vector level this cache's kernels dispatch through.
+    #[inline]
+    pub fn simd_level(&self) -> SimdLevel {
+        self.simd
+    }
+
+    /// Override the kernel dispatch level.  Benches (simd-vs-scalar
+    /// tables) and the equivalence property suites only — the engine
+    /// always runs what [`crate::simd::detect`] stamped at construction.
+    pub fn set_simd_level(&mut self, level: SimdLevel) {
+        self.simd = level;
+    }
+
+    /// First position of the f32 staging tail (compressed modes):
+    /// positions at or beyond this sit in the not-yet-converted partial
+    /// tile.
     #[inline]
     fn staged_from(&self) -> usize {
         (self.len / self.page_size) * self.page_size
+    }
+
+    /// Base offset of `(head, completed tile)`'s rows in the f16 planes
+    /// (F16 mode is never tiered, so the layout is always flat).
+    #[inline]
+    fn h_base(&self, h: usize, tile: usize) -> usize {
+        (h * self.cap + tile * self.page_size) * self.d
+    }
+
+    /// Base offset of `(head, completed tile)`'s packed int4 rows (two
+    /// codes per byte; Int4 mode is never tiered).
+    #[inline]
+    fn p4_base(&self, h: usize, tile: usize) -> usize {
+        (h * self.cap + tile * self.page_size) * self.d / 2
     }
 
     /// Base offset of `(head, completed tile)`'s int8 rows in `kq`/`vq`.
@@ -756,13 +820,25 @@ impl KvCache {
     }
 
     /// KV bytes resident for the `len` stored positions (storage the
-    /// tokens actually occupy; excludes unused capacity).  Int8 counts
-    /// the quantized tiles, the per-tile scale/zero params, and the f32
-    /// staging tail.
+    /// tokens actually occupy; excludes unused capacity).  Compressed
+    /// modes count the completed tiles at their stored width, the
+    /// per-tile scale/zero params (int8/int4), and the f32 staging tail.
     pub fn kv_bytes(&self) -> usize {
         let rows = self.n_kv * self.d * 2; // K + V elements per position
         match self.dtype {
             KvDtype::F32 => self.len * rows * 4,
+            KvDtype::F16 => {
+                let full = self.staged_from();
+                let staged = self.len - full;
+                full * rows * 2 + staged * rows * 4
+            }
+            KvDtype::Int4 => {
+                let full = self.staged_from();
+                let staged = self.len - full;
+                let tiles = full / self.page_size;
+                let params = tiles * self.n_kv * 4 * 4;
+                full * rows / 2 + staged * rows * 4 + params
+            }
             KvDtype::Int8 => {
                 let full = self.staged_from();
                 let staged = self.len - full;
@@ -794,7 +870,8 @@ impl KvCache {
         for h in 0..self.n_kv {
             let dst = match self.dtype {
                 KvDtype::F32 => (h * self.cap + pos) * self.d,
-                KvDtype::Int8 => (h * self.page_size + r) * self.d,
+                // compressed modes share the f32 staging-tile layout
+                _ => (h * self.page_size + r) * self.d,
             };
             self.k[dst..dst + self.d].copy_from_slice(&k_new[h * self.d..(h + 1) * self.d]);
             self.v[dst..dst + self.d].copy_from_slice(&v_new[h * self.d..(h + 1) * self.d]);
@@ -814,8 +891,51 @@ impl KvCache {
             }
         }
         self.len += 1;
-        if self.dtype == KvDtype::Int8 && r == self.page_size - 1 {
-            self.quantize_tile(page);
+        if self.dtype.is_compressed() && r == self.page_size - 1 {
+            self.complete_tile(page);
+        }
+    }
+
+    /// Convert the (full) staging tile into this mode's completed-tile
+    /// store.  Once converted, the tile's bytes never change — the
+    /// byte-stable boundary CoW forks share across all compressed modes.
+    fn complete_tile(&mut self, tile: usize) {
+        match self.dtype {
+            KvDtype::F32 => unreachable!("F32 caches have no staging tiles"),
+            KvDtype::F16 => self.halve_tile(tile),
+            KvDtype::Int8 => self.quantize_tile(tile),
+            KvDtype::Int4 => self.quantize_tile_q4(tile),
+        }
+    }
+
+    /// Convert the (full) staging tile to binary16 planes (F16 mode).
+    fn halve_tile(&mut self, tile: usize) {
+        let td = self.page_size * self.d;
+        for h in 0..self.n_kv {
+            let src = h * td;
+            let dst = self.h_base(h, tile);
+            for i in 0..td {
+                self.kh[dst + i] = f32_to_f16(self.k[src + i]);
+                self.vh[dst + i] = f32_to_f16(self.v[src + i]);
+            }
+        }
+    }
+
+    /// Quantize the (full) staging tile into the packed int4 store
+    /// (Int4 mode; never tiered, so the planes are always flat).
+    fn quantize_tile_q4(&mut self, tile: usize) {
+        let td = self.page_size * self.d;
+        let half = td / 2;
+        let nt = self.cap.div_ceil(self.page_size);
+        for h in 0..self.n_kv {
+            let src = h * td;
+            let dst = self.p4_base(h, tile);
+            let (ks, kz) = quantize_q4(&self.k[src..src + td], &mut self.k4[dst..dst + half]);
+            let (vs, vz) = quantize_q4(&self.v[src..src + td], &mut self.v4[dst..dst + half]);
+            self.kscale[h * nt + tile] = ks;
+            self.kzero[h * nt + tile] = kz;
+            self.vscale[h * nt + tile] = vs;
+            self.vzero[h * nt + tile] = vz;
         }
     }
 
@@ -842,14 +962,14 @@ impl KvCache {
         }
     }
 
-    /// Raw f32 key row.  Int8 mode: only valid for staged (tail)
+    /// Raw f32 key row.  Compressed modes: only valid for staged (tail)
     /// positions — completed tiles have no f32 representation.
     #[inline]
     pub fn key(&self, h: usize, pos: usize) -> &[f32] {
         let o = match self.dtype {
             KvDtype::F32 => (h * self.cap + pos) * self.d,
-            KvDtype::Int8 => {
-                assert!(pos >= self.staged_from(), "f32 key read of quantized position {pos}");
+            _ => {
+                assert!(pos >= self.staged_from(), "f32 key read of compressed position {pos}");
                 (h * self.page_size + pos % self.page_size) * self.d
             }
         };
@@ -861,8 +981,8 @@ impl KvCache {
     pub fn val(&self, h: usize, pos: usize) -> &[f32] {
         let o = match self.dtype {
             KvDtype::F32 => (h * self.cap + pos) * self.d,
-            KvDtype::Int8 => {
-                assert!(pos >= self.staged_from(), "f32 val read of quantized position {pos}");
+            _ => {
+                assert!(pos >= self.staged_from(), "f32 val read of compressed position {pos}");
                 (h * self.page_size + pos % self.page_size) * self.d
             }
         };
@@ -870,52 +990,88 @@ impl KvCache {
     }
 
     /// `dot(q, key(h, pos))` in whatever precision the row is stored:
-    /// f32 rows use the exact [`dot`]; quantized rows the fused
-    /// [`qk_dot_q8`] (no dequantized materialization).
+    /// f32/staged rows use the exact [`simd::dot`], f16 rows the
+    /// convert-on-read [`simd::dot_f16`], int8/int4 rows the fused
+    /// [`simd::qk_dot_q8`] / [`simd::qk_dot_q4`] (no dequantized
+    /// materialization).
     #[inline]
     pub fn dot_key(&self, h: usize, pos: usize, q: &[f32]) -> f32 {
+        let lv = self.simd;
+        if self.dtype == KvDtype::F32 || pos >= self.staged_from() {
+            return simd::dot(lv, q, self.key(h, pos));
+        }
+        let tile = pos / self.page_size;
+        let nt = self.cap.div_ceil(self.page_size);
         match self.dtype {
-            KvDtype::F32 => dot(q, self.key(h, pos)),
-            KvDtype::Int8 => {
-                if pos >= self.staged_from() {
-                    dot(q, self.key(h, pos))
-                } else {
-                    let tile = pos / self.page_size;
-                    let nt = self.cap.div_ceil(self.page_size);
-                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
-                    qk_dot_q8(
-                        q,
-                        &self.kq[o..o + self.d],
-                        self.kscale[h * nt + tile],
-                        self.kzero[h * nt + tile],
-                    )
-                }
+            KvDtype::F16 => {
+                let o = self.h_base(h, tile) + (pos % self.page_size) * self.d;
+                simd::dot_f16(lv, q, &self.kh[o..o + self.d])
             }
+            KvDtype::Int8 => {
+                let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
+                simd::qk_dot_q8(
+                    lv,
+                    q,
+                    &self.kq[o..o + self.d],
+                    self.kscale[h * nt + tile],
+                    self.kzero[h * nt + tile],
+                )
+            }
+            KvDtype::Int4 => {
+                let half = self.d / 2;
+                let o = self.p4_base(h, tile) + (pos % self.page_size) * half;
+                simd::qk_dot_q4(
+                    lv,
+                    q,
+                    &self.k4[o..o + half],
+                    self.kscale[h * nt + tile],
+                    self.kzero[h * nt + tile],
+                )
+            }
+            KvDtype::F32 => unreachable!(),
         }
     }
 
-    /// `out += w * val(h, pos)` — f32 rows via [`crate::tensor::axpy`],
-    /// quantized rows via the fused dequantize-on-attend [`axpy_q8`].
+    /// `out += w * val(h, pos)` — f32/staged rows via [`simd::axpy`],
+    /// f16 rows via [`simd::axpy_f16`], int8/int4 rows via the fused
+    /// dequantize-on-attend [`simd::axpy_q8`] / [`simd::axpy_q4`].
     #[inline]
     pub fn add_val(&self, h: usize, pos: usize, w: f32, out: &mut [f32]) {
+        let lv = self.simd;
+        if self.dtype == KvDtype::F32 || pos >= self.staged_from() {
+            return simd::axpy(lv, out, w, self.val(h, pos));
+        }
+        let tile = pos / self.page_size;
+        let nt = self.cap.div_ceil(self.page_size);
         match self.dtype {
-            KvDtype::F32 => crate::tensor::axpy(out, w, self.val(h, pos)),
-            KvDtype::Int8 => {
-                if pos >= self.staged_from() {
-                    crate::tensor::axpy(out, w, self.val(h, pos));
-                } else {
-                    let tile = pos / self.page_size;
-                    let nt = self.cap.div_ceil(self.page_size);
-                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
-                    axpy_q8(
-                        out,
-                        w,
-                        &self.vq[o..o + self.d],
-                        self.vscale[h * nt + tile],
-                        self.vzero[h * nt + tile],
-                    );
-                }
+            KvDtype::F16 => {
+                let o = self.h_base(h, tile) + (pos % self.page_size) * self.d;
+                simd::axpy_f16(lv, out, w, &self.vh[o..o + self.d]);
             }
+            KvDtype::Int8 => {
+                let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
+                simd::axpy_q8(
+                    lv,
+                    out,
+                    w,
+                    &self.vq[o..o + self.d],
+                    self.vscale[h * nt + tile],
+                    self.vzero[h * nt + tile],
+                );
+            }
+            KvDtype::Int4 => {
+                let half = self.d / 2;
+                let o = self.p4_base(h, tile) + (pos % self.page_size) * half;
+                simd::axpy_q4(
+                    lv,
+                    out,
+                    w,
+                    &self.v4[o..o + half],
+                    self.vscale[h * nt + tile],
+                    self.vzero[h * nt + tile],
+                );
+            }
+            KvDtype::F32 => unreachable!(),
         }
     }
 
@@ -933,6 +1089,31 @@ impl KvCache {
         let nt = self.cap.div_ceil(self.page_size);
         let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
         Some((&self.kq[o..o + self.d], self.kscale[h * nt + tile], self.kzero[h * nt + tile]))
+    }
+
+    /// The stored binary16 key row — `None` for non-F16 caches and
+    /// staged positions.  Diagnostics/tests only (CoW byte-sharing
+    /// assertions, mirroring [`KvCache::quantized_key_row`]).
+    pub fn f16_key_row(&self, h: usize, pos: usize) -> Option<&[u16]> {
+        if self.dtype != KvDtype::F16 || pos >= self.staged_from() {
+            return None;
+        }
+        let o = self.h_base(h, pos / self.page_size) + (pos % self.page_size) * self.d;
+        Some(&self.kh[o..o + self.d])
+    }
+
+    /// The stored packed int4 key row (`d/2` bytes) and its tile
+    /// `(scale, zero)` — `None` for non-Int4 caches and staged
+    /// positions.  Diagnostics/tests only.
+    pub fn packed_key_row(&self, h: usize, pos: usize) -> Option<(&[u8], f32, f32)> {
+        if self.dtype != KvDtype::Int4 || pos >= self.staged_from() {
+            return None;
+        }
+        let tile = pos / self.page_size;
+        let nt = self.cap.div_ceil(self.page_size);
+        let half = self.d / 2;
+        let o = self.p4_base(h, tile) + (pos % self.page_size) * half;
+        Some((&self.k4[o..o + half], self.kscale[h * nt + tile], self.kzero[h * nt + tile]))
     }
 
     /// Score one KV tile for head `h`: writes `dot(q, key(h, p)) * scale`
@@ -962,32 +1143,55 @@ impl KvCache {
             return 0;
         }
         let n = (hi - t0).min(ps);
+        let lv = self.simd;
         match self.dtype {
             KvDtype::F32 => {
                 let base = (h * self.cap + t0) * d;
                 let rows = &self.k[base..base + n * d];
                 for (j, o) in out[..n].iter_mut().enumerate() {
-                    *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
+                    *o = simd::dot(lv, q, &rows[j * d..(j + 1) * d]) * scale;
+                }
+            }
+            _ if t0 >= self.staged_from() => {
+                // the (single) f32 staging tail tile, shared by every
+                // compressed mode
+                let base = h * ps * d;
+                let rows = &self.k[base..base + n * d];
+                for (j, o) in out[..n].iter_mut().enumerate() {
+                    *o = simd::dot(lv, q, &rows[j * d..(j + 1) * d]) * scale;
+                }
+            }
+            KvDtype::F16 => {
+                let base = self.h_base(h, tile);
+                let rows = &self.kh[base..base + n * d];
+                for (j, o) in out[..n].iter_mut().enumerate() {
+                    *o = simd::dot_f16(lv, q, &rows[j * d..(j + 1) * d]) * scale;
                 }
             }
             KvDtype::Int8 => {
-                if t0 >= self.staged_from() {
-                    // the (single) f32 staging tail tile
-                    let base = h * ps * d;
-                    let rows = &self.k[base..base + n * d];
-                    for (j, o) in out[..n].iter_mut().enumerate() {
-                        *o = dot(q, &rows[j * d..(j + 1) * d]) * scale;
-                    }
-                } else {
-                    let nt = self.cap.div_ceil(ps);
-                    let ks = self.kscale[h * nt + tile];
-                    let kz = self.kzero[h * nt + tile];
-                    let q_sum = sum4(q);
-                    let base = self.q_base(h, tile);
-                    let rows = &self.kq[base..base + n * d];
-                    for (j, o) in out[..n].iter_mut().enumerate() {
-                        *o = (ks * dot_i8(q, &rows[j * d..(j + 1) * d]) + kz * q_sum) * scale;
-                    }
+                let nt = self.cap.div_ceil(ps);
+                let ks = self.kscale[h * nt + tile];
+                let kz = self.kzero[h * nt + tile];
+                let q_sum = simd::sum4(lv, q);
+                let base = self.q_base(h, tile);
+                let rows = &self.kq[base..base + n * d];
+                for (j, o) in out[..n].iter_mut().enumerate() {
+                    *o = (ks * simd::dot_i8(lv, q, &rows[j * d..(j + 1) * d]) + kz * q_sum)
+                        * scale;
+                }
+            }
+            KvDtype::Int4 => {
+                let nt = self.cap.div_ceil(ps);
+                let ks = self.kscale[h * nt + tile];
+                let kz = self.kzero[h * nt + tile];
+                let q_sum = simd::sum4(lv, q);
+                let half = d / 2;
+                let base = self.p4_base(h, tile);
+                let rows = &self.k4[base..base + n * half];
+                for (j, o) in out[..n].iter_mut().enumerate() {
+                    *o = (ks * simd::dot_i4(lv, q, &rows[j * half..(j + 1) * half])
+                        + kz * q_sum)
+                        * scale;
                 }
             }
         }
@@ -1016,35 +1220,57 @@ impl KvCache {
             return 0;
         }
         let n = (hi - t0).min(ps);
+        let lv = self.simd;
         match self.dtype {
             KvDtype::F32 => {
                 let base = (h * self.cap + t0) * d;
                 let rows = &self.v[base..base + n * d];
                 for (j, &wj) in w[..n].iter().enumerate() {
                     if wj > 1e-9 {
-                        crate::tensor::axpy(out, wj, &rows[j * d..(j + 1) * d]);
+                        simd::axpy(lv, out, wj, &rows[j * d..(j + 1) * d]);
+                    }
+                }
+            }
+            _ if t0 >= self.staged_from() => {
+                let base = h * ps * d;
+                let rows = &self.v[base..base + n * d];
+                for (j, &wj) in w[..n].iter().enumerate() {
+                    if wj > 1e-9 {
+                        simd::axpy(lv, out, wj, &rows[j * d..(j + 1) * d]);
+                    }
+                }
+            }
+            KvDtype::F16 => {
+                let base = self.h_base(h, tile);
+                let rows = &self.vh[base..base + n * d];
+                for (j, &wj) in w[..n].iter().enumerate() {
+                    if wj > 1e-9 {
+                        simd::axpy_f16(lv, out, wj, &rows[j * d..(j + 1) * d]);
                     }
                 }
             }
             KvDtype::Int8 => {
-                if t0 >= self.staged_from() {
-                    let base = h * ps * d;
-                    let rows = &self.v[base..base + n * d];
-                    for (j, &wj) in w[..n].iter().enumerate() {
-                        if wj > 1e-9 {
-                            crate::tensor::axpy(out, wj, &rows[j * d..(j + 1) * d]);
-                        }
+                let nt = self.cap.div_ceil(ps);
+                let vs = self.vscale[h * nt + tile];
+                let vz = self.vzero[h * nt + tile];
+                let base = self.q_base(h, tile);
+                let rows = &self.vq[base..base + n * d];
+                for (j, &wj) in w[..n].iter().enumerate() {
+                    if wj > 1e-9 {
+                        simd::axpy_q8(lv, out, wj, &rows[j * d..(j + 1) * d], vs, vz);
                     }
-                } else {
-                    let nt = self.cap.div_ceil(ps);
-                    let vs = self.vscale[h * nt + tile];
-                    let vz = self.vzero[h * nt + tile];
-                    let base = self.q_base(h, tile);
-                    let rows = &self.vq[base..base + n * d];
-                    for (j, &wj) in w[..n].iter().enumerate() {
-                        if wj > 1e-9 {
-                            axpy_q8(out, wj, &rows[j * d..(j + 1) * d], vs, vz);
-                        }
+                }
+            }
+            KvDtype::Int4 => {
+                let nt = self.cap.div_ceil(ps);
+                let vs = self.vscale[h * nt + tile];
+                let vz = self.vzero[h * nt + tile];
+                let half = d / 2;
+                let base = self.p4_base(h, tile);
+                let rows = &self.v4[base..base + n * half];
+                for (j, &wj) in w[..n].iter().enumerate() {
+                    if wj > 1e-9 {
+                        simd::axpy_q4(lv, out, wj, &rows[j * half..(j + 1) * half], vs, vz);
                     }
                 }
             }
@@ -1053,24 +1279,35 @@ impl KvCache {
     }
 
     /// [`KvCache::dot_key`] with the query's element sum precomputed (the
-    /// int8 zero-point term, hoistable per query row).  Bitwise-equal to
-    /// `dot_key` when `q_sum == tensor::sum4(q)` — the sparse kernels use
-    /// this to amortize the sum over arbitrary (non-tile-run) index sets.
+    /// int8/int4 zero-point term, hoistable per query row).  Bitwise-equal
+    /// to `dot_key` when `q_sum == simd::sum4(lv, q)` — the sparse kernels
+    /// use this to amortize the sum over arbitrary (non-tile-run) index
+    /// sets.  F32/F16 rows ignore `q_sum` (no zero-point term).
     #[inline]
     pub fn dot_key_with_sum(&self, h: usize, pos: usize, q: &[f32], q_sum: f32) -> f32 {
+        let lv = self.simd;
+        if self.dtype == KvDtype::F32 || pos >= self.staged_from() {
+            return simd::dot(lv, q, self.key(h, pos));
+        }
+        let tile = pos / self.page_size;
+        let nt = self.cap.div_ceil(self.page_size);
         match self.dtype {
-            KvDtype::F32 => dot(q, self.key(h, pos)),
-            KvDtype::Int8 => {
-                if pos >= self.staged_from() {
-                    dot(q, self.key(h, pos))
-                } else {
-                    let tile = pos / self.page_size;
-                    let nt = self.cap.div_ceil(self.page_size);
-                    let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
-                    self.kscale[h * nt + tile] * dot_i8(q, &self.kq[o..o + self.d])
-                        + self.kzero[h * nt + tile] * q_sum
-                }
+            KvDtype::F16 => {
+                let o = self.h_base(h, tile) + (pos % self.page_size) * self.d;
+                simd::dot_f16(lv, q, &self.kh[o..o + self.d])
             }
+            KvDtype::Int8 => {
+                let o = self.q_base(h, tile) + (pos % self.page_size) * self.d;
+                self.kscale[h * nt + tile] * simd::dot_i8(lv, q, &self.kq[o..o + self.d])
+                    + self.kzero[h * nt + tile] * q_sum
+            }
+            KvDtype::Int4 => {
+                let half = self.d / 2;
+                let o = self.p4_base(h, tile) + (pos % self.page_size) * half;
+                self.kscale[h * nt + tile] * simd::dot_i4(lv, q, &self.k4[o..o + half])
+                    + self.kzero[h * nt + tile] * q_sum
+            }
+            KvDtype::F32 => unreachable!(),
         }
     }
 
@@ -1117,20 +1354,65 @@ impl KvCache {
         let ps = self.page_size;
         let d = self.d;
         let tail = n % ps;
-        if self.dtype == KvDtype::Int8 && tail != 0 {
+        if self.dtype.is_compressed() && tail != 0 {
             let tile = n / ps;
             if old_len / ps > tile {
                 // the tail tile had completed: restore its surviving rows
-                // into staging from the quantized store
+                // into staging from the compressed store (one
+                // convert/dequant round-trip, deterministic per mode)
                 let nt = self.cap.div_ceil(ps);
                 for h in 0..self.n_kv {
-                    let (ks, kz) = (self.kscale[h * nt + tile], self.kzero[h * nt + tile]);
-                    let (vs, vz) = (self.vscale[h * nt + tile], self.vzero[h * nt + tile]);
                     for r in 0..tail {
-                        let src = (h * self.cap + tile * ps + r) * d;
                         let dst = (h * ps + r) * d;
-                        dequantize_q8(&self.kq[src..src + d], ks, kz, &mut self.k[dst..dst + d]);
-                        dequantize_q8(&self.vq[src..src + d], vs, vz, &mut self.v[dst..dst + d]);
+                        match self.dtype {
+                            KvDtype::F16 => {
+                                let src = (h * self.cap + tile * ps + r) * d;
+                                for i in 0..d {
+                                    self.k[dst + i] = f16_to_f32(self.kh[src + i]);
+                                    self.v[dst + i] = f16_to_f32(self.vh[src + i]);
+                                }
+                            }
+                            KvDtype::Int8 => {
+                                let (ks, kz) =
+                                    (self.kscale[h * nt + tile], self.kzero[h * nt + tile]);
+                                let (vs, vz) =
+                                    (self.vscale[h * nt + tile], self.vzero[h * nt + tile]);
+                                let src = (h * self.cap + tile * ps + r) * d;
+                                dequantize_q8(
+                                    &self.kq[src..src + d],
+                                    ks,
+                                    kz,
+                                    &mut self.k[dst..dst + d],
+                                );
+                                dequantize_q8(
+                                    &self.vq[src..src + d],
+                                    vs,
+                                    vz,
+                                    &mut self.v[dst..dst + d],
+                                );
+                            }
+                            KvDtype::Int4 => {
+                                let (ks, kz) =
+                                    (self.kscale[h * nt + tile], self.kzero[h * nt + tile]);
+                                let (vs, vz) =
+                                    (self.vscale[h * nt + tile], self.vzero[h * nt + tile]);
+                                let src = (h * self.cap + tile * ps + r) * d / 2;
+                                let half = d / 2;
+                                dequantize_q4(
+                                    &self.k4[src..src + half],
+                                    ks,
+                                    kz,
+                                    &mut self.k[dst..dst + d],
+                                );
+                                dequantize_q4(
+                                    &self.v4[src..src + half],
+                                    vs,
+                                    vz,
+                                    &mut self.v[dst..dst + d],
+                                );
+                            }
+                            KvDtype::F32 => unreachable!(),
+                        }
                     }
                 }
             }
@@ -1138,7 +1420,7 @@ impl KvCache {
             // prefix of what staging holds — nothing to restore
         }
         let page = (n - 1) / ps;
-        if self.dtype == KvDtype::Int8 && tail == 0 {
+        if self.dtype.is_compressed() && tail == 0 {
             // tile-aligned boundary: the last page was complete before
             // truncation too, so its stored summary is already exact (and
             // its raw f32 rows no longer exist to rebuild from)
@@ -1415,7 +1697,7 @@ pub fn decode_dense_head(
             t0 += cache.score_tile(h, tile, len, qrow, sc, &mut s[t0..]);
             tile += 1;
         }
-        softmax(&mut s[..len]);
+        simd::softmax(cache.simd, &mut s[..len]);
         let orow = &mut out[qi * d..(qi + 1) * d];
         orow.fill(0.0);
         let (mut t0, mut tile) = (0usize, 0usize);
@@ -1474,7 +1756,7 @@ pub fn decode_head_scores(
                 t0 += cache.score_tile(h, tile, len, qrow, sc, &mut s[t0..]);
                 tile += 1;
             }
-            softmax(s);
+            simd::softmax(cache.simd, s);
         }
     }
     cost.score_key_reads += (n_kv * g * len) as u64;
@@ -1545,7 +1827,7 @@ pub fn decode_pooled_scores_upto(
                 t0 += cache.score_tile(h, tile, len, qrow, sc, &mut scores[t0..]);
                 tile += 1;
             }
-            softmax(&mut scores[..len]);
+            simd::softmax(cache.simd, &mut scores[..len]);
             for (pi, &x) in prow.iter_mut().zip(scores[..len].iter()) {
                 *pi += x * inv;
             }
@@ -1578,12 +1860,12 @@ pub fn decode_sparse_head(
     for qi in 0..g {
         let hq = h * g + qi;
         let qrow = &q[hq * d..(hq + 1) * d];
-        let q_sum = sum4(qrow);
+        let q_sum = simd::sum4(cache.simd, qrow);
         let s = &mut planes.scores;
         for (j, &p) in idx.iter().enumerate() {
             s[j] = cache.dot_key_with_sum(h, p as usize, qrow, q_sum) * sc;
         }
-        softmax(&mut s[..m]);
+        simd::softmax(cache.simd, &mut s[..m]);
         let orow = &mut out[qi * d..(qi + 1) * d];
         orow.fill(0.0);
         for (j, &p) in idx.iter().enumerate() {
@@ -1705,7 +1987,7 @@ pub fn prefill_pooled_scores(
                     t0 += cache.score_tile(h, ti, upto, qrow, sc, &mut scores[t0..]);
                     ti += 1;
                 }
-                softmax(&mut scores[..upto]);
+                simd::softmax(cache.simd, &mut scores[..upto]);
                 for (pi, &x) in prow[..upto].iter_mut().zip(scores[..upto].iter()) {
                     *pi += x * inv;
                 }
@@ -1769,11 +2051,11 @@ pub fn prefill_sparse_tile(
             for qi in 0..g {
                 let hq = h * g + qi;
                 let qrow = &qs[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
-                let q_sum = sum4(qrow);
+                let q_sum = simd::sum4(cache.simd, qrow);
                 for (j, &p) in kept.iter().enumerate() {
                     scores[j] = cache.dot_key_with_sum(h, p as usize, qrow, q_sum) * sc;
                 }
-                softmax(&mut scores[..m]);
+                simd::softmax(cache.simd, &mut scores[..m]);
                 let orow = &mut out[(r * n_q + hq) * d..(r * n_q + hq + 1) * d];
                 orow.fill(0.0);
                 for (j, &p) in kept.iter().enumerate() {
@@ -1795,15 +2077,19 @@ pub fn prefill_sparse_tile(
 /// pooled-score kernel call (anchor pass 3), written into `scratch.sel`
 /// as one head per pooled plane.  Uses the O(n) unordered quickselect —
 /// attention is order-invariant over the index set — staged in the
-/// arena's partition buffer, so the steady-state call allocates nothing.
+/// arena's partition buffer through [`simd::topk_into`] (the staging
+/// fill is the lane-parallel phase; the swap chain stays scalar), so the
+/// steady-state call allocates nothing and selects the exact same
+/// indices at every vector level.
 pub fn select_topk(scratch: &mut AttnScratch, k: usize, cost: &mut CostTracker) {
+    let lv = simd::detect();
     let AttnScratch { sel, planes } = scratch;
     let (hn, len) = (planes.pooled_heads, planes.pooled_len);
     sel.clear();
     let ScorePlanes { pooled, pairs, .. } = planes;
     for h in 0..hn {
         cost.topk_items += len as u64;
-        topk_unordered_into(&pooled[h * len..(h + 1) * len], k.min(len), pairs, &mut sel.idx);
+        simd::topk_into(lv, &pooled[h * len..(h + 1) * len], k.min(len), pairs, &mut sel.idx);
         sel.close_head();
     }
 }
@@ -2407,11 +2693,17 @@ mod tests {
         }
     }
 
-    /// Build an f32 cache and an int8 cache holding identical pushes.
-    fn paired_caches(n_kv: usize, d: usize, len: usize, seed: u64) -> (KvCache, KvCache) {
+    /// Build an f32 cache and a `dtype` cache holding identical pushes.
+    fn paired_caches_d(
+        n_kv: usize,
+        d: usize,
+        len: usize,
+        seed: u64,
+        dtype: crate::config::KvDtype,
+    ) -> (KvCache, KvCache) {
         let mut r = Rng::new(seed);
         let mut cf = KvCache::new(n_kv, d, len + 8);
-        let mut cq = KvCache::with_opts(n_kv, d, len + 8, 16, crate::config::KvDtype::Int8);
+        let mut cq = KvCache::with_opts(n_kv, d, len + 8, 16, dtype);
         for _ in 0..len {
             let mut k = vec![0.0; n_kv * d];
             let mut v = vec![0.0; n_kv * d];
@@ -2421,6 +2713,11 @@ mod tests {
             cq.push(&k, &v);
         }
         (cf, cq)
+    }
+
+    /// Build an f32 cache and an int8 cache holding identical pushes.
+    fn paired_caches(n_kv: usize, d: usize, len: usize, seed: u64) -> (KvCache, KvCache) {
+        paired_caches_d(n_kv, d, len, seed, crate::config::KvDtype::Int8)
     }
 
     #[test]
@@ -2470,6 +2767,129 @@ mod tests {
         let (bf, bq) = (cf.kv_bytes(), cq.kv_bytes());
         let ratio = bf as f64 / bq as f64;
         assert!(ratio >= 1.8, "bytes ratio {ratio:.2} (f32 {bf} int8 {bq})");
+    }
+
+    #[test]
+    fn f16_dense_decode_tight_and_never_dequants() {
+        let mut r = Rng::new(51);
+        let (n_kv, g, d, len) = (2, 2, 16, 200);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let (cf, ch) = paired_caches_d(n_kv, d, len, 52, crate::config::KvDtype::F16);
+        let mut of = vec![0.0; n_kv * g * d];
+        let mut oh = vec![0.0; n_kv * g * d];
+        let mut planes = ScorePlanes::default();
+        let mut c = CostTracker::default();
+        decode_dense(&q, &cf, g, &mut of, &mut planes, &mut c);
+        let mut ch_cost = CostTracker::default();
+        decode_dense(&q, &ch, g, &mut oh, &mut planes, &mut ch_cost);
+        // f16 keeps ~11 bits of mantissa: far tighter than int8's 0.999
+        let cos = crate::tensor::cosine_sim(&of, &oh);
+        assert!(cos > 0.999_99, "cos {cos}");
+        assert_eq!(ch_cost.dequant_rows, 0, "f16 reads are conversions, not dequants");
+        assert!(!ch.is_quantized());
+    }
+
+    #[test]
+    fn int4_dense_decode_close_to_f32() {
+        let mut r = Rng::new(53);
+        let (n_kv, g, d, len) = (2, 2, 16, 200);
+        let mut q = vec![0.0; n_kv * g * d];
+        r.fill_normal(&mut q, 1.0);
+        let (cf, c4) = paired_caches_d(n_kv, d, len, 54, crate::config::KvDtype::Int4);
+        let mut of = vec![0.0; n_kv * g * d];
+        let mut o4 = vec![0.0; n_kv * g * d];
+        let mut planes = ScorePlanes::default();
+        let mut c = CostTracker::default();
+        decode_dense(&q, &cf, g, &mut of, &mut planes, &mut c);
+        let mut c4_cost = CostTracker::default();
+        decode_dense(&q, &c4, g, &mut o4, &mut planes, &mut c4_cost);
+        // 4-bit codes: coarser than int8 but still directionally faithful
+        let cos = crate::tensor::cosine_sim(&of, &o4);
+        assert!(cos > 0.99, "cos {cos}");
+        assert!(c4_cost.dequant_rows > 0, "int4 attend dequantizes");
+        assert!(c4.is_quantized());
+    }
+
+    #[test]
+    fn f16_and_int4_kv_bytes_shrink() {
+        let (cf, ch) = paired_caches_d(2, 16, 200, 55, crate::config::KvDtype::F16);
+        let rh = cf.kv_bytes() as f64 / ch.kv_bytes() as f64;
+        assert!(rh >= 1.7, "f16 bytes ratio {rh:.2}");
+        let (_, c4) = paired_caches_d(2, 16, 200, 55, crate::config::KvDtype::Int4);
+        let r4 = cf.kv_bytes() as f64 / c4.kv_bytes() as f64;
+        assert!(r4 >= 3.0, "int4 bytes ratio {r4:.2}");
+        // strict ordering: narrower dtype, fewer resident bytes
+        assert!(c4.kv_bytes() < ch.kv_bytes());
+    }
+
+    #[test]
+    fn compressed_staged_tail_is_exact_f32() {
+        for dtype in [crate::config::KvDtype::F16, crate::config::KvDtype::Int4] {
+            // 2 full tiles + 9 staged positions
+            let (cf, cq) = paired_caches_d(2, 8, 41, 56, dtype);
+            for h in 0..2 {
+                for p in 32..41 {
+                    assert_eq!(cf.key(h, p), cq.key(h, p), "{dtype:?}");
+                    assert_eq!(cf.val(h, p), cq.val(h, p), "{dtype:?}");
+                    assert!(cq.f16_key_row(h, p).is_none());
+                    assert!(cq.packed_key_row(h, p).is_none());
+                }
+                match dtype {
+                    crate::config::KvDtype::F16 => {
+                        assert!(cq.f16_key_row(h, 31).is_some());
+                    }
+                    crate::config::KvDtype::Int4 => {
+                        let (codes, _, _) = cq.packed_key_row(h, 31).unwrap();
+                        assert_eq!(codes.len(), 4); // d/2 packed bytes
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_truncate_mid_tile_restores_staging() {
+        for (dtype, tol) in [
+            (crate::config::KvDtype::F16, 5e-3f32),
+            (crate::config::KvDtype::Int4, 5e-1f32),
+        ] {
+            let (_, mut cq) = paired_caches_d(2, 8, 48, 57, dtype); // 3 full tiles
+            let probe_q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.31).sin()).collect();
+            let before: Vec<f32> = (0..23).map(|p| cq.dot_key(1, p, &probe_q)).collect();
+            cq.truncate(23); // mid-tile boundary inside full tile 1
+            assert_eq!(cq.len, 23);
+            let after: Vec<f32> = (0..23).map(|p| cq.dot_key(1, p, &probe_q)).collect();
+            // full tile 0 untouched (bitwise); restored rows within the
+            // mode's conversion error
+            for (p, (a, b)) in before.iter().zip(&after).enumerate() {
+                if p < 16 {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{dtype:?} pos {p}");
+                } else {
+                    assert!((a - b).abs() < tol, "{dtype:?} pos {p}: {a} vs {b}");
+                }
+            }
+            // refilling re-completes the tail tile without panicking
+            let k = vec![0.25; 2 * 8];
+            for _ in 0..12 {
+                cq.push(&k, &k);
+            }
+            assert_eq!(cq.len, 35);
+            match dtype {
+                crate::config::KvDtype::F16 => assert!(cq.f16_key_row(0, 17).is_some()),
+                crate::config::KvDtype::Int4 => assert!(cq.packed_key_row(0, 17).is_some()),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn set_simd_level_round_trips() {
+        let mut cache = KvCache::new(1, 8, 32);
+        assert_eq!(cache.simd_level(), crate::simd::detect());
+        cache.set_simd_level(SimdLevel::Scalar);
+        assert_eq!(cache.simd_level(), SimdLevel::Scalar);
     }
 
     #[test]
@@ -2568,26 +2988,28 @@ mod tests {
     }
 
     /// The acceptance invariant for the tile-major rework: on random
-    /// inputs — both storage modes, including a partial staging tail and
-    /// odd (non-tile-multiple) lengths — every rewritten kernel produces
-    /// BITWISE the same outputs, pooled scores, Top-k selections, and
-    /// cost accounting as the seed row-at-a-time kernels in
-    /// [`reference`].
+    /// inputs — all four storage modes, including a partial staging tail
+    /// and odd (non-tile-multiple) lengths — every rewritten kernel
+    /// produces BITWISE the same outputs, pooled scores, Top-k
+    /// selections, and cost accounting as the seed row-at-a-time kernels
+    /// in [`reference`].
     #[test]
     fn tile_kernels_bitwise_equal_seed_kernels() {
         let mut r = Rng::new(0x71E5);
-        for case in 0..6 {
+        let cases = if cfg!(miri) { 4 } else { 8 }; // each dtype at least once
+        for case in 0..cases {
             let (n_kv, g, d) = (2usize, 2usize, 16usize);
             let n_q = n_kv * g;
             let len = 30 + r.below(80); // spans partial tiles + staging tails
-            let int8 = case % 2 == 1;
+            let dtype = match case % 4 {
+                0 => crate::config::KvDtype::F32,
+                1 => crate::config::KvDtype::F16,
+                2 => crate::config::KvDtype::Int8,
+                _ => crate::config::KvDtype::Int4,
+            };
             let mut q = vec![0.0; n_q * d];
             r.fill_normal(&mut q, 1.0);
-            let mut cache = if int8 {
-                KvCache::with_opts(n_kv, d, len + 8, 16, crate::config::KvDtype::Int8)
-            } else {
-                KvCache::new(n_kv, d, len + 8)
-            };
+            let mut cache = KvCache::with_opts(n_kv, d, len + 8, 16, dtype);
             for _ in 0..len {
                 let mut k = vec![0.0; n_kv * d];
                 let mut v = vec![0.0; n_kv * d];
@@ -2596,7 +3018,7 @@ mod tests {
                 cache.push(&k, &v);
             }
             let mut scratch = AttnScratch::new();
-            let tag = if int8 { "int8" } else { "f32" };
+            let tag = dtype.label();
 
             // dense decode
             let mut out_new = vec![0.0; n_q * d];

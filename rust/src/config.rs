@@ -76,28 +76,65 @@ impl ModelConfig {
 
 /// Storage precision of the paged KV cache.
 ///
-/// `Int8` stores full quantization tiles (one tile = the cache's page
-/// size, matching the block size) as int8 with a per-tile, per-head
-/// affine `(scale, zero)` pair for K and for V; the partially-filled
-/// tail tile stays f32 in a small staging buffer until it completes.
-/// Tile Top-k *scoring* (Kascade anchors, pooled scores, OmniKV
-/// filters) runs fused over the int8 rows without materializing f32
-/// ([`crate::tensor::qk_dot_q8`]); only the value rows actually
-/// attended (the selected Top-k, or everything on a dense fallback)
-/// are dequantized.  See `docs/serving.md` § KV storage modes.
+/// The quantized/converted modes all share the same tile architecture
+/// (one tile = the cache's page size, matching the block size): the
+/// partially-filled tail tile stays f32 in a small staging buffer and is
+/// converted **once** when the tile completes, so tile (= block)
+/// boundaries are byte-stable across CoW/prefix forks.
+///
+/// * `F16` stores completed K/V tiles as IEEE binary16 with f32
+///   accumulation in every kernel (software-converted via
+///   [`crate::tensor::f32_to_f16`], so bytes are host-independent).
+///   Per-element relative error ≤ 2^-11; no per-tile params.
+/// * `Int8` stores int8 codes with a per-tile, per-head affine
+///   `(scale, zero)` pair for K and for V.  Tile Top-k *scoring*
+///   (Kascade anchors, pooled scores, OmniKV filters) runs fused over
+///   the codes without materializing f32
+///   ([`crate::tensor::qk_dot_q8`]); only the value rows actually
+///   attended (the selected Top-k, or everything on a dense fallback)
+///   are dequantized.  Round-trip error ≤ (max-min)/508 per tile-head.
+/// * `Int4` packs two affine codes per byte ([`crate::tensor::quantize_q4`]
+///   layout, promoted from the warm-tier diagnostic to a first-class
+///   kernel-readable mode): same per-tile-per-head `(scale, zero)`
+///   params as int8, fused scoring over the packed nibbles
+///   ([`crate::tensor::qk_dot_q4`]), round-trip error ≤ (max-min)/28.
+///   Requires an even head dimension.
+///
+/// See `docs/serving.md` § KV storage modes for the full matrix.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum KvDtype {
     #[default]
     F32,
+    F16,
     Int8,
+    Int4,
 }
 
 impl KvDtype {
     pub fn label(&self) -> &'static str {
         match self {
             KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
             KvDtype::Int8 => "int8",
+            KvDtype::Int4 => "int4",
         }
+    }
+
+    /// Parse a CLI/config label (the inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(KvDtype::F32),
+            "f16" => Some(KvDtype::F16),
+            "int8" => Some(KvDtype::Int8),
+            "int4" => Some(KvDtype::Int4),
+            _ => None,
+        }
+    }
+
+    /// True for modes that store completed tiles in a non-f32 plane
+    /// (and therefore keep the f32 staging tail).
+    pub fn is_compressed(&self) -> bool {
+        !matches!(self, KvDtype::F32)
     }
 }
 
@@ -294,10 +331,11 @@ pub struct ServeConfig {
     /// weight reads).  Logits are bitwise-identical to the sequential
     /// path; disable only to measure the sequential baseline.
     pub batched_decode: bool,
-    /// Storage precision for paged KV blocks ([`KvDtype`]).  `Int8`
-    /// roughly quarters resident KV bytes (per-tile scales + the f32
-    /// staging tail are the overhead) at a bounded output divergence;
-    /// backends created for this config and the block manager's
+    /// Storage precision for paged KV blocks ([`KvDtype`]).  `F16`
+    /// halves and `Int8` roughly quarters resident KV bytes (per-tile
+    /// scales + the f32 staging tail are the overhead); `Int4` cuts
+    /// them ~8x at a correspondingly larger bounded divergence.
+    /// Backends created for this config and the block manager's
     /// per-block mode bookkeeping both follow it.
     pub kv_dtype: KvDtype,
     /// Hard cap on prompt length accepted at submit
@@ -351,6 +389,16 @@ pub struct ServeConfig {
     /// regardless of tenant debt.  Off by default (pure FCFS within
     /// priority, exactly the pre-fair-share behaviour).
     pub fair_share: bool,
+    /// Time-to-first-token SLO in wall-clock milliseconds — the p95
+    /// target the SLO-gated traffic scenarios (and any deadline-aware
+    /// operator tooling) hold the deployment to.  Promoted from the
+    /// former hard-coded bench constants so a tenant class can carry its
+    /// own target.  Informational to the scheduler itself: admission
+    /// does not shed on it (yet), harnesses assert on it.
+    pub ttft_slo_ms: f64,
+    /// Time-per-output-token SLO (p95, wall-clock milliseconds); see
+    /// [`Self::ttft_slo_ms`].
+    pub tpot_slo_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -373,6 +421,8 @@ impl Default for ServeConfig {
             kv_tiers: false,
             hot_tile_budget: 256,
             fair_share: false,
+            ttft_slo_ms: 500.0,
+            tpot_slo_ms: 20.0,
         }
     }
 }

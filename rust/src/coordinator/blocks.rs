@@ -190,24 +190,27 @@ impl BlockManager {
         self.refc[i] > 0 || self.indexed[i]
     }
 
-    /// Live (in-use or cached) blocks stored quantized.  O(num_blocks).
+    /// Live (in-use or cached) blocks stored in a compressed mode (f16,
+    /// int8, or int4).  O(num_blocks).
     pub fn quantized_blocks(&self) -> usize {
         (0..self.num_blocks)
-            .filter(|&i| self.block_dtype[i] == KvDtype::Int8 && self.is_live(i))
+            .filter(|&i| self.block_dtype[i].is_compressed() && self.is_live(i))
             .count()
     }
 
     /// Estimated KV bytes held by live (in-use + cached) blocks, given
-    /// the f32 cost of one full block.  Int8 blocks count a quarter (the
-    /// per-tile scale overhead is ignored here; exact per-sequence bytes
-    /// come from [`crate::coordinator::SeqBackend::kv_stats`]).
-    /// O(num_blocks).
+    /// the f32 cost of one full block.  F16 blocks count half, int8 a
+    /// quarter, int4 an eighth (the per-tile scale overhead is ignored
+    /// here; exact per-sequence bytes come from
+    /// [`crate::coordinator::SeqBackend::kv_stats`]).  O(num_blocks).
     pub fn kv_bytes_est(&self, f32_bytes_per_block: usize) -> usize {
         (0..self.num_blocks)
             .filter(|&i| self.is_live(i))
             .map(|i| match self.block_dtype[i] {
                 KvDtype::F32 => f32_bytes_per_block,
+                KvDtype::F16 => f32_bytes_per_block / 2,
                 KvDtype::Int8 => f32_bytes_per_block / 4,
+                KvDtype::Int4 => f32_bytes_per_block / 8,
             })
             .sum()
     }

@@ -106,14 +106,16 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: ServeConfig) -> Self {
-        // int8 KV relies on block-aligned boundaries (prefix snapshots,
-        // CoW forks) landing on quantization-tile edges; the tile is the
-        // KvCache page (16).  A misaligned block size would silently
-        // re-quantize forked tails — refuse it up front.
+        // compressed KV (f16/int8/int4) relies on block-aligned
+        // boundaries (prefix snapshots, CoW forks) landing on
+        // conversion-tile edges; the tile is the KvCache page (16).  A
+        // misaligned block size would silently re-convert forked tails —
+        // refuse it up front.
         assert!(
-            cfg.kv_dtype != crate::config::KvDtype::Int8 || cfg.block_size % 16 == 0,
-            "kv_dtype=int8 requires block_size to be a multiple of the 16-token \
-             quantization tile (got {})",
+            !cfg.kv_dtype.is_compressed() || cfg.block_size % 16 == 0,
+            "kv_dtype={} requires block_size to be a multiple of the 16-token \
+             conversion tile (got {})",
+            cfg.kv_dtype.label(),
             cfg.block_size
         );
         // tiered KV demotes/promotes whole int8 quantization tiles — the

@@ -22,10 +22,21 @@ const PROBE_SALT: u64 = 0xA5A5_5A5A_C3C3_3C3C;
 
 /// A Bloom-filter summary of the block chain hashes a replica has been
 /// routed (an over-approximation of what its prefix cache holds).
+///
+/// The summary ages generationally: inserts land in the *current* bit
+/// plane, lookups consult the union of the current and *previous*
+/// planes, and [`ChainSummary::decay`] retires the previous plane and
+/// demotes the current one.  A hash that stops being observed survives
+/// at most two decay windows, so a long-lived replica's filter can't
+/// saturate into scoring every prompt as fully cached.
 #[derive(Debug, Clone)]
 pub struct ChainSummary {
+    /// current generation — receives inserts
     bits: Vec<u64>,
+    /// previous generation — read-only until the next decay retires it
+    prev: Vec<u64>,
     inserted: u64,
+    decays: u64,
 }
 
 impl Default for ChainSummary {
@@ -36,7 +47,12 @@ impl Default for ChainSummary {
 
 impl ChainSummary {
     pub fn new() -> Self {
-        Self { bits: vec![0; SUMMARY_BITS / 64], inserted: 0 }
+        Self {
+            bits: vec![0; SUMMARY_BITS / 64],
+            prev: vec![0; SUMMARY_BITS / 64],
+            inserted: 0,
+            decays: 0,
+        }
     }
 
     fn probes(h: u64) -> [(usize, u64); 2] {
@@ -53,7 +69,25 @@ impl ChainSummary {
     }
 
     pub fn contains(&self, h: u64) -> bool {
-        Self::probes(h).iter().all(|&(word, mask)| self.bits[word] & mask != 0)
+        Self::probes(h)
+            .iter()
+            .all(|&(word, mask)| (self.bits[word] | self.prev[word]) & mask != 0)
+    }
+
+    /// Age the summary one generation: the previous plane is dropped,
+    /// the current plane becomes the previous one, and inserts start
+    /// over on a clean plane.  Hashes re-observed since the last decay
+    /// stay visible (they sit in the demoted plane); hashes idle for
+    /// two whole windows are forgotten, restoring discrimination.
+    pub fn decay(&mut self) {
+        std::mem::swap(&mut self.bits, &mut self.prev);
+        self.bits.iter_mut().for_each(|w| *w = 0);
+        self.decays += 1;
+    }
+
+    /// Decay generations applied so far (monotone).
+    pub fn decays(&self) -> u64 {
+        self.decays
     }
 
     /// Record a routed prompt's full block chain.
@@ -77,6 +111,7 @@ impl ChainSummary {
 
     pub fn clear(&mut self) {
         self.bits.iter_mut().for_each(|w| *w = 0);
+        self.prev.iter_mut().for_each(|w| *w = 0);
         self.inserted = 0;
     }
 }
@@ -147,6 +182,40 @@ mod tests {
         s.clear();
         assert_eq!(s.score(&chain), 0);
         assert_eq!(s.inserted(), 0);
+    }
+
+    #[test]
+    fn decay_keeps_recent_chains_and_recovers_saturation() {
+        let prompt: Vec<u32> = (0..64).collect();
+        let chain = chain_hashes(&prompt, 16);
+        let mut s = ChainSummary::new();
+
+        // One decay must not lose a chain observed in the last window.
+        s.observe_chain(&chain);
+        s.decay();
+        assert_eq!(s.score(&chain), chain.len(), "last-window chains survive one decay");
+
+        // Two idle windows forget it entirely.
+        s.decay();
+        assert_eq!(s.score(&chain), 0, "idle chains age out after two decays");
+        assert_eq!(s.decays(), 2);
+
+        // Saturate: pour in far more distinct hashes than the filter's
+        // ~4k-hash capacity until a never-inserted probe false-positives.
+        let fresh = chain_hashes(&(9_000_000u32..9_000_064).collect::<Vec<_>>(), 16);
+        for i in 0u64..60_000 {
+            s.insert(splitmix64(i.wrapping_mul(0x517C_C1B7_2722_0A95)));
+        }
+        assert!(s.score(&fresh) > 0, "a saturated summary scores everything");
+
+        // Decaying twice retires both stale planes; discrimination is back.
+        s.decay();
+        s.decay();
+        assert_eq!(s.score(&fresh), 0, "decay restores discrimination");
+
+        // And a chain re-observed after the purge still scores full depth.
+        s.observe_chain(&chain);
+        assert_eq!(s.score(&chain), chain.len());
     }
 
     #[test]

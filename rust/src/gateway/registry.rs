@@ -105,6 +105,13 @@ impl Default for ScalePolicy {
 /// breach persists `ScalePolicy::sustain` observations in a row.
 pub type ScaleHook = Box<dyn FnMut(&ScaleSignal) + Send>;
 
+/// Routed requests per replica between [`ChainSummary::decay`] calls.
+/// A typical chain inserts a handful of block hashes per request, so
+/// 1024 routes land well under the summary's ~4k-hash capacity per
+/// generation; with two live generations the filter stays far from
+/// saturating even on replicas that serve forever.
+const SUMMARY_DECAY_EVERY: u64 = 1024;
+
 pub struct Registry {
     replicas: Vec<Replica>,
     /// serving block size the affinity layer hashes prompts with —
@@ -211,6 +218,9 @@ impl Registry {
         if let Some(r) = self.replicas.get_mut(id) {
             r.summary.observe_chain(&chain);
             r.routed += 1;
+            if r.routed % SUMMARY_DECAY_EVERY == 0 {
+                r.summary.decay();
+            }
         }
         Some(id)
     }

@@ -52,6 +52,7 @@ pub mod pool;
 pub mod runtime;
 pub mod proptest_lite;
 pub mod server;
+pub mod simd;
 pub mod sparse;
 pub mod stats;
 pub mod tensor;

@@ -74,7 +74,7 @@ fn usage() -> ! {
            eval <fig1..fig7|table1|table2|table3|all> [--fast] [--out DIR]\n\
            calibrate [--anchors M] [--ctx N] [--prompts N] [--out plan.json]\n\
            serve [--requests N] [--policy dense|kascade] [--ctx N] [--workers N] [--threads N] [--deadline-ms MS]\n\
-                 [--kv-tiers] [--hot-tile-budget N] [--spill PATH]\n\
+                 [--kv-dtype f32|f16|int8|int4] [--kv-tiers] [--hot-tile-budget N] [--spill PATH]\n\
            traffic [--seed S] [--ticks N] [--rate R] [--burst-rate R] [--prompt-cap N]\n\
                    [--guard TOKENS] [--fair-share] [--threads N]\n\
            gateway [--replicas N] [--workers N] [--port P] [--no-affinity]\n\
@@ -163,6 +163,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    // --kv-dtype f32|f16|int8|int4 picks the KV storage mode; tiered
+    // storage forces int8 (tiles spill as int8 payloads)
+    let kv_dtype = if kv_tiers {
+        if let Some(s) = args.flag("kv-dtype") {
+            anyhow::ensure!(s == "int8", "--kv-tiers requires --kv-dtype int8 (got {s})");
+        }
+        kascade::config::KvDtype::Int8
+    } else {
+        match args.flag("kv-dtype") {
+            None => kascade::config::KvDtype::F32,
+            Some(s) => kascade::config::KvDtype::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown --kv-dtype {s} (f32|f16|int8|int4)"))?,
+        }
+    };
     let factory: BackendFactory = {
         let model = model.clone();
         Box::new(move |_req| {
@@ -178,7 +192,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     kascade::tilestore::TierParams::new(hot_tile_budget),
                     st,
                 )),
-                None => Box::new(NativeBackend::new(model.clone(), cap, policy)),
+                None => Box::new(NativeBackend::with_dtype(model.clone(), cap, policy, kv_dtype)),
             }
         })
     };
@@ -187,11 +201,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ServeConfig {
             num_blocks: (cap / 16 + 2) * 32,
             num_threads,
-            kv_dtype: if kv_tiers {
-                kascade::config::KvDtype::Int8
-            } else {
-                kascade::config::KvDtype::F32
-            },
+            kv_dtype,
             kv_tiers,
             hot_tile_budget,
             ..ServeConfig::default()

@@ -1,0 +1,990 @@
+//! Runtime-dispatched SIMD kernels for the tile-major attention hot paths.
+//!
+//! Every kernel here is a **bitwise-faithful** vector replication of its
+//! scalar counterpart in [`crate::tensor`]:
+//!
+//! * **Reductions** (`dot`, `sum4`, `dot_i8`, `qk_dot_q8`, `dot_f16`,
+//!   `dot_i4`, `qk_dot_q4`) are pinned to the scalar kernels' 4-lane
+//!   accumulator structure: lane `j` accumulates exactly the elements
+//!   scalar accumulator `acc[j]` would, multiplies and adds are separate
+//!   instructions (**no FMA** — fused rounding would diverge), the
+//!   horizontal sum stores the lanes and folds them in the scalar order
+//!   `((l0 + l1) + l2) + l3`, and the ragged tail runs the scalar loop.
+//!   Wider machines (AVX2) still run these reductions at 4 lanes — the
+//!   bitwise contract is worth more than the last 2x of a bandwidth-bound
+//!   loop, and it is what lets `attention::reference` stay an exact
+//!   oracle for every dtype (see `docs/perf.md` for the derivation).
+//! * **Elementwise kernels** (`axpy`, `axpy_q8`, `axpy_f16`, `axpy_q4`,
+//!   `scale_in_place`, the `softmax` rescale) have no cross-lane
+//!   dependency at all, so they may run at any width (8 lanes on AVX2)
+//!   and remain bitwise-identical by construction.
+//! * **Integer widening** (i8 -> i32 -> f32, nibble -> i8 -> i32 -> f32)
+//!   and f16 -> f32 conversion are exact in both the scalar and hardware
+//!   paths (every such value is representable), so quantized operands
+//!   introduce no level-dependent rounding.
+//!
+//! The level is selected **once** per process via [`detect`] (cached in a
+//! `OnceLock`) and stamped into each `KvCache` at construction — never
+//! re-probed per tile.  `KASCADE_FORCE_SCALAR=1` forces the scalar
+//! fallback (the CI forced-fallback leg), and Miri always gets scalar
+//! because it does not model vendor intrinsics.
+//!
+//! | level  | arch    | f32 lanes | int8/f16/int4 codes          |
+//! |--------|---------|-----------|------------------------------|
+//! | Scalar | any     | scalar    | scalar                       |
+//! | Sse2   | x86_64  | 4 (SSE2)  | scalar (widen needs SSE4.1)  |
+//! | Avx2   | x86_64  | 4/8       | 4-lane widen, F16C converts  |
+//! | Neon   | aarch64 | 4 (NEON)  | scalar (pending hw to validate) |
+
+use crate::tensor;
+use std::sync::OnceLock;
+
+/// Vector instruction level, resolved once per process by [`detect`].
+/// All variants exist on every arch (so tests and bench tables can name
+/// them portably); a level that is not native to the current arch simply
+/// dispatches to the scalar kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdLevel {
+    /// Portable scalar kernels in `tensor.rs` — the oracle everything
+    /// else must match bitwise.
+    #[default]
+    Scalar,
+    /// x86_64 baseline: 4-lane f32 SSE2.  Quantized-code kernels stay
+    /// scalar (the i8 widen `_mm_cvtepi8_epi32` needs SSE4.1).
+    Sse2,
+    /// x86_64 with AVX2 + SSE4.1 + F16C: 4-lane reductions for every
+    /// dtype, 8-lane elementwise kernels, hardware f16 conversion.
+    Avx2,
+    /// aarch64 baseline NEON: 4-lane f32; code kernels stay scalar until
+    /// the paths can be validated on real hardware (CI cross-checks the
+    /// build only).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Short lowercase label for bench tables and logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// True for any level that engages vector instructions.
+    pub fn is_simd(&self) -> bool {
+        !matches!(self, SimdLevel::Scalar)
+    }
+}
+
+/// Probe the host (no env override, no cache) — the raw arch detection
+/// behind [`detect`] and [`available_levels`].
+fn detect_arch() -> SimdLevel {
+    if cfg!(miri) {
+        // Miri does not model vendor intrinsics; the scalar kernels are
+        // the semantics anyway.
+        return SimdLevel::Scalar;
+    }
+    arch_probe()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn arch_probe() -> SimdLevel {
+    // Avx2 bundles every feature its kernels use; a machine with AVX2
+    // but not F16C (vanishingly rare) degrades to Sse2 rather than
+    // splitting the level semantics per dtype.
+    if is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("sse4.1")
+        && is_x86_feature_detected!("f16c")
+    {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn arch_probe() -> SimdLevel {
+    SimdLevel::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn arch_probe() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+/// The process-wide SIMD level: arch detection run **once** (cached), with
+/// `KASCADE_FORCE_SCALAR` (any value but `0`/empty) forcing [`SimdLevel::Scalar`]
+/// — the CI forced-fallback leg and the escape hatch for bisecting any
+/// suspected vector-path miscompile.  `KvCache` stamps this at
+/// construction; kernels never re-probe per tile.
+pub fn detect() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let forced = std::env::var("KASCADE_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if forced {
+            SimdLevel::Scalar
+        } else {
+            detect_arch()
+        }
+    })
+}
+
+/// Every level the current host can actually execute, scalar first —
+/// the iteration domain for the `simd == scalar` property suites.
+/// Ignores the `KASCADE_FORCE_SCALAR` override: tests pass levels
+/// explicitly, the override only pins what [`detect`] hands the engine.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut v = vec![SimdLevel::Scalar];
+    match detect_arch() {
+        SimdLevel::Avx2 => {
+            v.push(SimdLevel::Sse2);
+            v.push(SimdLevel::Avx2);
+        }
+        SimdLevel::Sse2 => v.push(SimdLevel::Sse2),
+        SimdLevel::Neon => v.push(SimdLevel::Neon),
+        SimdLevel::Scalar => {}
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// dispatchers — one per tile-kernel primitive
+// ---------------------------------------------------------------------------
+
+/// f32 dot product; bitwise-equal to [`tensor::dot`] at every level.
+// analyze: hot-path
+#[inline]
+pub fn dot(level: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 | SimdLevel::Avx2 => x86::dot_sse2(a, b),
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::dot_neon(a, b),
+        _ => tensor::dot(a, b),
+    }
+}
+
+/// 4-lane element sum; bitwise-equal to [`tensor::sum4`] at every level.
+// analyze: hot-path
+#[inline]
+pub fn sum4(level: SimdLevel, a: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 | SimdLevel::Avx2 => x86::sum4_sse2(a),
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::sum4_neon(a),
+        _ => tensor::sum4(a),
+    }
+}
+
+/// `y += a * x`; elementwise, bitwise-equal to [`tensor::axpy`].
+// analyze: hot-path
+#[inline]
+pub fn axpy(level: SimdLevel, y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => x86::axpy_sse2(y, a, x),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(y, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::axpy_neon(y, a, x),
+        _ => tensor::axpy(y, a, x),
+    }
+}
+
+/// f32 x int8 raw dot; bitwise-equal to [`tensor::dot_i8`].
+// analyze: hot-path
+#[inline]
+pub fn dot_i8(level: SimdLevel, a: &[f32], q: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::dot_i8_sse41(a, q) },
+        _ => tensor::dot_i8(a, q),
+    }
+}
+
+/// Fused f32 x int8 affine dot; bitwise-equal to [`tensor::qk_dot_q8`].
+// analyze: hot-path
+#[inline]
+pub fn qk_dot_q8(level: SimdLevel, a: &[f32], q: &[i8], scale: f32, zero: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::qk_dot_q8_sse41(a, q, scale, zero) },
+        _ => tensor::qk_dot_q8(a, q, scale, zero),
+    }
+}
+
+/// Fused `y += w * (scale * q + zero)` over int8 codes; elementwise,
+/// bitwise-equal to [`tensor::axpy_q8`].
+// analyze: hot-path
+#[inline]
+pub fn axpy_q8(level: SimdLevel, y: &mut [f32], w: f32, q: &[i8], scale: f32, zero: f32) {
+    debug_assert_eq!(y.len(), q.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::axpy_q8_avx2(y, w, q, scale, zero) },
+        _ => tensor::axpy_q8(y, w, q, scale, zero),
+    }
+}
+
+/// f32 x f16 dot with f32 accumulation; bitwise-equal to
+/// [`tensor::dot_f16`] (hardware F16C conversion computes the identical
+/// bits to the software converter — f16 -> f32 is exact).
+// analyze: hot-path
+#[inline]
+pub fn dot_f16(level: SimdLevel, a: &[f32], h: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), h.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::dot_f16_f16c(a, h) },
+        _ => tensor::dot_f16(a, h),
+    }
+}
+
+/// `y += w * h` over an f16 row; elementwise, bitwise-equal to
+/// [`tensor::axpy_f16`].
+// analyze: hot-path
+#[inline]
+pub fn axpy_f16(level: SimdLevel, y: &mut [f32], w: f32, h: &[u16]) {
+    debug_assert_eq!(y.len(), h.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::axpy_f16_f16c(y, w, h) },
+        _ => tensor::axpy_f16(y, w, h),
+    }
+}
+
+/// f32 x packed-int4 raw dot; bitwise-equal to [`tensor::dot_i4`].
+// analyze: hot-path
+#[inline]
+pub fn dot_i4(level: SimdLevel, a: &[f32], q: &[u8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len() * 2);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::dot_i4_sse41(a, q) },
+        _ => tensor::dot_i4(a, q),
+    }
+}
+
+/// Fused f32 x packed-int4 affine dot; bitwise-equal to
+/// [`tensor::qk_dot_q4`].
+// analyze: hot-path
+#[inline]
+pub fn qk_dot_q4(level: SimdLevel, a: &[f32], q: &[u8], scale: f32, zero: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len() * 2);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::qk_dot_q4_sse41(a, q, scale, zero) },
+        _ => tensor::qk_dot_q4(a, q, scale, zero),
+    }
+}
+
+/// Fused `y += w * (scale * q + zero)` over packed int4 codes;
+/// elementwise, bitwise-equal to [`tensor::axpy_q4`].
+// analyze: hot-path
+#[inline]
+pub fn axpy_q4(level: SimdLevel, y: &mut [f32], w: f32, q: &[u8], scale: f32, zero: f32) {
+    debug_assert_eq!(y.len(), q.len() * 2);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::axpy_q4_avx2(y, w, q, scale, zero) },
+        _ => tensor::axpy_q4(y, w, q, scale, zero),
+    }
+}
+
+/// Elementwise in-place scale `x *= s` — the softmax rescale inner loop.
+/// Elementwise, so bitwise-identical at any lane width.
+// analyze: hot-path
+#[inline]
+pub fn scale_in_place(level: SimdLevel, xs: &mut [f32], s: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => x86::scale_sse2(xs, s),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: detect() only yields Avx2 when avx2/sse4.1/f16c are present.
+        SimdLevel::Avx2 => unsafe { x86::scale_avx2(xs, s) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::scale_neon(xs, s),
+        _ => {
+            for x in xs.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+}
+
+/// In-place numerically-stable softmax, bitwise-equal to
+/// [`tensor::softmax`] at every level: the max fold and the exp/sum pass
+/// stay scalar (their sequential accumulation order is part of the
+/// bitwise contract), only the elementwise `x *= 1/z` rescale dispatches.
+// analyze: hot-path
+pub fn softmax(level: SimdLevel, s: &mut [f32]) -> f32 {
+    let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        s.fill(0.0);
+        return m;
+    }
+    let mut z = 0.0;
+    for x in s.iter_mut() {
+        *x = (*x - m).exp();
+        z += *x;
+    }
+    scale_in_place(level, s, 1.0 / z);
+    m
+}
+
+/// Top-k partial select, identical index selection to
+/// [`tensor::topk_unordered_into`] at every level: the `(value, index)`
+/// staging fill is the only lane-parallel phase (a memory-bound
+/// streaming write LLVM already vectorizes from this shape — and
+/// `(f32, u32)` tuple layout is unspecified, so explicit vector stores
+/// into the pairs buffer would not be sound), while the quickselect swap
+/// chain is data-dependent and stays scalar by design, preserving the
+/// exact deterministic pivot sequence the selection tests assert.
+// analyze: hot-path
+pub fn topk_into(
+    level: SimdLevel,
+    vals: &[f32],
+    k: usize,
+    pairs: &mut Vec<(f32, u32)>,
+    out: &mut Vec<u32>,
+) {
+    let _ = level;
+    let n = vals.len();
+    let k = k.min(n);
+    if k == 0 {
+        return;
+    }
+    if k == n {
+        out.extend(0..n as u32);
+        return;
+    }
+    pairs.clear();
+    pairs.extend(vals.iter().copied().zip(0..n as u32));
+    tensor::topk_prestaged(pairs, n, k, out);
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::tensor;
+    use core::arch::x86_64::*;
+
+    // SSE2 is part of the x86_64 baseline, so these first four need no
+    // runtime gate and no #[target_feature] — plain fns with internal
+    // unsafe blocks for the loads/stores.
+
+    #[inline]
+    pub(super) fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let vb = _mm_loadu_ps(b.as_ptr().add(i * 4));
+                // mul then add as separate instructions — FMA's fused
+                // rounding would diverge from the scalar kernel
+                acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        // horizontal fold in the scalar kernel's order, then scalar tail
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn sum4_sse2(a: &[f32]) -> f32 {
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                acc = _mm_add_ps(acc, _mm_loadu_ps(a.as_ptr().add(i * 4)));
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for &x in &a[chunks * 4..] {
+            s += x;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn axpy_sse2(y: &mut [f32], a: f32, x: &[f32]) {
+        let chunks = y.len() / 4;
+        unsafe {
+            let va = _mm_set1_ps(a);
+            for i in 0..chunks {
+                let vy = _mm_loadu_ps(y.as_ptr().add(i * 4));
+                let vx = _mm_loadu_ps(x.as_ptr().add(i * 4));
+                let t = _mm_add_ps(vy, _mm_mul_ps(va, vx));
+                _mm_storeu_ps(y.as_mut_ptr().add(i * 4), t);
+            }
+        }
+        for i in chunks * 4..y.len() {
+            y[i] += a * x[i];
+        }
+    }
+
+    #[inline]
+    pub(super) fn scale_sse2(xs: &mut [f32], s: f32) {
+        let chunks = xs.len() / 4;
+        unsafe {
+            let vs = _mm_set1_ps(s);
+            for i in 0..chunks {
+                let v = _mm_loadu_ps(xs.as_ptr().add(i * 4));
+                _mm_storeu_ps(xs.as_mut_ptr().add(i * 4), _mm_mul_ps(v, vs));
+            }
+        }
+        for x in &mut xs[chunks * 4..] {
+            *x *= s;
+        }
+    }
+
+    // The Avx2-level kernels.  All carry the full feature bundle the
+    // level guarantees; callers gate on `detect() == Avx2`.
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn axpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+        // Elementwise: 8 lanes are bitwise-safe (no cross-lane sums).
+        let chunks = y.len() / 8;
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            for i in 0..chunks {
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
+                let t = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), t);
+            }
+        }
+        for i in chunks * 8..y.len() {
+            y[i] += a * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn scale_avx2(xs: &mut [f32], s: f32) {
+        let chunks = xs.len() / 8;
+        unsafe {
+            let vs = _mm256_set1_ps(s);
+            for i in 0..chunks {
+                let v = _mm256_loadu_ps(xs.as_ptr().add(i * 8));
+                _mm256_storeu_ps(xs.as_mut_ptr().add(i * 8), _mm256_mul_ps(v, vs));
+            }
+        }
+        for x in &mut xs[chunks * 8..] {
+            *x *= s;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn dot_i8_sse41(a: &[f32], q: &[i8]) -> f32 {
+        // 4-lane: i8 -> i32 -> f32 widening is exact, accumulation
+        // structure matches tensor::dot_i8's sq lanes.
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let w = (q.as_ptr().add(i * 4) as *const i32).read_unaligned();
+                let vq = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(_mm_cvtsi32_si128(w)));
+                acc = _mm_add_ps(acc, _mm_mul_ps(va, vq));
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        let mut dq = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..a.len() {
+            dq += a[i] * q[i] as f32;
+        }
+        dq
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn qk_dot_q8_sse41(a: &[f32], q: &[i8], scale: f32, zero: f32) -> f32 {
+        let chunks = a.len() / 4;
+        let mut ql = [0.0f32; 4];
+        let mut al = [0.0f32; 4];
+        unsafe {
+            let mut accq = _mm_setzero_ps();
+            let mut acca = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let w = (q.as_ptr().add(i * 4) as *const i32).read_unaligned();
+                let vq = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(_mm_cvtsi32_si128(w)));
+                accq = _mm_add_ps(accq, _mm_mul_ps(va, vq));
+                acca = _mm_add_ps(acca, va);
+            }
+            _mm_storeu_ps(ql.as_mut_ptr(), accq);
+            _mm_storeu_ps(al.as_mut_ptr(), acca);
+        }
+        let mut dq = ql[0] + ql[1] + ql[2] + ql[3];
+        let mut da = al[0] + al[1] + al[2] + al[3];
+        for i in chunks * 4..a.len() {
+            dq += a[i] * q[i] as f32;
+            da += a[i];
+        }
+        scale * dq + zero * da
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn axpy_q8_avx2(y: &mut [f32], w: f32, q: &[i8], scale: f32, zero: f32) {
+        let ws = w * scale;
+        let wz = w * zero;
+        let chunks = y.len() / 8;
+        unsafe {
+            let vws = _mm256_set1_ps(ws);
+            let vwz = _mm256_set1_ps(wz);
+            for i in 0..chunks {
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                let bytes = _mm_loadl_epi64(q.as_ptr().add(i * 8) as *const __m128i);
+                let vq = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(bytes));
+                // same per-element op sequence as the scalar kernel:
+                // (ws * q) rounded, + wz rounded, then += into y
+                let t = _mm256_add_ps(_mm256_mul_ps(vws, vq), vwz);
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_add_ps(vy, t));
+            }
+        }
+        for i in chunks * 8..y.len() {
+            y[i] += ws * q[i] as f32 + wz;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn dot_f16_f16c(a: &[f32], h: &[u16]) -> f32 {
+        // VCVTPH2PS computes the same exact f16 -> f32 bits as the
+        // software converter, so hardware conversion stays bitwise.
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm_loadu_ps(a.as_ptr().add(i * 4));
+                let bits = _mm_loadl_epi64(h.as_ptr().add(i * 4) as *const __m128i);
+                let vh = _mm_cvtph_ps(bits);
+                acc = _mm_add_ps(acc, _mm_mul_ps(va, vh));
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * tensor::f16_to_f32(h[i]);
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn axpy_f16_f16c(y: &mut [f32], w: f32, h: &[u16]) {
+        let chunks = y.len() / 8;
+        unsafe {
+            let vw = _mm256_set1_ps(w);
+            for i in 0..chunks {
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                let bits = _mm_loadu_si128(h.as_ptr().add(i * 8) as *const __m128i);
+                let vh = _mm256_cvtph_ps(bits);
+                let t = _mm256_add_ps(vy, _mm256_mul_ps(vw, vh));
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), t);
+            }
+        }
+        for i in chunks * 8..y.len() {
+            y[i] += w * tensor::f16_to_f32(h[i]);
+        }
+    }
+
+    /// Unpack 4 packed bytes (already in an xmm low dword) into 8
+    /// nibble codes in element order, bias-corrected to i8 in [-8, 7]:
+    /// low nibble = even element, matching `tensor::quantize_q4`.
+    ///
+    /// # Safety
+    /// Requires SSE2 at runtime (callers carry the Avx2 bundle).
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    unsafe fn unpack_q4(bytes: __m128i) -> __m128i {
+        unsafe {
+            let low_mask = _mm_set1_epi8(0x0F);
+            let lo = _mm_and_si128(bytes, low_mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), low_mask);
+            // interleave -> lo0 hi0 lo1 hi1 ... = element order
+            _mm_sub_epi8(_mm_unpacklo_epi8(lo, hi), _mm_set1_epi8(8))
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn dot_i4_sse41(a: &[f32], q: &[u8]) -> f32 {
+        // One iteration = 4 bytes = 8 codes = two scalar 4-code chunks,
+        // accumulated low-then-high so lane j sees exactly the sequence
+        // scalar sq[j] would.
+        let pair_chunks = q.len() / 2; // scalar 4-code chunks
+        let quads = pair_chunks / 2; // SIMD iterations (4 bytes each)
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = _mm_setzero_ps();
+            for i in 0..quads {
+                let w = (q.as_ptr().add(i * 4) as *const i32).read_unaligned();
+                let codes = unpack_q4(_mm_cvtsi32_si128(w));
+                let c0 = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(codes));
+                let c1 = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(_mm_srli_si128::<4>(codes)));
+                let x0 = _mm_loadu_ps(a.as_ptr().add(i * 8));
+                let x1 = _mm_loadu_ps(a.as_ptr().add(i * 8 + 4));
+                acc = _mm_add_ps(acc, _mm_mul_ps(x0, c0));
+                acc = _mm_add_ps(acc, _mm_mul_ps(x1, c1));
+            }
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        }
+        // leftover full 4-code chunk (odd chunk count): keep feeding the
+        // lanes so the horizontal fold happens at the scalar position
+        if pair_chunks % 2 == 1 {
+            let i = pair_chunks - 1;
+            let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 2..i * 2 + 2]);
+            lanes[0] += x[0] * ((c[0] & 0x0F) as i32 - 8) as f32;
+            lanes[1] += x[1] * ((c[0] >> 4) as i32 - 8) as f32;
+            lanes[2] += x[2] * ((c[1] & 0x0F) as i32 - 8) as f32;
+            lanes[3] += x[3] * ((c[1] >> 4) as i32 - 8) as f32;
+        }
+        let mut dq = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in pair_chunks * 2..q.len() {
+            let b = q[i];
+            dq += a[2 * i] * ((b & 0x0F) as i32 - 8) as f32;
+            dq += a[2 * i + 1] * ((b >> 4) as i32 - 8) as f32;
+        }
+        dq
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn qk_dot_q4_sse41(a: &[f32], q: &[u8], scale: f32, zero: f32) -> f32 {
+        let pair_chunks = q.len() / 2;
+        let quads = pair_chunks / 2;
+        let mut ql = [0.0f32; 4];
+        let mut al = [0.0f32; 4];
+        unsafe {
+            let mut accq = _mm_setzero_ps();
+            let mut acca = _mm_setzero_ps();
+            for i in 0..quads {
+                let w = (q.as_ptr().add(i * 4) as *const i32).read_unaligned();
+                let codes = unpack_q4(_mm_cvtsi32_si128(w));
+                let c0 = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(codes));
+                let c1 = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(_mm_srli_si128::<4>(codes)));
+                let x0 = _mm_loadu_ps(a.as_ptr().add(i * 8));
+                let x1 = _mm_loadu_ps(a.as_ptr().add(i * 8 + 4));
+                accq = _mm_add_ps(accq, _mm_mul_ps(x0, c0));
+                acca = _mm_add_ps(acca, x0);
+                accq = _mm_add_ps(accq, _mm_mul_ps(x1, c1));
+                acca = _mm_add_ps(acca, x1);
+            }
+            _mm_storeu_ps(ql.as_mut_ptr(), accq);
+            _mm_storeu_ps(al.as_mut_ptr(), acca);
+        }
+        if pair_chunks % 2 == 1 {
+            let i = pair_chunks - 1;
+            let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 2..i * 2 + 2]);
+            ql[0] += x[0] * ((c[0] & 0x0F) as i32 - 8) as f32;
+            ql[1] += x[1] * ((c[0] >> 4) as i32 - 8) as f32;
+            ql[2] += x[2] * ((c[1] & 0x0F) as i32 - 8) as f32;
+            ql[3] += x[3] * ((c[1] >> 4) as i32 - 8) as f32;
+            al[0] += x[0];
+            al[1] += x[1];
+            al[2] += x[2];
+            al[3] += x[3];
+        }
+        let mut dq = ql[0] + ql[1] + ql[2] + ql[3];
+        let mut da = al[0] + al[1] + al[2] + al[3];
+        for i in pair_chunks * 2..q.len() {
+            let b = q[i];
+            dq += a[2 * i] * ((b & 0x0F) as i32 - 8) as f32;
+            dq += a[2 * i + 1] * ((b >> 4) as i32 - 8) as f32;
+            da += a[2 * i];
+            da += a[2 * i + 1];
+        }
+        scale * dq + zero * da
+    }
+
+    /// # Safety
+    /// Requires AVX2 (and the bundled SSE4.1/F16C) at runtime.
+    #[target_feature(enable = "avx2,sse4.1,f16c")]
+    pub(super) unsafe fn axpy_q4_avx2(y: &mut [f32], w: f32, q: &[u8], scale: f32, zero: f32) {
+        let ws = w * scale;
+        let wz = w * zero;
+        let quads = q.len() / 4; // 4 bytes -> 8 elements per iteration
+        unsafe {
+            let vws = _mm256_set1_ps(ws);
+            let vwz = _mm256_set1_ps(wz);
+            for i in 0..quads {
+                let w4 = (q.as_ptr().add(i * 4) as *const i32).read_unaligned();
+                let codes = unpack_q4(_mm_cvtsi32_si128(w4));
+                let vq = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                let t = _mm256_add_ps(_mm256_mul_ps(vws, vq), vwz);
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_add_ps(vy, t));
+            }
+        }
+        for i in quads * 4..q.len() {
+            let b = q[i];
+            y[2 * i] += ws * ((b & 0x0F) as i32 - 8) as f32 + wz;
+            y[2 * i + 1] += ws * ((b >> 4) as i32 - 8) as f32 + wz;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64 kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    // NEON is part of the aarch64 baseline.  Only the f32 plane is
+    // vectorized here; the code-dtype kernels dispatch to scalar until
+    // they can be validated on real hardware (the aarch64 CI job
+    // cross-checks the build but never executes).
+
+    #[inline]
+    pub(super) fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let va = vld1q_f32(a.as_ptr().add(i * 4));
+                let vb = vld1q_f32(b.as_ptr().add(i * 4));
+                // separate mul + add, not vfmaq: scalar rounding order
+                acc = vaddq_f32(acc, vmulq_f32(va, vb));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc);
+        }
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn sum4_neon(a: &[f32]) -> f32 {
+        let chunks = a.len() / 4;
+        let mut lanes = [0.0f32; 4];
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                acc = vaddq_f32(acc, vld1q_f32(a.as_ptr().add(i * 4)));
+            }
+            vst1q_f32(lanes.as_mut_ptr(), acc);
+        }
+        let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for &x in &a[chunks * 4..] {
+            s += x;
+        }
+        s
+    }
+
+    #[inline]
+    pub(super) fn axpy_neon(y: &mut [f32], a: f32, x: &[f32]) {
+        let chunks = y.len() / 4;
+        unsafe {
+            let va = vdupq_n_f32(a);
+            for i in 0..chunks {
+                let vy = vld1q_f32(y.as_ptr().add(i * 4));
+                let vx = vld1q_f32(x.as_ptr().add(i * 4));
+                vst1q_f32(y.as_mut_ptr().add(i * 4), vaddq_f32(vy, vmulq_f32(va, vx)));
+            }
+        }
+        for i in chunks * 4..y.len() {
+            y[i] += a * x[i];
+        }
+    }
+
+    #[inline]
+    pub(super) fn scale_neon(xs: &mut [f32], s: f32) {
+        let chunks = xs.len() / 4;
+        unsafe {
+            let vs = vdupq_n_f32(s);
+            for i in 0..chunks {
+                let v = vld1q_f32(xs.as_ptr().add(i * 4));
+                vst1q_f32(xs.as_mut_ptr().add(i * 4), vmulq_f32(v, vs));
+            }
+        }
+        for x in &mut xs[chunks * 4..] {
+            *x *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn levels() -> Vec<SimdLevel> {
+        let v = available_levels();
+        assert_eq!(v[0], SimdLevel::Scalar);
+        v
+    }
+
+    #[test]
+    fn detect_is_stable_and_available() {
+        let l = detect();
+        assert_eq!(l, detect(), "detection must be cached");
+        // Whatever detect() picked must be runnable here (unless the env
+        // override pinned Scalar, which is always runnable).
+        assert!(available_levels().contains(&l) || l == SimdLevel::Scalar);
+        if std::env::var("KASCADE_FORCE_SCALAR").map(|v| !v.is_empty() && v != "0") == Ok(true) {
+            assert_eq!(l, SimdLevel::Scalar, "env override must pin scalar");
+        }
+    }
+
+    #[test]
+    fn f32_kernels_bitwise_equal_scalar_at_every_level() {
+        let mut r = Rng::new(61);
+        for level in levels() {
+            for _ in 0..30 {
+                let n = 1 + r.below(67); // ragged tails included
+                let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                assert_eq!(
+                    dot(level, &a, &b).to_bits(),
+                    tensor::dot(&a, &b).to_bits(),
+                    "dot {level:?} n={n}"
+                );
+                assert_eq!(
+                    sum4(level, &a).to_bits(),
+                    tensor::sum4(&a).to_bits(),
+                    "sum4 {level:?} n={n}"
+                );
+                let mut y0: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let mut y1 = y0.clone();
+                tensor::axpy(&mut y0, 0.7, &b);
+                axpy(level, &mut y1, 0.7, &b);
+                assert_eq!(y0, y1, "axpy {level:?} n={n}");
+                let mut s0 = a.clone();
+                let mut s1 = a.clone();
+                let m0 = tensor::softmax(&mut s0);
+                let m1 = softmax(level, &mut s1);
+                assert_eq!(m0.to_bits(), m1.to_bits());
+                for (x, y) in s0.iter().zip(&s1) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "softmax {level:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_kernels_bitwise_equal_scalar_at_every_level() {
+        let mut r = Rng::new(63);
+        for level in levels() {
+            for _ in 0..30 {
+                let n = 2 * (1 + r.below(33)); // even, ragged vs lane width
+                let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let src: Vec<f32> = (0..n).map(|_| r.normal() * 1.5).collect();
+                let mut q8 = vec![0i8; n];
+                let (s8, z8) = tensor::quantize_q8(&src, &mut q8);
+                assert_eq!(
+                    dot_i8(level, &a, &q8).to_bits(),
+                    tensor::dot_i8(&a, &q8).to_bits(),
+                    "dot_i8 {level:?} n={n}"
+                );
+                assert_eq!(
+                    qk_dot_q8(level, &a, &q8, s8, z8).to_bits(),
+                    tensor::qk_dot_q8(&a, &q8, s8, z8).to_bits(),
+                    "qk_dot_q8 {level:?} n={n}"
+                );
+                let mut y0: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let mut y1 = y0.clone();
+                tensor::axpy_q8(&mut y0, 0.4, &q8, s8, z8);
+                axpy_q8(level, &mut y1, 0.4, &q8, s8, z8);
+                assert_eq!(y0, y1, "axpy_q8 {level:?} n={n}");
+
+                let h: Vec<u16> = src.iter().map(|&x| tensor::f32_to_f16(x)).collect();
+                assert_eq!(
+                    dot_f16(level, &a, &h).to_bits(),
+                    tensor::dot_f16(&a, &h).to_bits(),
+                    "dot_f16 {level:?} n={n}"
+                );
+                let mut y0: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let mut y1 = y0.clone();
+                tensor::axpy_f16(&mut y0, 0.4, &h);
+                axpy_f16(level, &mut y1, 0.4, &h);
+                assert_eq!(y0, y1, "axpy_f16 {level:?} n={n}");
+
+                let mut q4 = vec![0u8; n / 2];
+                let (s4, z4) = tensor::quantize_q4(&src, &mut q4);
+                assert_eq!(
+                    dot_i4(level, &a, &q4).to_bits(),
+                    tensor::dot_i4(&a, &q4).to_bits(),
+                    "dot_i4 {level:?} n={n}"
+                );
+                assert_eq!(
+                    qk_dot_q4(level, &a, &q4, s4, z4).to_bits(),
+                    tensor::qk_dot_q4(&a, &q4, s4, z4).to_bits(),
+                    "qk_dot_q4 {level:?} n={n}"
+                );
+                let mut y0: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                let mut y1 = y0.clone();
+                tensor::axpy_q4(&mut y0, 0.4, &q4, s4, z4);
+                axpy_q4(level, &mut y1, 0.4, &q4, s4, z4);
+                assert_eq!(y0, y1, "axpy_q4 {level:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_into_matches_tensor_exactly() {
+        let mut r = Rng::new(65);
+        let mut pairs = Vec::new();
+        let (mut out0, mut out1) = (Vec::new(), Vec::new());
+        for level in levels() {
+            for _ in 0..20 {
+                let n = 5 + r.below(400);
+                let k = r.below(n + 1);
+                let vals: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+                out0.clear();
+                out1.clear();
+                tensor::topk_unordered_into(&vals, k, &mut pairs, &mut out0);
+                topk_into(level, &vals, k, &mut pairs, &mut out1);
+                assert_eq!(out0, out1, "{level:?} n={n} k={k}");
+            }
+        }
+    }
+}

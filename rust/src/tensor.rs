@@ -288,6 +288,18 @@ pub fn topk_unordered_into(
     // at long contexts (EXPERIMENTS.md §Perf iteration 2).
     pairs.clear();
     pairs.extend(vals.iter().copied().zip(0..n as u32));
+    topk_prestaged(pairs, n, k, out);
+}
+
+/// Quickselect over an already-staged `pairs` buffer (the `(value, index)`
+/// pairs for positions `0..n`, in position order) — the partition half of
+/// [`topk_unordered_into`], split out so `simd::topk_into` can own the
+/// staging fill while sharing this exact pivot sequence.  The swap chain
+/// is data-dependent and stays scalar at every SIMD level; callers must
+/// have handled the `k == 0` / `k == n` fast paths already.
+pub fn topk_prestaged(pairs: &mut [(f32, u32)], n: usize, k: usize, out: &mut Vec<u32>) {
+    debug_assert_eq!(pairs.len(), n);
+    debug_assert!(k > 0 && k < n);
     let (mut lo, mut hi) = (0usize, n);
     let mut rng_state = 0x9E3779B97F4A7C15u64 ^ (n as u64);
     while hi - lo > 1 {
@@ -517,6 +529,201 @@ pub fn axpy_q8(y: &mut [f32], w: f32, q: &[i8], scale: f32, zero: f32) {
     let wz = w * zero;
     for (yi, &c) in y.iter_mut().zip(q.iter()) {
         *yi += ws * c as f32 + wz;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 (IEEE 754 binary16) software conversion + kernels
+// ---------------------------------------------------------------------------
+
+/// Convert an f32 to IEEE 754 binary16 bits with round-to-nearest-even,
+/// handling subnormals, overflow-to-infinity, and NaN payload
+/// preservation (top 10 payload bits, quiet bit forced).  Software
+/// conversion keeps the `KvDtype::F16` storage mode byte-identical
+/// across hosts with and without hardware F16C/FP16 units.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN: keep the top payload bits, force the quiet bit so a
+        // signaling-NaN payload that truncates to zero stays a NaN.
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7C00 | 0x0200 | ((man >> 13) as u16 & 0x03FF)
+        };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> +/-inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> +/-0
+        }
+        // Subnormal half: re-attach the implicit bit, shift into place,
+        // round-to-nearest-even on the dropped bits.  A mantissa carry
+        // into 0x0400 lands exactly on the smallest normal — correct.
+        let man = man | 0x80_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let kept = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let rounded = if rem > half || (rem == half && kept & 1 != 0) {
+            kept + 1
+        } else {
+            kept
+        };
+        return sign | rounded as u16;
+    }
+    // Normal half: keep the top 10 mantissa bits, round-to-nearest-even.
+    // A mantissa carry may overflow into the exponent (up to infinity at
+    // e == 30) — that is the correctly rounded result.
+    let kept = man >> 13;
+    let rem = man & 0x1FFF;
+    let mut h = (sign as u32) | ((e as u32) << 10) | kept;
+    if rem > 0x1000 || (rem == 0x1000 && kept & 1 != 0) {
+        h += 1;
+    }
+    h as u16
+}
+
+/// Convert IEEE 754 binary16 bits to f32 — exact (every f16 value is
+/// representable in f32, so this direction never rounds).  Hardware
+/// converters (F16C `vcvtph2ps`, NEON `fcvtl`) compute the identical
+/// bit pattern, which is what lets the SIMD f16 kernels stay bitwise
+/// equal to this software path.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal half = m * 2^-24: normalize into f32 form.  With
+            // the leading 1 of `m` at bit p (= 31 - leading_zeros), the
+            // value is 2^(p-24) * (1.frac), so the f32 exponent field is
+            // p - 24 + 127 = 134 - leading_zeros and the mantissa shifts
+            // up by 23 - p = leading_zeros - 8.
+            let lz = m.leading_zeros();
+            sign | ((134 - lz) << 23) | ((m << (lz - 8)) & 0x7F_FFFF)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e as u32 + 112) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 x f16 dot product with f32 accumulation: each stored half is
+/// converted (exactly) to f32 and accumulated in the same 4-lane
+/// structure as [`dot`] — the scoring kernel for `KvDtype::F16` tiles.
+#[inline]
+pub fn dot_f16(a: &[f32], h: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), h.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (x, c) = (&a[i * 4..i * 4 + 4], &h[i * 4..i * 4 + 4]);
+        acc[0] += x[0] * f16_to_f32(c[0]);
+        acc[1] += x[1] * f16_to_f32(c[1]);
+        acc[2] += x[2] * f16_to_f32(c[2]);
+        acc[3] += x[3] * f16_to_f32(c[3]);
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * f16_to_f32(h[i]);
+    }
+    s
+}
+
+/// `y += w * h` over an f16 V row (convert-on-attend, f32 accumulation)
+/// — the value-accumulation kernel for `KvDtype::F16` tiles.
+#[inline]
+pub fn axpy_f16(y: &mut [f32], w: f32, h: &[u16]) {
+    debug_assert_eq!(y.len(), h.len());
+    for (yi, &c) in y.iter_mut().zip(h.iter()) {
+        *yi += w * f16_to_f32(c);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// packed-int4 fused kernels (first-class KvDtype::Int4 storage mode)
+// ---------------------------------------------------------------------------
+
+/// f32 x packed-int4 raw dot (`sum a_i * q_i` over unpacked codes, two
+/// per byte in [`quantize_q4`] layout), accumulation order identical to
+/// the `dq` accumulator inside [`qk_dot_q4`].  Combined with [`sum4`]:
+/// `scale * dot_i4(a, q) + zero * sum4(a)` is bitwise-equal to
+/// `qk_dot_q4(a, q, scale, zero)`.
+#[inline]
+pub fn dot_i4(a: &[f32], q: &[u8]) -> f32 {
+    debug_assert_eq!(a.len(), q.len() * 2);
+    let mut sq = [0.0f32; 4];
+    let chunks = q.len() / 2;
+    for i in 0..chunks {
+        let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 2..i * 2 + 2]);
+        sq[0] += x[0] * ((c[0] & 0x0F) as i32 - 8) as f32;
+        sq[1] += x[1] * ((c[0] >> 4) as i32 - 8) as f32;
+        sq[2] += x[2] * ((c[1] & 0x0F) as i32 - 8) as f32;
+        sq[3] += x[3] * ((c[1] >> 4) as i32 - 8) as f32;
+    }
+    let mut dq = sq[0] + sq[1] + sq[2] + sq[3];
+    for i in chunks * 2..q.len() {
+        let b = q[i];
+        dq += a[2 * i] * ((b & 0x0F) as i32 - 8) as f32;
+        dq += a[2 * i + 1] * ((b >> 4) as i32 - 8) as f32;
+    }
+    dq
+}
+
+/// Fused f32 x packed-int4 dot product: `dot(a, scale * q + zero)`
+/// without materializing the dequantized row — the Top-k scoring kernel
+/// for `KvDtype::Int4` tiles, mirroring [`qk_dot_q8`]'s one-pass
+/// dual-accumulator shape over nibble codes.
+#[inline]
+pub fn qk_dot_q4(a: &[f32], q: &[u8], scale: f32, zero: f32) -> f32 {
+    debug_assert_eq!(a.len(), q.len() * 2);
+    let mut sq = [0.0f32; 4];
+    let mut sa = [0.0f32; 4];
+    let chunks = q.len() / 2;
+    for i in 0..chunks {
+        let (x, c) = (&a[i * 4..i * 4 + 4], &q[i * 2..i * 2 + 2]);
+        sq[0] += x[0] * ((c[0] & 0x0F) as i32 - 8) as f32;
+        sq[1] += x[1] * ((c[0] >> 4) as i32 - 8) as f32;
+        sq[2] += x[2] * ((c[1] & 0x0F) as i32 - 8) as f32;
+        sq[3] += x[3] * ((c[1] >> 4) as i32 - 8) as f32;
+        sa[0] += x[0];
+        sa[1] += x[1];
+        sa[2] += x[2];
+        sa[3] += x[3];
+    }
+    let mut dq = sq[0] + sq[1] + sq[2] + sq[3];
+    let mut da = sa[0] + sa[1] + sa[2] + sa[3];
+    for i in chunks * 2..q.len() {
+        let b = q[i];
+        dq += a[2 * i] * ((b & 0x0F) as i32 - 8) as f32;
+        dq += a[2 * i + 1] * ((b >> 4) as i32 - 8) as f32;
+        da += a[2 * i];
+        da += a[2 * i + 1];
+    }
+    scale * dq + zero * da
+}
+
+/// Fused `y += w * (scale * q + zero)` over a packed-int4 V row
+/// (dequantize-on-attend), mirroring [`axpy_q8`].
+#[inline]
+pub fn axpy_q4(y: &mut [f32], w: f32, q: &[u8], scale: f32, zero: f32) {
+    debug_assert_eq!(y.len(), q.len() * 2);
+    let ws = w * scale;
+    let wz = w * zero;
+    for (i, &b) in q.iter().enumerate() {
+        y[2 * i] += ws * ((b & 0x0F) as i32 - 8) as f32 + wz;
+        y[2 * i + 1] += ws * ((b >> 4) as i32 - 8) as f32 + wz;
     }
 }
 
@@ -913,6 +1120,140 @@ mod quant_tests {
         let mut got = vec![0.5f32; n];
         axpy(&mut want, 0.7, &deq);
         axpy_q8(&mut got, 0.7, &q, s, z);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    /// Exhaustive f16 round trip: every non-NaN half value survives
+    /// f16 -> f32 -> f16 bit-exactly (f16 -> f32 is exact, and the
+    /// nearest half to an exact half is itself).
+    #[test]
+    fn f16_round_trip_exhaustive() {
+        // Miri interprets ~10^4x slower; a coprime stride still samples
+        // every exponent/rounding class while keeping the run bounded.
+        let stride: u32 = if cfg!(miri) { 251 } else { 1 };
+        for h in (0u32..=u16::MAX as u32).step_by(stride as usize) {
+            let h = h as u16;
+            let exp = (h >> 10) & 0x1F;
+            let man = h & 0x03FF;
+            if exp == 0x1F && man != 0 {
+                // NaN: payload may be quieted, but NaN-ness must survive
+                assert!(f16_to_f32(h).is_nan());
+                assert_eq!(f32_to_f16(f16_to_f32(h)) & 0x7C00, 0x7C00);
+                continue;
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f32_to_f16_rounding_and_edges() {
+        // exact values pass through
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(1.0), 0x3C00);
+        assert_eq!(f32_to_f16(-2.0), 0xC000);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF, "largest finite half");
+        // overflow saturates to infinity (65520 rounds up past 65504)
+        assert_eq!(f32_to_f16(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(-1e9), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // smallest subnormal half = 2^-24; half of it rounds to even (0)
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000, "ties to even");
+        assert_eq!(f32_to_f16(2.0f32.powi(-25) * 1.5), 0x0001);
+        // round-to-nearest-even at the normal boundary: 1 + 2^-11 is
+        // exactly between 1.0 and the next half (1 + 2^-10) -> even (1.0)
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        assert_eq!(f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3C02);
+        // relative error bound for normal-range values: 2^-11
+        let mut r = Rng::new(51);
+        for _ in 0..2000 {
+            let x = (r.normal() * 8.0).clamp(-60000.0, 60000.0);
+            if x.abs() < 6.2e-5 {
+                continue; // below the normal-half range
+            }
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (back - x).abs() <= x.abs() * 2.0f32.powi(-11),
+                "{x} -> {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_f16_and_axpy_f16_match_converted_f32_kernels() {
+        let mut r = Rng::new(53);
+        for _ in 0..40 {
+            let n = 1 + r.below(130);
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 2.0).collect();
+            let h: Vec<u16> = src.iter().map(|&x| f32_to_f16(x)).collect();
+            let deq: Vec<f32> = h.iter().map(|&c| f16_to_f32(c)).collect();
+            // same accumulation structure as `dot` over the converted row
+            assert_eq!(
+                dot_f16(&a, &h).to_bits(),
+                dot(&a, &deq).to_bits(),
+                "n={n}"
+            );
+            let mut want = vec![0.25f32; n];
+            let mut got = vec![0.25f32; n];
+            axpy(&mut want, 0.7, &deq);
+            axpy_f16(&mut got, 0.7, &h);
+            for (x, y) in want.iter().zip(&got) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn split_dot_i4_sum4_bitwise_equals_qk_dot_q4() {
+        let mut r = Rng::new(55);
+        for _ in 0..40 {
+            let n = 2 * (1 + r.below(70));
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 0.7).collect();
+            let mut q = vec![0u8; n / 2];
+            let (s, z) = quantize_q4(&src, &mut q);
+            let fused = qk_dot_q4(&a, &q, s, z);
+            let split = s * dot_i4(&a, &q) + z * sum4(&a);
+            assert_eq!(fused.to_bits(), split.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn qk_dot_q4_matches_dequantized_dot() {
+        let mut r = Rng::new(57);
+        for _ in 0..40 {
+            let n = 2 * (1 + r.below(70));
+            let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 1.3).collect();
+            let mut q = vec![0u8; n / 2];
+            let (s, z) = quantize_q4(&src, &mut q);
+            let mut deq = vec![0.0f32; n];
+            dequantize_q4(&q, s, z, &mut deq);
+            let want = dot(&a, &deq);
+            let got = qk_dot_q4(&a, &q, s, z);
+            let tol = 1e-4 * (1.0 + want.abs() + a.len() as f32 * s.abs());
+            assert!((want - got).abs() <= tol, "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn axpy_q4_matches_dequantized_axpy() {
+        let mut r = Rng::new(59);
+        let n = 96;
+        let src: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mut q = vec![0u8; n / 2];
+        let (s, z) = quantize_q4(&src, &mut q);
+        let mut deq = vec![0.0f32; n];
+        dequantize_q4(&q, s, z, &mut deq);
+        let mut want = vec![0.5f32; n];
+        let mut got = vec![0.5f32; n];
+        axpy(&mut want, 0.7, &deq);
+        axpy_q4(&mut got, 0.7, &q, s, z);
         for (a, b) in want.iter().zip(&got) {
             assert!((a - b).abs() < 1e-5);
         }

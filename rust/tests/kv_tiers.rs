@@ -49,6 +49,24 @@ fn snapshot(c: &KvCache, n_pos: usize) -> Vec<(Vec<i8>, f32, f32)> {
     out
 }
 
+/// Tiering is an int8-only surface: the tier machinery demotes/promotes
+/// whole int8 quantization tiles, so the scheduler must reject a tiered
+/// config stamped with any other storage mode (f16 and int4 caches keep
+/// flat planes and never spill).
+#[test]
+#[should_panic(expected = "kv_tiers requires kv_dtype=int8")]
+fn tiers_reject_non_int8_dtypes() {
+    let cfg = ServeConfig {
+        kv_tiers: true,
+        kv_dtype: KvDtype::F16,
+        ..ServeConfig::default()
+    };
+    let _ = Engine::new(
+        cfg,
+        Box::new(|_req: &Request| -> Box<dyn SeqBackend> { unreachable!("factory unused") }),
+    );
+}
+
 #[test]
 fn demote_promote_round_trips_hot_tile_bytes() {
     check("tier round-trip is byte-stable", 4, |rng| {

@@ -1,8 +1,9 @@
-//! Quantized paged-KV integration suite: round-trip error bounds
-//! (property-tested), f32-vs-int8 Top-k tile selection identity on
-//! synthetic score landscapes with margin, CoW-fork preservation of
-//! quantized tiles (no re-quantization), and end-to-end output
-//! divergence of int8 serving against the f32 stream.
+//! Compressed paged-KV integration suite: round-trip error bounds
+//! (property-tested, int8 and int4), f32-vs-int8 Top-k tile selection
+//! identity on synthetic score landscapes with margin, CoW-fork
+//! preservation of compressed tiles across every storage mode (no
+//! re-conversion), and end-to-end output divergence of the f16 / int8 /
+//! int4 streams against f32 serving.
 
 use kascade::attention::{self, CostTracker, KvCache};
 use kascade::config::{KvDtype, ServeConfig, TopKRule};
@@ -13,7 +14,7 @@ use kascade::prop_assert;
 use kascade::proptest_lite::check;
 use kascade::server::Engine;
 use kascade::sparse::{DensePolicy, KascadePolicy};
-use kascade::tensor::{dequantize_q8, quantize_q8};
+use kascade::tensor::{dequantize_q4, dequantize_q8, quantize_q4, quantize_q8};
 use kascade::workload::WorkloadGen;
 use std::sync::Arc;
 
@@ -33,6 +34,33 @@ fn prop_quantize_round_trip_error_bound() {
         let lo = src.iter().cloned().fold(f32::INFINITY, f32::min);
         let hi = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let bound = (hi - lo) / 508.0 + (hi - lo).abs().max(1.0) * 1e-6;
+        for (i, (a, b)) in src.iter().zip(&back).enumerate() {
+            prop_assert!(
+                (a - b).abs() <= bound,
+                "elem {i}: {a} vs {b} exceeds bound {bound}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Round-trip error of packed affine int4 quantization is bounded by
+/// half a step, `(max - min) / 28` (15 codes minus the reserved code
+/// give 14 steps over the range), for arbitrary even-length tiles.
+#[test]
+fn prop_quantize_q4_round_trip_error_bound() {
+    check("quantize q4 round trip", 40, |rng| {
+        let n = 2 * (1 + rng.below(256));
+        let spread = 0.01 + rng.uniform() * 20.0;
+        let shift = rng.normal() * 5.0;
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() * spread + shift).collect();
+        let mut q = vec![0u8; n / 2];
+        let (s, z) = quantize_q4(&src, &mut q);
+        let mut back = vec![0.0f32; n];
+        dequantize_q4(&q, s, z, &mut back);
+        let lo = src.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = src.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let bound = (hi - lo) / 28.0 + (hi - lo).abs().max(1.0) * 1e-6;
         for (i, (a, b)) in src.iter().zip(&back).enumerate() {
             prop_assert!(
                 (a - b).abs() <= bound,
@@ -139,6 +167,149 @@ fn cow_fork_preserves_quantized_tiles_bitwise() {
                 assert_eq!(za.to_bits(), zb.to_bits());
             }
         }
+    }
+}
+
+/// The same CoW-fork byte-stability for the other compressed modes: a
+/// block-aligned fork shares f16 planes and packed int4 tiles
+/// byte-for-byte — no re-conversion, no re-quantization.
+#[test]
+fn cow_fork_preserves_f16_and_int4_tiles_bitwise() {
+    let mut spec = SynthSpec::eval_base(0xAB);
+    spec.cfg.n_layers = 4;
+    spec.block_starts = vec![1];
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0xF01);
+    let prompt = gen.dev_prompt(96); // 6 full 16-token tiles
+    let boundary = 64; // block- and tile-aligned
+    for dtype in [KvDtype::F16, KvDtype::Int4] {
+        let mut parent =
+            NativeBackend::with_dtype(model.clone(), 256, Box::new(DensePolicy), dtype);
+        parent.prefill_chunk(&prompt[..prompt.len() - 1], false);
+        parent.prefill_chunk(&prompt[prompt.len() - 1..], true);
+        assert!(
+            parent.fork_prefix(boundary).is_some(),
+            "{} backend must support forking",
+            dtype.label()
+        );
+        let mut st2 = parent.st.clone();
+        for c in &mut st2.caches {
+            c.truncate(boundary);
+        }
+        for layer in 0..model.cfg.n_layers {
+            let a = &parent.st.caches[layer];
+            let b = &st2.caches[layer];
+            for h in 0..model.cfg.n_kv_heads {
+                for pos in 0..boundary {
+                    match dtype {
+                        KvDtype::F16 => {
+                            let ra = a.f16_key_row(h, pos).unwrap();
+                            let rb = b.f16_key_row(h, pos).unwrap();
+                            assert_eq!(
+                                ra, rb,
+                                "layer {layer} head {h} pos {pos}: f16 bits re-converted"
+                            );
+                        }
+                        KvDtype::Int4 => {
+                            let (ra, sa, za) = a.packed_key_row(h, pos).unwrap();
+                            let (rb, sb, zb) = b.packed_key_row(h, pos).unwrap();
+                            assert_eq!(
+                                ra, rb,
+                                "layer {layer} head {h} pos {pos}: int4 codes re-quantized"
+                            );
+                            assert_eq!(sa.to_bits(), sb.to_bits());
+                            assert_eq!(za.to_bits(), zb.to_bits());
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end: f16 and int4 serving through the engine shrink peak KV
+/// bytes and stay within their per-mode divergence bounds of the f32
+/// stream (f16 is a precision change — tiny drift, zero dequants; int4
+/// is the capacity-stretch mode — looser bound, dequantized attends).
+#[test]
+fn f16_and_int4_engine_bounded_divergence_and_smaller_kv() {
+    let mut spec = SynthSpec::eval_base(0xC4);
+    spec.cfg.n_layers = 6;
+    spec.block_starts = vec![1, 3];
+    let model = Arc::new(spec.build());
+    let mut gen = WorkloadGen::new(&spec, 0xBEF);
+    let prompts: Vec<Vec<u32>> = (0..2).map(|_| gen.dev_prompt(96)).collect();
+    let run = |dtype: KvDtype| {
+        let cfg = ServeConfig {
+            block_size: 16,
+            num_blocks: 1024,
+            max_running: 4,
+            token_budget: 512,
+            prefill_chunk: 128,
+            queue_cap: 16,
+            workers: 1,
+            kv_dtype: dtype,
+            ..ServeConfig::default()
+        };
+        let model = model.clone();
+        let mut engine = Engine::new(
+            cfg,
+            Box::new(move |_req: &Request| {
+                let plan = KascadePlan::from_anchors(6, 4, vec![0, 3], TopKRule::new(0.25, 16));
+                Box::new(NativeBackend::with_dtype(
+                    model.clone(),
+                    256,
+                    Box::new(KascadePolicy::new(plan)),
+                    dtype,
+                )) as Box<dyn SeqBackend>
+            }),
+        );
+        let mut handles = Vec::new();
+        for p in &prompts {
+            handles.push(
+                engine
+                    .submit(Request::new(p.clone()).max_new(12))
+                    .expect("admission"),
+            );
+        }
+        let mut done = engine.run_to_completion(&mut handles);
+        done.sort_by_key(|c| c.id);
+        let toks: Vec<Vec<u32>> = done.into_iter().map(|c| c.tokens).collect();
+        (toks, engine.metrics.peak_kv_bytes, engine.metrics.dequant_rows)
+    };
+    let (tf, bytes_f, _) = run(KvDtype::F32);
+    let (_, bytes_h, deq_h) = run(KvDtype::F16);
+    let (_, bytes_p, deq_p) = run(KvDtype::Int4);
+    assert_eq!(deq_h, 0, "f16 reads are conversions, not dequants");
+    assert!(deq_p > 0, "int4 serving must report dequantized rows");
+    let ratio_h = bytes_f as f64 / bytes_h as f64;
+    let ratio_p = bytes_f as f64 / bytes_p as f64;
+    assert!(ratio_h >= 1.5, "f16 peak KV bytes ratio {ratio_h:.2} below 1.5x");
+    assert!(ratio_p >= 2.5, "int4 peak KV bytes ratio {ratio_p:.2} below 2.5x");
+    assert!(bytes_p < bytes_h, "int4 must sit below f16 peak bytes");
+    // teacher-forced divergence on the f32 streams, per-mode bounds
+    for (dtype, bound) in [(KvDtype::F16, 0.05f64), (KvDtype::Int4, 1.0f64)] {
+        let mut max_rel = 0.0f64;
+        for (p, stream) in prompts.iter().zip(&tf) {
+            let mut st_f = model.new_state_with_dtype(256, KvDtype::F32);
+            let mut st_q = model.new_state_with_dtype(256, dtype);
+            let mut pol_f = DensePolicy;
+            let mut pol_q = DensePolicy;
+            let (lf, _) = model.prefill(p, &mut st_f, &mut pol_f, None);
+            let (lq, _) = model.prefill(p, &mut st_q, &mut pol_q, None);
+            max_rel = max_rel.max(rel_l2(&lf, &lq));
+            for &tok in stream {
+                let lf = model.decode_step(tok, &mut st_f, &mut pol_f);
+                let lq = model.decode_step(tok, &mut st_q, &mut pol_q);
+                max_rel = max_rel.max(rel_l2(&lf, &lq));
+            }
+        }
+        assert!(
+            max_rel <= bound,
+            "{} per-token logit divergence {max_rel:.4} exceeds bound {bound}",
+            dtype.label()
+        );
     }
 }
 
